@@ -1,0 +1,112 @@
+//! Ablation of the four memory techniques T1–T4 (DESIGN.md §5) and
+//! validation of the planner's cost model: for each single-knob ablation,
+//! compare the *predicted* adaptation-rate/memory deltas (Eqs. 3/4 — what
+//! Alg. 2 greedily ranks) against the *measured* engine behaviour.
+//!
+//!     cargo run --release --example ablation_t1t4
+
+use ferret::backend::native::NativeBackend;
+use ferret::compensate::CompKind;
+use ferret::config::zoo::default_zoo;
+use ferret::ocl::OclKind;
+use ferret::pipeline::engine::{run_async, AsyncCfg};
+use ferret::pipeline::EngineParams;
+use ferret::planner::costmodel::{adaptation_rate, decay_for_td, mem_footprint, PipeConfig};
+use ferret::planner::{plan, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn run(
+    cfg: &PipeConfig,
+    partition: &ferret::planner::Partition,
+    model: &ferret::config::ModelSpec,
+    batch: usize,
+) -> (f64, f64, f64) {
+    let mut stream = SyntheticStream::new(StreamSpec {
+        name: "ablate".into(),
+        features: model.features(),
+        classes: model.classes(),
+        batch,
+        num_batches: 120,
+        kind: DriftKind::Stationary,
+        margin: 4.0,
+        noise: 0.8,
+        seed: 5,
+    });
+    let acfg = AsyncCfg::ferret(partition.clone(), cfg.clone(), CompKind::NoComp);
+    let ep = EngineParams { lr: 0.04, seed: 5, ..Default::default() };
+    let mut plugin = OclKind::Vanilla.build(5);
+    let r = run_async(acfg, &mut stream, &NativeBackend, plugin.as_mut(), &ep, model);
+    (r.metrics.adaptation_rate(), r.metrics.oacc.value(), r.metrics.mem_bytes)
+}
+
+fn main() {
+    let zoo = default_zoo().expect("zoo");
+    let model = zoo.model("convnet10").unwrap();
+    let prof = Profile::analytic(model, zoo.batch);
+    let td = prof.default_td();
+    let decay = decay_for_td(td);
+    let base_plan = plan(&prof, td, f64::INFINITY, decay);
+    let part = base_plan.partition.clone();
+    let p = part.num_stages();
+    let base = base_plan.config.clone();
+
+    let mut variants: Vec<(&str, PipeConfig)> = vec![("baseline", base.clone())];
+    // T1: recomputation on every worker
+    let mut c = base.clone();
+    for w in &mut c.workers {
+        w.recompute = true;
+    }
+    variants.push(("T1 recompute", c));
+    // T2: accumulation x3 on every stage
+    let mut c = base.clone();
+    for w in &mut c.workers {
+        w.accum = vec![3; p];
+    }
+    variants.push(("T2 accum=3", c));
+    // T3: fully omit stage 0
+    let mut c = base.clone();
+    for w in &mut c.workers {
+        w.omit[0] = (p - 1) as u64;
+    }
+    variants.push(("T3 omit s0", c));
+    // T4: remove half the workers
+    let mut c = base.clone();
+    let n = c.workers.len();
+    for w in c.workers.iter_mut().skip(n.div_ceil(2)) {
+        w.delay = -1;
+    }
+    variants.push(("T4 half workers", c));
+
+    println!(
+        "cost-model validation on {} (partition {:?}, {} workers)",
+        model.name,
+        part.bounds,
+        base.active_workers()
+    );
+    println!(
+        "{:<16} {:>11} {:>11} {:>9} {:>11} {:>11}",
+        "variant", "pred R_F", "meas R", "oacc%", "pred MB", "eng MB"
+    );
+    let mut preds: Vec<f64> = Vec::new();
+    let mut meas: Vec<f64> = Vec::new();
+    for (name, cfg) in &variants {
+        let pred_r = adaptation_rate(&part, &prof, cfg, decay);
+        let pred_m = mem_footprint(&part, &prof, cfg);
+        let (r_meas, oacc, m_eng) = run(cfg, &part, model, zoo.batch);
+        println!(
+            "{:<16} {:>11.3e} {:>11.4} {:>9.2} {:>11.2} {:>11.2}",
+            name,
+            pred_r,
+            r_meas,
+            oacc,
+            pred_m / 1e6,
+            m_eng / 1e6
+        );
+        preds.push(pred_r);
+        meas.push(r_meas);
+    }
+    let corr = ferret::harness::pearson(&preds, &meas);
+    println!("\nPearson(pred R_F, measured R) over ablations = {corr:.3}");
+    assert!(corr > 0.5, "cost model should rank configurations correctly");
+    println!("OK: Eq. 3 ranks the T1-T4 knobs the same way the engine does.");
+}

@@ -1,0 +1,108 @@
+//! End-to-end driver (DESIGN.md §6): the full three-layer stack on a real
+//! workload.
+//!
+//!   L1/L2  Pallas kernels + JAX stage functions, AOT-lowered to HLO text
+//!          (`make artifacts`) — loaded here through PJRT; python is NOT
+//!          running.
+//!   L3     this binary: plan (Alg. 2/3) -> fine-grained async pipeline
+//!          (T1-T4, 1F1B, weight stashing) -> Iter-Fisher compensation.
+//!
+//! Workload: a CLEAR-like slowly-drifting stream on the resnet11 tier
+//! (~1.9M params, 8 layers — the repo's largest model) for a few hundred
+//! microbatches, logging the loss/oacc curve. Recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_train
+
+use ferret::backend::xla::XlaBackend;
+use ferret::compensate::CompKind;
+use ferret::config::zoo::default_zoo;
+use ferret::ocl::OclKind;
+use ferret::pipeline::engine::{run_async, AsyncCfg};
+use ferret::pipeline::EngineParams;
+use ferret::planner::costmodel::decay_for_td;
+use ferret::planner::{plan, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn main() {
+    let backend = XlaBackend::open_default()
+        .expect("artifacts missing — run `make artifacts` first");
+    let zoo = default_zoo().expect("zoo");
+    let model = zoo.model("resnet11").unwrap();
+    println!(
+        "e2e: {} ({} params, {} layers) through the XLA/PJRT backend",
+        model.name,
+        model.param_count(),
+        model.num_layers()
+    );
+
+    let prof = Profile::analytic(model, zoo.batch);
+    let td = prof.default_td();
+    let out = plan(&prof, td, 60e6, decay_for_td(td));
+    println!(
+        "plan: partition {:?} ({} stages), {} workers, M_F={:.1} MB <= 60 MB, R_F={:.2e}",
+        out.partition.bounds,
+        out.partition.num_stages(),
+        out.config.active_workers(),
+        out.mem_bytes / 1e6,
+        out.rate
+    );
+    assert!(out.feasible, "plan must satisfy the budget");
+
+    let steps = 300;
+    let mut stream = SyntheticStream::new(StreamSpec {
+        name: "clear-sim".into(),
+        features: model.features(),
+        classes: model.classes(),
+        batch: zoo.batch,
+        num_batches: steps,
+        kind: DriftKind::Covariate { cycles: 0.5 },
+        margin: 6.5,
+        noise: 0.6,
+        seed: 2026,
+    });
+
+    let cfg = AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher);
+    let ep = EngineParams { lr: 0.05, seed: 2026, ..Default::default() };
+    let mut plugin = OclKind::Er.build(2026);
+    let t0 = std::time::Instant::now();
+    let r = run_async(cfg, &mut stream, &backend, plugin.as_mut(), &ep, model);
+    let wall = t0.elapsed().as_secs_f64();
+
+    // loss / oacc curves, decimated
+    println!("\n step    loss    oacc%");
+    let curve = &r.metrics.oacc.curve;
+    let losses = &r.metrics.losses;
+    for k in (0..losses.len()).step_by(losses.len().div_ceil(15)) {
+        let (t, loss) = losses[k];
+        let oacc = curve
+            .iter()
+            .take_while(|(ct, _)| *ct <= t)
+            .last()
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0);
+        println!("{:>5}  {:>6.3}  {:>6.2}", k, loss, oacc);
+    }
+
+    println!("\n--- e2e summary ---");
+    println!("steps           : {steps} microbatches x {}", zoo.batch);
+    println!("online accuracy : {:.2}%", r.metrics.oacc.value());
+    println!("test accuracy   : {:.2}%", r.metrics.tacc);
+    println!("adaptation rate : {:.4}", r.metrics.adaptation_rate());
+    println!("memory (Eq. 4)  : {:.1} MB", r.metrics.mem_bytes / 1e6);
+    println!("updates/drops   : {}/{}", r.metrics.trained, r.metrics.dropped);
+    println!(
+        "PJRT executions : {} over {} compiled artifacts",
+        backend.runtime().exec_count(),
+        backend.runtime().compiled_count()
+    );
+    println!("wallclock       : {wall:.1}s ({:.1} ms/batch)", wall * 1e3 / steps as f64);
+
+    let first_loss = r.metrics.losses.first().map(|(_, l)| *l).unwrap_or(0.0);
+    let last_loss = r.metrics.mean_recent_loss(16);
+    assert!(
+        last_loss < first_loss,
+        "loss should decrease: {first_loss} -> {last_loss}"
+    );
+    assert!(r.metrics.oacc.value() > 30.0, "oacc {}", r.metrics.oacc.value());
+    println!("OK: loss decreased {first_loss:.3} -> {last_loss:.3}; all layers composed.");
+}

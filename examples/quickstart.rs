@@ -1,0 +1,68 @@
+//! Quickstart: plan a pipeline under a memory budget and run Ferret on a
+//! drifting synthetic stream.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the 60-second tour: zoo -> profile -> plan (Alg. 2/3) ->
+//! fine-grained async pipeline (T1-T4) with Iter-Fisher compensation.
+
+use ferret::backend::native::NativeBackend;
+use ferret::compensate::CompKind;
+use ferret::config::zoo::default_zoo;
+use ferret::ocl::OclKind;
+use ferret::pipeline::engine::{run_async, AsyncCfg};
+use ferret::pipeline::EngineParams;
+use ferret::planner::costmodel::decay_for_td;
+use ferret::planner::{plan, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn main() {
+    // 1. Pick a model from the shared zoo (configs/models.cfg).
+    let zoo = default_zoo().expect("configs/models.cfg");
+    let model = zoo.model("convnet10").unwrap();
+    println!("model: {} ({} params)", model.name, model.param_count());
+
+    // 2. Profile it and plan under a 15 MB budget.
+    let prof = Profile::analytic(model, zoo.batch);
+    let td = prof.default_td();
+    let budget = 15e6;
+    let out = plan(&prof, td, budget, decay_for_td(td));
+    println!(
+        "plan: {} stages {:?}, {} workers, R_F={:.2e}, M_F={:.1} MB (budget {:.0} MB)",
+        out.partition.num_stages(),
+        out.partition.bounds,
+        out.config.active_workers(),
+        out.rate,
+        out.mem_bytes / 1e6,
+        budget / 1e6
+    );
+
+    // 3. A drifting stream with matched dims (CIFAR-like difficulty).
+    let mut stream = SyntheticStream::new(StreamSpec {
+        name: "quickstart".into(),
+        features: model.features(),
+        classes: model.classes(),
+        batch: zoo.batch,
+        num_batches: 120,
+        kind: DriftKind::Covariate { cycles: 0.5 },
+        margin: 4.0,
+        noise: 0.8,
+        seed: 7,
+    });
+
+    // 4. Run the planned pipeline with Iter-Fisher compensation.
+    let cfg = AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher);
+    let ep = EngineParams { lr: 0.05, seed: 7, ..Default::default() };
+    let mut plugin = OclKind::Vanilla.build(7);
+    let t0 = std::time::Instant::now();
+    let r = run_async(cfg, &mut stream, &NativeBackend, plugin.as_mut(), &ep, model);
+
+    println!("--- results ---");
+    println!("online accuracy : {:.2}%", r.metrics.oacc.value());
+    println!("test accuracy   : {:.2}%", r.metrics.tacc);
+    println!("adaptation rate : {:.4}", r.metrics.adaptation_rate());
+    println!("memory (Eq. 4)  : {:.1} MB", r.metrics.mem_bytes / 1e6);
+    println!("updates/drops   : {}/{}", r.metrics.trained, r.metrics.dropped);
+    println!("wallclock       : {:.1}s", t0.elapsed().as_secs_f64());
+    assert!(r.metrics.oacc.value() > 20.0, "quickstart should learn");
+}

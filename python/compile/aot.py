@@ -1,0 +1,128 @@
+"""AOT-lower every L2 artifact to HLO text for the rust coordinator.
+
+Interchange format is HLO *text*, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Artifact set (enumerated from configs/models.cfg):
+  dense_fwd_<K>x<N>_<act>   (x, w, b)            -> (y,)
+  dense_bwd_<K>x<N>_<act>   (x, w, b, g)         -> (gx, gw, gb)
+  compensate_<K>x<N>        (gw, gb, dw, db, lam)-> (gw', gb')
+  sgd_<K>x<N>               (w, b, gw, gb, lr)   -> (w', b')
+  loss_ce_<C>               (logits, labels)     -> (g, loss)
+  loss_lwf_<C>              (logits, labels, teacher, alpha) -> (g, loss)
+
+Run once at build time (`make artifacts`); python is never on the rust
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .zoo import Zoo, load_zoo
+
+MANIFEST = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def i32(*dims: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def artifact_plan(zoo: Zoo) -> list[tuple[str, object, tuple]]:
+    """(name, fn, arg_specs) for every artifact implied by the zoo."""
+    bsz = zoo.batch
+    plan: list[tuple[str, object, tuple]] = []
+    for k, n, act in zoo.distinct_layer_shapes():
+        plan.append((
+            # block_n=0: single whole-array block for the CPU PJRT client
+            # (interpret-mode grids lower to unfused while loops; see
+            # kernels/dense.py). The gridded form is exercised by pytest.
+            f"dense_fwd_{k}x{n}_{act}",
+            functools.partial(model.layer_fwd, act=act, block_n=0),
+            (f32(bsz, k), f32(k, n), f32(n)),
+        ))
+        plan.append((
+            f"dense_bwd_{k}x{n}_{act}",
+            functools.partial(model.layer_bwd, act=act),
+            (f32(bsz, k), f32(k, n), f32(n), f32(bsz, n)),
+        ))
+    # compensate/sgd are activation-independent: emit once per (K, N).
+    for k, n in sorted({(k, n) for k, n, _ in zoo.distinct_layer_shapes()}):
+        plan.append((
+            f"compensate_{k}x{n}",
+            model.layer_compensate,
+            (f32(k, n), f32(n), f32(k, n), f32(n), f32(1)),
+        ))
+        plan.append((
+            f"sgd_{k}x{n}",
+            model.layer_sgd,
+            (f32(k, n), f32(n), f32(k, n), f32(n), f32(1)),
+        ))
+    for c in zoo.distinct_class_counts():
+        plan.append((
+            f"loss_ce_{c}",
+            model.loss_grad_ce,
+            (f32(bsz, c), i32(bsz)),
+        ))
+        plan.append((
+            f"loss_lwf_{c}",
+            model.loss_grad_lwf,
+            (f32(bsz, c), i32(bsz), f32(bsz, c), f32(1)),
+        ))
+    return plan
+
+
+def emit(out_dir: str, cfg_path: str | None = None, verbose: bool = True) -> int:
+    zoo = load_zoo(cfg_path)
+    os.makedirs(out_dir, exist_ok=True)
+    plan = artifact_plan(zoo)
+    t0 = time.time()
+    lines = [f"batch {zoo.batch}"]
+    for i, (name, fn, specs) in enumerate(plan):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        lines.append(f"artifact {name} {name}.hlo.txt")
+        if verbose:
+            print(f"[{i + 1}/{len(plan)}] {name} ({len(text)} chars)", flush=True)
+    with open(os.path.join(out_dir, MANIFEST), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    if verbose:
+        print(f"emitted {len(plan)} artifacts in {time.time() - t0:.1f}s -> {out_dir}")
+    return len(plan)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact output dir")
+    p.add_argument("--cfg", default=None, help="models.cfg path (default: configs/)")
+    args = p.parse_args()
+    emit(args.out, args.cfg)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

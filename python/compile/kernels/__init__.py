@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by compile.aot)."""
+
+from .dense import dense_bwd, dense_fwd
+from .update import compensate, sgd_update
+
+__all__ = ["dense_fwd", "dense_bwd", "compensate", "sgd_update"]

@@ -1,0 +1,120 @@
+"""L1 Pallas kernels for the dense-stage hot path.
+
+These are the compute hot spots of every Ferret pipeline stage: the fused
+dense forward (matmul + bias + activation) and the dense backward (with
+activation recomputation — the execution-side half of the paper's T1).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the forward tiles the
+output columns into MXU-friendly blocks via the Pallas grid + BlockSpec —
+the HBM->VMEM schedule a CUDA kernel would express with threadblocks.
+All kernels are lowered with interpret=True so the resulting HLO runs on
+the CPU PJRT client (real-TPU lowering emits Mosaic custom-calls the CPU
+plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-column block for the forward kernel. 128 matches the MXU lane
+# width; the batch (sublane) dim is small in OCL so it is kept whole.
+BLOCK_N = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _apply_act(z, act: str):
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    # One (B, bn) output tile: full-K matmul against a (K, bn) weight slab.
+    z = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...][None, :]
+    o_ref[...] = _apply_act(z, act)
+
+
+# Same math, whole-array (used by the grid-free single-block path).
+_fwd_kernel_whole = _fwd_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_n"))
+def dense_fwd(x, w, b, *, act: str = "relu", block_n: int = BLOCK_N):
+    """y = act(x @ w + b), tiled over output columns.
+
+    x: (B, K) f32, w: (K, N) f32, b: (N,) f32 -> (B, N) f32.
+    """
+    bsz, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    # block_n = 0 selects a single whole-array block: on the CPU PJRT
+    # client the interpret-mode grid lowers to an unfused while-loop, so
+    # the AOT path uses one block; the 128-wide default is the TPU story.
+    bn = n if block_n == 0 else min(block_n, n)
+    if bn == n:
+        # single block: no grid at all, so interpret mode lowers straight-
+        # line HLO (a grid of one still wraps the body in a `while` that
+        # XLA will not fuse through on the CPU client).
+        return pl.pallas_call(
+            functools.partial(_fwd_kernel_whole, act=act),
+            out_shape=jax.ShapeDtypeStruct((bsz, n), x.dtype),
+            interpret=True,
+        )(x, w, b)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, act=act),
+        grid=(_cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((bsz, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, bn), lambda i: (0, i)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bsz, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def _bwd_kernel(x_ref, w_ref, b_ref, g_ref, gx_ref, gw_ref, gb_ref, *, act: str):
+    # Activation recomputation (paper T1): z is never stored between the
+    # forward and backward pass — only the layer *input* x is stashed, and
+    # the pre-activation is recomputed here. This is what lets the memory
+    # model (Eq. 4) drop the |a_hat| terms when c_n^r = 1.
+    x = x_ref[...]
+    w = w_ref[...]
+    g = g_ref[...]
+    if act == "relu":
+        z = jnp.dot(x, w) + b_ref[...][None, :]
+        g = g * (z > 0.0).astype(g.dtype)
+    gx_ref[...] = jnp.dot(g, w.T)
+    gw_ref[...] = jnp.dot(x.T, g)
+    gb_ref[...] = jnp.sum(g, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def dense_bwd(x, w, b, g, *, act: str = "relu"):
+    """Backward of dense_fwd with activation recomputation.
+
+    Inputs: layer input x (B, K), params w (K, N) / b (N,), upstream grad
+    g (B, N). Returns (gx (B, K), gw (K, N), gb (N,)).
+    """
+    bsz, k = x.shape
+    _, n = w.shape
+    assert g.shape == (bsz, n), (g.shape, (bsz, n))
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, act=act),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, k), x.dtype),
+            jax.ShapeDtypeStruct((k, n), w.dtype),
+            jax.ShapeDtypeStruct((n,), b.dtype),
+        ),
+        interpret=True,
+    )(x, w, b, g)

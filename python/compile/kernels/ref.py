@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+pytest (python/tests/test_kernels.py) asserts allclose between these and
+the Pallas implementations across hypothesis-swept shapes; the same math
+is mirrored a third time by rust/src/backend/native.rs, which integration
+tests cross-check against the XLA artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _act(z, act: str):
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def dense_fwd_ref(x, w, b, *, act: str = "relu"):
+    return _act(jnp.dot(x, w) + b[None, :], act)
+
+
+def dense_bwd_ref(x, w, b, g, *, act: str = "relu"):
+    if act == "relu":
+        z = jnp.dot(x, w) + b[None, :]
+        g = g * (z > 0.0).astype(g.dtype)
+    gx = jnp.dot(g, w.T)
+    gw = jnp.dot(x.T, g)
+    gb = jnp.sum(g, axis=0)
+    return gx, gw, gb
+
+
+def compensate_ref(gw, gb, dw, db, lam):
+    lam = lam[0]
+    return gw + lam * gw * gw * dw, gb + lam * gb * gb * db
+
+
+def sgd_update_ref(w, b, gw, gb, lr):
+    lr = lr[0]
+    return w - lr * gw, b - lr * gb

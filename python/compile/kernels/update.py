@@ -1,0 +1,68 @@
+"""L1 Pallas kernels for gradient compensation and parameter updates.
+
+`compensate` is one application of the paper's Iter-Fisher approximator
+(Eq. 8): A(g, dtheta; lam) = g + lam * g (*) g (*) dtheta, where (*) is the
+elementwise (Hadamard) product and dtheta = theta_new - theta_old for one
+model-version step. The L3 coordinator applies it tau times (Eq. 9 / Alg. 1)
+with per-step dthetas pulled from the weight-version stash.
+
+`sgd_update` is the fused parameter step theta' = theta - lr * g over a
+layer's (w, b) pair.
+
+Both kernels treat scalars (lam, lr) as (1,)-shaped f32 inputs so the
+lowered HLO takes them as runtime arguments rather than baked constants.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compensate_kernel(gw_ref, gb_ref, dw_ref, db_ref, lam_ref, ow_ref, ob_ref):
+    lam = lam_ref[0]
+    gw = gw_ref[...]
+    gb = gb_ref[...]
+    # Diagonal-Fisher Taylor step (Eq. 8): the Hessian is approximated by
+    # lam * g (*) g, so the first-order correction is lam * g*g*dtheta.
+    ow_ref[...] = gw + lam * gw * gw * dw_ref[...]
+    ob_ref[...] = gb + lam * gb * gb * db_ref[...]
+
+
+@jax.jit
+def compensate(gw, gb, dw, db, lam):
+    """One Iter-Fisher compensation step over a layer's (gw, gb).
+
+    gw/dw: (K, N) f32, gb/db: (N,) f32, lam: (1,) f32.
+    Returns (gw', gb') compensated toward the newer model version.
+    """
+    assert gw.shape == dw.shape and gb.shape == db.shape
+    return pl.pallas_call(
+        _compensate_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(gw.shape, gw.dtype),
+            jax.ShapeDtypeStruct(gb.shape, gb.dtype),
+        ),
+        interpret=True,
+    )(gw, gb, dw, db, lam)
+
+
+def _sgd_kernel(w_ref, b_ref, gw_ref, gb_ref, lr_ref, ow_ref, ob_ref):
+    lr = lr_ref[0]
+    ow_ref[...] = w_ref[...] - lr * gw_ref[...]
+    ob_ref[...] = b_ref[...] - lr * gb_ref[...]
+
+
+@jax.jit
+def sgd_update(w, b, gw, gb, lr):
+    """Fused SGD step over a layer's (w, b). lr: (1,) f32."""
+    assert w.shape == gw.shape and b.shape == gb.shape
+    return pl.pallas_call(
+        _sgd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(b.shape, b.dtype),
+        ),
+        interpret=True,
+    )(w, b, gw, gb, lr)

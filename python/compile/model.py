@@ -1,0 +1,117 @@
+"""L2: the JAX compute graph of a Ferret pipeline stage.
+
+Every function here is an artifact boundary: `compile.aot` lowers each one
+(at the shapes enumerated from configs/models.cfg) to HLO text that the
+rust coordinator loads via PJRT and composes into pipeline stages. The
+dense hot paths call the L1 Pallas kernels; the loss heads are plain jnp
+(they are not the hot spot) and include the LwF-distillation variant used
+by the OCL plugin layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import compensate, dense_bwd, dense_fwd, sgd_update
+
+# Knowledge-distillation temperature for the LwF loss head (fixed at
+# lowering time; matches the common LwF setting).
+LWF_TEMPERATURE = 2.0
+
+
+# --------------------------------------------------------------------------
+# Layer-level artifacts (L1 Pallas kernels under the hood)
+# --------------------------------------------------------------------------
+
+def layer_fwd(x, w, b, *, act: str, block_n: int = None):
+    """Forward of one dense layer: y = act(x @ w + b).
+
+    `block_n=0` lowers a single whole-array block (the CPU-artifact form,
+    see kernels/dense.py); the default keeps the MXU-width tiling.
+    """
+    kw = {} if block_n is None else {"block_n": block_n}
+    return (dense_fwd(x, w, b, act=act, **kw),)
+
+
+def layer_bwd(x, w, b, g, *, act: str):
+    """Backward of one dense layer with activation recomputation (T1)."""
+    return dense_bwd(x, w, b, g, act=act)
+
+
+def layer_compensate(gw, gb, dw, db, lam):
+    """One Iter-Fisher step (Eq. 8) over a layer's gradient pair.
+
+    Perf note (EXPERIMENTS.md §Perf): the *artifact* lowers the straight
+    jnp form — XLA fuses it into one elementwise loop, whereas the Pallas
+    interpret lowering wraps the kernel in a one-trip `while` region that
+    blocks fusion (~40x slower on the CPU PJRT client). The Pallas kernel
+    `kernels.compensate` stays the validated TPU-deployment form (pytest
+    asserts it matches this math exactly).
+    """
+    l = lam[0]
+    return gw + l * gw * gw * dw, gb + l * gb * gb * db
+
+
+def layer_sgd(w, b, gw, gb, lr):
+    """Fused SGD parameter step over a layer's (w, b). Same perf note as
+    `layer_compensate`; `kernels.sgd_update` is the Pallas twin."""
+    r = lr[0]
+    return w - r * gw, b - r * gb
+
+
+# --------------------------------------------------------------------------
+# Loss heads (plain jnp; lowered per distinct class count)
+# --------------------------------------------------------------------------
+
+def _ce(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def loss_grad_ce(logits, labels):
+    """Softmax cross-entropy: returns (dL/dlogits, loss).
+
+    logits: (B, C) f32, labels: (B,) i32.
+    """
+    loss, g = jax.value_and_grad(_ce)(logits, labels)
+    return g, loss.reshape((1,))
+
+
+def _lwf(logits, labels, teacher, alpha):
+    t = LWF_TEMPERATURE
+    ce = _ce(logits, labels)
+    # KL(softmax(teacher/T) || softmax(student/T)) * T^2, the classic
+    # Learning-without-Forgetting distillation penalty.
+    pt = jax.nn.softmax(teacher / t, axis=-1)
+    logps = jax.nn.log_softmax(logits / t, axis=-1)
+    logpt = jax.nn.log_softmax(teacher / t, axis=-1)
+    kl = jnp.mean(jnp.sum(pt * (logpt - logps), axis=-1)) * t * t
+    a = alpha[0]
+    return (1.0 - a) * ce + a * kl
+
+
+def loss_grad_lwf(logits, labels, teacher, alpha):
+    """LwF head: CE + distillation to the teacher logits.
+
+    logits/teacher: (B, C) f32, labels: (B,) i32, alpha: (1,) f32.
+    Returns (dL/dlogits, loss).
+    """
+    loss, g = jax.value_and_grad(_lwf)(logits, labels, teacher, alpha)
+    return g, loss.reshape((1,))
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference (python-side tests only; never lowered)
+# --------------------------------------------------------------------------
+
+def model_fwd(x, params, acts):
+    """Run a dense stack; params = [(w, b), ...], acts aligned."""
+    h = x
+    for (w, b), act in zip(params, acts):
+        (h,) = layer_fwd(h, w, b, act=act)
+    return h
+
+
+def model_loss(x, params, acts, labels):
+    return _ce(model_fwd(x, params, acts), labels)

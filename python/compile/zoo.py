@@ -1,0 +1,85 @@
+"""Parse the shared model-zoo config (configs/models.cfg).
+
+The same file is parsed by rust/src/config/zoo.rs; keep the format in sync.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    dims: tuple[int, ...]  # d0 -> d1 -> ... -> dk (dk = classes)
+
+    @property
+    def classes(self) -> int:
+        return self.dims[-1]
+
+    @property
+    def features(self) -> int:
+        return self.dims[0]
+
+    def layers(self) -> list[tuple[int, int, str]]:
+        """(in_dim, out_dim, act) per layer; hidden=relu, final=none."""
+        out = []
+        for i in range(len(self.dims) - 1):
+            act = "none" if i == len(self.dims) - 2 else "relu"
+            out.append((self.dims[i], self.dims[i + 1], act))
+        return out
+
+
+@dataclass(frozen=True)
+class Zoo:
+    batch: int
+    models: dict[str, ModelSpec]
+
+    def distinct_layer_shapes(self) -> list[tuple[int, int, str]]:
+        seen: dict[tuple[int, int, str], None] = {}
+        for m in self.models.values():
+            for shape in m.layers():
+                seen[shape] = None
+        return list(seen)
+
+    def distinct_class_counts(self) -> list[int]:
+        return sorted({m.classes for m in self.models.values()})
+
+
+def default_cfg_path() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.join(here, "..", "..", "configs", "models.cfg")
+
+
+def load_zoo(path: str | None = None) -> Zoo:
+    path = path or default_cfg_path()
+    batch = None
+    models: dict[str, ModelSpec] = {}
+    with open(path) as f:
+        for lineno, raw in enumerate(f, 1):
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split()
+            if parts[0] == "batch":
+                if len(parts) != 2:
+                    raise ValueError(f"{path}:{lineno}: batch takes one int")
+                batch = int(parts[1])
+            elif parts[0] == "model":
+                if len(parts) < 4:
+                    raise ValueError(f"{path}:{lineno}: model needs >=2 dims")
+                name = parts[1]
+                dims = tuple(int(p) for p in parts[2:])
+                if any(d <= 0 for d in dims):
+                    raise ValueError(f"{path}:{lineno}: dims must be positive")
+                if name in models:
+                    raise ValueError(f"{path}:{lineno}: duplicate model {name}")
+                models[name] = ModelSpec(name, dims)
+            else:
+                raise ValueError(f"{path}:{lineno}: unknown directive {parts[0]!r}")
+    if batch is None:
+        raise ValueError(f"{path}: missing 'batch' directive")
+    if not models:
+        raise ValueError(f"{path}: no models")
+    return Zoo(batch=batch, models=models)

@@ -1,0 +1,85 @@
+"""AOT path: zoo parsing, artifact plan completeness, HLO-text emission."""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile.zoo import load_zoo
+
+
+def test_zoo_parses_and_is_consistent():
+    zoo = load_zoo()
+    assert zoo.batch >= 1
+    assert len(zoo.models) >= 10
+    for spec in zoo.models.values():
+        assert len(spec.dims) >= 3, spec
+        layers = spec.layers()
+        # hidden layers relu, final none
+        assert all(act == "relu" for _, _, act in layers[:-1])
+        assert layers[-1][2] == "none"
+        # consecutive dims chain
+        for (k0, n0, _), (k1, _, _) in zip(layers, layers[1:]):
+            assert n0 == k1
+
+
+def test_artifact_plan_covers_every_layer_and_head():
+    zoo = load_zoo()
+    plan = aot.artifact_plan(zoo)
+    names = {name for name, _, _ in plan}
+    assert len(names) == len(plan), "duplicate artifact names"
+    for k, n, act in zoo.distinct_layer_shapes():
+        assert f"dense_fwd_{k}x{n}_{act}" in names
+        assert f"dense_bwd_{k}x{n}_{act}" in names
+        assert f"compensate_{k}x{n}" in names
+        assert f"sgd_{k}x{n}" in names
+    for c in zoo.distinct_class_counts():
+        assert f"loss_ce_{c}" in names
+        assert f"loss_lwf_{c}" in names
+
+
+def test_emit_single_artifact_is_parseable_hlo(tmp_path):
+    """Lower one real artifact and sanity-check the HLO text shape."""
+    import jax
+
+    zoo = load_zoo()
+    name, fn, specs = aot.artifact_plan(zoo)[0]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True means the root is a tuple
+    assert "tuple(" in text or "tuple<" in text or ")) tuple" in text or "ROOT" in text
+
+
+def test_emit_writes_manifest(tmp_path, monkeypatch):
+    """End-to-end emit over a tiny synthetic zoo."""
+    cfg = tmp_path / "models.cfg"
+    cfg.write_text("batch 4\nmodel tiny 6 5 3\n")
+    out = tmp_path / "artifacts"
+    n = aot.emit(str(out), str(cfg), verbose=False)
+    # 2 layer shapes * (fwd+bwd+comp+sgd) artifacts... comp/sgd per (K,N):
+    # shapes: (6,5,relu),(5,3,none) -> 2 fwd + 2 bwd + 2 comp + 2 sgd + 1 ce + 1 lwf
+    assert n == 10
+    manifest = (out / "manifest.txt").read_text().strip().splitlines()
+    assert manifest[0] == "batch 4"
+    arts = [l.split() for l in manifest[1:]]
+    assert all(a[0] == "artifact" for a in arts)
+    for _, name, fname in arts:
+        assert (out / fname).exists(), name
+        assert "HloModule" in (out / fname).read_text()[:200]
+
+
+def test_zoo_rejects_bad_config(tmp_path):
+    bad = tmp_path / "bad.cfg"
+    bad.write_text("model nolayers 5\n")
+    with pytest.raises(ValueError):
+        load_zoo(str(bad))
+    bad.write_text("batch 4\nmodel a 4 -2 3\n")
+    with pytest.raises(ValueError):
+        load_zoo(str(bad))
+    bad.write_text("batch 4\nwat 1\n")
+    with pytest.raises(ValueError):
+        load_zoo(str(bad))
+    bad.write_text("model a 4 2 3\n")  # missing batch
+    with pytest.raises(ValueError):
+        load_zoo(str(bad))

@@ -1,0 +1,83 @@
+"""The deployed artifact forms and the Pallas kernels must be twins.
+
+EXPERIMENTS.md §Perf: on the CPU PJRT client the update artifacts lower
+from the fused jnp form, with the Pallas kernels kept as the validated
+TPU-deployment implementation. These tests pin the equivalence so the two
+can never drift apart, and check the grid-free dense path used by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import compensate, dense_fwd, sgd_update
+
+dims = st.integers(min_value=1, max_value=40)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, dims, st.floats(min_value=-1.0, max_value=1.0), seeds)
+def test_compensate_artifact_equals_pallas_kernel(k, n, lam, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    gw, gb = rand(keys[0], k, n), rand(keys[1], n)
+    dw, db = rand(keys[2], k, n), rand(keys[3], n)
+    lam_arr = jnp.array([lam], dtype=jnp.float32)
+    aw, ab = model.layer_compensate(gw, gb, dw, db, lam_arr)
+    pw, pb = compensate(gw, gb, dw, db, lam_arr)
+    np.testing.assert_allclose(aw, pw, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ab, pb, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, dims, st.floats(min_value=0.0, max_value=0.1), seeds)
+def test_sgd_artifact_equals_pallas_kernel(k, n, lr, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w, b = rand(keys[0], k, n), rand(keys[1], n)
+    gw, gb = rand(keys[2], k, n), rand(keys[3], n)
+    lr_arr = jnp.array([lr], dtype=jnp.float32)
+    aw, ab = model.layer_sgd(w, b, gw, gb, lr_arr)
+    pw, pb = sgd_update(w, b, gw, gb, lr_arr)
+    np.testing.assert_allclose(aw, pw, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ab, pb, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=8), dims, st.integers(min_value=1, max_value=200), seeds)
+def test_whole_block_dense_fwd_equals_gridded(b, k, n, seed):
+    """block_n=0 (the CPU artifact path) == the default MXU tiling."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w, bias = rand(keys[0], b, k), rand(keys[1], k, n), rand(keys[2], n)
+    for act in ("relu", "none"):
+        whole = dense_fwd(x, w, bias, act=act, block_n=0)
+        gridded = dense_fwd(x, w, bias, act=act, block_n=128)
+        np.testing.assert_allclose(whole, gridded, rtol=1e-5, atol=1e-5)
+
+
+def test_artifact_lowering_perf_properties():
+    """The perf properties EXPERIMENTS.md §Perf relies on:
+    - update artifacts (jnp form) lower to straight-line HLO (no `while`);
+    - the grid-free dense forward lowers at most ONE one-trip `while`
+      (interpret mode's pallas wrapper), not one per 128-wide block."""
+    from compile import aot
+    from compile.zoo import load_zoo
+
+    zoo = load_zoo()
+    name, fn, specs = next(
+        (n, f, s) for n, f, s in aot.artifact_plan(zoo) if n.startswith("dense_fwd_")
+    )
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert text.count("while(") <= 1, name
+    # the update artifacts lower fully fused
+    for prefix in ("sgd_", "compensate_"):
+        name, fn, specs = next(
+            (n, f, s) for n, f, s in aot.artifact_plan(zoo) if n.startswith(prefix)
+        )
+        text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        assert "while(" not in text, name

@@ -1,0 +1,52 @@
+//! Compensation-policy throughput: parameters/second of one update-time
+//! compensation across policies and staleness depths.
+//!
+//!     cargo bench --bench compensate
+
+use ferret::backend::native::NativeBackend;
+use ferret::compensate::{make, CompContext, CompKind, CompParams};
+use ferret::model::GradBuf;
+use ferret::util::Rng;
+
+fn gb(rng: &mut Rng, n: usize) -> GradBuf {
+    GradBuf {
+        gw: (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+        gb: (0..n / 64).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+    }
+}
+
+fn main() {
+    let be = NativeBackend;
+    let mut rng = Rng::new(9);
+    let n = 512 * 384; // a convnet stage worth of params
+    println!("compensation throughput ({n} weights/stage)");
+    println!("{:<14} {:>6} {:>12} {:>14}", "policy", "tau", "us/update", "Mparam/s");
+    for kind in CompKind::all() {
+        for tau in [1u64, 4, 8] {
+            let chain: Vec<GradBuf> = (0..tau).map(|_| gb(&mut rng, n)).collect();
+            let jump = gb(&mut rng, n);
+            let mut comp = make(kind, CompParams::default());
+            let reps = 20;
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                let g = gb(&mut rng, n);
+                let ctx = CompContext {
+                    backend: &be,
+                    tau,
+                    chain: &chain,
+                    jump: Some(&jump),
+                    lr: 0.05,
+                };
+                let _ = comp.compensate(g, &ctx);
+            }
+            let us = t0.elapsed().as_micros() as f64 / reps as f64;
+            println!(
+                "{:<14} {:>6} {:>12.1} {:>14.1}",
+                kind.name(),
+                tau,
+                us,
+                n as f64 / us
+            );
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Engine throughput bench: virtual-batches/second of each schedule on
+//! the native backend (the end-to-end hot path minus PJRT).
+//!
+//!     cargo bench --bench engine
+
+use ferret::backend::native::NativeBackend;
+use ferret::baselines::{run_baseline_with_model, StreamPolicy};
+use ferret::compensate::CompKind;
+use ferret::config::zoo::default_zoo;
+use ferret::ocl::OclKind;
+use ferret::pipeline::engine::{run_async, AsyncCfg, AsyncSchedule};
+use ferret::pipeline::sync::{run_sync, SyncSchedule};
+use ferret::pipeline::EngineParams;
+use ferret::planner::costmodel::decay_for_td;
+use ferret::planner::{plan, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn mk_stream(model: &ferret::config::ModelSpec, batch: usize, n: usize) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "bench".into(),
+        features: model.features(),
+        classes: model.classes(),
+        batch,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 4.0,
+        noise: 0.8,
+        seed: 1,
+    })
+}
+
+fn main() {
+    let zoo = default_zoo().unwrap();
+    let n = 60;
+    println!("engine throughput (native backend, {n} microbatches)");
+    println!("{:<28} {:>12} {:>14}", "engine/model", "wall ms", "batches/s");
+    for model_name in ["mnistnet10", "convnet10", "resnet11"] {
+        let model = zoo.model(model_name).unwrap().clone();
+        let prof = Profile::analytic(&model, zoo.batch);
+        let td = prof.default_td();
+        let out = plan(&prof, td, f64::INFINITY, decay_for_td(td));
+        let ep = EngineParams { lr: 0.04, seed: 1, ..Default::default() };
+
+        // baseline single-device
+        let t0 = std::time::Instant::now();
+        let mut p = OclKind::Vanilla.build(1);
+        let mut s = mk_stream(&model, zoo.batch, n);
+        let _ = run_baseline_with_model(StreamPolicy::Oracle, &mut s, &NativeBackend, p.as_mut(), &ep, &model);
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:<28} {:>12.1} {:>14.1}", format!("oracle/{model_name}"), dt * 1e3, n as f64 / dt);
+
+        // sync pipeline
+        let t0 = std::time::Instant::now();
+        let mut p = OclKind::Vanilla.build(1);
+        let mut s = mk_stream(&model, zoo.batch, n);
+        let _ = run_sync(SyncSchedule::Dapple, &mut s, &NativeBackend, p.as_mut(), &ep, &model, &out.partition);
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:<28} {:>12.1} {:>14.1}", format!("dapple/{model_name}"), dt * 1e3, n as f64 / dt);
+
+        // async engines
+        for sched in [AsyncSchedule::Pipedream, AsyncSchedule::Ferret] {
+            let cfg = match sched {
+                AsyncSchedule::Ferret => {
+                    AsyncCfg::ferret(out.partition.clone(), out.config.clone(), CompKind::IterFisher)
+                }
+                s => AsyncCfg::baseline(s, out.partition.clone(), &prof, td),
+            };
+            let t0 = std::time::Instant::now();
+            let mut p = OclKind::Vanilla.build(1);
+            let mut s = mk_stream(&model, zoo.batch, n);
+            let _ = run_async(cfg, &mut s, &NativeBackend, p.as_mut(), &ep, &model);
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<28} {:>12.1} {:>14.1}",
+                format!("{}/{model_name}", sched.name().to_lowercase()),
+                dt * 1e3,
+                n as f64 / dt
+            );
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Planner latency bench: Alg. 2 (config search) and Alg. 3 (partition
+//! planning) across the zoo — both run once per deployment, but the paper
+//! bounds them at O(NP^2)/O(L^3), so wallclock should be trivially small.
+//!
+//!     cargo bench --bench planner
+
+use ferret::config::zoo::default_zoo;
+use ferret::planner::costmodel::decay_for_td;
+use ferret::planner::{plan, search, Partition, Profile};
+
+fn main() {
+    let zoo = default_zoo().unwrap();
+    println!("planner latency (per call, mean of N reps)");
+    println!("{:<16} {:>8} {:>14} {:>14}", "model", "layers", "Alg2 search us", "Alg3 plan us");
+    for (name, model) in &zoo.models {
+        let prof = Profile::analytic(model, zoo.batch);
+        let td = prof.default_td();
+        let decay = decay_for_td(td);
+        let part = Partition::per_layer(prof.num_layers());
+        let budget = plan(&prof, td, f64::INFINITY, decay).mem_bytes * 0.5;
+
+        let reps = 200;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let _ = search(&part, &prof, td, budget, decay);
+        }
+        let search_us = t0.elapsed().as_micros() as f64 / reps as f64;
+
+        let reps = 50;
+        let t1 = std::time::Instant::now();
+        for _ in 0..reps {
+            let _ = plan(&prof, td, budget, decay);
+        }
+        let plan_us = t1.elapsed().as_micros() as f64 / reps as f64;
+        println!(
+            "{:<16} {:>8} {:>14.1} {:>14.1}",
+            name,
+            model.num_layers(),
+            search_us,
+            plan_us
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! PJRT runtime bench: per-artifact execute latency through the XLA
+//! backend (the L1/L2 hot path as deployed). Skips gracefully when
+//! artifacts are missing.
+//!
+//!     make artifacts && cargo bench --bench runtime
+
+use ferret::backend::{xla::XlaBackend, Backend};
+use ferret::config::zoo::default_zoo;
+use ferret::model::{GradBuf, LayerParams};
+use ferret::util::Rng;
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn main() {
+    let Ok(xla) = XlaBackend::open_default() else {
+        println!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let zoo = default_zoo().unwrap();
+    let batch = xla.runtime().batch();
+    let mut rng = Rng::new(3);
+    println!("PJRT execute latency (mean of 30 reps after warmup, batch {batch})");
+    println!("{:<26} {:>12} {:>12}", "artifact", "us/exec", "GFLOP/s");
+    for shape in zoo.distinct_layer_shapes().iter().step_by(4) {
+        let p = LayerParams::init(shape, &mut rng);
+        let x = randvec(&mut rng, batch * shape.in_dim);
+        let g = randvec(&mut rng, batch * shape.out_dim);
+        let _ = xla.dense_fwd(shape, &p, &x, batch); // warmup/compile
+        let reps = 30;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let _ = xla.dense_fwd(shape, &p, &x, batch);
+        }
+        let us = t0.elapsed().as_micros() as f64 / reps as f64;
+        let gflops = shape.fwd_flops(batch) as f64 / us / 1e3;
+        println!(
+            "{:<26} {:>12.1} {:>12.2}",
+            format!("dense_fwd_{}x{}", shape.in_dim, shape.out_dim),
+            us,
+            gflops
+        );
+        let _ = xla.dense_bwd(shape, &p, &x, &g, batch);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let _ = xla.dense_bwd(shape, &p, &x, &g, batch);
+        }
+        let us = t0.elapsed().as_micros() as f64 / reps as f64;
+        let gflops = shape.bwd_flops(batch) as f64 / us / 1e3;
+        println!(
+            "{:<26} {:>12.1} {:>12.2}",
+            format!("dense_bwd_{}x{}", shape.in_dim, shape.out_dim),
+            us,
+            gflops
+        );
+        let grads = GradBuf { gw: randvec(&mut rng, p.w.len()), gb: randvec(&mut rng, p.b.len()) };
+        let _ = xla.sgd(&p, &grads, 0.01);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let _ = xla.sgd(&p, &grads, 0.01);
+        }
+        let us = t0.elapsed().as_micros() as f64 / reps as f64;
+        println!("{:<26} {:>12.1} {:>12}", format!("sgd_{}x{}", shape.in_dim, shape.out_dim), us, "-");
+    }
+}

@@ -1,0 +1,126 @@
+//! Compute backends.
+//!
+//! `Backend` is the numeric contract of one pipeline-stage step. Two
+//! implementations:
+//!   - [`native::NativeBackend`] — pure-rust reference math. Used by unit
+//!     tests and by the large table sweeps where thousands of runs make
+//!     per-call PJRT dispatch the wrong tool.
+//!   - [`xla::XlaBackend`] — loads the AOT HLO-text artifacts emitted by
+//!     `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!     This is the production request path; integration tests assert it
+//!     matches `NativeBackend` to float tolerance.
+
+pub mod native;
+pub mod xla;
+
+use crate::config::LayerShape;
+use crate::model::{GradBuf, LayerParams};
+
+/// Result of a backward step: gradient wrt the stage input plus the
+/// parameter gradients.
+pub struct BwdOut {
+    pub gx: Vec<f32>,
+    pub grads: GradBuf,
+}
+
+/// One pipeline stage's numeric operations. `batch` is the leading dim of
+/// `x`/`g`; the XLA backend requires it to equal the artifact batch.
+pub trait Backend {
+    /// y = act(x @ w + b); x: (batch, in_dim) row-major.
+    fn dense_fwd(&self, shape: &LayerShape, p: &LayerParams, x: &[f32], batch: usize) -> Vec<f32>;
+
+    /// Backward with activation recomputation; g: (batch, out_dim).
+    fn dense_bwd(
+        &self,
+        shape: &LayerShape,
+        p: &LayerParams,
+        x: &[f32],
+        g: &[f32],
+        batch: usize,
+    ) -> BwdOut;
+
+    /// Softmax cross-entropy head: (dL/dlogits, loss). labels: (batch,).
+    fn loss_grad_ce(&self, classes: usize, logits: &[f32], labels: &[i32]) -> (Vec<f32>, f32);
+
+    /// LwF head: CE + temperature-2 distillation toward `teacher` logits.
+    fn loss_grad_lwf(
+        &self,
+        classes: usize,
+        logits: &[f32],
+        labels: &[i32],
+        teacher: &[f32],
+        alpha: f32,
+    ) -> (Vec<f32>, f32);
+
+    /// One Iter-Fisher compensation step (Eq. 8): g + lam * g^2 * dtheta.
+    fn compensate(&self, g: &GradBuf, d: &GradBuf, lam: f32) -> GradBuf;
+
+    /// SGD step: p - lr * g.
+    fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams;
+}
+
+/// Forward a full dense stack, returning per-layer inputs (stashed for the
+/// backward chain, T1-style) and the logits.
+pub fn forward_all(
+    backend: &dyn Backend,
+    shapes: &[LayerShape],
+    params: &[LayerParams],
+    x: &[f32],
+    batch: usize,
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let mut inputs = Vec::with_capacity(shapes.len());
+    let mut h = x.to_vec();
+    for (shape, p) in shapes.iter().zip(params) {
+        inputs.push(h.clone());
+        h = backend.dense_fwd(shape, p, &h, batch);
+    }
+    (inputs, h)
+}
+
+/// Backward a full dense stack given stashed inputs and dL/dlogits.
+/// Returns per-layer gradients (aligned with `shapes`).
+pub fn backward_all(
+    backend: &dyn Backend,
+    shapes: &[LayerShape],
+    params: &[LayerParams],
+    inputs: &[Vec<f32>],
+    gout: &[f32],
+    batch: usize,
+) -> Vec<GradBuf> {
+    let mut grads: Vec<Option<GradBuf>> = (0..shapes.len()).map(|_| None).collect();
+    let mut g = gout.to_vec();
+    for i in (0..shapes.len()).rev() {
+        let out = backend.dense_bwd(&shapes[i], &params[i], &inputs[i], &g, batch);
+        g = out.gx;
+        grads[i] = Some(out.grads);
+    }
+    grads.into_iter().map(Option::unwrap).collect()
+}
+
+/// Batch accuracy from logits (argmax) vs labels.
+pub fn accuracy(classes: usize, logits: &[f32], labels: &[i32]) -> f64 {
+    let batch = labels.len();
+    debug_assert_eq!(logits.len(), batch * classes);
+    let correct = labels
+        .iter()
+        .enumerate()
+        .filter(|(i, &y)| {
+            crate::util::argmax(&logits[i * classes..(i + 1) * classes]) == y as usize
+        })
+        .count();
+    correct as f64 / batch as f64
+}
+
+/// Softmax cross-entropy loss only (no grad) — used by MIR's interference
+/// scoring where gradients are not needed.
+pub fn ce_loss(classes: usize, logits: &[f32], labels: &[i32]) -> f32 {
+    let batch = labels.len();
+    let mut loss = 0.0f32;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+        loss += lse - row[y as usize];
+    }
+    loss / batch as f32
+}

@@ -1,0 +1,380 @@
+//! Pure-rust reference backend.
+//!
+//! Mirrors `python/compile/kernels/ref.py` op for op. The matmuls use a
+//! cache-friendly (i,k,j) loop order with the inner j-loop vectorizable by
+//! LLVM; good enough that the table sweeps are engine-bound, not math-bound.
+
+use super::{Backend, BwdOut};
+use crate::config::{Act, LayerShape};
+use crate::model::{GradBuf, LayerParams};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+/// c (m x n) += a (m x k) @ b (k x n), row-major.
+fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // post-ReLU activations are sparse
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// c (m x n) += a (m x k) @ b^T where b is (n x k) row-major.
+fn matmul_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += arow[kk] * brow[kk];
+            }
+            crow[j] += s;
+        }
+    }
+}
+
+/// c (m x n) += a^T @ b where a is (k x m), b is (k x n), row-major.
+fn matmul_at_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+impl NativeBackend {
+    fn pre_activation(
+        &self,
+        shape: &LayerShape,
+        p: &LayerParams,
+        x: &[f32],
+        batch: usize,
+    ) -> Vec<f32> {
+        let (k, n) = (shape.in_dim, shape.out_dim);
+        debug_assert_eq!(x.len(), batch * k);
+        let mut z = vec![0.0f32; batch * n];
+        for i in 0..batch {
+            z[i * n..(i + 1) * n].copy_from_slice(&p.b);
+        }
+        matmul_acc(&mut z, x, &p.w, batch, k, n);
+        z
+    }
+}
+
+fn softmax_rows(classes: usize, logits: &[f32], batch: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; logits.len()];
+    for i in 0..batch {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let orow = &mut out[i * classes..(i + 1) * classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        orow.iter_mut().for_each(|o| *o /= sum);
+    }
+    out
+}
+
+impl Backend for NativeBackend {
+    fn dense_fwd(&self, shape: &LayerShape, p: &LayerParams, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut z = self.pre_activation(shape, p, x, batch);
+        if shape.act == Act::Relu {
+            z.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+        z
+    }
+
+    fn dense_bwd(
+        &self,
+        shape: &LayerShape,
+        p: &LayerParams,
+        x: &[f32],
+        g: &[f32],
+        batch: usize,
+    ) -> BwdOut {
+        let (k, n) = (shape.in_dim, shape.out_dim);
+        debug_assert_eq!(g.len(), batch * n);
+        // Activation recomputation (T1): recompute z rather than stash it.
+        let mut gz = g.to_vec();
+        if shape.act == Act::Relu {
+            let z = self.pre_activation(shape, p, x, batch);
+            for (gv, &zv) in gz.iter_mut().zip(&z) {
+                if zv <= 0.0 {
+                    *gv = 0.0;
+                }
+            }
+        }
+        let mut gx = vec![0.0f32; batch * k];
+        matmul_bt_acc(&mut gx, &gz, &p.w, batch, n, k);
+        let mut gw = vec![0.0f32; k * n];
+        matmul_at_acc(&mut gw, x, &gz, k, batch, n);
+        let mut gb = vec![0.0f32; n];
+        for i in 0..batch {
+            for j in 0..n {
+                gb[j] += gz[i * n + j];
+            }
+        }
+        BwdOut { gx, grads: GradBuf { gw, gb } }
+    }
+
+    fn loss_grad_ce(&self, classes: usize, logits: &[f32], labels: &[i32]) -> (Vec<f32>, f32) {
+        let batch = labels.len();
+        let mut g = softmax_rows(classes, logits, batch);
+        let mut loss = 0.0f32;
+        let inv_b = 1.0 / batch as f32;
+        for (i, &y) in labels.iter().enumerate() {
+            let row = &mut g[i * classes..(i + 1) * classes];
+            loss -= row[y as usize].max(1e-30).ln();
+            row[y as usize] -= 1.0;
+            row.iter_mut().for_each(|v| *v *= inv_b);
+        }
+        (g, loss * inv_b)
+    }
+
+    fn loss_grad_lwf(
+        &self,
+        classes: usize,
+        logits: &[f32],
+        labels: &[i32],
+        teacher: &[f32],
+        alpha: f32,
+    ) -> (Vec<f32>, f32) {
+        const T: f32 = 2.0; // matches python LWF_TEMPERATURE
+        let batch = labels.len();
+        let (gce, lce) = self.loss_grad_ce(classes, logits, labels);
+        // distillation: T^2 * KL(softmax(teacher/T) || softmax(logits/T))
+        let st: Vec<f32> = logits.iter().map(|v| v / T).collect();
+        let tt: Vec<f32> = teacher.iter().map(|v| v / T).collect();
+        let ps = softmax_rows(classes, &st, batch);
+        let pt = softmax_rows(classes, &tt, batch);
+        let mut kl = 0.0f32;
+        for i in 0..batch * classes {
+            if pt[i] > 0.0 {
+                kl += pt[i] * (pt[i].max(1e-30).ln() - ps[i].max(1e-30).ln());
+            }
+        }
+        kl = kl / batch as f32 * T * T;
+        // d/dlogits [T^2 * mean_KL] = T * (ps - pt) / batch  (chain rule:
+        // d(logits/T)/dlogits = 1/T, dKL/d(st) = (ps - pt)/batch, times T^2)
+        let mut g = vec![0.0f32; batch * classes];
+        let scale = T / batch as f32;
+        for i in 0..batch * classes {
+            g[i] = (1.0 - alpha) * gce[i] + alpha * scale * (ps[i] - pt[i]);
+        }
+        (g, (1.0 - alpha) * lce + alpha * kl)
+    }
+
+    fn compensate(&self, g: &GradBuf, d: &GradBuf, lam: f32) -> GradBuf {
+        GradBuf {
+            gw: g.gw.iter().zip(&d.gw).map(|(&g, &d)| g + lam * g * g * d).collect(),
+            gb: g.gb.iter().zip(&d.gb).map(|(&g, &d)| g + lam * g * g * d).collect(),
+        }
+    }
+
+    fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams {
+        LayerParams {
+            w: p.w.iter().zip(&g.gw).map(|(&p, &g)| p - lr * g).collect(),
+            b: p.b.iter().zip(&g.gb).map(|(&p, &g)| p - lr * g).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{accuracy, backward_all, ce_loss, forward_all};
+    use crate::util::{property, Rng};
+
+    fn shape(i: usize, o: usize, act: Act) -> LayerShape {
+        LayerShape { in_dim: i, out_dim: o, act }
+    }
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn fwd_known_values() {
+        // x=(1,2), w=[[1,0],[0,1]], b=(0.5,-10) relu -> (1.5, 0)
+        let s = shape(2, 2, Act::Relu);
+        let p = LayerParams { w: vec![1.0, 0.0, 0.0, 1.0], b: vec![0.5, -10.0] };
+        let y = NativeBackend.dense_fwd(&s, &p, &[1.0, 2.0], 1);
+        assert_eq!(y, vec![1.5, 0.0]);
+        let s2 = shape(2, 2, Act::None);
+        let y2 = NativeBackend.dense_fwd(&s2, &p, &[1.0, 2.0], 1);
+        assert_eq!(y2, vec![1.5, -8.0]);
+    }
+
+    /// Finite-difference check of the full bwd pass.
+    #[test]
+    fn bwd_matches_finite_difference() {
+        property("bwd_fd", 10, |rng| {
+            let (b, k, n) = (2, 1 + rng.below(5), 1 + rng.below(5));
+            let act = if rng.uniform() < 0.5 { Act::Relu } else { Act::None };
+            let s = shape(k, n, act);
+            let p = LayerParams {
+                w: randvec(rng, k * n),
+                b: randvec(rng, n),
+            };
+            let x = randvec(rng, b * k);
+            let g = randvec(rng, b * n);
+            let f = |p: &LayerParams, x: &[f32]| -> f32 {
+                let y = NativeBackend.dense_fwd(&s, p, x, b);
+                y.iter().zip(&g).map(|(&y, &g)| y * g).sum()
+            };
+            let out = NativeBackend.dense_bwd(&s, &p, &x, &g, b);
+            let eps = 1e-2f32;
+            // spot-check a few coordinates of each gradient
+            for _ in 0..4 {
+                let i = rng.below(k * n);
+                let mut p2 = p.clone();
+                p2.w[i] += eps;
+                let mut p3 = p.clone();
+                p3.w[i] -= eps;
+                let fd = (f(&p2, &x) - f(&p3, &x)) / (2.0 * eps);
+                assert!(
+                    (fd - out.grads.gw[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "gw[{i}]: fd={fd} got={}",
+                    out.grads.gw[i]
+                );
+                let j = rng.below(b * k);
+                let mut x2 = x.clone();
+                x2[j] += eps;
+                let mut x3 = x.clone();
+                x3[j] -= eps;
+                let fdx = (f(&p, &x2) - f(&p, &x3)) / (2.0 * eps);
+                assert!(
+                    (fdx - out.gx[j]).abs() < 2e-2 * (1.0 + fdx.abs()),
+                    "gx[{j}]: fd={fdx} got={}",
+                    out.gx[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn ce_grad_is_softmax_minus_onehot() {
+        let logits = vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0];
+        let labels = vec![2, 0];
+        let (g, loss) = NativeBackend.loss_grad_ce(3, &logits, &labels);
+        // row 1: softmax(1,2,3), y=2
+        let z: f32 = (1.0f32).exp() + (2.0f32).exp() + (3.0f32).exp();
+        let p2 = (3.0f32).exp() / z;
+        assert!((g[2] - (p2 - 1.0) / 2.0).abs() < 1e-6);
+        // row 2: uniform softmax, y=0
+        assert!((g[3] - (1.0 / 3.0 - 1.0) / 2.0).abs() < 1e-6);
+        assert!((g[4] - (1.0 / 3.0) / 2.0).abs() < 1e-6);
+        // loss equals ce_loss helper
+        assert!((loss - ce_loss(3, &logits, &labels)).abs() < 1e-6);
+        // grad rows sum to zero
+        assert!(g[0..3].iter().sum::<f32>().abs() < 1e-6);
+    }
+
+    #[test]
+    fn lwf_alpha_zero_is_ce_and_self_teacher_pure_distill_zero() {
+        let mut rng = Rng::new(3);
+        let logits = randvec(&mut rng, 4 * 5);
+        let teacher = randvec(&mut rng, 4 * 5);
+        let labels = vec![0, 1, 2, 3];
+        let (g0, l0) = NativeBackend.loss_grad_lwf(5, &logits, &labels, &teacher, 0.0);
+        let (gce, lce) = NativeBackend.loss_grad_ce(5, &logits, &labels);
+        for (a, b) in g0.iter().zip(&gce) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!((l0 - lce).abs() < 1e-6);
+        let (g1, l1) = NativeBackend.loss_grad_lwf(5, &logits, &labels, &logits, 1.0);
+        assert!(g1.iter().all(|v| v.abs() < 1e-6));
+        assert!(l1.abs() < 1e-6);
+    }
+
+    #[test]
+    fn lwf_grad_matches_finite_difference() {
+        let mut rng = Rng::new(11);
+        let (b, c) = (3, 4);
+        let logits = randvec(&mut rng, b * c);
+        let teacher = randvec(&mut rng, b * c);
+        let labels = vec![1, 0, 3];
+        let alpha = 0.6;
+        let (g, _) = NativeBackend.loss_grad_lwf(c, &logits, &labels, &teacher, alpha);
+        let f = |l: &[f32]| NativeBackend.loss_grad_lwf(c, l, &labels, &teacher, alpha).1;
+        let eps = 1e-2f32;
+        for i in 0..b * c {
+            let mut l2 = logits.clone();
+            l2[i] += eps;
+            let mut l3 = logits.clone();
+            l3[i] -= eps;
+            let fd = (f(&l2) - f(&l3)) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 1e-3, "i={i} fd={fd} got={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn compensate_and_sgd() {
+        let g = GradBuf { gw: vec![2.0, -1.0], gb: vec![0.5] };
+        let d = GradBuf { gw: vec![0.1, 0.2], gb: vec![-0.4] };
+        let c = NativeBackend.compensate(&g, &d, 0.5);
+        assert!((c.gw[0] - (2.0 + 0.5 * 4.0 * 0.1)).abs() < 1e-6);
+        assert!((c.gw[1] - (-1.0 + 0.5 * 1.0 * 0.2)).abs() < 1e-6);
+        assert!((c.gb[0] - (0.5 + 0.5 * 0.25 * -0.4)).abs() < 1e-6);
+        let p = LayerParams { w: vec![1.0, 1.0], b: vec![1.0] };
+        let p2 = NativeBackend.sgd(&p, &g, 0.1);
+        assert_eq!(p2.w, vec![0.8, 1.1]);
+        assert_eq!(p2.b, vec![0.95]);
+    }
+
+    #[test]
+    fn full_chain_learns_xor_like_task() {
+        // 2-layer net on a linearly-nonseparable toy problem: loss drops.
+        let shapes = [shape(2, 16, Act::Relu), shape(16, 2, Act::None)];
+        let mut rng = Rng::new(21);
+        let mut params = vec![
+            LayerParams::init(&shapes[0], &mut rng),
+            LayerParams::init(&shapes[1], &mut rng),
+        ];
+        let x = vec![0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0];
+        let y = vec![0, 1, 1, 0];
+        let be = NativeBackend;
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..300 {
+            let (inputs, logits) = forward_all(&be, &shapes, &params, &x, 4);
+            let (gl, loss) = be.loss_grad_ce(2, &logits, &y);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            let grads = backward_all(&be, &shapes, &params, &inputs, &gl, 4);
+            for (p, g) in params.iter_mut().zip(&grads) {
+                *p = be.sgd(p, g, 0.5);
+            }
+        }
+        assert!(last < first * 0.2, "first={first} last={last}");
+        let (_, logits) = forward_all(&be, &shapes, &params, &x, 4);
+        assert!(accuracy(2, &logits, &y) >= 0.99);
+    }
+}

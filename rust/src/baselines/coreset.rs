@@ -1,0 +1,91 @@
+//! Greedy k-center coreset selection (the Camel baseline's sampler [46]).
+//!
+//! Selects a maximally diverse row subset across the buffered microbatches
+//! (farthest-point traversal over raw feature space) and assembles them
+//! into one training batch.
+
+use super::Pending;
+use crate::stream::Batch;
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Pick `rows` diverse samples across `buffer` and assemble a batch.
+/// The earliest contributing arrival is used as the batch's arrival (the
+/// conservative latency accounting for the adaptation-rate metric).
+pub fn select(buffer: &mut Vec<Pending>, rows: usize, features: usize) -> Pending {
+    // flatten candidate rows
+    let mut cand: Vec<(usize, usize)> = Vec::new(); // (buffer idx, row idx)
+    for (bi, p) in buffer.iter().enumerate() {
+        for ri in 0..p.batch.y.len() {
+            cand.push((bi, ri));
+        }
+    }
+    assert!(!cand.is_empty());
+    let row = |&(bi, ri): &(usize, usize)| -> &[f32] {
+        &buffer[bi].batch.x[ri * features..(ri + 1) * features]
+    };
+
+    // farthest-point greedy: start from the newest row
+    let mut picked: Vec<(usize, usize)> = vec![*cand.last().unwrap()];
+    let mut dists: Vec<f32> = cand.iter().map(|c| dist2(row(c), row(&picked[0]))).collect();
+    while picked.len() < rows.min(cand.len()) {
+        let (best, _) = dists
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let chosen = cand[best];
+        picked.push(chosen);
+        for (i, c) in cand.iter().enumerate() {
+            dists[i] = dists[i].min(dist2(row(c), row(&chosen)));
+        }
+    }
+
+    // assemble (repeat picks if the buffer has fewer rows than `rows`)
+    let mut x = Vec::with_capacity(rows * features);
+    let mut y = Vec::with_capacity(rows);
+    let mut arrival = u64::MAX;
+    let newest_id = buffer.last().unwrap().batch.id;
+    for i in 0..rows {
+        let (bi, ri) = picked[i % picked.len()];
+        x.extend_from_slice(&buffer[bi].batch.x[ri * features..(ri + 1) * features]);
+        y.push(buffer[bi].batch.y[ri]);
+        arrival = arrival.min(buffer[bi].arrival);
+    }
+    // consume the newest batch slot (Camel keeps the rest buffered)
+    buffer.pop();
+    Pending { batch: Batch { id: newest_id, x, y }, arrival }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(id: u64, arrival: u64, xs: Vec<f32>, ys: Vec<i32>) -> Pending {
+        Pending { batch: Batch { id, x: xs, y: ys }, arrival }
+    }
+
+    #[test]
+    fn selects_diverse_rows() {
+        // two tight clusters; a 2-row selection must take one from each
+        let mut buf = vec![
+            pend(0, 0, vec![0.0, 0.0, 0.01, 0.0], vec![0, 0]),
+            pend(1, 10, vec![5.0, 5.0, 5.01, 5.0], vec![1, 1]),
+        ];
+        let p = select(&mut buf, 2, 2);
+        let labels: std::collections::BTreeSet<i32> = p.batch.y.iter().copied().collect();
+        assert_eq!(labels.len(), 2, "picked from both clusters: {:?}", p.batch.y);
+        assert_eq!(p.arrival, 0, "earliest contributing arrival");
+        assert_eq!(buf.len(), 1, "newest slot consumed");
+    }
+
+    #[test]
+    fn handles_fewer_rows_than_requested() {
+        let mut buf = vec![pend(0, 3, vec![1.0, 2.0], vec![7])];
+        let p = select(&mut buf, 4, 2);
+        assert_eq!(p.batch.y, vec![7, 7, 7, 7]);
+        assert_eq!(p.batch.x.len(), 8);
+    }
+}

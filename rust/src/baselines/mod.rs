@@ -1,0 +1,335 @@
+//! Single-device stream-learning baselines (Table 1):
+//! Oracle, 1-Skip, Random-N / Last-N B-Skip, and Camel.
+//!
+//! These run a sequential trainer over virtual time: one device, one model
+//! copy, training a microbatch costs `Σ_i (t̂f_i + t̂b_i)` ticks, and the
+//! admission policy decides what happens when data arrives while the
+//! device is busy.
+
+pub mod coreset;
+
+use crate::backend::{accuracy, backward_all, forward_all, Backend};
+use crate::metrics::{eval_tacc, RunMetrics};
+use crate::model::{LayerParams, ModelParams};
+use crate::ocl::{OclCtx, OclPlugin};
+use crate::pipeline::{EngineParams, RunResult};
+use crate::planner::costmodel::single_copy_bytes;
+use crate::planner::Profile;
+use crate::stream::{Batch, SyntheticStream};
+use crate::util::Rng;
+
+/// Admission policy of the sequential trainer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamPolicy {
+    /// idealized: every batch trained with zero latency (paper's Oracle)
+    Oracle,
+    /// train if idle, otherwise skip the batch entirely [29]
+    OneSkip,
+    /// buffer the latest `buf` batches; when idle train a random one
+    RandomN { buf: usize },
+    /// buffer the latest `buf` batches; when idle train the newest
+    LastN { buf: usize },
+    /// buffer + coreset selection before each training step [46]
+    Camel { buf: usize },
+}
+
+impl StreamPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamPolicy::Oracle => "Oracle",
+            StreamPolicy::OneSkip => "1-Skip",
+            StreamPolicy::RandomN { .. } => "Random-N",
+            StreamPolicy::LastN { .. } => "Last-N",
+            StreamPolicy::Camel { .. } => "Camel",
+        }
+    }
+
+    /// Table 1's method list with default buffer sizes.
+    pub fn table1() -> Vec<StreamPolicy> {
+        vec![
+            StreamPolicy::Oracle,
+            StreamPolicy::OneSkip,
+            StreamPolicy::RandomN { buf: 8 },
+            StreamPolicy::LastN { buf: 8 },
+            StreamPolicy::Camel { buf: 8 },
+        ]
+    }
+}
+
+pub struct Pending {
+    /// microbatch payload
+    pub batch: Batch,
+    /// virtual arrival time (ticks)
+    pub arrival: u64,
+}
+
+/// Run a stream baseline to completion.
+pub fn run_baseline(
+    policy: StreamPolicy,
+    stream: &mut SyntheticStream,
+    backend: &dyn Backend,
+    plugin: &mut dyn OclPlugin,
+    ep: &EngineParams,
+) -> RunResult {
+    let spec = stream.spec().clone();
+    let zoo = crate::config::zoo::default_zoo().expect("zoo");
+    let model = zoo
+        .models
+        .values()
+        .find(|m| m.features() == spec.features && m.classes() == spec.classes)
+        .cloned()
+        .unwrap_or_else(|| crate::config::ModelSpec {
+            name: "adhoc".into(),
+            dims: vec![spec.features, 64, spec.classes],
+        });
+    run_baseline_with_model(policy, stream, backend, plugin, ep, &model)
+}
+
+/// Run with an explicit model spec (the harness always uses this).
+pub fn run_baseline_with_model(
+    policy: StreamPolicy,
+    stream: &mut SyntheticStream,
+    backend: &dyn Backend,
+    plugin: &mut dyn OclPlugin,
+    ep: &EngineParams,
+    model: &crate::config::ModelSpec,
+) -> RunResult {
+    let spec = stream.spec().clone();
+    let shapes = model.layers();
+    let prof = Profile::analytic(model, spec.batch);
+    let td = if ep.td == 0 { prof.default_td() } else { ep.td };
+    let t_train: u64 = prof.t_f.iter().sum::<u64>() + prof.t_b.iter().sum::<u64>();
+    let mut params = ModelParams::init(model, ep.seed).layers;
+    let mut metrics = RunMetrics::default();
+    let mut rng = Rng::new(ep.seed ^ 0xBA5E);
+    let ctx = OclCtx {
+        backend,
+        shapes: &shapes,
+        classes: spec.classes,
+        batch: spec.batch,
+        features: spec.features,
+    };
+
+    let mut busy_until: u64 = 0;
+    let mut buffer: Vec<Pending> = Vec::new();
+    let buf_cap = match policy {
+        StreamPolicy::RandomN { buf } | StreamPolicy::LastN { buf } | StreamPolicy::Camel { buf } => buf,
+        _ => 0,
+    };
+
+    let mut plugin_mem_peak = 0usize;
+    let test = stream.test_set(ep.tacc_per_class);
+
+    while let Some(batch) = stream.next_batch() {
+        let t = batch.id * td;
+        metrics.record_arrival();
+
+        // Every arrival is predicted with the live model (oacc).
+        let (_, logits) = forward_all(backend, &shapes, &params, &batch.x, batch.y.len());
+        metrics.record_prediction(t, accuracy(spec.classes, &logits, &batch.y));
+
+        // Admission.
+        let trainable: Option<Pending> = match policy {
+            StreamPolicy::Oracle => Some(Pending { batch, arrival: t }),
+            StreamPolicy::OneSkip => {
+                if busy_until > t {
+                    metrics.record_drop();
+                    None
+                } else {
+                    Some(Pending { batch, arrival: t })
+                }
+            }
+            StreamPolicy::RandomN { .. } | StreamPolicy::LastN { .. } | StreamPolicy::Camel { .. } => {
+                buffer.push(Pending { batch, arrival: t });
+                if buffer.len() > buf_cap {
+                    buffer.remove(0);
+                    metrics.record_drop();
+                }
+                if busy_until > t {
+                    None
+                } else {
+                    match policy {
+                        StreamPolicy::RandomN { .. } => {
+                            let i = rng.below(buffer.len());
+                            Some(buffer.remove(i))
+                        }
+                        StreamPolicy::LastN { .. } => buffer.pop(),
+                        StreamPolicy::Camel { .. } => {
+                            // coreset-select rows across the whole buffer
+                            Some(coreset::select(&mut buffer, spec.batch, spec.features))
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        };
+
+        if let Some(pending) = trainable {
+            let start = t.max(busy_until);
+            let select_cost = match policy {
+                // Camel pays a selection pass over the buffer
+                StreamPolicy::Camel { buf } => {
+                    (buf * spec.batch * spec.features) as u64 / crate::planner::profile::FLOPS_PER_TICK as u64
+                }
+                _ => 0,
+            };
+            let done = match policy {
+                StreamPolicy::Oracle => start, // idealized zero-latency
+                _ => start + t_train + select_cost,
+            };
+            busy_until = done;
+            train_step(
+                backend,
+                &shapes,
+                &mut params,
+                plugin,
+                &ctx,
+                pending,
+                done,
+                ep,
+                ep.decay(td),
+                &mut metrics,
+            );
+            plugin_mem_peak = plugin_mem_peak.max(plugin.memory_bytes());
+        }
+        let buffer_bytes = buffer.len() * (spec.batch * spec.features * 4 + spec.batch * 4);
+        metrics.observe_live_bytes(buffer_bytes);
+    }
+
+    // memory: one model copy (+grads+acts) + buffer + plugin state
+    let buffer_bytes = buf_cap * (spec.batch * spec.features * 4 + spec.batch * 4);
+    metrics.mem_bytes = single_copy_bytes(&prof) + buffer_bytes as f64 + plugin_mem_peak as f64;
+    metrics.tacc = eval_tacc(backend, &shapes, &params, spec.classes, &test, spec.batch);
+    RunResult { metrics, params }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn train_step(
+    backend: &dyn Backend,
+    shapes: &[crate::config::LayerShape],
+    params: &mut Vec<LayerParams>,
+    plugin: &mut dyn OclPlugin,
+    ctx: &OclCtx,
+    pending: Pending,
+    done: u64,
+    ep: &EngineParams,
+    decay: f64,
+    metrics: &mut RunMetrics,
+) {
+    let batch = plugin.augment(pending.batch, params, ctx);
+    let (inputs, logits) = forward_all(backend, shapes, params, &batch.x, batch.y.len());
+    let (gl, loss) = plugin.loss_grad(&logits, &batch.y, &batch.x, ctx);
+    let mut grads = backward_all(backend, shapes, params, &inputs, &gl, batch.y.len());
+    for (i, (g, p)) in grads.iter_mut().zip(params.iter()).enumerate() {
+        plugin.adjust_layer_grad(i, g, p, ctx);
+    }
+    for (p, g) in params.iter_mut().zip(&grads) {
+        *p = backend.sgd(p, g, ep.lr);
+    }
+    plugin.after_update(params, ctx);
+    metrics.record_loss(done, loss);
+    metrics.record_update(done - pending.arrival, decay, 1.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::ocl::Vanilla;
+    use crate::stream::{DriftKind, StreamSpec};
+
+    fn mk_stream(n: usize) -> SyntheticStream {
+        SyntheticStream::new(StreamSpec {
+            name: "t".into(),
+            features: 16,
+            classes: 4,
+            batch: 8,
+            num_batches: n,
+            kind: DriftKind::Stationary,
+            margin: 3.0,
+            noise: 0.5,
+            seed: 11,
+        })
+    }
+
+    fn model() -> crate::config::ModelSpec {
+        crate::config::ModelSpec { name: "t".into(), dims: vec![16, 32, 4] }
+    }
+
+    fn run(policy: StreamPolicy, n: usize) -> RunResult {
+        let mut stream = mk_stream(n);
+        let ep = EngineParams { lr: 0.2, ..Default::default() };
+        run_baseline_with_model(policy, &mut stream, &NativeBackend, &mut Vanilla, &ep, &model())
+    }
+
+    #[test]
+    fn oracle_learns_separable_stream() {
+        let r = run(StreamPolicy::Oracle, 150);
+        assert!(r.metrics.oacc.value() > 60.0, "oacc {}", r.metrics.oacc.value());
+        assert!(r.metrics.tacc > 80.0, "tacc {}", r.metrics.tacc);
+        assert_eq!(r.metrics.trained, 150);
+        assert_eq!(r.metrics.dropped, 0);
+        // zero-latency updates: adaptation rate = 1
+        assert!((r.metrics.adaptation_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_skip_drops_and_underperforms_oracle() {
+        let oracle = run(StreamPolicy::Oracle, 150);
+        let skip = run(StreamPolicy::OneSkip, 150);
+        assert!(skip.metrics.dropped > 0, "training is slower than arrival");
+        assert!(skip.metrics.trained < 150);
+        assert!(skip.metrics.oacc.value() <= oracle.metrics.oacc.value() + 1.0);
+        assert!(skip.metrics.adaptation_rate() < oracle.metrics.adaptation_rate());
+    }
+
+    #[test]
+    fn buffered_policies_train_more_batches_than_one_skip() {
+        let skip = run(StreamPolicy::OneSkip, 150);
+        for p in [StreamPolicy::RandomN { buf: 8 }, StreamPolicy::LastN { buf: 8 }] {
+            let r = run(p, 150);
+            // buffered policies use more memory...
+            assert!(r.metrics.mem_bytes > skip.metrics.mem_bytes);
+            // ...and train whenever idle (same cadence), but never starve
+            assert!(r.metrics.trained >= skip.metrics.trained);
+        }
+    }
+
+    #[test]
+    fn camel_trains_and_pays_selection_latency() {
+        let camel = run(StreamPolicy::Camel { buf: 8 }, 150);
+        let skip = run(StreamPolicy::OneSkip, 150);
+        assert!(camel.metrics.trained > 0);
+        // selection cost lowers the measured adaptation rate per update
+        assert!(camel.metrics.mem_bytes > skip.metrics.mem_bytes);
+        assert!(camel.metrics.oacc.value() > 30.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(StreamPolicy::RandomN { buf: 8 }, 60);
+        let b = run(StreamPolicy::RandomN { buf: 8 }, 60);
+        assert_eq!(a.metrics.oacc.value(), b.metrics.oacc.value());
+        assert_eq!(a.params[0].w, b.params[0].w);
+    }
+
+    #[test]
+    fn ocl_plugins_run_through_baseline_engine() {
+        use crate::ocl::OclKind;
+        for kind in OclKind::all() {
+            let mut stream = mk_stream(40);
+            let ep = EngineParams { lr: 0.2, ..Default::default() };
+            let mut plugin = kind.build(3);
+            let r = run_baseline_with_model(
+                StreamPolicy::Oracle,
+                &mut stream,
+                &NativeBackend,
+                plugin.as_mut(),
+                &ep,
+                &model(),
+            );
+            assert!(r.metrics.trained > 0, "{}", kind.name());
+            assert!(r.metrics.oacc.value() > 25.0, "{} oacc {}", kind.name(), r.metrics.oacc.value());
+        }
+    }
+}

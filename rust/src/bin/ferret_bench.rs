@@ -1,0 +1,107 @@
+//! ferret-bench — regenerate the paper's tables and figures.
+//!
+//! Usage:
+//!   ferret-bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all
+//!                [--quick] [--batches N] [--seeds a,b,...] [--settings i,j,...]
+//!
+//! Results are printed as markdown and saved under results/ as .md + .csv.
+
+use ferret::harness::{Bench, BenchCfg, Table};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ferret-bench --exp <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all> \
+         [--quick] [--batches N] [--seeds a,b] [--settings i,j]"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut exp = String::from("all");
+    let mut cfg = BenchCfg::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--exp" => {
+                i += 1;
+                exp = args.get(i).unwrap_or_else(|| usage()).clone();
+            }
+            "--quick" => cfg = BenchCfg { quiet: cfg.quiet, ..BenchCfg::quick() },
+            "--batches" => {
+                i += 1;
+                cfg.num_batches =
+                    args.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            }
+            "--seeds" => {
+                i += 1;
+                cfg.seeds = args
+                    .get(i)
+                    .unwrap_or_else(|| usage())
+                    .split(',')
+                    .map(|s| s.parse().expect("seed"))
+                    .collect();
+            }
+            "--settings" => {
+                i += 1;
+                cfg.settings = Some(
+                    args.get(i)
+                        .unwrap_or_else(|| usage())
+                        .split(',')
+                        .map(|s| s.parse().expect("setting index"))
+                        .collect(),
+                );
+            }
+            "--quiet" => cfg.quiet = true,
+            _ => usage(),
+        }
+        i += 1;
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut bench = Bench::new(cfg);
+    let emit = |name: &str, table: Table| {
+        println!("\n{}", table.to_markdown());
+        table.save(name).expect("writing results/");
+        eprintln!(
+            "[ferret-bench] saved results/{name}.{{md,csv}} ({:.0}s)",
+            t0.elapsed().as_secs_f64()
+        );
+    };
+
+    let want = |e: &str| exp == "all" || exp == e;
+    if want("table1") {
+        let t = bench.table1();
+        emit("table1", t);
+    }
+    if want("table7") {
+        let t = bench.table7();
+        emit("table7", t);
+    }
+    if want("fig4") {
+        let t = bench.fig4();
+        emit("fig4", t);
+    }
+    if want("table3") {
+        let t = bench.table3();
+        emit("table3", t);
+    }
+    if want("table2") || want("table8") {
+        let (t2, t8) = bench.table2_and_8();
+        emit("table2", t2);
+        emit("table8", t8);
+    }
+    if want("table4") {
+        let t = bench.table4();
+        emit("table4", t);
+    }
+    if want("fig6") {
+        let t = bench.fig6();
+        emit("fig6", t);
+    }
+    if want("fig7") {
+        let t = bench.fig7();
+        emit("fig7", t);
+    }
+    eprintln!("[ferret-bench] done in {:.0}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,409 @@
+//! Stale-gradient compensation policies (paper §5.1.2 + Table 4 baselines).
+//!
+//! A gradient computed against stage version `v` lands when the live stage
+//! is at version `v + τ`. Each policy transforms `(grad, lr)` given the
+//! staleness context:
+//!   - `NoComp`     — apply raw (Pipedream-style zero-order assumption)
+//!   - `StepAware`  — shrink the step 1/(1+τ) [33, 41]
+//!   - `GapAware`   — shrink by the parameter-gap ratio [7]
+//!   - `Fisher`     — one Taylor/diagonal-Fisher step over the whole jump
+//!     Δθ = θ_{v+τ} − θ_v with fixed λ [14, 85]
+//!   - `IterFisher` — the paper's contribution: apply the approximator
+//!     A(g, Δθ; λ) = g + λ·g⊙g⊙Δθ once per *consecutive* version step
+//!     (Eq. 9 / Alg. 1), with λ auto-tuned online from EMA statistics
+//!     (Eq. 10–12).
+
+use crate::backend::Backend;
+use crate::model::GradBuf;
+
+/// Which compensation policy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompKind {
+    NoComp,
+    StepAware,
+    GapAware,
+    Fisher,
+    IterFisher,
+}
+
+impl CompKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompKind::NoComp => "None",
+            CompKind::StepAware => "Step-Aware",
+            CompKind::GapAware => "Gap-Aware",
+            CompKind::Fisher => "Fisher",
+            CompKind::IterFisher => "Iter-Fisher",
+        }
+    }
+
+    pub fn all() -> [CompKind; 5] {
+        [
+            CompKind::NoComp,
+            CompKind::StepAware,
+            CompKind::GapAware,
+            CompKind::Fisher,
+            CompKind::IterFisher,
+        ]
+    }
+}
+
+/// Staleness context handed to the policy at update time.
+pub struct CompContext<'a> {
+    pub backend: &'a dyn Backend,
+    /// staleness in version steps (0 = fresh)
+    pub tau: u64,
+    /// consecutive version deltas Δθ^{v→v+1}, oldest first (len == tau
+    /// when the stash still holds the chain; may be shorter after
+    /// eviction, in which case the remainder is covered by `jump`)
+    pub chain: &'a [GradBuf],
+    /// single jump Δθ = θ_now − θ_fwd
+    pub jump: Option<&'a GradBuf>,
+    /// learning rate the update will use (Gap-Aware normalization)
+    pub lr: f32,
+}
+
+/// A compensation policy instance (one per worker-stage slot; IterFisher
+/// keeps per-slot EMA state).
+pub trait Compensator: Send {
+    /// Returns the compensated gradient and an lr scale factor.
+    fn compensate(&mut self, grad: GradBuf, ctx: &CompContext) -> (GradBuf, f32);
+
+    /// Extra state bytes held (for the memory model; Alg. 1 notes the
+    /// O(2 Σ|w|) cost of v_r/v_a when λ is being optimized).
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    /// Whether the policy consumes the parameter-delta chain/jump. The
+    /// engine skips materializing them (τ vector clones per update)
+    /// when false — the PipeDream/NoComp hot path.
+    fn needs_deltas(&self) -> bool {
+        true
+    }
+}
+
+/// Hyper-parameters (paper §12: λ=0.2, ν=2e-6 for Iter-Fisher).
+#[derive(Debug, Clone, Copy)]
+pub struct CompParams {
+    pub lam0: f32,
+    /// λ learning rate η_λ; 0 disables auto-tuning (and the EMA buffers)
+    pub eta_lam: f32,
+    /// EMA coefficient α (Eq. 11)
+    pub alpha: f32,
+    /// ℓ2 regularizer ν on λ (Eq. 10)
+    pub nu: f32,
+}
+
+impl Default for CompParams {
+    fn default() -> Self {
+        CompParams { lam0: 0.2, eta_lam: 1e-3, alpha: 0.9, nu: 2e-6 }
+    }
+}
+
+pub fn make(kind: CompKind, params: CompParams) -> Box<dyn Compensator> {
+    match kind {
+        CompKind::NoComp => Box::new(NoComp),
+        CompKind::StepAware => Box::new(StepAware),
+        CompKind::GapAware => Box::new(GapAware),
+        CompKind::Fisher => Box::new(Fisher { lam: params.lam0 }),
+        CompKind::IterFisher => Box::new(IterFisher::new(params)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Baselines
+// ---------------------------------------------------------------------
+
+struct NoComp;
+
+impl Compensator for NoComp {
+    fn compensate(&mut self, grad: GradBuf, _ctx: &CompContext) -> (GradBuf, f32) {
+        (grad, 1.0)
+    }
+
+    fn needs_deltas(&self) -> bool {
+        false
+    }
+}
+
+struct StepAware;
+
+impl Compensator for StepAware {
+    fn compensate(&mut self, grad: GradBuf, ctx: &CompContext) -> (GradBuf, f32) {
+        (grad, 1.0 / (1.0 + ctx.tau as f32))
+    }
+
+    fn needs_deltas(&self) -> bool {
+        false
+    }
+}
+
+struct GapAware;
+
+impl Compensator for GapAware {
+    fn compensate(&mut self, grad: GradBuf, ctx: &CompContext) -> (GradBuf, f32) {
+        // gap = ||θ_now − θ_fwd|| normalized by the typical step ||lr·g||;
+        // penalize the step by 1/(1+gap) (Barkai et al.'s per-update form).
+        let scale = match ctx.jump {
+            Some(jump) if ctx.tau > 0 => {
+                let gap = jump.norm2().sqrt();
+                let step = (ctx.lr as f64) * grad.norm2().sqrt().max(1e-12);
+                1.0 / (1.0 + (gap / step.max(1e-12)) as f32 / (1.0 + ctx.tau as f32))
+            }
+            _ => 1.0,
+        };
+        (grad, scale)
+    }
+}
+
+struct Fisher {
+    lam: f32,
+}
+
+impl Compensator for Fisher {
+    fn compensate(&mut self, grad: GradBuf, ctx: &CompContext) -> (GradBuf, f32) {
+        match ctx.jump {
+            Some(jump) if ctx.tau > 0 => (ctx.backend.compensate(&grad, jump, self.lam), 1.0),
+            _ => (grad, 1.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Iter-Fisher (the paper's algorithm)
+// ---------------------------------------------------------------------
+
+struct IterFisher {
+    params: CompParams,
+    lam: f32,
+    /// v_r: EMA of observed gradients (Alg. 1)
+    v_r: Option<GradBuf>,
+    /// v_a: EMA of g⊙g⊙Δθ
+    v_a: Option<GradBuf>,
+}
+
+impl IterFisher {
+    fn new(params: CompParams) -> Self {
+        IterFisher { params, lam: params.lam0, v_r: None, v_a: None }
+    }
+
+    /// Alg. 1 lines 3–7: update λ from the one-step approximation error.
+    fn tune_lambda(&mut self, grad: &GradBuf, first_delta: &GradBuf) {
+        let a = self.params.alpha;
+        if self.v_r.is_none() {
+            self.v_r = Some(GradBuf {
+                gw: vec![0.0; grad.gw.len()],
+                gb: vec![0.0; grad.gb.len()],
+            });
+            self.v_a = Some(GradBuf {
+                gw: vec![0.0; grad.gw.len()],
+                gb: vec![0.0; grad.gb.len()],
+            });
+        }
+        let v_r = self.v_r.as_mut().unwrap();
+        let v_a = self.v_a.as_mut().unwrap();
+        // Δv_r = (1-α)(g − v_r); ∇_λ ||Δv_r − λ v_a||² = −2 v_aᵀ(Δv_r − λ v_a)
+        // (+ 2νλ from the ℓ2 term of Eq. 10)
+        let mut dot = 0.0f64;
+        let mut va_norm2 = 0.0f64;
+        let iter = v_r
+            .gw
+            .iter()
+            .zip(&grad.gw)
+            .zip(v_a.gw.iter())
+            .map(|((r, g), va)| (*r, *g, *va))
+            .chain(
+                v_r.gb
+                    .iter()
+                    .zip(&grad.gb)
+                    .zip(v_a.gb.iter())
+                    .map(|((r, g), va)| (*r, *g, *va)),
+            );
+        for (r, g, va) in iter {
+            let dvr = (1.0 - a) * (g - r);
+            dot += va as f64 * (dvr - self.lam * va) as f64;
+            va_norm2 += va as f64 * va as f64;
+        }
+        let grad_lam = -2.0 * dot + 2.0 * self.params.nu as f64 * self.lam as f64;
+        // normalized step keeps tuning stable across parameter scales
+        let step = self.params.eta_lam as f64 * grad_lam / (1.0 + va_norm2);
+        self.lam = (self.lam as f64 - step).clamp(0.0, 2.0) as f32;
+        // EMA updates (Eq. 11)
+        let upd = |ema: &mut Vec<f32>, obs: &[f32]| {
+            for (e, &o) in ema.iter_mut().zip(obs) {
+                *e = a * *e + (1.0 - a) * o;
+            }
+        };
+        upd(&mut v_r.gw, &grad.gw);
+        upd(&mut v_r.gb, &grad.gb);
+        // v_a observes g⊙g⊙Δθ for the first version step
+        let obs_w: Vec<f32> = grad
+            .gw
+            .iter()
+            .zip(&first_delta.gw)
+            .map(|(&g, &d)| g * g * d)
+            .collect();
+        let obs_b: Vec<f32> = grad
+            .gb
+            .iter()
+            .zip(&first_delta.gb)
+            .map(|(&g, &d)| g * g * d)
+            .collect();
+        upd(&mut v_a.gw, &obs_w);
+        upd(&mut v_a.gb, &obs_b);
+    }
+}
+
+impl Compensator for IterFisher {
+    fn compensate(&mut self, grad: GradBuf, ctx: &CompContext) -> (GradBuf, f32) {
+        if ctx.tau == 0 {
+            return (grad, 1.0);
+        }
+        if self.params.eta_lam > 0.0 {
+            if let Some(first) = ctx.chain.first() {
+                self.tune_lambda(&grad, first);
+            }
+        }
+        // Eq. 9: iterate A over consecutive version deltas.
+        let mut g = grad;
+        for delta in ctx.chain {
+            g = ctx.backend.compensate(&g, delta, self.lam);
+        }
+        // chain shorter than tau (stash eviction): cover the remainder
+        // with one jump application — still strictly better than nothing.
+        if (ctx.chain.len() as u64) < ctx.tau {
+            if let Some(jump) = ctx.jump {
+                g = ctx.backend.compensate(&g, jump, self.lam);
+            }
+        }
+        (g, 1.0)
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Alg. 1: two extra buffers when λ is being optimized
+        match (&self.v_r, self.params.eta_lam > 0.0) {
+            (Some(v), true) => 2 * (v.gw.len() + v.gb.len()) * 4,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+
+    fn g(vals: &[f32]) -> GradBuf {
+        GradBuf { gw: vals.to_vec(), gb: vec![0.1] }
+    }
+
+    fn ctx<'a>(
+        backend: &'a NativeBackend,
+        tau: u64,
+        chain: &'a [GradBuf],
+        jump: Option<&'a GradBuf>,
+    ) -> CompContext<'a> {
+        CompContext { backend, tau, chain, jump, lr: 0.1 }
+    }
+
+    #[test]
+    fn fresh_gradients_untouched_by_all_policies() {
+        let be = NativeBackend;
+        for kind in CompKind::all() {
+            let mut c = make(kind, CompParams::default());
+            let (out, scale) = c.compensate(g(&[1.0, -2.0]), &ctx(&be, 0, &[], None));
+            assert_eq!(out.gw, vec![1.0, -2.0], "{}", kind.name());
+            assert_eq!(scale, 1.0, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn step_aware_shrinks_with_tau() {
+        let be = NativeBackend;
+        let mut c = make(CompKind::StepAware, CompParams::default());
+        let (_, s1) = c.compensate(g(&[1.0]), &ctx(&be, 1, &[], None));
+        let (_, s3) = c.compensate(g(&[1.0]), &ctx(&be, 3, &[], None));
+        assert_eq!(s1, 0.5);
+        assert_eq!(s3, 0.25);
+    }
+
+    #[test]
+    fn gap_aware_penalizes_large_gaps() {
+        let be = NativeBackend;
+        let mut c = make(CompKind::GapAware, CompParams::default());
+        let small = g(&[0.01, 0.01]);
+        let large = g(&[10.0, 10.0]);
+        let (_, s_small) = c.compensate(g(&[1.0, 1.0]), &ctx(&be, 2, &[], Some(&small)));
+        let (_, s_large) = c.compensate(g(&[1.0, 1.0]), &ctx(&be, 2, &[], Some(&large)));
+        assert!(s_small > s_large, "{s_small} <= {s_large}");
+        assert!(s_large < 1.0 && s_small <= 1.0);
+    }
+
+    #[test]
+    fn fisher_single_jump_matches_eq8() {
+        let be = NativeBackend;
+        let mut c = make(CompKind::Fisher, CompParams { lam0: 0.5, ..Default::default() });
+        let jump = g(&[0.2, -0.2]);
+        let (out, s) = c.compensate(g(&[2.0, 1.0]), &ctx(&be, 2, &[], Some(&jump)));
+        assert_eq!(s, 1.0);
+        assert!((out.gw[0] - (2.0 + 0.5 * 4.0 * 0.2)).abs() < 1e-6);
+        assert!((out.gw[1] - (1.0 + 0.5 * 1.0 * -0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iter_fisher_applies_chain_iteratively() {
+        let be = NativeBackend;
+        let params = CompParams { lam0: 0.5, eta_lam: 0.0, ..Default::default() };
+        let mut c = make(CompKind::IterFisher, params);
+        let chain = vec![g(&[0.1, 0.0]), g(&[0.2, 0.0])];
+        let (out, _) = c.compensate(g(&[1.0, 1.0]), &ctx(&be, 2, &chain, None));
+        // manual: g1 = 1 + .5*1*0.1 = 1.05; g2 = 1.05 + .5*1.05^2*0.2
+        let g1 = 1.0f32 + 0.5 * 1.0 * 0.1;
+        let g2 = g1 + 0.5 * g1 * g1 * 0.2;
+        assert!((out.gw[0] - g2).abs() < 1e-6, "{} vs {g2}", out.gw[0]);
+        assert_eq!(out.gw[1], 1.0, "zero deltas leave grad unchanged");
+        // eta=0: no EMA state allocated
+        assert_eq!(c.state_bytes(), 0);
+    }
+
+    #[test]
+    fn iter_fisher_lambda_tuning_allocates_state_and_stays_bounded() {
+        let be = NativeBackend;
+        let params = CompParams { lam0: 0.2, eta_lam: 1e-2, ..Default::default() };
+        let mut c = IterFisher::new(params);
+        let chain = vec![g(&[0.05, -0.05])];
+        for i in 0..50 {
+            let gr = g(&[1.0 + 0.01 * i as f32, -1.0]);
+            let cx = ctx(&be, 1, &chain, None);
+            let _ = c.compensate(gr, &cx);
+        }
+        assert!(c.lam >= 0.0 && c.lam <= 2.0, "λ = {}", c.lam);
+        assert!(c.state_bytes() > 0);
+    }
+
+    /// Iter-Fisher compensation reduces the true staleness error on a
+    /// quadratic model where the Hessian is exactly diagonal.
+    #[test]
+    fn iter_fisher_reduces_staleness_error_on_quadratic() {
+        // loss L(θ) = 0.5 Σ h_i (θ_i - t_i)^2, ∇L = h ⊙ (θ - t).
+        // True Hessian diag = h; Fisher approx λ g⊙g stands in for it —
+        // pick data scale where g ≈ O(1) so λ g⊙g ≈ h with λ = h.
+        let be = NativeBackend;
+        let h = [1.0f32, 1.0];
+        let t = [0.0f32, 0.0];
+        let grad_at = |th: &[f32; 2]| g(&[h[0] * (th[0] - t[0]), h[1] * (th[1] - t[1])]);
+        let theta_old = [1.0f32, -1.0];
+        let theta_new = [0.8f32, -0.7];
+        let stale = grad_at(&theta_old);
+        let fresh = grad_at(&theta_new);
+        let delta = g(&[theta_new[0] - theta_old[0], theta_new[1] - theta_old[1]]);
+        let chain = vec![delta];
+        let params = CompParams { lam0: 1.0, eta_lam: 0.0, ..Default::default() };
+        let mut c = make(CompKind::IterFisher, params);
+        let (comp, _) = c.compensate(stale.clone(), &ctx(&be, 1, &chain, None));
+        let err_raw: f32 = stale.gw.iter().zip(&fresh.gw).map(|(a, b)| (a - b).abs()).sum();
+        let err_comp: f32 = comp.gw.iter().zip(&fresh.gw).map(|(a, b)| (a - b).abs()).sum();
+        assert!(err_comp < err_raw, "comp {err_comp} !< raw {err_raw}");
+    }
+}

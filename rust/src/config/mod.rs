@@ -1,0 +1,49 @@
+//! Configuration: the shared model zoo (`zoo`) and repo-root resolution so
+//! binaries, tests, and examples find `configs/` and `artifacts/` no matter
+//! which working directory cargo launches them from.
+
+pub mod zoo;
+
+pub use zoo::{Act, LayerShape, ModelSpec, Zoo};
+
+use std::path::{Path, PathBuf};
+
+/// Resolve `rel` against the repo root. Walks up from CWD (then from the
+/// executable's location) until a directory containing `configs/models.cfg`
+/// is found; falls back to CWD-relative.
+pub fn repo_path(rel: &str) -> String {
+    fn find_root(mut dir: PathBuf) -> Option<PathBuf> {
+        loop {
+            if dir.join("configs/models.cfg").exists() {
+                return Some(dir);
+            }
+            if !dir.pop() {
+                return None;
+            }
+        }
+    }
+    let root = std::env::current_dir()
+        .ok()
+        .and_then(find_root)
+        .or_else(|| {
+            std::env::current_exe()
+                .ok()
+                .and_then(|p| p.parent().map(Path::to_path_buf))
+                .and_then(find_root)
+        });
+    match root {
+        Some(r) => r.join(rel).display().to_string(),
+        None => rel.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_path_finds_configs() {
+        let p = repo_path("configs/models.cfg");
+        assert!(std::path::Path::new(&p).exists(), "{p}");
+    }
+}

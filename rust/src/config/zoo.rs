@@ -1,0 +1,248 @@
+//! Model-zoo config parser for `configs/models.cfg`.
+//!
+//! The same file is parsed by `python/compile/zoo.py` to emit the artifact
+//! set, so artifact names derived here (`runtime::artifact_names`) always
+//! agree with what `make artifacts` produced.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Layer activation. Hidden layers are ReLU; the final layer emits logits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Act {
+    Relu,
+    None,
+}
+
+impl Act {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Act::Relu => "relu",
+            Act::None => "none",
+        }
+    }
+}
+
+/// One dense layer's static shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerShape {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub act: Act,
+}
+
+impl LayerShape {
+    /// Number of parameters (weights + bias).
+    pub fn param_count(&self) -> usize {
+        self.in_dim * self.out_dim + self.out_dim
+    }
+
+    /// Output activation size per sample.
+    pub fn act_count(&self) -> usize {
+        self.out_dim
+    }
+
+    /// FLOPs of one forward pass at batch `b` (2*B*K*N matmul + bias/act).
+    pub fn fwd_flops(&self, b: usize) -> u64 {
+        (2 * b * self.in_dim * self.out_dim + 2 * b * self.out_dim) as u64
+    }
+
+    /// FLOPs of one backward pass at batch `b` (dX and dW matmuls).
+    pub fn bwd_flops(&self, b: usize) -> u64 {
+        2 * self.fwd_flops(b)
+    }
+}
+
+/// A model from the zoo: a dense stack d0 -> d1 -> ... -> dk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+impl ModelSpec {
+    pub fn features(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn layers(&self) -> Vec<LayerShape> {
+        let last = self.dims.len() - 2;
+        (0..self.dims.len() - 1)
+            .map(|i| LayerShape {
+                in_dim: self.dims[i],
+                out_dim: self.dims[i + 1],
+                act: if i == last { Act::None } else { Act::Relu },
+            })
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers().iter().map(|l| l.param_count()).sum()
+    }
+}
+
+/// Parsed zoo: microbatch size + named models.
+#[derive(Debug, Clone)]
+pub struct Zoo {
+    pub batch: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Zoo {
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model {name:?} (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Distinct layer shapes across the zoo (artifact enumeration order is
+    /// irrelevant; this is a set).
+    pub fn distinct_layer_shapes(&self) -> Vec<LayerShape> {
+        let mut set: Vec<LayerShape> = Vec::new();
+        for m in self.models.values() {
+            for l in m.layers() {
+                if !set.contains(&l) {
+                    set.push(l);
+                }
+            }
+        }
+        set
+    }
+
+    pub fn distinct_class_counts(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.models.values().map(|m| m.classes()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Parse `models.cfg` text.
+pub fn parse_zoo(text: &str, origin: &str) -> Result<Zoo> {
+    let mut batch = None;
+    let mut models = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts[0] {
+            "batch" => {
+                if parts.len() != 2 {
+                    bail!("{origin}:{}: batch takes one int", lineno + 1);
+                }
+                batch = Some(parts[1].parse::<usize>()?);
+            }
+            "model" => {
+                if parts.len() < 4 {
+                    bail!("{origin}:{}: model needs a name and >=2 dims", lineno + 1);
+                }
+                let name = parts[1].to_string();
+                let dims = parts[2..]
+                    .iter()
+                    .map(|p| p.parse::<usize>().map_err(anyhow::Error::from))
+                    .collect::<Result<Vec<_>>>()?;
+                if dims.iter().any(|&d| d == 0) {
+                    bail!("{origin}:{}: dims must be positive", lineno + 1);
+                }
+                if models.insert(name.clone(), ModelSpec { name, dims }).is_some() {
+                    bail!("{origin}:{}: duplicate model", lineno + 1);
+                }
+            }
+            other => bail!("{origin}:{}: unknown directive {other:?}", lineno + 1),
+        }
+    }
+    let batch = batch.with_context(|| format!("{origin}: missing 'batch'"))?;
+    if models.is_empty() {
+        bail!("{origin}: no models");
+    }
+    Ok(Zoo { batch, models })
+}
+
+/// Load the zoo from a path (default: `configs/models.cfg` under the repo
+/// root, located relative to the executable's CWD).
+pub fn load_zoo(path: &Path) -> Result<Zoo> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading zoo config {}", path.display()))?;
+    parse_zoo(&text, &path.display().to_string())
+}
+
+/// Default path used by binaries/tests (relative to repo root).
+pub fn default_zoo() -> Result<Zoo> {
+    load_zoo(Path::new(&crate::config::repo_path("configs/models.cfg")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "batch 4\nmodel tiny 6 5 3\nmodel deep 8 8 8 8 2\n";
+
+    #[test]
+    fn parses_models_and_layers() {
+        let zoo = parse_zoo(TINY, "test").unwrap();
+        assert_eq!(zoo.batch, 4);
+        let tiny = zoo.model("tiny").unwrap();
+        let layers = tiny.layers();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0], LayerShape { in_dim: 6, out_dim: 5, act: Act::Relu });
+        assert_eq!(layers[1], LayerShape { in_dim: 5, out_dim: 3, act: Act::None });
+        assert_eq!(tiny.param_count(), 6 * 5 + 5 + 5 * 3 + 3);
+        assert_eq!(tiny.classes(), 3);
+        assert_eq!(tiny.features(), 6);
+    }
+
+    #[test]
+    fn distinct_shapes_dedup() {
+        let zoo = parse_zoo(TINY, "test").unwrap();
+        let shapes = zoo.distinct_layer_shapes();
+        // deep has 3 identical relu 8x8 layers -> deduped to one
+        assert_eq!(
+            shapes.len(),
+            2 /* tiny */ + 2, /* deep: 8x8 relu, 8x2 none */
+        );
+        assert_eq!(zoo.distinct_class_counts(), vec![2, 3]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_zoo("model a 4 2 3\n", "t").is_err()); // no batch
+        assert!(parse_zoo("batch 4\nmodel a 5\n", "t").is_err()); // one dim
+        assert!(parse_zoo("batch 4\nmodel a 4 0 3\n", "t").is_err()); // zero dim
+        assert!(parse_zoo("batch 4\nwat 1\n", "t").is_err()); // bad directive
+        assert!(parse_zoo("batch 4\nmodel a 4 3\nmodel a 4 3\n", "t").is_err()); // dup
+        assert!(parse_zoo("batch 4\n", "t").is_err()); // no models
+    }
+
+    #[test]
+    fn real_config_parses_and_matches_python_expectations() {
+        let zoo = default_zoo().unwrap();
+        assert_eq!(zoo.batch, 16);
+        assert!(zoo.models.len() >= 10);
+        // the paper's model tiers are all present
+        for name in ["mlp", "mnistnet10", "convnet10", "resnet11", "mobilenet11"] {
+            assert!(zoo.models.contains_key(name), "{name}");
+        }
+    }
+
+    #[test]
+    fn flops_monotone_in_batch() {
+        let l = LayerShape { in_dim: 8, out_dim: 4, act: Act::Relu };
+        assert!(l.fwd_flops(2) < l.fwd_flops(4));
+        assert_eq!(l.bwd_flops(2), 2 * l.fwd_flops(2));
+    }
+}

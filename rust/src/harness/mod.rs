@@ -1,0 +1,639 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§6) on the synthetic settings grid. See DESIGN.md §5 for
+//! the experiment index.
+//!
+//! Runs are cached inside a [`Bench`] so artifacts that share a run
+//! matrix (Table 1 / Table 7 / Fig. 4 / Fig. 7) execute it only once.
+
+pub mod report;
+
+use std::collections::HashMap;
+
+use crate::backend::{native::NativeBackend, Backend};
+use crate::baselines::{run_baseline_with_model, StreamPolicy};
+use crate::compensate::CompKind;
+use crate::config::{zoo::default_zoo, ModelSpec, Zoo};
+use crate::metrics::{agm, RunMetrics};
+use crate::ocl::OclKind;
+use crate::pipeline::engine::{run_async, AsyncCfg, AsyncSchedule};
+use crate::pipeline::sync::{run_sync, SyncSchedule};
+use crate::pipeline::EngineParams;
+use crate::planner::{plan, Partition, Profile};
+use crate::stream::{paper_settings, Setting, SyntheticStream};
+pub use report::{Cell, Table};
+
+/// Ferret memory tiers of the paper's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// minimal feasible budget ("Ferret_M-")
+    Min,
+    /// same budget as PipeDream-2BW ("Ferret_M")
+    Med,
+    /// unconstrained ("Ferret_M+")
+    Max,
+}
+
+/// A method column in the tables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Baseline(StreamPolicy),
+    Sync(SyncSchedule),
+    Async(AsyncSchedule),
+    Ferret { tier: Tier, comp: CompKind },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Baseline(p) => p.name().to_string(),
+            Method::Sync(s) => s.name(),
+            Method::Async(a) => a.name().to_string(),
+            Method::Ferret { tier, comp } => {
+                let t = match tier {
+                    Tier::Min => "Ferret_M-",
+                    Tier::Med => "Ferret_M",
+                    Tier::Max => "Ferret_M+",
+                };
+                match comp {
+                    CompKind::IterFisher => t.to_string(),
+                    other => format!("{t}/{}", other.name()),
+                }
+            }
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchCfg {
+    /// stream length in microbatches per run
+    pub num_batches: usize,
+    pub seeds: Vec<u64>,
+    /// indices into `paper_settings()`; None = all 20
+    pub settings: Option<Vec<usize>>,
+    pub lr: f32,
+    pub quiet: bool,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg { num_batches: 160, seeds: vec![1, 2], settings: None, lr: 0.04, quiet: false }
+    }
+}
+
+impl BenchCfg {
+    /// CI/smoke configuration: two settings, short streams, one seed.
+    pub fn quick() -> Self {
+        BenchCfg {
+            num_batches: 40,
+            seeds: vec![1],
+            settings: Some(vec![0, 19]),
+            lr: 0.05,
+            quiet: true,
+        }
+    }
+}
+
+/// Run cache + model/plan memos.
+pub struct Bench {
+    pub cfg: BenchCfg,
+    zoo: Zoo,
+    backend: Box<dyn Backend>,
+    runs: HashMap<(usize, String, u64), RunMetrics>,
+    plans: HashMap<(String, u64), (Partition, Profile, u64)>, // model -> shared partition
+}
+
+impl Bench {
+    pub fn new(cfg: BenchCfg) -> Self {
+        Bench {
+            cfg,
+            zoo: default_zoo().expect("zoo"),
+            backend: Box::new(NativeBackend),
+            runs: HashMap::new(),
+            plans: HashMap::new(),
+        }
+    }
+
+    /// Swap in a different backend (e.g. the XLA/PJRT one).
+    pub fn with_backend(mut self, backend: Box<dyn Backend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn settings(&self) -> Vec<(usize, Setting)> {
+        let all = paper_settings();
+        match &self.cfg.settings {
+            Some(idx) => idx.iter().map(|&i| (i, all[i].clone())).collect(),
+            None => all.into_iter().enumerate().collect(),
+        }
+    }
+
+    fn model(&self, s: &Setting) -> ModelSpec {
+        self.zoo.model(s.model).expect("model").clone()
+    }
+
+    fn stream(&self, s: &Setting, seed: u64) -> SyntheticStream {
+        let m = self.model(s);
+        SyntheticStream::new(s.stream_spec(
+            m.features(),
+            m.classes(),
+            self.zoo.batch,
+            self.cfg.num_batches,
+            seed,
+        ))
+    }
+
+    /// Shared (unconstrained-planned) partition per model — §12: "L* and
+    /// C* are pre-determined and shared for all pipeline parallelism
+    /// strategies".
+    fn shared_partition(&mut self, model: &ModelSpec) -> (Partition, Profile, u64) {
+        if let Some(v) = self.plans.get(&(model.name.clone(), 0)) {
+            return v.clone();
+        }
+        let prof = Profile::analytic(model, self.zoo.batch);
+        let td = prof.default_td();
+        let out = plan(&prof, td, f64::INFINITY, crate::planner::costmodel::decay_for_td(td));
+        let v = (out.partition, prof, td);
+        self.plans.insert((model.name.clone(), 0), v.clone());
+        v
+    }
+
+    /// Budget (bytes) for a Ferret tier on this model.
+    pub fn tier_budget(&mut self, model: &ModelSpec, tier: Tier) -> f64 {
+        let (part, prof, td) = self.shared_partition(model);
+        match tier {
+            Tier::Max => f64::INFINITY,
+            Tier::Med => {
+                // PipeDream-2BW's footprint (Eq. 4 at accum=2, no T1/T3)
+                let mut pipe = crate::planner::costmodel::PipeConfig::initial(
+                    part.num_stages(),
+                    part.tf(&prof),
+                    part.tb(&prof),
+                    false,
+                    td,
+                );
+                for w in &mut pipe.workers {
+                    w.accum = vec![2; part.num_stages()];
+                }
+                crate::planner::costmodel::mem_footprint(&part, &prof, &pipe)
+            }
+            Tier::Min => {
+                // one worker, every reducible stage fully omitted
+                let p = part.num_stages();
+                let mut pipe = crate::planner::costmodel::PipeConfig::initial(
+                    p,
+                    part.tf(&prof),
+                    part.tb(&prof),
+                    false,
+                    td,
+                );
+                pipe.workers.truncate(1);
+                for j in 0..p.saturating_sub(1) {
+                    pipe.workers[0].omit[j] = (p - 1 - j) as u64;
+                }
+                crate::planner::costmodel::mem_footprint(&part, &prof, &pipe) * 1.05
+            }
+        }
+    }
+
+    /// Execute (or fetch) one run.
+    pub fn run(
+        &mut self,
+        setting_idx: usize,
+        setting: &Setting,
+        method: Method,
+        ocl: OclKind,
+        seed: u64,
+    ) -> RunMetrics {
+        let key = (setting_idx, format!("{}/{}", method.name(), ocl.name()), seed);
+        if let Some(m) = self.runs.get(&key) {
+            return m.clone();
+        }
+        if !self.cfg.quiet {
+            eprintln!("[bench] {} {} {} seed={seed}", setting.label, method.name(), ocl.name());
+        }
+        let model = self.model(setting);
+        let mut stream = self.stream(setting, seed);
+        let mut plugin = ocl.build(seed);
+        let ep = EngineParams { lr: self.cfg.lr, seed, ..Default::default() };
+        let result = match method {
+            Method::Baseline(policy) => run_baseline_with_model(
+                policy,
+                &mut stream,
+                self.backend.as_ref(),
+                plugin.as_mut(),
+                &ep,
+                &model,
+            ),
+            Method::Sync(schedule) => {
+                let (part, _, _) = self.shared_partition(&model);
+                run_sync(
+                    schedule,
+                    &mut stream,
+                    self.backend.as_ref(),
+                    plugin.as_mut(),
+                    &ep,
+                    &model,
+                    &part,
+                )
+            }
+            Method::Async(schedule) => {
+                let (part, prof, td) = self.shared_partition(&model);
+                let cfg = AsyncCfg::baseline(schedule, part, &prof, td);
+                run_async(cfg, &mut stream, self.backend.as_ref(), plugin.as_mut(), &ep, &model)
+            }
+            Method::Ferret { tier, comp } => {
+                let budget = self.tier_budget(&model, tier);
+                let (_, prof, td) = self.shared_partition(&model);
+                let out = plan(&prof, td, budget, crate::planner::costmodel::decay_for_td(td));
+                let cfg = AsyncCfg::ferret(out.partition, out.config, comp);
+                run_async(cfg, &mut stream, self.backend.as_ref(), plugin.as_mut(), &ep, &model)
+            }
+        };
+        self.runs.insert(key, result.metrics.clone());
+        result.metrics
+    }
+
+    // -----------------------------------------------------------------
+    // Experiment families
+    // -----------------------------------------------------------------
+
+    /// Table 1's method list.
+    pub fn table1_methods() -> Vec<Method> {
+        let mut m: Vec<Method> = StreamPolicy::table1().into_iter().map(Method::Baseline).collect();
+        for tier in [Tier::Min, Tier::Med, Tier::Max] {
+            m.push(Method::Ferret { tier, comp: CompKind::IterFisher });
+        }
+        m
+    }
+
+    /// Table 3's method list (B = DAPPLE; async without compensation).
+    pub fn table3_methods() -> Vec<Method> {
+        vec![
+            Method::Sync(SyncSchedule::Dapple),
+            Method::Sync(SyncSchedule::ZeroBubble),
+            Method::Sync(SyncSchedule::Hanayo { waves: 1 }),
+            Method::Sync(SyncSchedule::Hanayo { waves: 2 }),
+            Method::Sync(SyncSchedule::Hanayo { waves: 3 }),
+            Method::Async(AsyncSchedule::Pipedream),
+            Method::Async(AsyncSchedule::Pipedream2BW),
+            Method::Ferret { tier: Tier::Med, comp: CompKind::NoComp },
+        ]
+    }
+
+    /// One metric column table over (settings x methods), averaged over
+    /// seeds, where `value` extracts the number from (run, baseline-run).
+    fn grid_table(
+        &mut self,
+        title: &str,
+        methods: &[Method],
+        baseline: Method,
+        ocl: OclKind,
+        value: impl Fn(&RunMetrics, &RunMetrics) -> f64,
+    ) -> Table {
+        let cols = methods.iter().map(|m| m.name()).collect();
+        let mut table = Table::new(title, cols);
+        let seeds = self.cfg.seeds.clone();
+        for (idx, setting) in self.settings() {
+            let mut cells = Vec::new();
+            for &method in methods {
+                let samples: Vec<f64> = seeds
+                    .iter()
+                    .map(|&seed| {
+                        let base = self.run(idx, &setting, baseline, ocl, seed);
+                        let m = self.run(idx, &setting, method, ocl, seed);
+                        value(&m, &base)
+                    })
+                    .collect();
+                cells.push(Some(Cell::from_samples(&samples)));
+            }
+            table.push_row(setting.label, cells);
+        }
+        table
+    }
+
+    /// Table 1: agm vs 1-Skip across the 20-settings grid.
+    pub fn table1(&mut self) -> Table {
+        self.grid_table(
+            "Table 1 — Online Accuracy Gain per unit of Memory (agm, B = 1-Skip)",
+            &Self::table1_methods(),
+            Method::Baseline(StreamPolicy::OneSkip),
+            OclKind::Vanilla,
+            |m, b| agm(m.oacc.value(), b.oacc.value(), m.mem_bytes, b.mem_bytes),
+        )
+    }
+
+    /// Table 7 (appendix): raw online accuracy, same runs as Table 1.
+    pub fn table7(&mut self) -> Table {
+        self.grid_table(
+            "Table 7 — Online Accuracy (%)",
+            &Self::table1_methods(),
+            Method::Baseline(StreamPolicy::OneSkip),
+            OclKind::Vanilla,
+            |m, _| m.oacc.value(),
+        )
+    }
+
+    /// Fig. 4 / Fig. 10: consumed memory (MB) per method, same runs.
+    pub fn fig4(&mut self) -> Table {
+        self.grid_table(
+            "Fig. 4 — Consumed memory (MB) of stream learning algorithms",
+            &Self::table1_methods(),
+            Method::Baseline(StreamPolicy::OneSkip),
+            OclKind::Vanilla,
+            |m, _| m.mem_bytes / 1e6,
+        )
+    }
+
+    /// Table 3: agm vs DAPPLE for pipeline-parallel strategies.
+    pub fn table3(&mut self) -> Table {
+        self.grid_table(
+            "Table 3 — agm of pipeline parallelism strategies (B = DAPPLE)",
+            &Self::table3_methods(),
+            Method::Sync(SyncSchedule::Dapple),
+            OclKind::Vanilla,
+            |m, b| agm(m.oacc.value(), b.oacc.value(), m.mem_bytes, b.mem_bytes),
+        )
+    }
+
+    /// Table 2 + Table 8: OCL plugins on CORe50/ConvNet across frameworks.
+    /// Returns (table2 agm/tagm, table8 oacc/tacc).
+    pub fn table2_and_8(&mut self) -> (Table, Table) {
+        let core50 = 7; // index in paper_settings()
+        let setting = paper_settings()[core50].clone();
+        let methods = Self::table1_methods();
+        let cols: Vec<String> = methods.iter().map(|m| m.name()).collect();
+        let mut t2 = Table::new(
+            "Table 2 — agm / tagm of integrated OCL algorithms on CORe50/ConvNet (B = 1-Skip)",
+            cols.clone(),
+        );
+        let mut t8 = Table::new(
+            "Table 8 — oacc / tacc of integrated OCL algorithms on CORe50/ConvNet",
+            cols,
+        );
+        let seeds = self.cfg.seeds.clone();
+        for ocl in OclKind::all() {
+            // Camel has its own forgetting component (paper: not integrable)
+            let skip_camel = ocl != OclKind::Vanilla;
+            let mut agm_cells = Vec::new();
+            let mut tagm_cells = Vec::new();
+            let mut oacc_cells = Vec::new();
+            let mut tacc_cells = Vec::new();
+            for &method in &methods {
+                if skip_camel && matches!(method, Method::Baseline(StreamPolicy::Camel { .. })) {
+                    agm_cells.push(None);
+                    tagm_cells.push(None);
+                    oacc_cells.push(None);
+                    tacc_cells.push(None);
+                    continue;
+                }
+                let mut agms = Vec::new();
+                let mut tagms = Vec::new();
+                let mut oaccs = Vec::new();
+                let mut taccs = Vec::new();
+                for &seed in &seeds {
+                    let base =
+                        self.run(core50, &setting, Method::Baseline(StreamPolicy::OneSkip), ocl, seed);
+                    let m = self.run(core50, &setting, method, ocl, seed);
+                    agms.push(agm(m.oacc.value(), base.oacc.value(), m.mem_bytes, base.mem_bytes));
+                    tagms.push(agm(m.tacc, base.tacc, m.mem_bytes, base.mem_bytes));
+                    oaccs.push(m.oacc.value());
+                    taccs.push(m.tacc);
+                }
+                agm_cells.push(Some(Cell::from_samples(&agms)));
+                tagm_cells.push(Some(Cell::from_samples(&tagms)));
+                oacc_cells.push(Some(Cell::from_samples(&oaccs)));
+                tacc_cells.push(Some(Cell::from_samples(&taccs)));
+            }
+            t2.push_row(format!("{} agm", ocl.name()), agm_cells);
+            t2.push_row(format!("{} tagm", ocl.name()), tagm_cells);
+            t8.push_row(format!("{} oacc", ocl.name()), oacc_cells);
+            t8.push_row(format!("{} tacc", ocl.name()), tacc_cells);
+        }
+        (t2, t8)
+    }
+
+    /// Table 4: Δoacc of compensation policies vs no compensation, for
+    /// Ferret_M+ and Ferret_M.
+    pub fn table4(&mut self) -> Table {
+        let comps = [CompKind::StepAware, CompKind::GapAware, CompKind::Fisher, CompKind::IterFisher];
+        let mut cols = Vec::new();
+        for tier_name in ["M+", "M"] {
+            for c in comps {
+                cols.push(format!("{tier_name}/{}", c.name()));
+            }
+        }
+        let mut table = Table::new(
+            "Table 4 — Online accuracy delta of gradient compensation vs none",
+            cols,
+        );
+        let seeds = self.cfg.seeds.clone();
+        for (idx, setting) in self.settings() {
+            let mut cells = Vec::new();
+            for tier in [Tier::Max, Tier::Med] {
+                for comp in comps {
+                    let samples: Vec<f64> = seeds
+                        .iter()
+                        .map(|&seed| {
+                            let base = self.run(
+                                idx,
+                                &setting,
+                                Method::Ferret { tier, comp: CompKind::NoComp },
+                                OclKind::Vanilla,
+                                seed,
+                            );
+                            let m = self.run(
+                                idx,
+                                &setting,
+                                Method::Ferret { tier, comp },
+                                OclKind::Vanilla,
+                                seed,
+                            );
+                            m.oacc.value() - base.oacc.value()
+                        })
+                        .collect();
+                    cells.push(Some(Cell::from_samples(&samples)));
+                }
+            }
+            table.push_row(setting.label, cells);
+        }
+        table
+    }
+
+    /// Fig. 6 / Fig. 11: oacc vs memory across 5 budgets per strategy.
+    /// Non-Ferret strategies cannot adapt to a budget, so they contribute
+    /// one point each; Ferret contributes the full sweep.
+    pub fn fig6(&mut self) -> Table {
+        let mut table = Table::new(
+            "Fig. 6 — Online accuracy vs memory (budget sweep)",
+            vec!["mem_mb".into(), "oacc".into()],
+        );
+        let seeds = self.cfg.seeds.clone();
+        let picks: Vec<(usize, Setting)> = self.settings().into_iter().take(4).collect();
+        for (idx, setting) in picks {
+            // fixed-memory strategies: one point each
+            for method in Self::table3_methods() {
+                if matches!(method, Method::Ferret { .. }) {
+                    continue;
+                }
+                let (mems, oaccs): (Vec<f64>, Vec<f64>) = seeds
+                    .iter()
+                    .map(|&s| {
+                        let m = self.run(idx, &setting, method, OclKind::Vanilla, s);
+                        (m.mem_bytes / 1e6, m.oacc.value())
+                    })
+                    .unzip();
+                table.push_row(
+                    format!("{}/{}", setting.label, method.name()),
+                    vec![Some(Cell::from_samples(&mems)), Some(Cell::from_samples(&oaccs))],
+                );
+            }
+            // Ferret: 5 budgets, log-spaced between min and max footprint
+            let model = self.model(&setting);
+            let lo = self.tier_budget(&model, Tier::Min);
+            let hi_run = self.run(
+                idx,
+                &setting,
+                Method::Ferret { tier: Tier::Max, comp: CompKind::IterFisher },
+                OclKind::Vanilla,
+                seeds[0],
+            );
+            let hi = hi_run.mem_bytes.max(lo * 2.0);
+            for k in 0..5 {
+                let frac = k as f64 / 4.0;
+                let budget = lo * (hi / lo).powf(frac);
+                let (_, prof, td) = self.shared_partition(&model);
+                let out = plan(&prof, td, budget, crate::planner::costmodel::decay_for_td(td));
+                let (mems, oaccs): (Vec<f64>, Vec<f64>) = seeds
+                    .iter()
+                    .map(|&seed| {
+                        let mut stream = self.stream(&setting, seed);
+                        let cfg = AsyncCfg::ferret(
+                            out.partition.clone(),
+                            out.config.clone(),
+                            CompKind::IterFisher,
+                        );
+                        let ep = EngineParams { lr: self.cfg.lr, seed, ..Default::default() };
+                        let mut plugin = OclKind::Vanilla.build(seed);
+                        let r = run_async(
+                            cfg,
+                            &mut stream,
+                            self.backend.as_ref(),
+                            plugin.as_mut(),
+                            &ep,
+                            &model,
+                        );
+                        (r.metrics.mem_bytes / 1e6, r.metrics.oacc.value())
+                    })
+                    .unzip();
+                table.push_row(
+                    format!("{}/Ferret@B{k}", setting.label),
+                    vec![Some(Cell::from_samples(&mems)), Some(Cell::from_samples(&oaccs))],
+                );
+            }
+        }
+        table
+    }
+
+    /// Fig. 7: oacc vs log10(measured adaptation rate) across all cached
+    /// runs; last row holds the Pearson correlation.
+    pub fn fig7(&mut self) -> Table {
+        // ensure the family-A runs exist
+        let _ = self.table7();
+        let mut table = Table::new(
+            "Fig. 7 — Relation between oacc and log10(R)",
+            vec!["log10_R".into(), "oacc".into()],
+        );
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for ((idx, name, seed), m) in &self.runs {
+            let r = m.adaptation_rate();
+            if r > 0.0 {
+                let x = r.log10();
+                let y = m.oacc.value();
+                xs.push(x);
+                ys.push(y);
+                table.push_row(
+                    format!("s{idx}/{name}/{seed}"),
+                    vec![
+                        Some(Cell { mean: x, std: 0.0 }),
+                        Some(Cell { mean: y, std: 0.0 }),
+                    ],
+                );
+            }
+        }
+        let corr = pearson(&xs, &ys);
+        table.push_row(
+            "PEARSON_CORRELATION",
+            vec![Some(Cell { mean: corr, std: 0.0 }), None],
+        );
+        table
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        0.0
+    } else {
+        cov / (vx.sqrt() * vy.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quick_table1_runs_and_has_expected_shape() {
+        let mut b = Bench::new(BenchCfg::quick());
+        let t = b.table1();
+        assert_eq!(t.rows.len(), 2, "two quick settings");
+        assert_eq!(t.columns.len(), 8, "5 baselines + 3 ferret tiers");
+        // 1-Skip column must be exactly zero (it is its own baseline)
+        let skip_col = t.col("1-Skip");
+        for (_, cells) in &t.rows {
+            let c = cells[skip_col].unwrap();
+            assert!(c.mean.abs() < 1e-9, "1-skip agm {}", c.mean);
+        }
+    }
+
+    #[test]
+    fn quick_ferret_tiers_order_memory() {
+        let mut b = Bench::new(BenchCfg::quick());
+        let f4 = b.fig4();
+        let (lo, mid, hi) = (f4.col("Ferret_M-"), f4.col("Ferret_M"), f4.col("Ferret_M+"));
+        for (label, cells) in &f4.rows {
+            let (l, m, h) = (
+                cells[lo].unwrap().mean,
+                cells[mid].unwrap().mean,
+                cells[hi].unwrap().mean,
+            );
+            assert!(l <= m + 1e-9 && m <= h + 1e-9, "{label}: {l} {m} {h}");
+        }
+    }
+}

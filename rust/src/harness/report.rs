@@ -1,0 +1,105 @@
+//! Table/figure reporting: mean±std cells, markdown + CSV emission.
+
+use crate::util::{mean, std_dev};
+
+/// One table cell: mean ± std over seeds.
+#[derive(Debug, Clone, Copy)]
+pub struct Cell {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Cell {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        Cell { mean: mean(xs.iter().copied()), std: std_dev(xs) }
+    }
+}
+
+/// A paper table or figure-series dump.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<Option<Cell>>)>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: Vec<String>) -> Self {
+        Table { title: title.into(), columns, rows: Vec::new() }
+    }
+
+    pub fn push_row(&mut self, label: impl Into<String>, cells: Vec<Option<Cell>>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push((label.into(), cells));
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| Setting | {} |\n", self.columns.join(" | ")));
+        out.push_str(&format!("|---|{}|\n", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+        for (label, cells) in &self.rows {
+            let cells_str: Vec<String> = cells
+                .iter()
+                .map(|c| match c {
+                    Some(c) => format!("{:.2}±{:.2}", c.mean, c.std),
+                    None => "-".to_string(),
+                })
+                .collect();
+            out.push_str(&format!("| {} | {} |\n", label, cells_str.join(" | ")));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("setting,{}\n", self.columns.join(","));
+        for (label, cells) in &self.rows {
+            let cells_str: Vec<String> = cells
+                .iter()
+                .map(|c| match c {
+                    Some(c) => format!("{:.4},{:.4}", c.mean, c.std),
+                    None => ",".to_string(),
+                })
+                .collect();
+            out.push_str(&format!("{},{}\n", label, cells_str.join(",")));
+        }
+        out
+    }
+
+    /// Write markdown + csv into `results/` under the repo root.
+    pub fn save(&self, stem: &str) -> std::io::Result<()> {
+        let dir = crate::config::repo_path("results");
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(format!("{dir}/{stem}.md"), self.to_markdown())?;
+        std::fs::write(format!("{dir}/{stem}.csv"), self.to_csv())?;
+        Ok(())
+    }
+
+    /// Column index by name (panics if missing).
+    pub fn col(&self, name: &str) -> usize {
+        self.columns.iter().position(|c| c == name).unwrap_or_else(|| panic!("no column {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_stats() {
+        let c = Cell::from_samples(&[1.0, 3.0]);
+        assert_eq!(c.mean, 2.0);
+        assert_eq!(c.std, 1.0);
+    }
+
+    #[test]
+    fn markdown_and_csv_shapes() {
+        let mut t = Table::new("Test", vec!["A".into(), "B".into()]);
+        t.push_row("row1", vec![Some(Cell { mean: 1.0, std: 0.1 }), None]);
+        let md = t.to_markdown();
+        assert!(md.contains("| row1 | 1.00±0.10 | - |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("setting,A,B\n"));
+        assert!(csv.contains("row1,1.0000,0.1000,,"));
+        assert_eq!(t.col("B"), 1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Ferret: an efficient Online Continual Learning framework under varying
+//! memory constraints — rust + JAX + Pallas (AOT via PJRT) reproduction.
+//!
+//! See DESIGN.md for the paper -> system mapping. Layer 3 (this crate)
+//! owns scheduling, planning, compensation, metrics and the request path;
+//! Layers 2/1 (python/compile) are AOT-lowered to `artifacts/*.hlo.txt`
+//! and executed through [`runtime::Runtime`].
+
+pub mod backend;
+pub mod baselines;
+pub mod compensate;
+pub mod config;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod ocl;
+pub mod pipeline;
+pub mod planner;
+pub mod runtime;
+pub mod stream;
+pub mod util;

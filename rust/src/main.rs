@@ -1,0 +1,177 @@
+//! ferret — CLI launcher for the Ferret OCL framework.
+//!
+//! Subcommands:
+//!   plan  --model <name> [--budget-mb M] [--batch B]
+//!         Run Alg. 3 (partitioning) + Alg. 2 (configuration search) and
+//!         print the chosen partition, worker configuration, predicted
+//!         adaptation rate (Eq. 3) and memory footprint (Eq. 4).
+//!
+//!   run   --setting <idx|label> [--budget-mb M] [--batches N] [--seed S]
+//!         [--comp none|step|gap|fisher|iter] [--ocl vanilla|er|mir|lwf|mas]
+//!         [--backend native|xla]
+//!         Plan + run full Ferret on one of the paper's 20 settings and
+//!         report oacc/tacc/memory/adaptation rate.
+//!
+//!   settings
+//!         List the 20 paper settings with their indices.
+
+use ferret::backend::{native::NativeBackend, xla::XlaBackend, Backend};
+use ferret::compensate::CompKind;
+use ferret::config::zoo::default_zoo;
+use ferret::ocl::OclKind;
+use ferret::pipeline::engine::{run_async, AsyncCfg};
+use ferret::pipeline::EngineParams;
+use ferret::planner::{plan, Profile};
+use ferret::stream::{paper_settings, SyntheticStream};
+
+fn usage() -> ! {
+    eprintln!("usage: ferret <plan|run|settings> [options]   (see --help in source docs)");
+    std::process::exit(2)
+}
+
+struct Opts {
+    map: std::collections::HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Self {
+        let mut map = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i].trim_start_matches("--").to_string();
+            if !args[i].starts_with("--") {
+                usage();
+            }
+            i += 1;
+            let v = args.get(i).cloned().unwrap_or_else(|| usage());
+            map.insert(k, v);
+            i += 1;
+        }
+        Opts { map }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.map.get(k).map(|s| s.as_str())
+    }
+}
+
+fn cmd_settings() {
+    println!("idx  label                          model          drift");
+    for (i, s) in paper_settings().iter().enumerate() {
+        println!("{i:>3}  {:<30} {:<14} {:?}", s.label, s.model, s.kind);
+    }
+}
+
+fn cmd_plan(opts: &Opts) {
+    let zoo = default_zoo().expect("zoo");
+    let model = zoo.model(opts.get("model").unwrap_or("convnet10")).expect("model");
+    let batch = opts.get("batch").map(|b| b.parse().unwrap()).unwrap_or(zoo.batch);
+    let prof = Profile::analytic(model, batch);
+    let td = prof.default_td();
+    let budget = opts
+        .get("budget-mb")
+        .map(|m| m.parse::<f64>().unwrap() * 1e6)
+        .unwrap_or(f64::INFINITY);
+    let out = plan(&prof, td, budget, ferret::planner::costmodel::decay_for_td(td));
+    println!("model      : {} ({} params, {} layers)", model.name, model.param_count(), model.num_layers());
+    println!("t^d        : {td} ticks (= max layer fwd)");
+    println!("t^c*       : {} ticks", out.tc);
+    println!("partition L: {:?} ({} stages)", out.partition.bounds, out.partition.num_stages());
+    println!("feasible   : {}", out.feasible);
+    println!("R_F (Eq.3) : {:.6}", out.rate);
+    println!("M_F (Eq.4) : {:.2} MB (budget {})", out.mem_bytes / 1e6, if budget.is_finite() { format!("{:.2} MB", budget / 1e6) } else { "∞".into() });
+    for (n, w) in out.config.workers.iter().enumerate() {
+        println!(
+            "worker {n}: delay={} recompute={} accum={:?} omit={:?}",
+            w.delay, w.recompute, w.accum, w.omit
+        );
+    }
+}
+
+fn cmd_run(opts: &Opts) {
+    let settings = paper_settings();
+    let setting = match opts.get("setting") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(i) => settings[i].clone(),
+            Err(_) => settings
+                .iter()
+                .find(|st| st.label.eq_ignore_ascii_case(s))
+                .expect("unknown setting label")
+                .clone(),
+        },
+        None => settings[0].clone(),
+    };
+    let zoo = default_zoo().expect("zoo");
+    let model = zoo.model(setting.model).expect("model").clone();
+    let batches = opts.get("batches").map(|b| b.parse().unwrap()).unwrap_or(120);
+    let seed = opts.get("seed").map(|s| s.parse().unwrap()).unwrap_or(42);
+    let comp = match opts.get("comp").unwrap_or("iter") {
+        "none" => CompKind::NoComp,
+        "step" => CompKind::StepAware,
+        "gap" => CompKind::GapAware,
+        "fisher" => CompKind::Fisher,
+        "iter" => CompKind::IterFisher,
+        _ => usage(),
+    };
+    let ocl = match opts.get("ocl").unwrap_or("vanilla") {
+        "vanilla" => OclKind::Vanilla,
+        "er" => OclKind::Er,
+        "mir" => OclKind::Mir,
+        "lwf" => OclKind::Lwf,
+        "mas" => OclKind::Mas,
+        _ => usage(),
+    };
+    let backend: Box<dyn Backend> = match opts.get("backend").unwrap_or("native") {
+        "native" => Box::new(NativeBackend),
+        "xla" => Box::new(XlaBackend::open_default().expect("artifacts (run `make artifacts`)")),
+        _ => usage(),
+    };
+
+    let prof = Profile::analytic(&model, zoo.batch);
+    let td = prof.default_td();
+    let budget = opts
+        .get("budget-mb")
+        .map(|m| m.parse::<f64>().unwrap() * 1e6)
+        .unwrap_or(f64::INFINITY);
+    let out = plan(&prof, td, budget, ferret::planner::costmodel::decay_for_td(td));
+    eprintln!(
+        "[ferret] {} | partition {:?} | {} workers | plan R={:.4} M={:.2}MB",
+        setting.label,
+        out.partition.bounds,
+        out.config.active_workers(),
+        out.rate,
+        out.mem_bytes / 1e6
+    );
+
+    let mut stream = SyntheticStream::new(setting.stream_spec(
+        model.features(),
+        model.classes(),
+        zoo.batch,
+        batches,
+        seed,
+    ));
+    let mut plugin = ocl.build(seed);
+    let ep = EngineParams { lr: 0.1, seed, ..Default::default() };
+    let cfg = AsyncCfg::ferret(out.partition, out.config, comp);
+    let t0 = std::time::Instant::now();
+    let r = run_async(cfg, &mut stream, backend.as_ref(), plugin.as_mut(), &ep, &model);
+    println!("setting    : {}", setting.label);
+    println!("ocl/comp   : {} / {}", ocl.name(), comp.name());
+    println!("oacc       : {:.2}%", r.metrics.oacc.value());
+    println!("tacc       : {:.2}%", r.metrics.tacc);
+    println!("adaptation : {:.4}", r.metrics.adaptation_rate());
+    println!("memory     : {:.2} MB (analytic Eq. 4)", r.metrics.mem_bytes / 1e6);
+    println!("trained    : {} updates, dropped {}", r.metrics.trained, r.metrics.dropped);
+    println!("final loss : {:.4}", r.metrics.mean_recent_loss(16));
+    println!("wallclock  : {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("settings") => cmd_settings(),
+        Some("plan") => cmd_plan(&Opts::parse(&args[1..])),
+        Some("run") => cmd_run(&Opts::parse(&args[1..])),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,231 @@
+//! Evaluation metrics: online accuracy (`oacc`), test accuracy (`tacc`),
+//! the paper's memory-normalized gains `agm` (Eq. 18) / `tagm` (Eq. 17),
+//! and the measured adaptation rate (Def. 4.1).
+
+use crate::backend::{accuracy, forward_all, Backend};
+use crate::config::LayerShape;
+use crate::model::LayerParams;
+use crate::stream::TestSet;
+
+/// Online Accuracy Gain per unit of Memory (Eq. 18):
+/// `log(exp(oacc_A - oacc_B) / (M_A / M_B))` with accuracies in percent
+/// and `log = log10`. The base is recoverable from the paper's own
+/// numbers: Table 1/7 give Oracle on MNIST Δoacc = 81.14 - 18.24 = 62.9
+/// and agm = 27.32 = 62.9 / ln(10) (same for CIFAR100, CORe50, Covertype
+/// rows, where M_Oracle ~ M_1-Skip so the memory term vanishes).
+pub fn agm(oacc_a: f64, oacc_b: f64, mem_a: f64, mem_b: f64) -> f64 {
+    assert!(mem_a > 0.0 && mem_b > 0.0);
+    (oacc_a - oacc_b) / std::f64::consts::LN_10 - (mem_a / mem_b).log10()
+}
+
+/// Test Accuracy Gain per unit of Memory (Eq. 17) — same functional form.
+pub fn tagm(tacc_a: f64, tacc_b: f64, mem_a: f64, mem_b: f64) -> f64 {
+    agm(tacc_a, tacc_b, mem_a, mem_b)
+}
+
+/// Running-mean tracker with a stored curve.
+#[derive(Debug, Clone, Default)]
+pub struct RunningAcc {
+    hits: f64,
+    total: f64,
+    pub curve: Vec<(u64, f64)>,
+}
+
+impl RunningAcc {
+    pub fn record(&mut self, t: u64, acc: f64, weight: f64) {
+        self.hits += acc * weight;
+        self.total += weight;
+        self.curve.push((t, self.value()));
+    }
+
+    /// Accuracy in percent.
+    pub fn value(&self) -> f64 {
+        if self.total == 0.0 {
+            0.0
+        } else {
+            100.0 * self.hits / self.total
+        }
+    }
+
+    pub fn count(&self) -> f64 {
+        self.total
+    }
+}
+
+/// Full per-run metric sink shared by all engines.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// online accuracy over every arriving batch's prediction
+    pub oacc: RunningAcc,
+    /// mean training loss curve
+    pub losses: Vec<(u64, f32)>,
+    /// measured adaptation-rate numerator: sum of e^{-c r} * value_frac
+    adaptation_num: f64,
+    adaptation_batches: u64,
+    pub trained: u64,
+    pub dropped: u64,
+    /// analytic memory footprint in bytes (set by the engine from its
+    /// config via the planner cost model)
+    pub mem_bytes: f64,
+    /// engine-measured peak live bytes (stash + activations + buffers)
+    pub peak_live_bytes: usize,
+    /// final test accuracy in percent (filled by `eval_tacc`)
+    pub tacc: f64,
+}
+
+impl RunMetrics {
+    pub fn record_prediction(&mut self, t: u64, acc: f64) {
+        self.oacc.record(t, acc, 1.0);
+    }
+
+    pub fn record_loss(&mut self, t: u64, loss: f32) {
+        self.losses.push((t, loss));
+    }
+
+    pub fn record_drop(&mut self) {
+        self.dropped += 1;
+    }
+
+    /// Record a parameter update that landed with `latency` virtual ticks
+    /// after its data arrived, updating `value_frac` of the model.
+    pub fn record_update(&mut self, latency: u64, decay_c: f64, value_frac: f64) {
+        self.trained += 1;
+        self.adaptation_num += (-decay_c * latency as f64).exp() * value_frac;
+    }
+
+    /// Count an arrived batch toward the adaptation-rate denominator.
+    pub fn record_arrival(&mut self) {
+        self.adaptation_batches += 1;
+    }
+
+    /// Measured adaptation rate (Def. 4.1, V_D = 1).
+    pub fn adaptation_rate(&self) -> f64 {
+        if self.adaptation_batches == 0 {
+            0.0
+        } else {
+            self.adaptation_num / self.adaptation_batches as f64
+        }
+    }
+
+    pub fn observe_live_bytes(&mut self, bytes: usize) {
+        self.peak_live_bytes = self.peak_live_bytes.max(bytes);
+    }
+
+    pub fn mean_recent_loss(&self, k: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let s = &self.losses[n.saturating_sub(k)..];
+        s.iter().map(|(_, l)| l).sum::<f32>() / s.len() as f32
+    }
+}
+
+/// Evaluate test accuracy (percent) of a parameter set over a test set.
+pub fn eval_tacc(
+    backend: &dyn Backend,
+    shapes: &[LayerShape],
+    params: &[LayerParams],
+    classes: usize,
+    test: &TestSet,
+    batch: usize,
+) -> f64 {
+    let features = test.x.len() / test.n;
+    let mut hits = 0.0;
+    let mut total = 0.0;
+    let mut i = 0;
+    while i < test.n {
+        let n = batch.min(test.n - i);
+        let x = &test.x[i * features..(i + n) * features];
+        let y = &test.y[i..i + n];
+        let (_, logits) = forward_all(backend, shapes, params, x, n);
+        hits += accuracy(classes, &logits, y) * n as f64;
+        total += n as f64;
+        i += n;
+    }
+    100.0 * hits / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agm_baseline_is_zero() {
+        // A == B: equal accuracy, equal memory -> 0 (the tables' 1-Skip row)
+        assert!((agm(50.0, 50.0, 1e6, 1e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn agm_orderings() {
+        // higher accuracy at equal memory -> positive, monotone
+        let a1 = agm(60.0, 50.0, 1e6, 1e6);
+        let a2 = agm(70.0, 50.0, 1e6, 1e6);
+        assert!(a1 > 0.0 && a2 > a1);
+        // equal accuracy at higher memory -> negative
+        assert!(agm(50.0, 50.0, 2e6, 1e6) < 0.0);
+        // the memory penalty is logarithmic (diminishing)
+        let p1 = agm(50.0, 50.0, 2e6, 1e6);
+        let p2 = agm(50.0, 50.0, 4e6, 1e6);
+        assert!((p2 - 2.0 * p1).abs() < 1e-9, "log ratio adds");
+    }
+
+    #[test]
+    fn running_acc() {
+        let mut r = RunningAcc::default();
+        r.record(0, 1.0, 1.0);
+        r.record(1, 0.0, 1.0);
+        assert_eq!(r.value(), 50.0);
+        assert_eq!(r.curve.len(), 2);
+        assert_eq!(r.curve[0].1, 100.0);
+    }
+
+    #[test]
+    fn adaptation_rate_decays_with_latency() {
+        let mut m0 = RunMetrics::default();
+        let mut m1 = RunMetrics::default();
+        for _ in 0..10 {
+            m0.record_arrival();
+            m1.record_arrival();
+            m0.record_update(0, 0.01, 1.0);
+            m1.record_update(100, 0.01, 1.0);
+        }
+        assert!((m0.adaptation_rate() - 1.0).abs() < 1e-12);
+        assert!((m1.adaptation_rate() - (-1.0f64).exp()).abs() < 1e-9);
+        // dropped batches dilute the rate
+        let mut m2 = RunMetrics::default();
+        for i in 0..10 {
+            m2.record_arrival();
+            if i % 2 == 0 {
+                m2.record_update(0, 0.01, 1.0);
+            }
+        }
+        assert!((m2.adaptation_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tacc_eval_on_separable_data() {
+        use crate::backend::native::NativeBackend;
+        use crate::config::Act;
+        // identity-ish single layer, prototypes on axes -> near-perfect
+        let shapes = [LayerShape { in_dim: 4, out_dim: 4, act: Act::None }];
+        let mut w = vec![0.0f32; 16];
+        for i in 0..4 {
+            w[i * 4 + i] = 1.0;
+        }
+        let params = [LayerParams { w, b: vec![0.0; 4] }];
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for c in 0..4 {
+            for _ in 0..5 {
+                let mut row = vec![0.0f32; 4];
+                row[c] = 3.0;
+                x.extend(row);
+                y.push(c as i32);
+            }
+        }
+        let ts = TestSet { x, y, n: 20 };
+        let acc = eval_tacc(&NativeBackend, &shapes, &params, 4, &ts, 7);
+        assert_eq!(acc, 100.0);
+    }
+}

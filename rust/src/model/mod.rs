@@ -1,0 +1,9 @@
+//! Model state: per-layer parameters, gradients, initialization, and the
+//! version stash used by asynchronous pipeline schedules (weight stashing /
+//! Iter-Fisher delta chains).
+
+pub mod params;
+pub mod stash;
+
+pub use params::{GradBuf, LayerParams, ModelParams};
+pub use stash::VersionStash;

@@ -1,0 +1,142 @@
+//! Layer parameter and gradient buffers.
+
+use crate::config::{LayerShape, ModelSpec};
+use crate::util::Rng;
+
+/// Parameters of one dense layer (row-major w: in_dim x out_dim).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParams {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl LayerParams {
+    /// He-uniform init for ReLU stacks (bias zero).
+    pub fn init(shape: &LayerShape, rng: &mut Rng) -> Self {
+        let bound = (6.0 / shape.in_dim as f32).sqrt();
+        let w = (0..shape.in_dim * shape.out_dim)
+            .map(|_| rng.range_f32(-bound, bound))
+            .collect();
+        LayerParams { w, b: vec![0.0; shape.out_dim] }
+    }
+
+    pub fn zeros(shape: &LayerShape) -> Self {
+        LayerParams {
+            w: vec![0.0; shape.in_dim * shape.out_dim],
+            b: vec![0.0; shape.out_dim],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    /// Elementwise delta `self - other` (for Iter-Fisher version steps).
+    pub fn delta(&self, other: &LayerParams) -> GradBuf {
+        debug_assert_eq!(self.w.len(), other.w.len());
+        GradBuf {
+            gw: self.w.iter().zip(&other.w).map(|(a, b)| a - b).collect(),
+            gb: self.b.iter().zip(&other.b).map(|(a, b)| a - b).collect(),
+        }
+    }
+}
+
+/// Gradient (or parameter-delta) buffer of one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradBuf {
+    pub gw: Vec<f32>,
+    pub gb: Vec<f32>,
+}
+
+impl GradBuf {
+    pub fn zeros_like(p: &LayerParams) -> Self {
+        GradBuf { gw: vec![0.0; p.w.len()], gb: vec![0.0; p.b.len()] }
+    }
+
+    pub fn add(&mut self, other: &GradBuf) {
+        for (a, b) in self.gw.iter_mut().zip(&other.gw) {
+            *a += b;
+        }
+        for (a, b) in self.gb.iter_mut().zip(&other.gb) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        self.gw.iter_mut().for_each(|x| *x *= s);
+        self.gb.iter_mut().for_each(|x| *x *= s);
+    }
+
+    pub fn norm2(&self) -> f64 {
+        crate::util::norm2(&self.gw) + crate::util::norm2(&self.gb)
+    }
+}
+
+/// Full-model parameters: one `LayerParams` per layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    pub layers: Vec<LayerParams>,
+}
+
+impl ModelParams {
+    pub fn init(spec: &ModelSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4D4F44454C);
+        ModelParams {
+            layers: spec.layers().iter().map(|s| LayerParams::init(s, &mut rng)).collect(),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Act;
+
+    fn shape(i: usize, o: usize) -> LayerShape {
+        LayerShape { in_dim: i, out_dim: o, act: Act::Relu }
+    }
+
+    #[test]
+    fn init_shapes_and_bounds() {
+        let mut rng = Rng::new(0);
+        let s = shape(24, 8);
+        let p = LayerParams::init(&s, &mut rng);
+        assert_eq!(p.w.len(), 24 * 8);
+        assert_eq!(p.b, vec![0.0; 8]);
+        let bound = (6.0f32 / 24.0).sqrt();
+        assert!(p.w.iter().all(|&w| w.abs() <= bound));
+        assert!(p.w.iter().any(|&w| w != 0.0));
+        assert_eq!(p.param_count(), 24 * 8 + 8);
+    }
+
+    #[test]
+    fn init_deterministic_by_seed() {
+        let spec = ModelSpec { name: "t".into(), dims: vec![5, 4, 3] };
+        let a = ModelParams::init(&spec, 9);
+        let b = ModelParams::init(&spec, 9);
+        let c = ModelParams::init(&spec, 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.param_count(), 5 * 4 + 4 + 4 * 3 + 3);
+    }
+
+    #[test]
+    fn gradbuf_ops() {
+        let p = LayerParams { w: vec![1.0, 2.0], b: vec![3.0] };
+        let q = LayerParams { w: vec![0.5, 1.0], b: vec![1.0] };
+        let d = p.delta(&q);
+        assert_eq!(d.gw, vec![0.5, 1.0]);
+        assert_eq!(d.gb, vec![2.0]);
+        let mut g = GradBuf::zeros_like(&p);
+        g.add(&d);
+        g.add(&d);
+        g.scale(0.5);
+        assert_eq!(g.gw, vec![0.5, 1.0]);
+        assert_eq!(g.gb, vec![2.0]);
+        assert!((g.norm2() - (0.25 + 1.0 + 4.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! Weight-version stash for asynchronous pipeline stages.
+//!
+//! Each pipeline stage keeps the parameter snapshots its in-flight
+//! microbatches were forwarded with (PipeDream-style weight stashing).
+//! Iter-Fisher additionally walks the chain of *consecutive* versions
+//! between the stashed fwd version and the live version, so the stash keeps
+//! a bounded history of `(version, params)` pairs and can produce the
+//! per-step deltas Δθ^{v→v+1} needed by Eq. 9.
+
+use crate::model::params::{GradBuf, LayerParams};
+use std::collections::VecDeque;
+
+/// Bounded history of parameter versions for one (worker, stage) slot.
+#[derive(Debug, Clone)]
+pub struct VersionStash {
+    cap: usize,
+    entries: VecDeque<(u64, LayerParams)>,
+}
+
+impl VersionStash {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 2, "stash must hold at least two versions");
+        VersionStash { cap, entries: VecDeque::new() }
+    }
+
+    /// Record a new version snapshot (monotonically increasing versions).
+    pub fn push(&mut self, version: u64, params: LayerParams) {
+        if let Some((last, _)) = self.entries.back() {
+            assert!(version > *last, "versions must increase");
+        }
+        self.entries.push_back((version, params));
+        while self.entries.len() > self.cap {
+            self.entries.pop_front();
+        }
+    }
+
+    pub fn latest_version(&self) -> Option<u64> {
+        self.entries.back().map(|(v, _)| *v)
+    }
+
+    pub fn get(&self, version: u64) -> Option<&LayerParams> {
+        self.entries.iter().find(|(v, _)| *v == version).map(|(_, p)| p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Consecutive-version deltas Δθ^{v→v+1} for v in [from, to), oldest
+    /// first — the chain Iter-Fisher applies one `A(·)` step per element.
+    /// Returns None if any required version has been evicted.
+    pub fn delta_chain(&self, from: u64, to: u64) -> Option<Vec<GradBuf>> {
+        if from > to {
+            return None;
+        }
+        let mut chain = Vec::with_capacity((to - from) as usize);
+        for v in from..to {
+            let old = self.get(v)?;
+            let new = self.get(v + 1)?;
+            chain.push(new.delta(old));
+        }
+        Some(chain)
+    }
+
+    /// Single-jump delta θ_to − θ_from (the non-iterative Fisher baseline).
+    pub fn jump_delta(&self, from: u64, to: u64) -> Option<GradBuf> {
+        Some(self.get(to)?.delta(self.get(from)?))
+    }
+
+    /// Live bytes held by the stash (for the measured-memory cross-check).
+    pub fn bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|(_, p)| p.param_count() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(v: f32) -> LayerParams {
+        LayerParams { w: vec![v, v * 2.0], b: vec![v * 3.0] }
+    }
+
+    #[test]
+    fn push_get_evict() {
+        let mut s = VersionStash::new(3);
+        for v in 0..5u64 {
+            s.push(v, p(v as f32));
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.latest_version(), Some(4));
+        assert!(s.get(1).is_none(), "evicted");
+        assert_eq!(s.get(3).unwrap().w, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_monotone_push_panics() {
+        let mut s = VersionStash::new(3);
+        s.push(2, p(1.0));
+        s.push(1, p(2.0));
+    }
+
+    #[test]
+    fn delta_chain_consecutive() {
+        let mut s = VersionStash::new(8);
+        for v in 0..4u64 {
+            s.push(v, p(v as f32));
+        }
+        let chain = s.delta_chain(1, 3).unwrap();
+        assert_eq!(chain.len(), 2);
+        // each step is +1.0 on first weight, +2.0 on second, +3.0 on bias
+        for d in &chain {
+            assert_eq!(d.gw, vec![1.0, 2.0]);
+            assert_eq!(d.gb, vec![3.0]);
+        }
+        // empty chain when from == to
+        assert_eq!(s.delta_chain(2, 2).unwrap().len(), 0);
+        // missing (evicted) version -> None
+        let mut s2 = VersionStash::new(2);
+        for v in 0..4u64 {
+            s2.push(v, p(v as f32));
+        }
+        assert!(s2.delta_chain(0, 3).is_none());
+    }
+
+    #[test]
+    fn jump_delta_matches_chain_sum() {
+        let mut s = VersionStash::new(8);
+        for v in 0..4u64 {
+            s.push(v, p((v * v) as f32));
+        }
+        let jump = s.jump_delta(0, 3).unwrap();
+        let chain = s.delta_chain(0, 3).unwrap();
+        let mut sum = GradBuf { gw: vec![0.0; 2], gb: vec![0.0; 1] };
+        for d in &chain {
+            sum.add(d);
+        }
+        assert_eq!(jump.gw, sum.gw);
+        assert_eq!(jump.gb, sum.gb);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut s = VersionStash::new(4);
+        s.push(0, p(1.0));
+        s.push(1, p(2.0));
+        assert_eq!(s.bytes(), 2 * 3 * 4);
+    }
+}

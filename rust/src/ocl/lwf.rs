@@ -1,0 +1,106 @@
+//! LwF — Learning without Forgetting [47]: distill toward a periodically
+//! frozen teacher copy of the model via the `loss_lwf` artifact head.
+
+use super::{OclCtx, OclPlugin};
+use crate::backend::forward_all;
+use crate::model::LayerParams;
+
+pub struct LwfPlugin {
+    /// distillation weight α of the LwF head
+    alpha: f32,
+    /// refresh the teacher every `refresh` after_update calls
+    refresh: u64,
+    updates: u64,
+    teacher: Option<Vec<LayerParams>>,
+}
+
+impl LwfPlugin {
+    pub fn new(alpha: f32, refresh: u64) -> Self {
+        LwfPlugin { alpha, refresh: refresh.max(1), updates: 0, teacher: None }
+    }
+
+    pub fn has_teacher(&self) -> bool {
+        self.teacher.is_some()
+    }
+}
+
+impl OclPlugin for LwfPlugin {
+    fn name(&self) -> &'static str {
+        "LwF"
+    }
+
+    fn loss_grad(
+        &mut self,
+        logits: &[f32],
+        labels: &[i32],
+        batch_x: &[f32],
+        ctx: &OclCtx,
+    ) -> (Vec<f32>, f32) {
+        match &self.teacher {
+            Some(teacher) => {
+                let (_, t_logits) =
+                    forward_all(ctx.backend, ctx.shapes, teacher, batch_x, labels.len());
+                ctx.backend
+                    .loss_grad_lwf(ctx.classes, logits, labels, &t_logits, self.alpha)
+            }
+            None => ctx.backend.loss_grad_ce(ctx.classes, logits, labels),
+        }
+    }
+
+    fn after_update(&mut self, params: &[LayerParams], _ctx: &OclCtx) {
+        if self.updates % self.refresh == 0 {
+            self.teacher = Some(params.to_vec());
+        }
+        self.updates += 1;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.teacher
+            .as_ref()
+            .map(|t| t.iter().map(|p| p.param_count() * 4).sum())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::backend::Backend;
+    use crate::config::{Act, LayerShape};
+    use crate::model::ModelParams;
+
+    #[test]
+    fn teacher_refresh_cadence_and_memory() {
+        let be = NativeBackend;
+        let shapes = [LayerShape { in_dim: 3, out_dim: 2, act: Act::None }];
+        let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 3 };
+        let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![3, 2] };
+        let p = ModelParams::init(&spec, 1).layers;
+        let mut lwf = LwfPlugin::new(0.3, 4);
+        assert!(!lwf.has_teacher());
+        assert_eq!(lwf.memory_bytes(), 0);
+        lwf.after_update(&p, &ctx);
+        assert!(lwf.has_teacher());
+        assert_eq!(lwf.memory_bytes(), (3 * 2 + 2) * 4);
+    }
+
+    #[test]
+    fn loss_falls_back_to_ce_without_teacher_and_distills_with() {
+        let be = NativeBackend;
+        let shapes = [LayerShape { in_dim: 3, out_dim: 2, act: Act::None }];
+        let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 3 };
+        let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![3, 2] };
+        let p = ModelParams::init(&spec, 2).layers;
+        let mut lwf = LwfPlugin::new(0.5, 1);
+        let x = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let logits = vec![0.3, -0.2, 0.1, 0.4];
+        let labels = vec![0, 1];
+        let (g0, _) = lwf.loss_grad(&logits, &labels, &x, &ctx);
+        let (gce, _) = be.loss_grad_ce(2, &logits, &labels);
+        assert_eq!(g0, gce, "no teacher -> plain CE");
+        lwf.after_update(&p, &ctx);
+        let (g1, _) = lwf.loss_grad(&logits, &labels, &x, &ctx);
+        assert_ne!(g1, gce, "teacher distillation changes the gradient");
+    }
+}

@@ -1,0 +1,179 @@
+//! MAS — Memory Aware Synapses [2]: per-parameter importance Ω accumulated
+//! from the gradient of the squared output norm; update-time penalty
+//! `g += λ · Ω ⊙ (θ − θ*)` anchored to a periodically refreshed snapshot.
+
+use super::{OclCtx, OclPlugin};
+use crate::backend::{backward_all, forward_all};
+use crate::model::{GradBuf, LayerParams};
+use crate::stream::Batch;
+
+pub struct MasPlugin {
+    lambda: f32,
+    /// refresh the anchor θ* and importance every `refresh` after_update calls
+    refresh: u64,
+    updates: u64,
+    /// per-layer importance Ω (grad-magnitude EMA)
+    omega: Option<Vec<GradBuf>>,
+    /// anchor parameters θ*
+    anchor: Option<Vec<LayerParams>>,
+    /// most recent batch input kept for importance estimation
+    last_x: Option<Vec<f32>>,
+    last_rows: usize,
+}
+
+impl MasPlugin {
+    pub fn new(lambda: f32, refresh: u64) -> Self {
+        MasPlugin {
+            lambda,
+            refresh: refresh.max(1),
+            updates: 0,
+            omega: None,
+            anchor: None,
+            last_x: None,
+            last_rows: 0,
+        }
+    }
+
+    /// Accumulate Ω += |∂ ||f(x)||² / ∂θ| on the stored batch.
+    fn accumulate_importance(&mut self, params: &[LayerParams], ctx: &OclCtx) {
+        let Some(x) = &self.last_x else { return };
+        let rows = self.last_rows;
+        let (inputs, logits) = forward_all(ctx.backend, ctx.shapes, params, x, rows);
+        // d/dlogits ||logits||²/rows = 2*logits/rows
+        let gout: Vec<f32> = logits.iter().map(|v| 2.0 * v / rows as f32).collect();
+        let grads = backward_all(ctx.backend, ctx.shapes, params, &inputs, &gout, rows);
+        let omega = self.omega.get_or_insert_with(|| {
+            grads.iter().map(|g| GradBuf { gw: vec![0.0; g.gw.len()], gb: vec![0.0; g.gb.len()] }).collect()
+        });
+        const EMA: f32 = 0.9;
+        for (o, g) in omega.iter_mut().zip(&grads) {
+            for (ov, gv) in o.gw.iter_mut().zip(&g.gw) {
+                *ov = EMA * *ov + (1.0 - EMA) * gv.abs();
+            }
+            for (ov, gv) in o.gb.iter_mut().zip(&g.gb) {
+                *ov = EMA * *ov + (1.0 - EMA) * gv.abs();
+            }
+        }
+    }
+}
+
+impl OclPlugin for MasPlugin {
+    fn name(&self) -> &'static str {
+        "MAS"
+    }
+
+    fn augment(&mut self, batch: Batch, _params: &[LayerParams], _ctx: &OclCtx) -> Batch {
+        self.last_x = Some(batch.x.clone());
+        self.last_rows = batch.y.len();
+        batch
+    }
+
+    fn adjust_layer_grad(
+        &mut self,
+        layer: usize,
+        grad: &mut GradBuf,
+        params: &LayerParams,
+        _ctx: &OclCtx,
+    ) {
+        if let (Some(omega), Some(anchor)) = (&self.omega, &self.anchor) {
+            if layer < omega.len() {
+                let (o, a) = (&omega[layer], &anchor[layer]);
+                for ((g, &ov), (&pv, &av)) in grad
+                    .gw
+                    .iter_mut()
+                    .zip(&o.gw)
+                    .zip(params.w.iter().zip(&a.w))
+                {
+                    *g += self.lambda * ov * (pv - av);
+                }
+                for ((g, &ov), (&pv, &av)) in grad
+                    .gb
+                    .iter_mut()
+                    .zip(&o.gb)
+                    .zip(params.b.iter().zip(&a.b))
+                {
+                    *g += self.lambda * ov * (pv - av);
+                }
+            }
+        }
+    }
+
+    fn after_update(&mut self, params: &[LayerParams], ctx: &OclCtx) {
+        if self.updates % self.refresh == 0 {
+            self.accumulate_importance(params, ctx);
+            self.anchor = Some(params.to_vec());
+        }
+        self.updates += 1;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        let omega: usize = self
+            .omega
+            .as_ref()
+            .map(|o| o.iter().map(|g| (g.gw.len() + g.gb.len()) * 4).sum())
+            .unwrap_or(0);
+        let anchor: usize = self
+            .anchor
+            .as_ref()
+            .map(|a| a.iter().map(|p| p.param_count() * 4).sum())
+            .unwrap_or(0);
+        omega + anchor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::{Act, LayerShape};
+    use crate::model::ModelParams;
+
+    fn setup() -> ([LayerShape; 1], Vec<LayerParams>) {
+        let shapes = [LayerShape { in_dim: 3, out_dim: 2, act: Act::None }];
+        let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![3, 2] };
+        (shapes, ModelParams::init(&spec, 5).layers)
+    }
+
+    #[test]
+    fn importance_accumulates_after_seeing_data() {
+        let be = NativeBackend;
+        let (shapes, params) = setup();
+        let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 3 };
+        let mut mas = MasPlugin::new(0.5, 1);
+        assert_eq!(mas.memory_bytes(), 0);
+        let b = Batch { id: 0, x: vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0], y: vec![0, 1] };
+        let _ = mas.augment(b, &params, &ctx);
+        mas.after_update(&params, &ctx);
+        assert!(mas.memory_bytes() > 0);
+        assert!(mas.omega.as_ref().unwrap()[0].gw.iter().any(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn penalty_pulls_toward_anchor() {
+        let be = NativeBackend;
+        let (shapes, params) = setup();
+        let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 3 };
+        let mut mas = MasPlugin::new(1.0, 1);
+        let b = Batch { id: 0, x: vec![1.0; 6], y: vec![0, 1] };
+        let _ = mas.augment(b, &params, &ctx);
+        mas.after_update(&params, &ctx);
+        // drift the params away from the anchor
+        let drifted = LayerParams {
+            w: params[0].w.iter().map(|v| v + 1.0).collect(),
+            b: params[0].b.clone(),
+        };
+        let mut grad = GradBuf { gw: vec![0.0; 6], gb: vec![0.0; 2] };
+        mas.adjust_layer_grad(0, &mut grad, &drifted, &ctx);
+        // gradient now points back toward the anchor (positive where Ω>0)
+        let omega = &mas.omega.as_ref().unwrap()[0];
+        for (g, &o) in grad.gw.iter().zip(&omega.gw) {
+            if o > 1e-6 {
+                assert!(*g > 0.0, "penalty should push drifted weights back");
+            }
+        }
+        // no drift -> no penalty
+        let mut g2 = GradBuf { gw: vec![0.0; 6], gb: vec![0.0; 2] };
+        mas.adjust_layer_grad(0, &mut g2, &params[0], &ctx);
+        assert!(g2.gw.iter().all(|&v| v.abs() < 1e-6));
+    }
+}

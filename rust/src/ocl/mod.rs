@@ -1,0 +1,261 @@
+//! OCL algorithm plugins (Table 2): Vanilla, ER, MIR, LwF, MAS.
+//!
+//! Ferret is an OCL *framework*; these plugins are the orthogonal
+//! catastrophic-forgetting algorithms it integrates. Each hooks into the
+//! engines at three points: batch admission (`augment` — replay mixing),
+//! the loss head (`loss_grad` — distillation), and the parameter update
+//! (`adjust_layer_grad` / `after_update` — importance regularization and
+//! teacher/anchor refresh).
+
+mod er;
+mod lwf;
+mod mas;
+mod mir;
+
+pub use er::ErPlugin;
+pub use lwf::LwfPlugin;
+pub use mas::MasPlugin;
+pub use mir::MirPlugin;
+
+use crate::backend::Backend;
+use crate::config::LayerShape;
+use crate::model::{GradBuf, LayerParams};
+use crate::stream::Batch;
+use crate::util::Rng;
+
+/// Static context handed to every hook.
+pub struct OclCtx<'a> {
+    pub backend: &'a dyn Backend,
+    pub shapes: &'a [LayerShape],
+    pub classes: usize,
+    /// microbatch rows
+    pub batch: usize,
+    pub features: usize,
+}
+
+/// Which plugin to run (Table 2 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OclKind {
+    Vanilla,
+    Er,
+    Mir,
+    Lwf,
+    Mas,
+}
+
+impl OclKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OclKind::Vanilla => "Vanilla",
+            OclKind::Er => "ER",
+            OclKind::Mir => "MIR",
+            OclKind::Lwf => "LwF",
+            OclKind::Mas => "MAS",
+        }
+    }
+
+    pub fn all() -> [OclKind; 5] {
+        [OclKind::Vanilla, OclKind::Er, OclKind::Mir, OclKind::Lwf, OclKind::Mas]
+    }
+
+    pub fn build(&self, seed: u64) -> Box<dyn OclPlugin> {
+        match self {
+            OclKind::Vanilla => Box::new(Vanilla),
+            OclKind::Er => Box::new(ErPlugin::new(er::DEFAULT_BUFFER, seed)),
+            OclKind::Mir => Box::new(MirPlugin::new(er::DEFAULT_BUFFER, seed)),
+            OclKind::Lwf => Box::new(LwfPlugin::new(0.3, 32)),
+            OclKind::Mas => Box::new(MasPlugin::new(0.1, 32)),
+        }
+    }
+}
+
+/// Plugin hook surface. Default impls are no-ops (Vanilla behaviour).
+pub trait OclPlugin: Send {
+    fn name(&self) -> &'static str;
+
+    /// Observe/modify an admitted batch (replay mixing). `params` is the
+    /// current full model (for interference scoring).
+    fn augment(&mut self, batch: Batch, _params: &[LayerParams], _ctx: &OclCtx) -> Batch {
+        batch
+    }
+
+    /// Loss head: dL/dlogits and loss. Default: plain CE.
+    fn loss_grad(
+        &mut self,
+        logits: &[f32],
+        labels: &[i32],
+        batch_x: &[f32],
+        ctx: &OclCtx,
+    ) -> (Vec<f32>, f32) {
+        let _ = batch_x;
+        ctx.backend.loss_grad_ce(ctx.classes, logits, labels)
+    }
+
+    /// Per-layer gradient adjustment at update time (importance penalty).
+    fn adjust_layer_grad(
+        &mut self,
+        _layer: usize,
+        _grad: &mut GradBuf,
+        _params: &LayerParams,
+        _ctx: &OclCtx,
+    ) {
+    }
+
+    /// Called periodically with the assembled live model (teacher/anchor
+    /// refresh, importance accumulation).
+    fn after_update(&mut self, _params: &[LayerParams], _ctx: &OclCtx) {}
+
+    /// Extra memory the plugin holds (buffers, teachers, importances).
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Vanilla: no forgetting mitigation.
+pub struct Vanilla;
+
+impl OclPlugin for Vanilla {
+    fn name(&self) -> &'static str {
+        "Vanilla"
+    }
+}
+
+/// Sample-level reservoir buffer shared by ER/MIR.
+pub struct ReplayBuffer {
+    pub cap: usize,
+    pub features: usize,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        ReplayBuffer { cap, features: 0, x: Vec::new(), y: Vec::new(), seen: 0, rng: Rng::new(seed) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Reservoir-sample the rows of a batch into the buffer.
+    pub fn observe(&mut self, batch: &Batch, features: usize) {
+        self.features = features;
+        for i in 0..batch.y.len() {
+            let row = &batch.x[i * features..(i + 1) * features];
+            if self.len() < self.cap {
+                self.x.extend_from_slice(row);
+                self.y.push(batch.y[i]);
+            } else {
+                let j = self.rng.below(self.seen as usize + 1);
+                if j < self.cap {
+                    self.x[j * features..(j + 1) * features].copy_from_slice(row);
+                    self.y[j] = batch.y[i];
+                }
+            }
+            self.seen += 1;
+        }
+    }
+
+    /// Draw `k` (index) samples uniformly (with replacement if k > len).
+    pub fn draw(&mut self, k: usize) -> Vec<usize> {
+        if self.is_empty() {
+            return Vec::new();
+        }
+        if k <= self.len() {
+            self.rng.sample_indices(self.len(), k)
+        } else {
+            (0..k).map(|_| self.rng.below(self.len())).collect()
+        }
+    }
+
+    pub fn row(&self, i: usize) -> (&[f32], i32) {
+        (&self.x[i * self.features..(i + 1) * self.features], self.y[i])
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.x.len() * 4 + self.y.len() * 4
+    }
+}
+
+/// Replace the trailing half of a batch with replay rows (the standard
+/// "half new / half replay" ER composition).
+pub fn mix_replay(batch: &mut Batch, buf: &ReplayBuffer, picks: &[usize], features: usize) {
+    let rows = batch.y.len();
+    let half = (rows / 2).min(picks.len());
+    for (slot, &pick) in (rows - half..rows).zip(picks) {
+        let (x, y) = buf.row(pick);
+        batch.x[slot * features..(slot + 1) * features].copy_from_slice(x);
+        batch.y[slot] = y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_batch(id: u64, rows: usize, features: usize, label: i32) -> Batch {
+        Batch {
+            id,
+            x: (0..rows * features).map(|i| i as f32 + 100.0 * id as f32).collect(),
+            y: vec![label; rows],
+        }
+    }
+
+    #[test]
+    fn reservoir_fills_then_bounds() {
+        let mut buf = ReplayBuffer::new(8, 1);
+        for i in 0..10 {
+            buf.observe(&mk_batch(i, 4, 3, i as i32), 3);
+        }
+        assert_eq!(buf.len(), 8);
+        assert_eq!(buf.bytes(), 8 * 3 * 4 + 8 * 4);
+        let picks = buf.draw(4);
+        assert_eq!(picks.len(), 4);
+        assert!(picks.iter().all(|&p| p < 8));
+    }
+
+    #[test]
+    fn reservoir_keeps_old_samples_sometimes() {
+        let mut buf = ReplayBuffer::new(50, 2);
+        for i in 0..100 {
+            buf.observe(&mk_batch(i, 4, 2, (i % 10) as i32), 2);
+        }
+        // with 400 samples through a 50-slot reservoir, labels from the
+        // first half should survive with high probability
+        let old = (0..buf.len()).filter(|&i| buf.row(i).1 < 5).count();
+        assert!(old > 5, "only {old} old labels survived");
+    }
+
+    #[test]
+    fn mix_replay_replaces_trailing_half() {
+        let mut buf = ReplayBuffer::new(4, 3);
+        buf.observe(&mk_batch(9, 4, 2, 7), 2);
+        let mut b = mk_batch(0, 4, 2, 1);
+        let picks = vec![0, 1];
+        mix_replay(&mut b, &buf, &picks, 2);
+        assert_eq!(b.y, vec![1, 1, 7, 7]);
+    }
+
+    #[test]
+    fn vanilla_hooks_are_noops() {
+        use crate::backend::native::NativeBackend;
+        use crate::config::{Act, LayerShape};
+        let be = NativeBackend;
+        let shapes = [LayerShape { in_dim: 2, out_dim: 2, act: Act::None }];
+        let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 2 };
+        let mut v = Vanilla;
+        let b = mk_batch(0, 2, 2, 1);
+        let b2 = v.augment(b.clone(), &[], &ctx);
+        assert_eq!(b2.x, b.x);
+        assert_eq!(v.memory_bytes(), 0);
+        let (g, _) = v.loss_grad(&[1.0, 0.0, 0.0, 1.0], &[0, 1], &b.x, &ctx);
+        let (ge, _) = be.loss_grad_ce(2, &[1.0, 0.0, 0.0, 1.0], &[0, 1]);
+        assert_eq!(g, ge);
+    }
+}

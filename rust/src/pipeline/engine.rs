@@ -1,0 +1,737 @@
+//! Fine-grained asynchronous pipeline engine (paper §5.1) — the system
+//! under test. Also runs the PipeDream [58] and PipeDream-2BW [59]
+//! baselines, which are specific points in Ferret's configuration space:
+//!
+//!   PipeDream       N interleaved workers, weight stashing, accum 1,
+//!                   no omission, no recomputation.
+//!   PipeDream-2BW   same but gradient accumulation 2 / double-buffered
+//!                   weight versions.
+//!   Ferret          a planned `PipeConfig` (T1–T4 per worker/stage) from
+//!                   Alg. 2/3 + a gradient-compensation policy.
+//!
+//! Mechanics: a discrete-event simulation over virtual time. Each
+//! (worker, stage) pair is a device with its own timeline; 1F1B priority
+//! (backward work preempts queued forward work). Microbatch `i` goes to
+//! worker `i mod N_active`. Stage parameters are shared across workers
+//! (asynchronous data-parallel pipelining — the source of the staleness
+//! the compensation algorithms fight). Weight stashing keeps, per layer,
+//! the snapshots in-flight forwards were computed with; Iter-Fisher walks
+//! the snapshot chain at update time (Eq. 9).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::backend::{accuracy, Backend};
+use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
+use crate::config::{LayerShape, ModelSpec};
+use crate::metrics::{eval_tacc, RunMetrics};
+use crate::model::{GradBuf, LayerParams, ModelParams, VersionStash};
+use crate::ocl::{OclCtx, OclPlugin};
+use crate::pipeline::{EngineParams, RunResult};
+use crate::planner::costmodel::{mem_footprint, PipeConfig};
+use crate::planner::{Partition, Profile};
+use crate::stream::SyntheticStream;
+
+/// Asynchronous schedule family (Table 3's right half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AsyncSchedule {
+    Pipedream,
+    Pipedream2BW,
+    Ferret,
+}
+
+impl AsyncSchedule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AsyncSchedule::Pipedream => "Pipedream",
+            AsyncSchedule::Pipedream2BW => "Pipedream2BW",
+            AsyncSchedule::Ferret => "Ferret",
+        }
+    }
+}
+
+/// Full engine configuration.
+pub struct AsyncCfg {
+    pub schedule: AsyncSchedule,
+    pub partition: Partition,
+    pub pipe: PipeConfig,
+    pub comp_kind: CompKind,
+    pub comp_params: CompParams,
+    /// call plugin.after_update every k-th stage update (teacher refresh)
+    pub plugin_cadence: u64,
+}
+
+impl AsyncCfg {
+    /// Baseline configs: PipeDream / 2BW from the initial (unreduced)
+    /// configuration; Ferret from a planned `PipeConfig`.
+    pub fn baseline(
+        schedule: AsyncSchedule,
+        partition: Partition,
+        prof: &Profile,
+        td: u64,
+    ) -> Self {
+        let stages = partition.num_stages();
+        let (tf, tb) = (partition.tf(prof), partition.tb(prof));
+        let mut pipe = PipeConfig::initial(stages, tf, tb, false, td);
+        if schedule == AsyncSchedule::Pipedream2BW {
+            for w in &mut pipe.workers {
+                w.accum = vec![2; stages];
+            }
+        }
+        AsyncCfg {
+            schedule,
+            partition,
+            pipe,
+            comp_kind: CompKind::NoComp,
+            comp_params: CompParams::default(),
+            plugin_cadence: 8,
+        }
+    }
+
+    pub fn ferret(partition: Partition, pipe: PipeConfig, comp_kind: CompKind) -> Self {
+        AsyncCfg {
+            schedule: AsyncSchedule::Ferret,
+            partition,
+            pipe,
+            comp_kind,
+            comp_params: CompParams::default(),
+            plugin_cadence: 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// next stream batch arrives
+    Arrive,
+    /// a (worker, stage) device finished a pass for a job
+    Done { worker: usize, stage: usize, job: usize, bwd: bool },
+}
+
+struct Job {
+    arrival: u64,
+    seq: u64,
+    y: Vec<i32>,
+    /// original input rows (LwF teacher forward)
+    batch_x: Vec<f32>,
+    /// per-stage input activations (filled as the forward advances)
+    stage_inputs: Vec<Option<Vec<f32>>>,
+    /// stage version each forward used (weight stashing)
+    fwd_version: Vec<u64>,
+    /// upstream grad flowing backward
+    grad: Option<Vec<f32>>,
+    /// per-layer grads computed by the in-progress backward (delivered at
+    /// the Done event)
+    pending_grads: Option<Vec<GradBuf>>,
+    pending_gx: Option<Vec<f32>>,
+    done: bool,
+}
+
+/// One (worker, stage) device.
+struct Slot {
+    busy_until: u64,
+    fwd_q: VecDeque<usize>,
+    bwd_q: VecDeque<usize>,
+    /// accumulated grads (per layer of the stage), T2
+    acc: Option<Vec<GradBuf>>,
+    acc_count: u64,
+    acc_arrivals: Vec<u64>,
+    acc_from_version: u64,
+}
+
+struct StageMeta {
+    layers: std::ops::Range<usize>,
+    tf: u64,
+    tb: u64,
+    params: usize,
+}
+
+/// The engine proper.
+pub struct AsyncEngine<'a> {
+    backend: &'a dyn Backend,
+    shapes: Vec<LayerShape>,
+    cfg: AsyncCfg,
+    stages: Vec<StageMeta>,
+    /// live parameters, one entry per model layer (stages index into it)
+    params: Vec<LayerParams>,
+    /// per-stage version counter
+    version: Vec<u64>,
+    /// per-layer snapshot history
+    stash: Vec<VersionStash>,
+    /// slots[worker][stage]
+    slots: Vec<Vec<Slot>>,
+    active_workers: Vec<usize>,
+    /// per-layer compensators, shared across workers (λ and the EMA
+    /// buffers are stage-level statistics — Alg. 1's O(2Σ|w|) memory)
+    comps: Vec<Box<dyn Compensator>>,
+    jobs: Vec<Job>,
+    heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
+    heap_seq: u64,
+    lr: f32,
+    decay_c: f64,
+    total_params: usize,
+    update_count: u64,
+    inflight: usize,
+    inflight_cap: usize,
+}
+
+impl<'a> AsyncEngine<'a> {
+    pub fn new(
+        backend: &'a dyn Backend,
+        model: &ModelSpec,
+        cfg: AsyncCfg,
+        ep: &EngineParams,
+    ) -> Self {
+        let shapes = model.layers();
+        let prof = Profile::analytic(model, 1); // sizes only here
+        let stages: Vec<StageMeta> = (0..cfg.partition.num_stages())
+            .map(|j| StageMeta {
+                layers: cfg.partition.stage_layers(j),
+                tf: 0,
+                tb: 0,
+                params: cfg.partition.stage_params(&prof, j),
+            })
+            .collect();
+        let params = ModelParams::init(model, ep.seed).layers;
+        let n_workers = cfg.pipe.workers.len();
+        let p = stages.len();
+        let stash_cap = n_workers * (p + 2) + 4;
+        let stash: Vec<VersionStash> = params
+            .iter()
+            .map(|lp| {
+                let mut s = VersionStash::new(stash_cap.max(2));
+                s.push(0, lp.clone());
+                s
+            })
+            .collect();
+        let slots: Vec<Vec<Slot>> = (0..n_workers)
+            .map(|_| {
+                (0..p)
+                    .map(|_| Slot {
+                        busy_until: 0,
+                        fwd_q: VecDeque::new(),
+                        bwd_q: VecDeque::new(),
+                        acc: None,
+                        acc_count: 0,
+                        acc_arrivals: Vec::new(),
+                        acc_from_version: u64::MAX,
+                    })
+                    .collect()
+            })
+            .collect();
+        let active_workers: Vec<usize> = cfg
+            .pipe
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.active())
+            .map(|(i, _)| i)
+            .collect();
+        let total_params: usize = shapes.iter().map(|s| s.param_count()).sum();
+        let comps = shapes.iter().map(|_| make(cfg.comp_kind, cfg.comp_params)).collect();
+        AsyncEngine {
+            backend,
+            shapes,
+            cfg,
+            stages,
+            params,
+            version: vec![0; p],
+            stash,
+            slots,
+            active_workers,
+            comps,
+            jobs: Vec::new(),
+            heap: BinaryHeap::new(),
+            heap_seq: 0,
+            lr: ep.lr,
+            decay_c: 0.0, // resolved in run() once td is known
+            total_params,
+            update_count: 0,
+            inflight: 0,
+            inflight_cap: 2 * (p + 1),
+        }
+    }
+
+    fn push_ev(&mut self, t: u64, ev: Ev) {
+        self.heap_seq += 1;
+        self.heap.push(Reverse((t, self.heap_seq, ev)));
+    }
+
+    fn stage_times(&mut self, part_prof: &Profile) {
+        for j in 0..self.stages.len() {
+            self.stages[j].tf = self.cfg.partition.stage_tf(part_prof, j);
+            self.stages[j].tb = self.cfg.partition.stage_tb(part_prof, j);
+            self.stages[j].params = self.cfg.partition.stage_params(part_prof, j);
+        }
+    }
+
+    /// Forward one stage's layer chain on the live parameters.
+    fn stage_fwd(&self, stage: usize, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut h = x.to_vec();
+        for l in self.stages[stage].layers.clone() {
+            h = self.backend.dense_fwd(&self.shapes[l], &self.params[l], &h, rows);
+        }
+        h
+    }
+
+    /// Backward one stage using stashed parameters of `ver`, recomputing
+    /// inner activations from the stashed stage input.
+    fn stage_bwd(
+        &self,
+        stage: usize,
+        ver: u64,
+        x: &[f32],
+        gout: &[f32],
+        rows: usize,
+    ) -> (Vec<f32>, Vec<GradBuf>) {
+        let layers: Vec<usize> = self.stages[stage].layers.clone().collect();
+        // resolve stashed params (fallback: live = zero staleness)
+        let stage_params: Vec<&LayerParams> = layers
+            .iter()
+            .map(|&l| self.stash[l].get(ver).unwrap_or(&self.params[l]))
+            .collect();
+        // recompute inner activations (T1-style; numerically identical)
+        let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(layers.len());
+        let mut h = x.to_vec();
+        for (i, &l) in layers.iter().enumerate() {
+            inputs.push(h.clone());
+            if i + 1 < layers.len() {
+                h = self.backend.dense_fwd(&self.shapes[l], stage_params[i], &h, rows);
+            }
+        }
+        let mut grads: Vec<Option<GradBuf>> = layers.iter().map(|_| None).collect();
+        let mut g = gout.to_vec();
+        for i in (0..layers.len()).rev() {
+            let l = layers[i];
+            let out = self
+                .backend
+                .dense_bwd(&self.shapes[l], stage_params[i], &inputs[i], &g, rows);
+            g = out.gx;
+            grads[i] = Some(out.grads);
+        }
+        (g, grads.into_iter().map(Option::unwrap).collect())
+    }
+
+    /// Try to start work on a (worker, stage) device at time `t`.
+    fn kick(&mut self, w: usize, s: usize, t: u64) {
+        loop {
+            if self.slots[w][s].busy_until > t {
+                return;
+            }
+            // 1F1B: backward first
+            if let Some(job) = self.slots[w][s].bwd_q.pop_front() {
+                let omit = self.cfg.pipe.workers[w].omit[s];
+                if omit > 0 && self.jobs[job].seq % (omit + 1) != 0 {
+                    // T3: skip this backward (and the whole upstream chain)
+                    self.jobs[job].done = true;
+                    self.inflight -= 1;
+                    continue; // device still free: look for more work
+                }
+                let rows = self.jobs[job].y.len();
+                let ver = self.jobs[job].fwd_version[s];
+                let x = self.jobs[job].stage_inputs[s].clone().expect("stage input");
+                let gout = self.jobs[job].grad.clone().expect("upstream grad");
+                let (gx, grads) = self.stage_bwd(s, ver, &x, &gout, rows);
+                self.jobs[job].pending_gx = Some(gx);
+                self.jobs[job].pending_grads = Some(grads);
+                let mut dur = self.stages[s].tb;
+                if self.cfg.pipe.workers[w].recompute {
+                    dur += self.stages[s].tf; // T1: extra forward pass
+                }
+                let end = t + dur.max(1);
+                self.slots[w][s].busy_until = end;
+                self.push_ev(end, Ev::Done { worker: w, stage: s, job, bwd: true });
+                return;
+            }
+            if let Some(job) = self.slots[w][s].fwd_q.pop_front() {
+                let rows = self.jobs[job].y.len();
+                let x = self.jobs[job].stage_inputs[s].clone().expect("stage input");
+                let out = self.stage_fwd(s, &x, rows);
+                self.jobs[job].fwd_version[s] = self.version[s];
+                if s + 1 < self.stages.len() {
+                    self.jobs[job].stage_inputs[s + 1] = Some(out);
+                } else {
+                    self.jobs[job].pending_gx = Some(out); // logits parked here
+                }
+                let end = t + self.stages[s].tf.max(1);
+                self.slots[w][s].busy_until = end;
+                self.push_ev(end, Ev::Done { worker: w, stage: s, job, bwd: false });
+                return;
+            }
+            return;
+        }
+    }
+
+    /// Apply an accumulated update on (worker, stage) at time `t`.
+    fn apply_update(
+        &mut self,
+        w: usize,
+        s: usize,
+        t: u64,
+        plugin: &mut dyn OclPlugin,
+        ctx: &OclCtx,
+        metrics: &mut RunMetrics,
+    ) {
+        let slot = &mut self.slots[w][s];
+        let mut grads = slot.acc.take().expect("accumulated grads");
+        let count = slot.acc_count;
+        let arrivals = std::mem::take(&mut slot.acc_arrivals);
+        let from_ver = slot.acc_from_version;
+        slot.acc_count = 0;
+        slot.acc_from_version = u64::MAX;
+
+        let scale = 1.0 / count as f32;
+        let cur_ver = self.version[s];
+        let tau = cur_ver.saturating_sub(from_ver);
+        let layers: Vec<usize> = self.stages[s].layers.clone().collect();
+        for (i, &l) in layers.iter().enumerate() {
+            let mut g = std::mem::replace(&mut grads[i], GradBuf { gw: vec![], gb: vec![] });
+            g.scale(scale);
+            // compensation toward the live version; skip materializing the
+            // delta chain (τ clones of the stage params) when the policy
+            // does not consume it — the NoComp/StepAware hot path
+            let (chain, jump) = if self.comps[l].needs_deltas() && tau > 0 {
+                (
+                    self.stash[l].delta_chain(from_ver, cur_ver).unwrap_or_default(),
+                    self.stash[l].jump_delta(from_ver, cur_ver),
+                )
+            } else {
+                (Vec::new(), None)
+            };
+            let cctx = CompContext {
+                backend: self.backend,
+                tau,
+                chain: &chain,
+                jump: jump.as_ref(),
+                lr: self.lr,
+            };
+            let (mut g, lr_scale) = self.comps[l].compensate(g, &cctx);
+            plugin.adjust_layer_grad(l, &mut g, &self.params[l], ctx);
+            self.params[l] = self.backend.sgd(&self.params[l], &g, self.lr * lr_scale);
+        }
+        self.version[s] += 1;
+        let new_ver = self.version[s];
+        for &l in &layers {
+            self.stash[l].push(new_ver, self.params[l].clone());
+        }
+        let frac = self.stages[s].params as f64 / self.total_params as f64;
+        for a in arrivals {
+            metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
+        }
+        self.update_count += 1;
+        if self.update_count % self.cfg.plugin_cadence == 0 {
+            plugin.after_update(&self.params, ctx);
+        }
+    }
+
+    fn live_stash_bytes(&self) -> usize {
+        self.stash.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Run to completion over the stream.
+    pub fn run(
+        mut self,
+        stream: &mut SyntheticStream,
+        plugin: &mut dyn OclPlugin,
+        ep: &EngineParams,
+        model: &ModelSpec,
+    ) -> RunResult {
+        let spec = stream.spec().clone();
+        let prof = Profile::analytic(model, spec.batch);
+        self.stage_times(&prof);
+        let td = if ep.td == 0 { prof.default_td() } else { ep.td };
+        self.decay_c = ep.decay(td);
+        let shapes = self.shapes.clone();
+        let ctx = OclCtx {
+            backend: self.backend,
+            shapes: &shapes,
+            classes: spec.classes,
+            batch: spec.batch,
+            features: spec.features,
+        };
+        let mut metrics = RunMetrics::default();
+        let test = stream.test_set(ep.tacc_per_class);
+        let p = self.stages.len();
+
+        let mut arrived = 0u64;
+        let mut next_batch = stream.next_batch();
+        if next_batch.is_some() {
+            self.push_ev(0, Ev::Arrive);
+        }
+
+        while let Some(Reverse((t, _, ev))) = self.heap.pop() {
+            match ev {
+                Ev::Arrive => {
+                    let batch = next_batch.take().expect("arrive without batch");
+                    metrics.record_arrival();
+                    let seq = arrived;
+                    arrived += 1;
+                    next_batch = stream.next_batch();
+                    if next_batch.is_some() {
+                        self.push_ev(arrived * td, Ev::Arrive);
+                    }
+                    let over_capacity = self.active_workers.is_empty()
+                        || self.inflight >= self.inflight_cap * self.active_workers.len();
+                    if over_capacity {
+                        // predict with live weights; drop from training
+                        let (_, logits) = crate::backend::forward_all(
+                            self.backend,
+                            &self.shapes,
+                            &self.params,
+                            &batch.x,
+                            batch.y.len(),
+                        );
+                        metrics.record_prediction(t, accuracy(spec.classes, &logits, &batch.y));
+                        metrics.record_drop();
+                        continue;
+                    }
+                    let w = self.active_workers[(seq as usize) % self.active_workers.len()];
+                    let batch = plugin.augment(batch, &self.params, &ctx);
+                    let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
+                    stage_inputs[0] = Some(batch.x.clone());
+                    self.jobs.push(Job {
+                        arrival: t,
+                        seq,
+                        y: batch.y,
+                        batch_x: batch.x,
+                        stage_inputs,
+                        fwd_version: vec![0; p],
+                        grad: None,
+                        pending_grads: None,
+                        pending_gx: None,
+                        done: false,
+                    });
+                    self.inflight += 1;
+                    let id = self.jobs.len() - 1;
+                    self.slots[w][0].fwd_q.push_back(id);
+                    self.kick(w, 0, t);
+                }
+                Ev::Done { worker: w, stage: s, job, bwd } => {
+                    if !bwd {
+                        if s + 1 < p {
+                            self.slots[w][s + 1].fwd_q.push_back(job);
+                            self.kick(w, s + 1, t);
+                        } else {
+                            // logits ready: prediction + loss head
+                            let logits = self.jobs[job].pending_gx.take().expect("logits");
+                            let (y, bx) =
+                                (self.jobs[job].y.clone(), self.jobs[job].batch_x.clone());
+                            metrics.record_prediction(t, accuracy(spec.classes, &logits, &y));
+                            let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, &ctx);
+                            metrics.record_loss(t, loss);
+                            self.jobs[job].grad = Some(gl);
+                            self.slots[w][s].bwd_q.push_back(job);
+                        }
+                    } else {
+                        // deliver the backward results computed at dispatch
+                        let grads = self.jobs[job].pending_grads.take().expect("grads");
+                        let gx = self.jobs[job].pending_gx.take().expect("gx");
+                        let slot = &mut self.slots[w][s];
+                        match &mut slot.acc {
+                            None => slot.acc = Some(grads),
+                            Some(a) => {
+                                for (ag, g) in a.iter_mut().zip(&grads) {
+                                    ag.add(g);
+                                }
+                            }
+                        }
+                        slot.acc_count += 1;
+                        slot.acc_arrivals.push(self.jobs[job].arrival);
+                        slot.acc_from_version =
+                            slot.acc_from_version.min(self.jobs[job].fwd_version[s]);
+                        if slot.acc_count >= self.cfg.pipe.workers[w].accum[s] {
+                            self.apply_update(w, s, t, plugin, &ctx, &mut metrics);
+                        }
+                        if s > 0 {
+                            self.jobs[job].grad = Some(gx);
+                            self.slots[w][s - 1].bwd_q.push_back(job);
+                            self.kick(w, s - 1, t);
+                        } else {
+                            self.jobs[job].done = true;
+                            self.inflight -= 1;
+                            // free payloads
+                            self.jobs[job].stage_inputs = vec![];
+                            self.jobs[job].batch_x = vec![];
+                            self.jobs[job].grad = None;
+                        }
+                    }
+                    self.kick(w, s, t);
+                    metrics.observe_live_bytes(self.live_stash_bytes());
+                }
+            }
+        }
+
+        // analytic memory (Eq. 4) + plugin + compensator state
+        let comp_bytes: usize = self.comps.iter().map(|c| c.state_bytes()).sum();
+        metrics.mem_bytes = mem_footprint(&self.cfg.partition, &prof, &self.cfg.pipe)
+            + plugin.memory_bytes() as f64
+            + comp_bytes as f64;
+        metrics.tacc = eval_tacc(
+            self.backend,
+            &self.shapes,
+            &self.params,
+            spec.classes,
+            &test,
+            spec.batch,
+        );
+        RunResult { metrics, params: self.params }
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run_async(
+    cfg: AsyncCfg,
+    stream: &mut SyntheticStream,
+    backend: &dyn Backend,
+    plugin: &mut dyn OclPlugin,
+    ep: &EngineParams,
+    model: &ModelSpec,
+) -> RunResult {
+    AsyncEngine::new(backend, model, cfg, ep).run(stream, plugin, ep, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::ocl::Vanilla;
+    use crate::stream::{DriftKind, StreamSpec};
+
+    fn mk_stream(n: usize, seed: u64) -> SyntheticStream {
+        SyntheticStream::new(StreamSpec {
+            name: "t".into(),
+            features: 16,
+            classes: 4,
+            batch: 8,
+            num_batches: n,
+            kind: DriftKind::Stationary,
+            margin: 3.0,
+            noise: 0.5,
+            seed,
+        })
+    }
+
+    fn model() -> ModelSpec {
+        ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
+    }
+
+    fn run_sched(schedule: AsyncSchedule, n: usize) -> RunResult {
+        let m = model();
+        let prof = Profile::analytic(&m, 8);
+        let part = Partition::per_layer(m.num_layers());
+        let td = prof.default_td();
+        let cfg = AsyncCfg::baseline(schedule, part, &prof, td);
+        let ep = EngineParams { lr: 0.2, ..Default::default() };
+        run_async(cfg, &mut mk_stream(n, 31), &NativeBackend, &mut Vanilla, &ep, &m)
+    }
+
+    #[test]
+    fn pipedream_learns_with_low_drop_rate() {
+        let r = run_sched(AsyncSchedule::Pipedream, 150);
+        assert!(r.metrics.trained > 0);
+        assert!(
+            r.metrics.oacc.value() > 40.0,
+            "oacc {} trained {} dropped {}",
+            r.metrics.oacc.value(),
+            r.metrics.trained,
+            r.metrics.dropped
+        );
+        // interleaved workers keep up with the stream
+        let drop_rate = r.metrics.dropped as f64 / 150.0;
+        assert!(drop_rate < 0.2, "drop rate {drop_rate}");
+        assert!(r.metrics.tacc > 70.0, "tacc {}", r.metrics.tacc);
+    }
+
+    #[test]
+    fn async_lands_updates_quickly() {
+        let r = run_sched(AsyncSchedule::Pipedream, 150);
+        assert!(r.metrics.adaptation_rate() > 0.3, "{}", r.metrics.adaptation_rate());
+    }
+
+    #[test]
+    fn twobw_uses_less_memory_than_pipedream() {
+        let p = run_sched(AsyncSchedule::Pipedream, 80);
+        let b = run_sched(AsyncSchedule::Pipedream2BW, 80);
+        assert!(b.metrics.mem_bytes < p.metrics.mem_bytes);
+        assert!(b.metrics.oacc.value() > 30.0);
+    }
+
+    #[test]
+    fn ferret_with_planned_config_meets_budget_and_learns() {
+        let m = model();
+        let prof = Profile::analytic(&m, 8);
+        let td = prof.default_td();
+        let unconstrained = crate::planner::plan(&prof, td, f64::INFINITY, 1e-4);
+        let budget = unconstrained.mem_bytes * 0.5;
+        let planned = crate::planner::plan(&prof, td, budget, 1e-4);
+        assert!(planned.feasible);
+        let cfg =
+            AsyncCfg::ferret(planned.partition.clone(), planned.config.clone(), CompKind::IterFisher);
+        let ep = EngineParams { lr: 0.2, ..Default::default() };
+        let r = run_async(cfg, &mut mk_stream(150, 31), &NativeBackend, &mut Vanilla, &ep, &m);
+        // engine memory = plan memory + compensator state
+        assert!(r.metrics.oacc.value() > 35.0, "oacc {}", r.metrics.oacc.value());
+        assert!(r.metrics.trained > 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_sched(AsyncSchedule::Pipedream, 60);
+        let b = run_sched(AsyncSchedule::Pipedream, 60);
+        assert_eq!(a.metrics.oacc.value(), b.metrics.oacc.value());
+        assert_eq!(a.params[0].w, b.params[0].w);
+    }
+
+    #[test]
+    fn omission_engine_still_learns() {
+        let m = model();
+        let prof = Profile::analytic(&m, 8);
+        let part = Partition::per_layer(m.num_layers());
+        let td = prof.default_td();
+        let mut cfg = AsyncCfg::baseline(AsyncSchedule::Ferret, part.clone(), &prof, td);
+        for w in &mut cfg.pipe.workers {
+            w.omit[0] = (part.num_stages() - 1) as u64;
+        }
+        let ep = EngineParams { lr: 0.2, ..Default::default() };
+        let r = run_async(cfg, &mut mk_stream(80, 7), &NativeBackend, &mut Vanilla, &ep, &m);
+        assert!(r.metrics.trained > 0);
+        assert!(r.metrics.oacc.value() > 20.0, "oacc {}", r.metrics.oacc.value());
+    }
+
+    #[test]
+    fn compensation_policies_all_run() {
+        let m = model();
+        let prof = Profile::analytic(&m, 8);
+        let part = Partition::per_layer(m.num_layers());
+        let td = prof.default_td();
+        for kind in CompKind::all() {
+            let base = AsyncCfg::baseline(AsyncSchedule::Ferret, part.clone(), &prof, td);
+            let cfg = AsyncCfg { comp_kind: kind, ..base };
+            let ep = EngineParams { lr: 0.2, ..Default::default() };
+            let r = run_async(cfg, &mut mk_stream(60, 3), &NativeBackend, &mut Vanilla, &ep, &m);
+            assert!(r.metrics.trained > 0, "{}", kind.name());
+            assert!(
+                r.metrics.oacc.value() > 20.0,
+                "{}: {}",
+                kind.name(),
+                r.metrics.oacc.value()
+            );
+        }
+    }
+
+    #[test]
+    fn ocl_plugins_run_through_async_engine() {
+        use crate::ocl::OclKind;
+        let m = model();
+        let prof = Profile::analytic(&m, 8);
+        let part = Partition::per_layer(m.num_layers());
+        let td = prof.default_td();
+        for kind in OclKind::all() {
+            let cfg = AsyncCfg::baseline(AsyncSchedule::Ferret, part.clone(), &prof, td);
+            let mut plugin = kind.build(5);
+            let ep = EngineParams { lr: 0.2, ..Default::default() };
+            let r = run_async(cfg, &mut mk_stream(50, 9), &NativeBackend, plugin.as_mut(), &ep, &m);
+            assert!(r.metrics.trained > 0, "{}", kind.name());
+        }
+    }
+}

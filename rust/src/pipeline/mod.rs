@@ -1,0 +1,67 @@
+//! Training engines over virtual time.
+//!
+//! All engines share the same contract: consume a [`SyntheticStream`],
+//! train through a [`Backend`] with an [`OclPlugin`], and fill a
+//! [`RunMetrics`]. Virtual time is measured in ticks; data arrives every
+//! `t^d` ticks (one microbatch per arrival, the paper's `D^t`).
+//!
+//! - [`sync`]   — flight-based synchronous pipeline schedules
+//!   (DAPPLE, Zero-Bubble, Hanayo-kW): Table 3's left half.
+//! - [`engine`] — the fine-grained asynchronous event engine
+//!   (Ferret, PipeDream, PipeDream-2BW): Table 3's right half and the
+//!   system under test everywhere else.
+//!
+//! Single-device stream baselines (Oracle/1-Skip/…) live in
+//! [`crate::baselines`].
+
+pub mod engine;
+pub mod sync;
+
+use crate::metrics::RunMetrics;
+use crate::model::LayerParams;
+
+/// Engine-independent run parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineParams {
+    /// SGD learning rate (paper §12: 1e-3; synthetic streams use larger)
+    pub lr: f32,
+    /// data-value decay constant `c` (Def. 4.1), per tick;
+    /// 0.0 = derive as `decay_for_td(td)` (scale-invariant default)
+    pub decay_c: f64,
+    /// arrival interval `t^d` in ticks
+    pub td: u64,
+    /// held-out test samples per class for `tacc`
+    pub tacc_per_class: usize,
+    /// weight-init / tie-break seed
+    pub seed: u64,
+}
+
+impl Default for EngineParams {
+    fn default() -> Self {
+        EngineParams {
+            lr: 0.05,
+            decay_c: 0.0,
+            td: 0, // 0 = derive from profile (max layer fwd time)
+            tacc_per_class: 8,
+            seed: 42,
+        }
+    }
+}
+
+impl EngineParams {
+    /// Resolve the decay constant against the actual arrival interval.
+    pub fn decay(&self, td: u64) -> f64 {
+        if self.decay_c > 0.0 {
+            self.decay_c
+        } else {
+            crate::planner::costmodel::decay_for_td(td)
+        }
+    }
+}
+
+/// Outcome of one engine run.
+pub struct RunResult {
+    pub metrics: RunMetrics,
+    /// final full-model parameters (for external evaluation)
+    pub params: Vec<LayerParams>,
+}

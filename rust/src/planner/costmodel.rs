@@ -1,0 +1,279 @@
+//! Closed-form adaptation rate `R_F` (Eq. 3) and memory footprint `M_F`
+//! (Eq. 4) of a fine-grained pipeline configuration.
+
+use super::profile::{Partition, Profile};
+use crate::util::lcm_all;
+
+/// Data-value decay constant `c` of Def. 4.1 (per virtual tick) for
+/// small-tick unit tests. Real runs derive `c` from the arrival interval
+/// via [`decay_for_td`] — the paper tunes `c` per dataset; tying it to
+/// `t^d` keeps the exponent scale-invariant across model sizes.
+pub const DEFAULT_DECAY: f64 = 2e-4;
+
+/// Scale-invariant decay: data loses ~5% of its value per arrival
+/// interval, i.e. `c = 0.05 / t^d`.
+pub fn decay_for_td(td: u64) -> f64 {
+    0.05 / td.max(1) as f64
+}
+
+/// Per-worker knobs (`c_n^d`, `c_n^r`, `c_{n,j}^a`, `c_{n,j}^o`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerCfg {
+    /// processing delay / interleave slot; -1 = removed (T4)
+    pub delay: i64,
+    /// activation recomputation (T1)
+    pub recompute: bool,
+    /// gradient accumulation steps per stage (T2), >= 1
+    pub accum: Vec<u64>,
+    /// back-propagation omission steps per stage (T3), >= 0
+    pub omit: Vec<u64>,
+}
+
+impl WorkerCfg {
+    pub fn fresh(slot: i64, stages: usize, recompute: bool) -> Self {
+        WorkerCfg {
+            delay: slot,
+            recompute,
+            accum: vec![1; stages],
+            omit: vec![0; stages],
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.delay >= 0
+    }
+}
+
+/// A full pipeline configuration `C`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipeConfig {
+    pub workers: Vec<WorkerCfg>,
+}
+
+impl PipeConfig {
+    /// The paper's initial configuration: `N = ceil((t^f+t^b+c^r t^f)/t^d)`
+    /// workers, `c_n^d = n`, accumulation 1, no omission.
+    pub fn initial(stages: usize, tf: u64, tb: u64, recompute: bool, td: u64) -> Self {
+        let extra = if recompute { tf } else { 0 };
+        let n = crate::util::cdiv(tf + tb + extra, td.max(1)).max(1);
+        PipeConfig {
+            workers: (0..n)
+                .map(|i| WorkerCfg::fresh(i as i64, stages, recompute))
+                .collect(),
+        }
+    }
+
+    pub fn active_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.active()).count()
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.workers.first().map(|w| w.accum.len()).unwrap_or(0)
+    }
+}
+
+/// Eq. 3 term `A_{i,j}` (see paper §5.1.1).
+#[allow(clippy::too_many_arguments)]
+fn a_term(
+    i: usize,
+    j: u64,
+    p: usize,
+    tf: f64,
+    tb: f64,
+    cr: f64,
+    lcm_tail: f64,
+    decay: f64,
+    v_d: f64,
+) -> f64 {
+    let (i, j, p) = (i as f64, j as f64, p as f64);
+    let exponent = -decay * ((p + j) * tf + (p - i + j) * tb + cr * (p - i + j) * tf);
+    exponent.exp() * v_d / (lcm_tail * (tf + tb + cr * tf))
+}
+
+/// Adaptation rate `R_F^T` (Eq. 3) with `V_D = 1`. Time unit: ticks.
+pub fn adaptation_rate(
+    part: &Partition,
+    prof: &Profile,
+    cfg: &PipeConfig,
+    decay: f64,
+) -> f64 {
+    let p = part.num_stages();
+    let tf = part.tf(prof) as f64;
+    let tb = part.tb(prof) as f64;
+    let total_w: f64 = (0..p).map(|i| part.stage_params(prof, i) as f64).sum();
+    let mut r = 0.0;
+    for w in cfg.workers.iter().filter(|w| w.active()) {
+        let cr = if w.recompute { 1.0 } else { 0.0 };
+        for i in 0..p {
+            let frac = part.stage_params(prof, i) as f64 / total_w;
+            let ca = w.accum[i].max(1);
+            let lcm_tail = lcm_all((i..p).map(|k| w.omit[k] + 1)) as f64;
+            let mut inner = 0.0;
+            for j in 0..ca {
+                inner += a_term(i, j, p, tf, tb, cr, lcm_tail, decay, 1.0);
+            }
+            r += frac * inner / ca as f64;
+        }
+    }
+    r
+}
+
+/// Memory footprint `M_F` (Eq. 4) in **bytes** (f32 counts x 4).
+pub fn mem_footprint(part: &Partition, prof: &Profile, cfg: &PipeConfig) -> f64 {
+    let p = part.num_stages();
+    let mut total = 0.0f64;
+    for w in cfg.workers.iter().filter(|w| w.active()) {
+        for i in 0..p {
+            let ca = w.accum[i].max(1);
+            let versions = (1 + crate::util::cdiv((p - i - 1) as u64, ca))
+                .saturating_sub(w.omit[i])
+                .max(1) as f64;
+            let acts = part.stage_acts(prof, i) as f64;
+            let internal = if w.recompute {
+                part.stage_internal_acts(prof, i) as f64
+            } else {
+                0.0
+            };
+            let per_version = part.stage_params(prof, i) as f64 + acts - internal;
+            total += versions * per_version;
+        }
+    }
+    total * 4.0
+}
+
+/// Memory of a plain single-copy trainer (one model + one set of
+/// activations + one gradient buffer) — the `M_B` reference used for the
+/// 1-Skip/Oracle baselines in the agm tables.
+pub fn single_copy_bytes(prof: &Profile) -> f64 {
+    let params: usize = prof.w.iter().sum();
+    let acts: usize = prof.a.iter().sum();
+    ((2 * params + acts) * 4) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Partition, Profile) {
+        let prof = Profile {
+            t_f: vec![10, 10, 10, 10],
+            t_b: vec![20, 20, 20, 20],
+            w: vec![1000, 1000, 1000, 1000],
+            a: vec![160, 160, 160, 160],
+        };
+        (Partition::per_layer(4), prof)
+    }
+
+    #[test]
+    fn initial_config_worker_count() {
+        let (part, prof) = setup();
+        let (tf, tb) = (part.tf(&prof), part.tb(&prof));
+        // td = tf: N = ceil((10+20)/10) = 3 without recompute, 4 with
+        let c0 = PipeConfig::initial(4, tf, tb, false, 10);
+        assert_eq!(c0.active_workers(), 3);
+        let c1 = PipeConfig::initial(4, tf, tb, true, 10);
+        assert_eq!(c1.active_workers(), 4);
+    }
+
+    #[test]
+    fn more_workers_more_rate_and_memory() {
+        let (part, prof) = setup();
+        let mut c1 = PipeConfig::initial(4, 10, 20, false, 10);
+        c1.workers.truncate(1);
+        let c3 = PipeConfig::initial(4, 10, 20, false, 10);
+        let r1 = adaptation_rate(&part, &prof, &c1, DEFAULT_DECAY);
+        let r3 = adaptation_rate(&part, &prof, &c3, DEFAULT_DECAY);
+        assert!(r3 > r1 * 2.5, "r1={r1} r3={r3}");
+        let m1 = mem_footprint(&part, &prof, &c1);
+        let m3 = mem_footprint(&part, &prof, &c3);
+        assert!((m3 - 3.0 * m1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn recompute_trades_rate_for_memory() {
+        let (part, prof) = setup();
+        let base = PipeConfig {
+            workers: vec![WorkerCfg::fresh(0, 4, false)],
+        };
+        let rec = PipeConfig {
+            workers: vec![WorkerCfg::fresh(0, 4, true)],
+        };
+        assert!(
+            adaptation_rate(&part, &prof, &rec, DEFAULT_DECAY)
+                < adaptation_rate(&part, &prof, &base, DEFAULT_DECAY)
+        );
+        // per-layer stages have no internal activations, so recompute only
+        // helps multi-layer stages:
+        assert_eq!(
+            mem_footprint(&part, &prof, &rec),
+            mem_footprint(&part, &prof, &base)
+        );
+        let two_stage = Partition { bounds: vec![0, 2, 4] };
+        assert!(
+            mem_footprint(&two_stage, &prof, &rec) < mem_footprint(&two_stage, &prof, &base)
+        );
+    }
+
+    #[test]
+    fn accumulation_reduces_memory_and_rate() {
+        let (part, prof) = setup();
+        let mut cfg = PipeConfig {
+            workers: vec![WorkerCfg::fresh(0, 4, false)],
+        };
+        let r0 = adaptation_rate(&part, &prof, &cfg, DEFAULT_DECAY);
+        let m0 = mem_footprint(&part, &prof, &cfg);
+        cfg.workers[0].accum[0] = 3; // stage 0 stores fewer versions
+        let r1 = adaptation_rate(&part, &prof, &cfg, DEFAULT_DECAY);
+        let m1 = mem_footprint(&part, &prof, &cfg);
+        assert!(m1 < m0, "m0={m0} m1={m1}");
+        assert!(r1 < r0, "r0={r0} r1={r1}");
+    }
+
+    #[test]
+    fn omission_reduces_memory_and_rate() {
+        let (part, prof) = setup();
+        let mut cfg = PipeConfig {
+            workers: vec![WorkerCfg::fresh(0, 4, false)],
+        };
+        let r0 = adaptation_rate(&part, &prof, &cfg, DEFAULT_DECAY);
+        let m0 = mem_footprint(&part, &prof, &cfg);
+        cfg.workers[0].omit[0] = 3; // stage 0: full omission (P-1-0)
+        cfg.workers[0].accum[0] = 1;
+        let r1 = adaptation_rate(&part, &prof, &cfg, DEFAULT_DECAY);
+        let m1 = mem_footprint(&part, &prof, &cfg);
+        assert!(m1 < m0);
+        assert!(r1 < r0);
+        // stage 0 now stores exactly one version
+        // removed worker contributes nothing
+        cfg.workers[0].delay = -1;
+        assert_eq!(mem_footprint(&part, &prof, &cfg), 0.0);
+        assert_eq!(adaptation_rate(&part, &prof, &cfg, DEFAULT_DECAY), 0.0);
+    }
+
+    #[test]
+    fn later_stages_store_fewer_versions() {
+        // Eq. 4: stage i stores 1 + ceil((P-i-1)/c_a) versions; the last
+        // stage stores exactly 1.
+        let (_, prof) = setup();
+        let part = Partition::per_layer(4);
+        let one_stage_only = |stage: usize| -> f64 {
+            let cfg = PipeConfig {
+                workers: vec![WorkerCfg::fresh(0, 4, false)],
+            };
+            // isolate stage contribution by zeroing others via subtraction
+            let full = mem_footprint(&part, &prof, &cfg);
+            let mut cfg2 = cfg.clone();
+            cfg2.workers[0].omit[stage] = (4 - 1 - stage) as u64;
+            full - mem_footprint(&part, &prof, &cfg2)
+        };
+        // earlier stages hold more versions -> bigger reduction from
+        // fully omitting them
+        assert!(one_stage_only(0) > one_stage_only(2));
+    }
+
+    #[test]
+    fn single_copy_reference() {
+        let (_, prof) = setup();
+        assert_eq!(single_copy_bytes(&prof), ((2 * 4000 + 640) * 4) as f64);
+    }
+}

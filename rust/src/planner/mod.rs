@@ -1,0 +1,21 @@
+//! Model partitioning and pipeline planning (paper §5.2).
+//!
+//! - [`profile`]  — per-layer forward/backward costs, parameter and
+//!   activation sizes (`profile(·)` in Alg. 3): analytic FLOPs model by
+//!   default, live PJRT micro-profiling optionally.
+//! - [`costmodel`] — closed-form adaptation rate `R_F` (Eq. 3) and memory
+//!   footprint `M_F` (Eq. 4) of a (partition, configuration) pair.
+//! - [`search`]  — Alg. 2: greedy iterative configuration search applying
+//!   S1–S4 until the memory budget is met.
+//! - [`plan`]    — Alg. 3: brute-force enumeration of stage time bounds,
+//!   greedy consecutive-layer grouping, global argmax over `R_F`.
+
+pub mod costmodel;
+pub mod plan;
+pub mod profile;
+pub mod search;
+
+pub use costmodel::{mem_footprint, adaptation_rate, PipeConfig, WorkerCfg};
+pub use plan::{plan, PlanOutcome};
+pub use profile::{Partition, Profile};
+pub use search::{search, SearchOutcome};

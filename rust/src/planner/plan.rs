@@ -1,0 +1,180 @@
+//! Alg. 3 — brute-force model partitioning.
+//!
+//! Candidate stage time bounds `t^c` are all contiguous-layer window sums
+//! of `t̂f + t̂b` (O(L̂²) values). For each bound, layers are greedily
+//! grouped left-to-right (Eq. 16: minimize P subject to per-stage time
+//! <= t^c), then Alg. 2 scores the partition; the global argmax over
+//! `R_F` wins. Runs once before the pipeline starts (O(L̂³) overall).
+
+use super::costmodel::PipeConfig;
+use super::profile::{Partition, Profile};
+use super::search::{search, SearchOutcome};
+
+/// Result of Alg. 3: the chosen partition + configuration.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub partition: Partition,
+    pub config: PipeConfig,
+    pub rate: f64,
+    pub mem_bytes: f64,
+    pub feasible: bool,
+    /// the winning stage time bound
+    pub tc: u64,
+}
+
+/// Greedy consecutive grouping under a per-stage time bound.
+fn group_layers(prof: &Profile, tc: u64) -> Partition {
+    let mut bounds = vec![0usize];
+    let mut tsum = 0u64;
+    for i in 0..prof.num_layers() {
+        let t = prof.t_f[i] + prof.t_b[i];
+        if tsum + t > tc && tsum > 0 {
+            bounds.push(i);
+            tsum = t;
+        } else {
+            tsum += t;
+        }
+    }
+    bounds.push(prof.num_layers());
+    Partition { bounds }
+}
+
+/// Alg. 3 `plan(·)`.
+pub fn plan(prof: &Profile, td: u64, budget_bytes: f64, decay: f64) -> PlanOutcome {
+    // all contiguous window sums of (tf + tb)
+    let l = prof.num_layers();
+    let mut candidates: Vec<u64> = Vec::with_capacity(l * (l + 1) / 2);
+    for i in 0..l {
+        let mut sum = 0u64;
+        for j in i..l {
+            sum += prof.t_f[j] + prof.t_b[j];
+            candidates.push(sum);
+        }
+    }
+    candidates.sort_unstable();
+    candidates.dedup();
+
+    let mut best: Option<(PlanOutcome, SearchOutcome)> = None;
+    let mut seen: Vec<Vec<usize>> = Vec::new();
+    for &tc in &candidates {
+        let part = group_layers(prof, tc);
+        if seen.contains(&part.bounds) {
+            continue; // same grouping as a smaller tc
+        }
+        seen.push(part.bounds.clone());
+        let s = search(&part, prof, td, budget_bytes, decay);
+        let better = match &best {
+            None => true,
+            Some((b, _)) => match (s.feasible, b.feasible) {
+                (true, false) => true,
+                (false, true) => false,
+                (true, true) => s.rate > b.rate,
+                (false, false) => s.mem_bytes < b.mem_bytes,
+            },
+        };
+        if better {
+            best = Some((
+                PlanOutcome {
+                    partition: part,
+                    config: s.config.clone(),
+                    rate: s.rate,
+                    mem_bytes: s.mem_bytes,
+                    feasible: s.feasible,
+                    tc,
+                },
+                s,
+            ));
+        }
+    }
+    best.expect("at least one candidate partition").0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof() -> Profile {
+        Profile {
+            t_f: vec![30, 10, 10, 10, 40],
+            t_b: vec![60, 20, 20, 20, 80],
+            w: vec![3000, 500, 500, 500, 4000],
+            a: vec![160, 80, 80, 80, 200],
+        }
+    }
+
+    #[test]
+    fn grouping_respects_bound() {
+        let p = prof();
+        // tc = 90: layer0 (90) | layers1-3 (30+30+30=90) | layer4 (120>90 alone)
+        let part = group_layers(&p, 90);
+        assert_eq!(part.bounds, vec![0, 1, 4, 5]);
+        for j in 0..part.num_stages() {
+            let t = part.stage_tf(&p, j) + part.stage_tb(&p, j);
+            // every stage fits the bound except unavoidable single layers
+            assert!(t <= 120, "stage {j}: {t}");
+        }
+        // giant bound -> single stage
+        assert_eq!(group_layers(&p, 10_000).bounds, vec![0, 5]);
+        // tiny bound -> per-layer
+        assert_eq!(group_layers(&p, 1).bounds, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn plan_unconstrained_prefers_finer_pipeline() {
+        let p = prof();
+        let out = plan(&p, p.default_td(), f64::INFINITY, 1e-4);
+        assert!(out.feasible);
+        assert!(out.partition.validate(5));
+        assert!(out.rate > 0.0);
+        // under no memory pressure the planner picks more than one stage
+        // (pipelining strictly improves throughput)
+        assert!(out.partition.num_stages() >= 2, "{:?}", out.partition);
+    }
+
+    #[test]
+    fn plan_meets_budget_and_degrades_gracefully() {
+        let p = prof();
+        let unconstrained = plan(&p, p.default_td(), f64::INFINITY, 1e-4);
+        for frac in [0.5, 0.25, 0.1] {
+            let budget = unconstrained.mem_bytes * frac;
+            let out = plan(&p, p.default_td(), budget, 1e-4);
+            if out.feasible {
+                assert!(out.mem_bytes <= budget + 1e-9, "frac {frac}");
+                assert!(out.rate <= unconstrained.rate + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rate_monotone_in_budget_property() {
+        crate::util::property("plan_monotone", 10, |rng| {
+            let layers = 2 + rng.below(4);
+            let p = Profile {
+                t_f: (0..layers).map(|_| 5 + rng.below(40) as u64).collect(),
+                t_b: (0..layers).map(|_| 10 + rng.below(80) as u64).collect(),
+                w: (0..layers).map(|_| 200 + rng.below(4000)).collect(),
+                a: (0..layers).map(|_| 16 + rng.below(400)).collect(),
+            };
+            let td = p.default_td();
+            let max = plan(&p, td, f64::INFINITY, 1e-4);
+            let half = plan(&p, td, max.mem_bytes * 0.5, 1e-4);
+            if half.feasible {
+                assert!(half.rate <= max.rate + 1e-12);
+                assert!(half.mem_bytes <= max.mem_bytes * 0.5 + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn plan_on_real_zoo_models() {
+        let zoo = crate::config::zoo::default_zoo().unwrap();
+        for name in ["mlp", "convnet10", "resnet11"] {
+            let spec = zoo.model(name).unwrap();
+            let prof = Profile::analytic(spec, zoo.batch);
+            let out = plan(&prof, prof.default_td(), f64::INFINITY, 1e-4);
+            assert!(out.feasible, "{name}");
+            assert!(out.partition.validate(spec.num_layers()), "{name}");
+            assert!(out.config.active_workers() >= 1, "{name}");
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Layer profiling and model partitions.
+//!
+//! `Profile` carries the paper's per-layer statistics (t̂f_i, t̂b_i, |ŵ_i|,
+//! |â_i|); `Partition` is the scheme `L` (stage boundaries over layers).
+//!
+//! Virtual-time unit: 1 tick. The analytic profile converts FLOPs to ticks
+//! at `FLOPS_PER_TICK`, making every run deterministic; `measured` profiles
+//! the real PJRT executables instead (used by the §Perf pass).
+
+use crate::backend::Backend;
+use crate::config::ModelSpec;
+use crate::model::LayerParams;
+use crate::util::Rng;
+
+/// Analytic cost conversion: FLOPs per virtual tick. With batch-16 dense
+/// layers this puts stage times in the 1e2–1e4 tick range.
+pub const FLOPS_PER_TICK: f64 = 1024.0;
+
+/// Per-layer statistics (the `profile(·)` of Alg. 3).
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// forward time per layer, ticks
+    pub t_f: Vec<u64>,
+    /// backward time per layer, ticks
+    pub t_b: Vec<u64>,
+    /// parameter count per layer
+    pub w: Vec<usize>,
+    /// output-activation count per layer (per microbatch, all samples)
+    pub a: Vec<usize>,
+}
+
+impl Profile {
+    /// Analytic profile from layer shapes (deterministic default).
+    pub fn analytic(spec: &ModelSpec, batch: usize) -> Self {
+        let layers = spec.layers();
+        Profile {
+            t_f: layers
+                .iter()
+                .map(|l| (l.fwd_flops(batch) as f64 / FLOPS_PER_TICK).ceil().max(1.0) as u64)
+                .collect(),
+            t_b: layers
+                .iter()
+                .map(|l| (l.bwd_flops(batch) as f64 / FLOPS_PER_TICK).ceil().max(1.0) as u64)
+                .collect(),
+            w: layers.iter().map(|l| l.param_count()).collect(),
+            a: layers.iter().map(|l| l.act_count() * batch).collect(),
+        }
+    }
+
+    /// Measured profile: micro-benchmark each layer's fwd/bwd through a
+    /// backend (PJRT for the real artifacts), converting wall-clock ns to
+    /// ticks so relative stage costs reflect the deployed executables.
+    pub fn measured(backend: &dyn Backend, spec: &ModelSpec, batch: usize, reps: u32) -> Self {
+        let layers = spec.layers();
+        let mut rng = Rng::new(0xBEEF);
+        let mut t_f = Vec::new();
+        let mut t_b = Vec::new();
+        for l in &layers {
+            let p = LayerParams::init(l, &mut rng);
+            let x: Vec<f32> = (0..batch * l.in_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let g: Vec<f32> = (0..batch * l.out_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            // warmup (compile)
+            let _ = backend.dense_fwd(l, &p, &x, batch);
+            let _ = backend.dense_bwd(l, &p, &x, &g, batch);
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                let _ = backend.dense_fwd(l, &p, &x, batch);
+            }
+            let fwd_ns = t0.elapsed().as_nanos() as u64 / reps as u64;
+            let t1 = std::time::Instant::now();
+            for _ in 0..reps {
+                let _ = backend.dense_bwd(l, &p, &x, &g, batch);
+            }
+            let bwd_ns = t1.elapsed().as_nanos() as u64 / reps as u64;
+            // 1 tick = 1 microsecond of measured time
+            t_f.push((fwd_ns / 1000).max(1));
+            t_b.push((bwd_ns / 1000).max(1));
+        }
+        Profile {
+            t_f,
+            t_b,
+            w: layers.iter().map(|l| l.param_count()).collect(),
+            a: layers.iter().map(|l| l.act_count() * batch).collect(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.t_f.len()
+    }
+
+    /// The paper's default arrival interval: `t^d = max_i t̂f_i`.
+    pub fn default_td(&self) -> u64 {
+        *self.t_f.iter().max().unwrap()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.w.iter().sum()
+    }
+}
+
+/// A model partition scheme `L`: `bounds` has P+1 entries, stage j covers
+/// layers `[bounds[j], bounds[j+1])`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub bounds: Vec<usize>,
+}
+
+impl Partition {
+    /// Single-stage partition (no pipelining).
+    pub fn trivial(num_layers: usize) -> Self {
+        Partition { bounds: vec![0, num_layers] }
+    }
+
+    /// One stage per layer.
+    pub fn per_layer(num_layers: usize) -> Self {
+        Partition { bounds: (0..=num_layers).collect() }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn stage_layers(&self, j: usize) -> std::ops::Range<usize> {
+        self.bounds[j]..self.bounds[j + 1]
+    }
+
+    /// Stage forward time: sum of its layers' t̂f.
+    pub fn stage_tf(&self, prof: &Profile, j: usize) -> u64 {
+        self.stage_layers(j).map(|l| prof.t_f[l]).sum()
+    }
+
+    pub fn stage_tb(&self, prof: &Profile, j: usize) -> u64 {
+        self.stage_layers(j).map(|l| prof.t_b[l]).sum()
+    }
+
+    /// Pipeline-stage times: `t^f = max_j stage_tf`, `t^b = max_j stage_tb`.
+    pub fn tf(&self, prof: &Profile) -> u64 {
+        (0..self.num_stages()).map(|j| self.stage_tf(prof, j)).max().unwrap()
+    }
+
+    pub fn tb(&self, prof: &Profile) -> u64 {
+        (0..self.num_stages()).map(|j| self.stage_tb(prof, j)).max().unwrap()
+    }
+
+    /// |w_j|: parameters of stage j.
+    pub fn stage_params(&self, prof: &Profile, j: usize) -> usize {
+        self.stage_layers(j).map(|l| prof.w[l]).sum()
+    }
+
+    /// |a_j|: activations of stage j (all layers).
+    pub fn stage_acts(&self, prof: &Profile, j: usize) -> usize {
+        self.stage_layers(j).map(|l| prof.a[l]).sum()
+    }
+
+    /// Σ|â_l| over the *internal* layers of stage j (the activations that
+    /// recomputation avoids storing, Eq. 4: l in [L_j+1, L_{j+1}-1]).
+    pub fn stage_internal_acts(&self, prof: &Profile, j: usize) -> usize {
+        let r = self.stage_layers(j);
+        if r.len() <= 1 {
+            0
+        } else {
+            (r.start + 1..r.end).map(|l| prof.a[l]).sum()
+        }
+    }
+
+    pub fn validate(&self, num_layers: usize) -> bool {
+        !self.bounds.is_empty()
+            && self.bounds[0] == 0
+            && *self.bounds.last().unwrap() == num_layers
+            && self.bounds.windows(2).all(|w| w[0] < w[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo::default_zoo;
+
+    fn prof() -> Profile {
+        Profile {
+            t_f: vec![10, 20, 30, 40],
+            t_b: vec![20, 40, 60, 80],
+            w: vec![100, 200, 300, 400],
+            a: vec![16, 32, 48, 64],
+        }
+    }
+
+    #[test]
+    fn analytic_profile_from_zoo() {
+        let zoo = default_zoo().unwrap();
+        let spec = zoo.model("mnistnet10").unwrap();
+        let p = Profile::analytic(spec, zoo.batch);
+        assert_eq!(p.num_layers(), spec.num_layers());
+        assert!(p.t_f.iter().all(|&t| t >= 1));
+        // bwd = 2x fwd flops
+        for (f, b) in p.t_f.iter().zip(&p.t_b) {
+            assert!(*b >= *f);
+        }
+        assert_eq!(p.total_params(), spec.param_count());
+        assert_eq!(p.default_td(), *p.t_f.iter().max().unwrap());
+    }
+
+    #[test]
+    fn partition_stage_stats() {
+        let p = prof();
+        let part = Partition { bounds: vec![0, 2, 4] };
+        assert!(part.validate(4));
+        assert_eq!(part.num_stages(), 2);
+        assert_eq!(part.stage_tf(&p, 0), 30);
+        assert_eq!(part.stage_tf(&p, 1), 70);
+        assert_eq!(part.tf(&p), 70);
+        assert_eq!(part.tb(&p), 140);
+        assert_eq!(part.stage_params(&p, 0), 300);
+        assert_eq!(part.stage_acts(&p, 1), 112);
+        // internal acts exclude the stage's first layer's input boundary:
+        // stage 0 = layers {0,1} -> internal = a[1]
+        assert_eq!(part.stage_internal_acts(&p, 0), 32);
+        // single-layer stage has no internal activations
+        let per = Partition::per_layer(4);
+        assert_eq!(per.stage_internal_acts(&p, 2), 0);
+        assert!(per.validate(4));
+        assert!(Partition::trivial(4).validate(4));
+        assert!(!Partition { bounds: vec![0, 0, 4] }.validate(4));
+        assert!(!Partition { bounds: vec![0, 5] }.validate(4));
+    }
+}

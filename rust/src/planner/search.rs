@@ -1,0 +1,270 @@
+//! Alg. 2 — iterative configuration search.
+//!
+//! Given a partition `L` and budget `M`, start from the throughput-optimal
+//! configuration and greedily deploy T2/T3/T4 (per worker/stage), always
+//! applying the move with the best memory-saved-per-rate-lost ratio
+//! `ΔM_F / ΔR_F^T`, until `M_F <= M`. T1 (recomputation) is handled as in
+//! the paper's `search(·)`: both `c^r = 0` and `c^r = 1` searches run and
+//! the feasible one with higher `R_F` wins.
+
+use super::costmodel::{adaptation_rate, mem_footprint, PipeConfig};
+use super::profile::{Partition, Profile};
+use crate::util::cdiv;
+
+/// Result of Alg. 2.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub config: PipeConfig,
+    pub rate: f64,
+    pub mem_bytes: f64,
+    /// false when even the maximally-reduced configuration exceeds M
+    pub feasible: bool,
+}
+
+/// One applicable S-move on a configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Move {
+    /// S2: grow accumulation of (worker, stage) by the paper's Δc_a step
+    Accum { n: usize, j: usize, to: u64 },
+    /// S3: full back-propagation omission for (worker, stage)
+    Omit { n: usize, j: usize },
+    /// S4: remove worker n
+    Remove { n: usize },
+}
+
+fn apply(cfg: &mut PipeConfig, m: Move, p: usize) {
+    match m {
+        Move::Accum { n, j, to } => cfg.workers[n].accum[j] = to,
+        Move::Omit { n, j } => {
+            cfg.workers[n].accum[j] = 1;
+            cfg.workers[n].omit[j] = (p - 1 - j) as u64;
+        }
+        Move::Remove { n } => cfg.workers[n].delay = -1,
+    }
+}
+
+/// Enumerate applicable moves per the S2/S3/S4 preconditions.
+fn moves(cfg: &PipeConfig, p: usize) -> Vec<Move> {
+    let mut out = Vec::new();
+    for (n, w) in cfg.workers.iter().enumerate() {
+        if !w.active() {
+            continue;
+        }
+        // S4: removable when every non-final stage is omitted
+        if (0..p.saturating_sub(1)).all(|j| w.omit[j] != 0) {
+            out.push(Move::Remove { n });
+            continue;
+        }
+        for j in 0..p {
+            if w.omit[j] != 0 {
+                continue;
+            }
+            let rem = (p - 1 - j) as u64;
+            if rem == 0 {
+                continue; // final stage: no staleness, nothing to reduce
+            }
+            let cur = cdiv(rem, w.accum[j]);
+            if cur > 1 {
+                // S2: Δc_a = ceil(rem / (cur-1)) - c_a (skips ceiling plateaus)
+                let to = cdiv(rem, cur - 1);
+                debug_assert!(to > w.accum[j]);
+                out.push(Move::Accum { n, j, to });
+            } else {
+                // S3: accumulation saturated -> omit entirely
+                out.push(Move::Omit { n, j });
+            }
+        }
+    }
+    out
+}
+
+/// Inner loop of Alg. 2 at a fixed `c^r`.
+fn itersearch(
+    part: &Partition,
+    prof: &Profile,
+    td: u64,
+    recompute: bool,
+    budget_bytes: f64,
+    decay: f64,
+) -> SearchOutcome {
+    let p = part.num_stages();
+    let (tf, tb) = (part.tf(prof), part.tb(prof));
+    let mut cfg = PipeConfig::initial(p, tf, tb, recompute, td);
+    let mut rate = adaptation_rate(part, prof, &cfg, decay);
+    let mut mem = mem_footprint(part, prof, &cfg);
+    while mem > budget_bytes {
+        let mut best: Option<(f64, Move, f64, f64)> = None;
+        for m in moves(&cfg, p) {
+            let mut cand = cfg.clone();
+            apply(&mut cand, m, p);
+            let r2 = adaptation_rate(part, prof, &cand, decay);
+            let m2 = mem_footprint(part, prof, &cand);
+            let dm = mem - m2;
+            let dr = rate - r2;
+            if dm <= 0.0 {
+                continue;
+            }
+            // maximize ΔM/ΔR; free memory (ΔR ~ 0) scores +inf
+            let ratio = if dr <= 1e-15 { f64::INFINITY } else { dm / dr };
+            if best.as_ref().map(|(b, ..)| ratio > *b).unwrap_or(true) {
+                best = Some((ratio, m, r2, m2));
+            }
+        }
+        match best {
+            Some((_, m, r2, m2)) => {
+                apply(&mut cfg, m, p);
+                rate = r2;
+                mem = m2;
+            }
+            None => {
+                // fully reduced but still over budget
+                return SearchOutcome { config: cfg, rate, mem_bytes: mem, feasible: false };
+            }
+        }
+    }
+    SearchOutcome { config: cfg, rate, mem_bytes: mem, feasible: true }
+}
+
+/// Alg. 2 `search(·)`: best of the `c^r ∈ {0, 1}` searches (S1).
+pub fn search(
+    part: &Partition,
+    prof: &Profile,
+    td: u64,
+    budget_bytes: f64,
+    decay: f64,
+) -> SearchOutcome {
+    let s0 = itersearch(part, prof, td, false, budget_bytes, decay);
+    let s1 = itersearch(part, prof, td, true, budget_bytes, decay);
+    match (s0.feasible, s1.feasible) {
+        (true, false) => s0,
+        (false, true) => s1,
+        // both feasible: higher rate; both infeasible: lower memory
+        (true, true) => {
+            if s0.rate >= s1.rate {
+                s0
+            } else {
+                s1
+            }
+        }
+        (false, false) => {
+            if s0.mem_bytes <= s1.mem_bytes {
+                s0
+            } else {
+                s1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Partition, Profile) {
+        let prof = Profile {
+            t_f: vec![10, 10, 10, 10],
+            t_b: vec![20, 20, 20, 20],
+            w: vec![1000, 1000, 1000, 1000],
+            a: vec![160, 160, 160, 160],
+        };
+        (Partition::per_layer(4), prof)
+    }
+
+    #[test]
+    fn unconstrained_budget_keeps_initial_config() {
+        let (part, prof) = setup();
+        let s = search(&part, &prof, 10, f64::INFINITY, 1e-4);
+        assert!(s.feasible);
+        assert_eq!(s.config.active_workers(), 3);
+        // no accumulation/omission deployed
+        for w in &s.config.workers {
+            assert!(w.accum.iter().all(|&a| a == 1));
+            assert!(w.omit.iter().all(|&o| o == 0));
+        }
+    }
+
+    #[test]
+    fn tight_budget_is_met() {
+        let (part, prof) = setup();
+        let unconstrained = search(&part, &prof, 10, f64::INFINITY, 1e-4);
+        let budget = unconstrained.mem_bytes * 0.4;
+        let s = search(&part, &prof, 10, budget, 1e-4);
+        assert!(s.feasible);
+        assert!(s.mem_bytes <= budget, "{} > {budget}", s.mem_bytes);
+        assert!(s.rate <= unconstrained.rate);
+        assert!(s.rate > 0.0);
+    }
+
+    #[test]
+    fn rate_monotone_in_budget() {
+        let (part, prof) = setup();
+        let max = search(&part, &prof, 10, f64::INFINITY, 1e-4).mem_bytes;
+        let mut prev_rate = -1.0;
+        for frac in [0.15, 0.3, 0.5, 0.75, 1.0] {
+            let s = search(&part, &prof, 10, max * frac, 1e-4);
+            assert!(s.feasible, "frac {frac}");
+            assert!(
+                s.rate >= prev_rate - 1e-12,
+                "rate not monotone at {frac}: {} < {prev_rate}",
+                s.rate
+            );
+            prev_rate = s.rate;
+        }
+    }
+
+    #[test]
+    fn starvation_budget_degenerates_to_zero_workers() {
+        // A budget below one reduced model copy is "met" only by removing
+        // every worker: feasible in M_F terms but with zero learning rate.
+        let (part, prof) = setup();
+        let s = search(&part, &prof, 10, 64.0, 1e-4);
+        assert!(s.feasible);
+        assert_eq!(s.config.active_workers(), 0);
+        assert_eq!(s.rate, 0.0);
+        assert_eq!(s.mem_bytes, 0.0);
+    }
+
+    #[test]
+    fn property_search_never_exceeds_feasible_budget() {
+        crate::util::property("search_budget", 30, |rng| {
+            let layers = 2 + rng.below(5);
+            let prof = Profile {
+                t_f: (0..layers).map(|_| 5 + rng.below(50) as u64).collect(),
+                t_b: (0..layers).map(|_| 10 + rng.below(100) as u64).collect(),
+                w: (0..layers).map(|_| 100 + rng.below(5000)).collect(),
+                a: (0..layers).map(|_| 16 + rng.below(500)).collect(),
+            };
+            let part = Partition::per_layer(layers);
+            let td = prof.default_td();
+            let max = search(&part, &prof, td, f64::INFINITY, 1e-4).mem_bytes;
+            let budget = max * rng.uniform();
+            let s = search(&part, &prof, td, budget, 1e-4);
+            if s.feasible {
+                assert!(s.mem_bytes <= budget + 1e-9);
+            }
+            // rate and memory are always non-negative
+            assert!(s.rate >= 0.0);
+            assert!(s.mem_bytes >= 0.0);
+        });
+    }
+
+    #[test]
+    fn s3_deployed_under_extreme_pressure_before_removal() {
+        let (part, prof) = setup();
+        // budget just above one fully-reduced worker: expect omission on
+        // early stages rather than losing the last worker
+        let one_worker_min = {
+            let mut cfg = PipeConfig::initial(4, 10, 20, false, 10);
+            cfg.workers.truncate(1);
+            for j in 0..3 {
+                cfg.workers[0].omit[j] = (3 - j) as u64;
+                cfg.workers[0].accum[j] = 1;
+            }
+            mem_footprint(&part, &prof, &cfg)
+        };
+        let s = search(&part, &prof, 10, one_worker_min * 1.05, 1e-4);
+        assert!(s.feasible);
+        assert_eq!(s.config.active_workers(), 1);
+        assert!(s.rate > 0.0, "still learning something");
+    }
+}

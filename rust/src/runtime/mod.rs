@@ -1,0 +1,214 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* — jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Executables are compiled
+//! lazily on first use and cached for the lifetime of the runtime, so the
+//! request path pays compile cost exactly once per artifact.
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Artifact naming — MUST stay in sync with `python/compile/aot.py`.
+pub mod names {
+    use crate::config::LayerShape;
+
+    pub fn dense_fwd(s: &LayerShape) -> String {
+        format!("dense_fwd_{}x{}_{}", s.in_dim, s.out_dim, s.act.as_str())
+    }
+    pub fn dense_bwd(s: &LayerShape) -> String {
+        format!("dense_bwd_{}x{}_{}", s.in_dim, s.out_dim, s.act.as_str())
+    }
+    pub fn compensate(s: &LayerShape) -> String {
+        format!("compensate_{}x{}", s.in_dim, s.out_dim)
+    }
+    pub fn sgd(s: &LayerShape) -> String {
+        format!("sgd_{}x{}", s.in_dim, s.out_dim)
+    }
+    pub fn loss_ce(classes: usize) -> String {
+        format!("loss_ce_{classes}")
+    }
+    pub fn loss_lwf(classes: usize) -> String {
+        format!("loss_lwf_{classes}")
+    }
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    /// artifact name -> file name (relative to the artifact dir)
+    pub artifacts: HashMap<String, String>,
+}
+
+pub fn parse_manifest(text: &str) -> Result<Manifest> {
+    let mut batch = None;
+    let mut artifacts = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts[0] {
+            "batch" if parts.len() == 2 => batch = Some(parts[1].parse()?),
+            "artifact" if parts.len() == 3 => {
+                artifacts.insert(parts[1].to_string(), parts[2].to_string());
+            }
+            _ => bail!("manifest:{}: malformed line {line:?}", lineno + 1),
+        }
+    }
+    Ok(Manifest {
+        batch: batch.context("manifest missing batch")?,
+        artifacts,
+    })
+}
+
+/// PJRT-backed executor over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    execs: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Open the artifact dir (e.g. `artifacts/`) and start a CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            execs: RefCell::new(0),
+        })
+    }
+
+    /// Default artifact dir resolved against the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open(crate::config::repo_path("artifacts"))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    /// Number of PJRT executions performed (perf counters).
+    pub fn exec_count(&self) -> u64 {
+        *self.execs.borrow()
+    }
+
+    fn load(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let file = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with literal inputs; returns the flattened
+    /// tuple elements (all artifacts are lowered with return_tuple=True).
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        *self.execs.borrow_mut() += 1;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        lit.to_tuple().with_context(|| format!("untupling result of {name}"))
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// f32 literal of the given logical dims from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect != data.len() as i64 {
+        bail!("lit_f32: {} values for dims {dims:?}", data.len());
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 literal (1-D).
+pub fn lit_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Scalar-as-(1,) f32 literal (the artifact calling convention for lam/lr).
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// Flatten a literal back to Vec<f32>.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = parse_manifest("batch 16\nartifact a a.hlo.txt\nartifact b b.hlo.txt\n").unwrap();
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts["a"], "a.hlo.txt");
+        assert!(parse_manifest("artifact a\n").is_err());
+        assert!(parse_manifest("artifact a a.hlo.txt\n").is_err(), "missing batch");
+    }
+
+    #[test]
+    fn names_match_python_convention() {
+        use crate::config::{Act, LayerShape};
+        let s = LayerShape { in_dim: 784, out_dim: 256, act: Act::Relu };
+        assert_eq!(names::dense_fwd(&s), "dense_fwd_784x256_relu");
+        assert_eq!(names::dense_bwd(&s), "dense_bwd_784x256_relu");
+        assert_eq!(names::compensate(&s), "compensate_784x256");
+        assert_eq!(names::sgd(&s), "sgd_784x256");
+        assert_eq!(names::loss_ce(10), "loss_ce_10");
+        assert_eq!(names::loss_lwf(62), "loss_lwf_62");
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit_f32(&[1.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Gaussian-mixture stream generator with drift processes.
+
+use crate::util::Rng;
+
+/// One microbatch of the stream. `id` is the arrival index; virtual
+/// arrival time is `id * t_d` (assigned by the engine).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+/// Drift structure of the stream (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftKind {
+    /// iid mixture for the whole stream.
+    Stationary,
+    /// classes split into `tasks` contiguous task phases (Split-*).
+    ClassIncremental { tasks: usize },
+    /// prototypes rotate in a random 2-plane; `cycles` full rotations over
+    /// the stream (CLEAR-like slow domain drift).
+    Covariate { cycles: f64 },
+    /// temporally-correlated visits: the stream dwells on one class for
+    /// `dwell` consecutive batches (CORe50-like video sessions).
+    Temporal { dwell: usize },
+}
+
+/// Static description of a stream.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    pub name: String,
+    pub features: usize,
+    pub classes: usize,
+    pub batch: usize,
+    /// stream length in microbatches
+    pub num_batches: usize,
+    pub kind: DriftKind,
+    /// class-separation margin (prototype norm); higher = easier
+    pub margin: f32,
+    /// per-feature Gaussian noise std
+    pub noise: f32,
+    pub seed: u64,
+}
+
+/// Held-out evaluation set (all classes, base prototypes).
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+}
+
+/// Seeded synthetic stream. Prototypes live on random unit directions
+/// scaled by `margin`; samples add isotropic noise. Drift transforms the
+/// prototypes as a function of the batch index.
+pub struct SyntheticStream {
+    spec: StreamSpec,
+    /// base prototypes: classes x features
+    protos: Vec<Vec<f32>>,
+    /// orthogonal partners for covariate rotation
+    protos_b: Vec<Vec<f32>>,
+    rng: Rng,
+    pos: u64,
+}
+
+impl SyntheticStream {
+    pub fn new(spec: StreamSpec) -> Self {
+        let mut rng = Rng::new(spec.seed ^ 0x5354524541); // "STREA"
+        let mk = |rng: &mut Rng| -> Vec<Vec<f32>> {
+            (0..spec.classes)
+                .map(|_| {
+                    let v: Vec<f32> = (0..spec.features).map(|_| rng.normal() as f32).collect();
+                    let norm = (crate::util::norm2(&v) as f32).sqrt().max(1e-6);
+                    v.into_iter().map(|x| x * spec.margin / norm).collect()
+                })
+                .collect()
+        };
+        let protos = mk(&mut rng);
+        let protos_b = mk(&mut rng);
+        let rng = rng.fork(1);
+        SyntheticStream { spec, protos, protos_b, rng, pos: 0 }
+    }
+
+    pub fn spec(&self) -> &StreamSpec {
+        &self.spec
+    }
+
+    /// Prototype of class `c` at batch index `t` under the drift process.
+    fn proto_at(&self, c: usize, t: u64) -> Vec<f32> {
+        match self.spec.kind {
+            DriftKind::Covariate { cycles } => {
+                let frac = t as f64 / self.spec.num_batches.max(1) as f64;
+                let theta = 2.0 * std::f64::consts::PI * cycles * frac;
+                let (s, co) = (theta.sin() as f32, theta.cos() as f32);
+                self.protos[c]
+                    .iter()
+                    .zip(&self.protos_b[c])
+                    .map(|(&a, &b)| co * a + s * b)
+                    .collect()
+            }
+            _ => self.protos[c].clone(),
+        }
+    }
+
+    /// Classes admissible at batch index `t`.
+    fn active_classes(&self, t: u64) -> std::ops::Range<usize> {
+        match self.spec.kind {
+            DriftKind::ClassIncremental { tasks } => {
+                let tasks = tasks.max(1).min(self.spec.classes);
+                let per = self.spec.num_batches.div_ceil(tasks);
+                let task = ((t as usize) / per.max(1)).min(tasks - 1);
+                let cls_per = self.spec.classes / tasks;
+                let lo = task * cls_per;
+                let hi = if task == tasks - 1 { self.spec.classes } else { lo + cls_per };
+                lo..hi
+            }
+            _ => 0..self.spec.classes,
+        }
+    }
+
+    fn sample_label(&mut self, t: u64) -> usize {
+        match self.spec.kind {
+            DriftKind::Temporal { dwell } => {
+                // deterministic class schedule with correlated dwells
+                let session = (t as usize) / dwell.max(1);
+                let mut srng = Rng::new(self.spec.seed ^ (session as u64).wrapping_mul(0x9E37));
+                srng.below(self.spec.classes)
+            }
+            _ => {
+                let range = self.active_classes(t);
+                range.start + self.rng.below(range.end - range.start)
+            }
+        }
+    }
+
+    /// Next microbatch, or None when the stream is exhausted.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        if self.pos >= self.spec.num_batches as u64 {
+            return None;
+        }
+        let t = self.pos;
+        let b = self.spec.batch;
+        let f = self.spec.features;
+        let mut x = Vec::with_capacity(b * f);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            let label = self.sample_label(t);
+            let proto = self.proto_at(label, t);
+            for j in 0..f {
+                x.push(proto[j] + self.rng.normal_f32(0.0, self.spec.noise));
+            }
+            y.push(label as i32);
+        }
+        self.pos += 1;
+        Some(Batch { id: t, x, y })
+    }
+
+    /// Total microbatches remaining.
+    pub fn remaining(&self) -> usize {
+        self.spec.num_batches - self.pos as usize
+    }
+
+    /// Held-out test set over all classes, base (undrifted) prototypes —
+    /// the `tacc` reference distribution (forgetting measurement).
+    pub fn test_set(&self, per_class: usize) -> TestSet {
+        let mut rng = Rng::new(self.spec.seed ^ 0x54455354); // "TEST"
+        let f = self.spec.features;
+        let n = per_class * self.spec.classes;
+        let mut x = Vec::with_capacity(n * f);
+        let mut y = Vec::with_capacity(n);
+        for c in 0..self.spec.classes {
+            for _ in 0..per_class {
+                for j in 0..f {
+                    x.push(self.protos[c][j] + rng.normal_f32(0.0, self.spec.noise));
+                }
+                y.push(c as i32);
+            }
+        }
+        TestSet { x, y, n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: DriftKind) -> StreamSpec {
+        StreamSpec {
+            name: "t".into(),
+            features: 12,
+            classes: 6,
+            batch: 4,
+            num_batches: 30,
+            kind,
+            margin: 3.0,
+            noise: 0.5,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic_and_exhausts() {
+        let mut a = SyntheticStream::new(spec(DriftKind::Stationary));
+        let mut b = SyntheticStream::new(spec(DriftKind::Stationary));
+        let mut count = 0;
+        while let (Some(ba), Some(bb)) = (a.next_batch(), b.next_batch()) {
+            assert_eq!(ba.x, bb.x);
+            assert_eq!(ba.y, bb.y);
+            assert_eq!(ba.id, count);
+            count += 1;
+        }
+        assert_eq!(count, 30);
+        assert!(a.next_batch().is_none());
+        assert_eq!(a.remaining(), 0);
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        let mut s = SyntheticStream::new(spec(DriftKind::Stationary));
+        let b = s.next_batch().unwrap();
+        assert_eq!(b.x.len(), 4 * 12);
+        assert_eq!(b.y.len(), 4);
+        assert!(b.y.iter().all(|&y| (0..6).contains(&y)));
+    }
+
+    #[test]
+    fn class_incremental_respects_task_phases() {
+        let mut s = SyntheticStream::new(spec(DriftKind::ClassIncremental { tasks: 3 }));
+        // 30 batches / 3 tasks = 10 per task; classes 0-1, 2-3, 4-5
+        let mut seen_by_phase = [std::collections::BTreeSet::new(), Default::default(), Default::default()];
+        while let Some(b) = s.next_batch() {
+            let phase = (b.id as usize) / 10;
+            for &y in &b.y {
+                seen_by_phase[phase].insert(y);
+            }
+        }
+        assert!(seen_by_phase[0].iter().all(|&y| y < 2), "{:?}", seen_by_phase[0]);
+        assert!(seen_by_phase[1].iter().all(|&y| (2..4).contains(&y)));
+        assert!(seen_by_phase[2].iter().all(|&y| (4..6).contains(&y)));
+    }
+
+    #[test]
+    fn covariate_prototypes_move() {
+        let s = SyntheticStream::new(spec(DriftKind::Covariate { cycles: 1.0 }));
+        let p0 = s.proto_at(0, 0);
+        let p_half = s.proto_at(0, 15);
+        let d: f32 = p0.iter().zip(&p_half).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d > 0.1, "prototypes did not drift: {d}");
+        // stationary does not move
+        let st = SyntheticStream::new(spec(DriftKind::Stationary));
+        assert_eq!(st.proto_at(0, 0), st.proto_at(0, 29));
+    }
+
+    #[test]
+    fn temporal_dwells_on_classes() {
+        let mut s = SyntheticStream::new(spec(DriftKind::Temporal { dwell: 5 }));
+        let mut labels = Vec::new();
+        while let Some(b) = s.next_batch() {
+            labels.push(b.y[0]);
+        }
+        // within each dwell window the label is constant
+        for chunk in labels.chunks(5) {
+            assert!(chunk.iter().all(|&y| y == chunk[0]), "{chunk:?}");
+        }
+    }
+
+    #[test]
+    fn test_set_covers_all_classes() {
+        let s = SyntheticStream::new(spec(DriftKind::ClassIncremental { tasks: 3 }));
+        let ts = s.test_set(3);
+        assert_eq!(ts.n, 18);
+        assert_eq!(ts.x.len(), 18 * 12);
+        for c in 0..6 {
+            assert_eq!(ts.y.iter().filter(|&&y| y == c).count(), 3);
+        }
+    }
+
+    #[test]
+    fn margin_controls_separability() {
+        // a nearest-prototype classifier should do well at high margin and
+        // poorly at tiny margin
+        let mut hi = spec(DriftKind::Stationary);
+        hi.margin = 6.0;
+        hi.noise = 0.5;
+        let mut lo = spec(DriftKind::Stationary);
+        lo.margin = 0.05;
+        lo.noise = 1.0;
+        let acc = |sp: StreamSpec| -> f64 {
+            let mut s = SyntheticStream::new(sp.clone());
+            let protos: Vec<Vec<f32>> = (0..sp.classes).map(|c| s.proto_at(c, 0)).collect();
+            let mut hit = 0usize;
+            let mut total = 0usize;
+            while let Some(b) = s.next_batch() {
+                for i in 0..b.y.len() {
+                    let xi = &b.x[i * sp.features..(i + 1) * sp.features];
+                    let best = (0..sp.classes)
+                        .min_by(|&a, &bb| {
+                            let da: f32 = xi.iter().zip(&protos[a]).map(|(x, p)| (x - p) * (x - p)).sum();
+                            let db: f32 = xi.iter().zip(&protos[bb]).map(|(x, p)| (x - p) * (x - p)).sum();
+                            da.partial_cmp(&db).unwrap()
+                        })
+                        .unwrap();
+                    hit += (best as i32 == b.y[i]) as usize;
+                    total += 1;
+                }
+            }
+            hit as f64 / total as f64
+        };
+        assert!(acc(hi) > 0.95);
+        assert!(acc(lo) < 0.6);
+    }
+}

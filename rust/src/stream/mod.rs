@@ -1,0 +1,20 @@
+//! Synthetic data streams.
+//!
+//! The paper evaluates on 18 image/tabular datasets; those are not
+//! available here (repro gate), so per DESIGN.md §3 each (dataset, model)
+//! setting is substituted by a seeded synthetic stream with matched
+//! feature dimension, class count, and *drift structure*:
+//!   - `Stationary`    — iid mixture (MNIST/CIFAR/SVHN/Covertype-like)
+//!   - `ClassIncremental` — 5-task class splits (Split-* datasets)
+//!   - `Covariate`     — slowly rotating class prototypes (CLEAR-like)
+//!   - `Temporal`      — temporally-correlated object visits (CORe50-like)
+//!
+//! Everything downstream (admission, scheduling, staleness, memory) only
+//! sees `(x, y)` microbatches arriving at a fixed virtual-time cadence, so
+//! the framework comparison is preserved.
+
+pub mod generator;
+pub mod settings;
+
+pub use generator::{Batch, DriftKind, StreamSpec, SyntheticStream, TestSet};
+pub use settings::{paper_settings, Setting};

@@ -1,0 +1,139 @@
+//! Small integer/float helpers shared across the planner and engines.
+
+/// Ceiling division.
+#[inline]
+pub fn cdiv(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Greatest common divisor.
+pub fn gcd(a: u64, b: u64) -> u64 {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Least common multiple (saturating).
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    (a / gcd(a, b)).saturating_mul(b)
+}
+
+/// LCM over an iterator (identity 1).
+pub fn lcm_all<I: IntoIterator<Item = u64>>(xs: I) -> u64 {
+    xs.into_iter().fold(1, lcm)
+}
+
+/// Argmax over a slice of f32 (first max wins). Panics on empty input.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean of an f64 iterator; 0.0 on empty.
+pub fn mean<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let (mut sum, mut n) = (0.0, 0u64);
+    for x in xs {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Population standard deviation; 0.0 on fewer than 2 items.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs.iter().copied());
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Dot product over f32 slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f64 {
+    a.iter().map(|&x| x as f64 * x as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdiv_rounds_up() {
+        assert_eq!(cdiv(10, 3), 4);
+        assert_eq!(cdiv(9, 3), 3);
+        assert_eq!(cdiv(0, 3), 0);
+        assert_eq!(cdiv(1, 1), 1);
+    }
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(1, 9), 9);
+        assert_eq!(lcm(0, 9), 0);
+        assert_eq!(lcm_all([2, 3, 4]), 12);
+        assert_eq!(lcm_all(std::iter::empty()), 1);
+    }
+
+    #[test]
+    fn lcm_identity_property() {
+        // lcm(a,b) divisible by both; property-swept over a seeded grid.
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..500 {
+            let a = rng.below(100) as u64 + 1;
+            let b = rng.below(100) as u64 + 1;
+            let l = lcm(a, b);
+            assert_eq!(l % a, 0);
+            assert_eq!(l % b, 0);
+            assert!(l <= a * b);
+        }
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean([1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(std::iter::empty()), 0.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn dot_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(norm2(&[3.0, 4.0]), 25.0);
+    }
+}

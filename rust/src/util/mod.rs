@@ -1,0 +1,49 @@
+//! Dependency-free utilities: deterministic RNG, math helpers, and a tiny
+//! property-testing harness used by unit tests across the crate.
+
+pub mod math;
+pub mod rng;
+
+pub use math::{argmax, cdiv, dot, gcd, lcm, lcm_all, mean, norm2, std_dev};
+pub use rng::Rng;
+
+/// Minimal property-test harness (proptest is not vendored): runs `f` over
+/// `n` seeded cases, reporting the failing seed on panic so cases can be
+/// replayed with `case(seed)`.
+pub fn property<F: Fn(&mut Rng)>(name: &str, n: usize, f: F) {
+    for i in 0..n {
+        let seed = 0xFEE7 ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed at case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        property("counts", 10, |_| {
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failure() {
+        property("fails", 5, |rng| {
+            assert!(rng.uniform() < 0.0, "always fails");
+        });
+    }
+}

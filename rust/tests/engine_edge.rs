@@ -1,0 +1,197 @@
+//! Engine edge cases and failure injection: overload drops, degenerate
+//! configurations, single-stage pipelines, stash-eviction fallback, and
+//! plugin integration through every engine.
+
+use ferret::backend::native::NativeBackend;
+use ferret::compensate::CompKind;
+use ferret::config::ModelSpec;
+use ferret::ocl::{OclKind, Vanilla};
+use ferret::pipeline::engine::{run_async, AsyncCfg, AsyncSchedule};
+use ferret::pipeline::sync::{run_sync, SyncSchedule};
+use ferret::pipeline::EngineParams;
+use ferret::planner::costmodel::decay_for_td;
+use ferret::planner::{plan, Partition, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn model() -> ModelSpec {
+    ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
+}
+
+fn stream(n: usize, kind: DriftKind) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "edge".into(),
+        features: 16,
+        classes: 4,
+        batch: 8,
+        num_batches: n,
+        kind,
+        margin: 3.0,
+        noise: 0.5,
+        seed: 23,
+    })
+}
+
+fn ep() -> EngineParams {
+    EngineParams { lr: 0.1, seed: 23, ..Default::default() }
+}
+
+#[test]
+fn overloaded_single_worker_drops_but_survives() {
+    // one worker, arrivals 16x faster than it can train: most batches must
+    // be dropped, none lost silently, and the run still completes.
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let mut cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, prof.default_td());
+    cfg.pipe.workers.truncate(1);
+    let fast = EngineParams { td: prof.default_td() / 16, ..ep() };
+    let r = run_async(cfg, &mut stream(100, DriftKind::Stationary), &NativeBackend, &mut Vanilla, &fast, &m);
+    assert!(r.metrics.dropped > 30, "dropped {}", r.metrics.dropped);
+    assert_eq!(
+        r.metrics.oacc.count() as u64,
+        100,
+        "every arrival must still be predicted"
+    );
+    assert!(r.metrics.trained > 0);
+}
+
+#[test]
+fn zero_worker_config_predicts_only() {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let mut cfg = AsyncCfg::baseline(AsyncSchedule::Ferret, part, &prof, prof.default_td());
+    for w in &mut cfg.pipe.workers {
+        w.delay = -1; // T4 everywhere
+    }
+    let r = run_async(cfg, &mut stream(40, DriftKind::Stationary), &NativeBackend, &mut Vanilla, &ep(), &m);
+    assert_eq!(r.metrics.trained, 0);
+    assert_eq!(r.metrics.dropped, 40);
+    assert_eq!(r.metrics.mem_bytes, 0.0);
+    // untrained model predicts at chance-ish
+    assert!(r.metrics.oacc.value() < 60.0);
+}
+
+#[test]
+fn single_stage_pipeline_works() {
+    // P = 1 degenerates to async data-parallel workers; no staleness
+    // across stages, still learns.
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::trivial(m.num_layers());
+    let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, prof.default_td());
+    let r = run_async(cfg, &mut stream(120, DriftKind::Stationary), &NativeBackend, &mut Vanilla, &ep(), &m);
+    assert!(r.metrics.oacc.value() > 35.0, "oacc {}", r.metrics.oacc.value());
+}
+
+#[test]
+fn tiny_stash_forces_eviction_fallback_without_crash() {
+    // Pipedream2BW caps effective versions; with heavy accumulation and a
+    // deep pipeline the delta chain is often evicted — Iter-Fisher must
+    // fall back to the jump without panicking.
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let mut cfg = AsyncCfg::baseline(AsyncSchedule::Ferret, part, &prof, prof.default_td());
+    cfg.comp_kind = CompKind::IterFisher;
+    for w in &mut cfg.pipe.workers {
+        w.accum = vec![4; 3];
+    }
+    let r = run_async(cfg, &mut stream(80, DriftKind::Stationary), &NativeBackend, &mut Vanilla, &ep(), &m);
+    assert!(r.metrics.trained > 0);
+}
+
+#[test]
+fn sync_engine_handles_trickle_and_burst() {
+    // arrivals far slower than a flight: no drops, every batch trained
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let slow = EngineParams { td: prof.default_td() * 64, ..ep() };
+    let r = run_sync(
+        SyncSchedule::Dapple,
+        &mut stream(40, DriftKind::Stationary),
+        &NativeBackend,
+        &mut Vanilla,
+        &slow,
+        &m,
+        &part,
+    );
+    assert_eq!(r.metrics.dropped, 0);
+    assert_eq!(r.metrics.trained, 40);
+    // burst: arrivals far faster than flights -> drops, but all predicted
+    let fast = EngineParams { td: 1, ..ep() };
+    let r = run_sync(
+        SyncSchedule::Dapple,
+        &mut stream(60, DriftKind::Stationary),
+        &NativeBackend,
+        &mut Vanilla,
+        &fast,
+        &m,
+        &part,
+    );
+    assert!(r.metrics.dropped > 0);
+    assert_eq!(r.metrics.oacc.count() as u64, 60);
+}
+
+#[test]
+fn class_incremental_forgetting_is_visible_and_er_mitigates() {
+    // Vanilla on a 4-task split should lose early-task tacc; ER recovers
+    // a meaningful share (the Table 2 mechanism, engine-level).
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let kind = DriftKind::ClassIncremental { tasks: 4 };
+    let run = |ocl: OclKind| {
+        let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part.clone(), &prof, prof.default_td());
+        let mut plugin = ocl.build(23);
+        run_async(cfg, &mut stream(160, kind), &NativeBackend, plugin.as_mut(), &ep(), &m)
+    };
+    let vanilla = run(OclKind::Vanilla);
+    let er = run(OclKind::Er);
+    assert!(
+        er.metrics.tacc >= vanilla.metrics.tacc,
+        "ER tacc {} < vanilla {}",
+        er.metrics.tacc,
+        vanilla.metrics.tacc
+    );
+}
+
+#[test]
+fn planner_output_always_runnable() {
+    // every feasible plan across a budget sweep must produce a working
+    // engine configuration (property-style over budgets).
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let td = prof.default_td();
+    let decay = decay_for_td(td);
+    let hi = plan(&prof, td, f64::INFINITY, decay).mem_bytes;
+    for frac in [0.05, 0.2, 0.5, 1.0] {
+        let out = plan(&prof, td, hi * frac, decay);
+        let cfg = AsyncCfg::ferret(out.partition.clone(), out.config.clone(), CompKind::IterFisher);
+        let r = run_async(cfg, &mut stream(30, DriftKind::Stationary), &NativeBackend, &mut Vanilla, &ep(), &m);
+        assert_eq!(r.metrics.oacc.count() as u64, 30, "frac {frac}");
+    }
+}
+
+#[test]
+fn temporal_and_covariate_streams_run_through_all_engines() {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    for kind in [DriftKind::Temporal { dwell: 5 }, DriftKind::Covariate { cycles: 1.0 }] {
+        let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part.clone(), &prof, prof.default_td());
+        let r = run_async(cfg, &mut stream(50, kind), &NativeBackend, &mut Vanilla, &ep(), &m);
+        assert!(r.metrics.trained > 0, "{kind:?}");
+        let r = run_sync(
+            SyncSchedule::ZeroBubble,
+            &mut stream(50, kind),
+            &NativeBackend,
+            &mut Vanilla,
+            &ep(),
+            &m,
+            &part,
+        );
+        assert!(r.metrics.trained > 0, "{kind:?}");
+    }
+}

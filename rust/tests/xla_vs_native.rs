@@ -1,0 +1,177 @@
+//! Integration: the XLA/PJRT backend (AOT Pallas artifacts) must agree
+//! with the pure-rust NativeBackend to float tolerance on every op, at
+//! full artifact batch and at padded (smaller) batches.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use ferret::backend::{accuracy, backward_all, forward_all, Backend};
+use ferret::backend::{native::NativeBackend, xla::XlaBackend};
+use ferret::config::{zoo::default_zoo, LayerShape};
+use ferret::model::{GradBuf, LayerParams, ModelParams};
+use ferret::util::Rng;
+
+fn open_xla() -> Option<XlaBackend> {
+    match XlaBackend::open_default() {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: xla={x} native={y}"
+        );
+    }
+}
+
+#[test]
+fn dense_fwd_bwd_match_native_on_zoo_shapes() {
+    let Some(xla) = open_xla() else { return };
+    let native = NativeBackend;
+    let zoo = default_zoo().unwrap();
+    let batch = xla.runtime().batch();
+    let mut rng = Rng::new(100);
+    // spot-check a handful of real zoo shapes (full grid takes minutes)
+    let shapes = zoo.distinct_layer_shapes();
+    let picks: Vec<&LayerShape> = shapes.iter().step_by(3).collect();
+    for shape in picks {
+        let p = LayerParams::init(shape, &mut rng);
+        let x = randvec(&mut rng, batch * shape.in_dim);
+        let g = randvec(&mut rng, batch * shape.out_dim);
+        let yx = xla.dense_fwd(shape, &p, &x, batch);
+        let yn = native.dense_fwd(shape, &p, &x, batch);
+        assert_close(&yx, &yn, 1e-4, &format!("fwd {shape:?}"));
+        let bx = xla.dense_bwd(shape, &p, &x, &g, batch);
+        let bn = native.dense_bwd(shape, &p, &x, &g, batch);
+        assert_close(&bx.gx, &bn.gx, 1e-3, &format!("bwd.gx {shape:?}"));
+        assert_close(&bx.grads.gw, &bn.grads.gw, 1e-3, &format!("bwd.gw {shape:?}"));
+        assert_close(&bx.grads.gb, &bn.grads.gb, 1e-3, &format!("bwd.gb {shape:?}"));
+    }
+}
+
+#[test]
+fn loss_heads_match_native() {
+    let Some(xla) = open_xla() else { return };
+    let native = NativeBackend;
+    let zoo = default_zoo().unwrap();
+    let batch = xla.runtime().batch();
+    let mut rng = Rng::new(200);
+    for &classes in zoo.distinct_class_counts().iter().take(3) {
+        let logits = randvec(&mut rng, batch * classes);
+        let teacher = randvec(&mut rng, batch * classes);
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(classes) as i32).collect();
+        let (gx, lx) = xla.loss_grad_ce(classes, &logits, &labels);
+        let (gn, ln) = native.loss_grad_ce(classes, &logits, &labels);
+        assert_close(&gx, &gn, 1e-4, "ce grad");
+        assert!((lx - ln).abs() < 1e-4, "ce loss {lx} vs {ln}");
+        let (gx, lx) = xla.loss_grad_lwf(classes, &logits, &labels, &teacher, 0.4);
+        let (gn, ln) = native.loss_grad_lwf(classes, &logits, &labels, &teacher, 0.4);
+        assert_close(&gx, &gn, 1e-4, "lwf grad");
+        assert!((lx - ln).abs() < 1e-4, "lwf loss {lx} vs {ln}");
+    }
+}
+
+#[test]
+fn compensate_and_sgd_match_native() {
+    let Some(xla) = open_xla() else { return };
+    let native = NativeBackend;
+    let zoo = default_zoo().unwrap();
+    let shape = zoo.distinct_layer_shapes()[0];
+    let mut rng = Rng::new(300);
+    let g = GradBuf {
+        gw: randvec(&mut rng, shape.in_dim * shape.out_dim),
+        gb: randvec(&mut rng, shape.out_dim),
+    };
+    let d = GradBuf {
+        gw: randvec(&mut rng, shape.in_dim * shape.out_dim),
+        gb: randvec(&mut rng, shape.out_dim),
+    };
+    let cx = xla.compensate(&g, &d, 0.2);
+    let cn = native.compensate(&g, &d, 0.2);
+    assert_close(&cx.gw, &cn.gw, 1e-5, "compensate gw");
+    assert_close(&cx.gb, &cn.gb, 1e-5, "compensate gb");
+    let p = LayerParams::init(&shape, &mut rng);
+    let px = xla.sgd(&p, &g, 0.01);
+    let pn = native.sgd(&p, &g, 0.01);
+    assert_close(&px.w, &pn.w, 1e-6, "sgd w");
+    assert_close(&px.b, &pn.b, 1e-6, "sgd b");
+}
+
+#[test]
+fn padded_batch_matches_native() {
+    let Some(xla) = open_xla() else { return };
+    let native = NativeBackend;
+    let zoo = default_zoo().unwrap();
+    let spec = zoo.model("mlp").unwrap();
+    let shapes = spec.layers();
+    let mut rng = Rng::new(400);
+    let p = ModelParams::init(spec, 4);
+    for batch in [1usize, 5, 16] {
+        let x = randvec(&mut rng, batch * spec.features());
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(spec.classes()) as i32).collect();
+        let (_, logits_x) = forward_all(&xla, &shapes, &p.layers, &x, batch);
+        let (inputs_n, logits_n) = forward_all(&native, &shapes, &p.layers, &x, batch);
+        assert_close(&logits_x, &logits_n, 1e-4, "padded fwd");
+        let (glx, _) = xla.loss_grad_ce(spec.classes(), &logits_x, &labels);
+        let (gln, _) = native.loss_grad_ce(spec.classes(), &logits_n, &labels);
+        assert_close(&glx, &gln, 1e-4, "padded ce grad");
+        let gx = backward_all(&xla, &shapes, &p.layers, &inputs_n, &glx, batch);
+        let gn = backward_all(&native, &shapes, &p.layers, &inputs_n, &gln, batch);
+        for (a, b) in gx.iter().zip(&gn) {
+            assert_close(&a.gw, &b.gw, 1e-3, "padded gw");
+            assert_close(&a.gb, &b.gb, 1e-3, "padded gb");
+        }
+    }
+}
+
+#[test]
+fn full_training_loop_through_xla_learns() {
+    let Some(xla) = open_xla() else { return };
+    let zoo = default_zoo().unwrap();
+    let spec = zoo.model("mlp").unwrap();
+    let shapes = spec.layers();
+    let batch = xla.runtime().batch();
+    let mut rng = Rng::new(500);
+    let mut params = ModelParams::init(spec, 7).layers;
+    // Simple separable synthetic task: label = argmax of first C features.
+    let c = spec.classes();
+    let gen = |rng: &mut Rng| {
+        let mut x = randvec(rng, batch * spec.features());
+        let mut y = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let label = rng.below(c);
+            x[i * spec.features() + label] += 4.0;
+            y.push(label as i32);
+        }
+        (x, y)
+    };
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..30 {
+        let (x, y) = gen(&mut rng);
+        let (inputs, logits) = forward_all(&xla, &shapes, &params, &x, batch);
+        let (gl, loss) = xla.loss_grad_ce(c, &logits, &y);
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        let grads = backward_all(&xla, &shapes, &params, &inputs, &gl, batch);
+        for (p, g) in params.iter_mut().zip(&grads) {
+            *p = xla.sgd(p, g, 0.05);
+        }
+    }
+    assert!(last < first * 0.7, "first={first} last={last}");
+    let (x, y) = gen(&mut rng);
+    let (_, logits) = forward_all(&xla, &shapes, &params, &x, batch);
+    assert!(accuracy(c, &logits, &y) > 0.5);
+}
