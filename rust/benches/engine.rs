@@ -1,5 +1,6 @@
 //! Engine throughput bench: virtual-batches/second of each schedule on
-//! the native backend (the end-to-end hot path minus PJRT).
+//! the native backend (the end-to-end hot path minus PJRT), plus the
+//! sim-vs-threaded executor comparison on the async engines.
 //!
 //!     cargo bench --bench engine
 
@@ -8,7 +9,8 @@ use ferret::baselines::{run_baseline_with_model, StreamPolicy};
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async, AsyncCfg, AsyncSchedule};
+use ferret::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
+use ferret::pipeline::executor::ExecutorKind;
 use ferret::pipeline::sync::{run_sync, SyncSchedule};
 use ferret::pipeline::EngineParams;
 use ferret::planner::costmodel::decay_for_td;
@@ -45,7 +47,8 @@ fn main() {
         let t0 = std::time::Instant::now();
         let mut p = OclKind::Vanilla.build(1);
         let mut s = mk_stream(&model, zoo.batch, n);
-        let _ = run_baseline_with_model(StreamPolicy::Oracle, &mut s, &NativeBackend, p.as_mut(), &ep, &model);
+        let _ =
+            run_baseline_with_model(StreamPolicy::Oracle, &mut s, &NativeBackend, p.as_mut(), &ep, &model);
         let dt = t0.elapsed().as_secs_f64();
         println!("{:<28} {:>12.1} {:>14.1}", format!("oracle/{model_name}"), dt * 1e3, n as f64 / dt);
 
@@ -53,29 +56,36 @@ fn main() {
         let t0 = std::time::Instant::now();
         let mut p = OclKind::Vanilla.build(1);
         let mut s = mk_stream(&model, zoo.batch, n);
-        let _ = run_sync(SyncSchedule::Dapple, &mut s, &NativeBackend, p.as_mut(), &ep, &model, &out.partition);
+        let _ =
+            run_sync(SyncSchedule::Dapple, &mut s, &NativeBackend, p.as_mut(), &ep, &model, &out.partition);
         let dt = t0.elapsed().as_secs_f64();
         println!("{:<28} {:>12.1} {:>14.1}", format!("dapple/{model_name}"), dt * 1e3, n as f64 / dt);
 
-        // async engines
+        // async engines, on both executors (sim = inline virtual time,
+        // threaded = one OS thread per (worker, stage) device)
         for sched in [AsyncSchedule::Pipedream, AsyncSchedule::Ferret] {
-            let cfg = match sched {
-                AsyncSchedule::Ferret => {
-                    AsyncCfg::ferret(out.partition.clone(), out.config.clone(), CompKind::IterFisher)
-                }
-                s => AsyncCfg::baseline(s, out.partition.clone(), &prof, td),
-            };
-            let t0 = std::time::Instant::now();
-            let mut p = OclKind::Vanilla.build(1);
-            let mut s = mk_stream(&model, zoo.batch, n);
-            let _ = run_async(cfg, &mut s, &NativeBackend, p.as_mut(), &ep, &model);
-            let dt = t0.elapsed().as_secs_f64();
-            println!(
-                "{:<28} {:>12.1} {:>14.1}",
-                format!("{}/{model_name}", sched.name().to_lowercase()),
-                dt * 1e3,
-                n as f64 / dt
-            );
+            for kind in [ExecutorKind::Sim, ExecutorKind::Threaded] {
+                let cfg = match sched {
+                    AsyncSchedule::Ferret => AsyncCfg::ferret(
+                        out.partition.clone(),
+                        out.config.clone(),
+                        CompKind::IterFisher,
+                    ),
+                    s => AsyncCfg::baseline(s, out.partition.clone(), &prof, td),
+                };
+                let t0 = std::time::Instant::now();
+                let mut p = OclKind::Vanilla.build(1);
+                let mut s = mk_stream(&model, zoo.batch, n);
+                let r = run_async_with(cfg, &mut s, &NativeBackend, p.as_mut(), &ep, &model, kind);
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "{:<28} {:>12.1} {:>14.1}   ({} threads)",
+                    format!("{}[{}]/{model_name}", sched.name().to_lowercase(), kind.name()),
+                    dt * 1e3,
+                    n as f64 / dt,
+                    r.metrics.exec_threads
+                );
+            }
         }
     }
 }

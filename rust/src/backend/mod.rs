@@ -25,7 +25,10 @@ pub struct BwdOut {
 
 /// One pipeline stage's numeric operations. `batch` is the leading dim of
 /// `x`/`g`; the XLA backend requires it to equal the artifact batch.
-pub trait Backend {
+///
+/// `Send + Sync` because the threaded pipeline executor shares one backend
+/// reference across every (worker, stage) device thread.
+pub trait Backend: Send + Sync {
     /// y = act(x @ w + b); x: (batch, in_dim) row-major.
     fn dense_fwd(&self, shape: &LayerShape, p: &LayerParams, x: &[f32], batch: usize) -> Vec<f32>;
 
@@ -60,11 +63,12 @@ pub trait Backend {
 }
 
 /// Forward a full dense stack, returning per-layer inputs (stashed for the
-/// backward chain, T1-style) and the logits.
-pub fn forward_all(
+/// backward chain, T1-style) and the logits. Generic over owned
+/// (`LayerParams`) and shared (`Arc<LayerParams>`) parameter slices.
+pub fn forward_all<P: std::borrow::Borrow<LayerParams>>(
     backend: &dyn Backend,
     shapes: &[LayerShape],
-    params: &[LayerParams],
+    params: &[P],
     x: &[f32],
     batch: usize,
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
@@ -72,17 +76,17 @@ pub fn forward_all(
     let mut h = x.to_vec();
     for (shape, p) in shapes.iter().zip(params) {
         inputs.push(h.clone());
-        h = backend.dense_fwd(shape, p, &h, batch);
+        h = backend.dense_fwd(shape, p.borrow(), &h, batch);
     }
     (inputs, h)
 }
 
 /// Backward a full dense stack given stashed inputs and dL/dlogits.
 /// Returns per-layer gradients (aligned with `shapes`).
-pub fn backward_all(
+pub fn backward_all<P: std::borrow::Borrow<LayerParams>>(
     backend: &dyn Backend,
     shapes: &[LayerShape],
-    params: &[LayerParams],
+    params: &[P],
     inputs: &[Vec<f32>],
     gout: &[f32],
     batch: usize,
@@ -90,7 +94,7 @@ pub fn backward_all(
     let mut grads: Vec<Option<GradBuf>> = (0..shapes.len()).map(|_| None).collect();
     let mut g = gout.to_vec();
     for i in (0..shapes.len()).rev() {
-        let out = backend.dense_bwd(&shapes[i], &params[i], &inputs[i], &g, batch);
+        let out = backend.dense_bwd(&shapes[i], params[i].borrow(), &inputs[i], &g, batch);
         g = out.gx;
         grads[i] = Some(out.grads);
     }

@@ -2,215 +2,309 @@
 //! AOT artifact. The artifact batch is fixed at lowering time; callers with
 //! a smaller logical batch are zero-padded up (labels padded with class 0
 //! and the padded rows' gradients masked out by rescaling).
+//!
+//! Compiled without the `xla` cargo feature this is a stub whose
+//! constructors fail (via the stub [`Runtime`]), letting every caller
+//! compile and skip gracefully.
 
-use anyhow::Result;
+#[cfg(feature = "xla")]
+mod real {
+    use super::super::{Backend, BwdOut};
+    use crate::config::LayerShape;
+    use crate::model::{GradBuf, LayerParams};
+    use crate::runtime::{lit_f32, lit_i32, lit_scalar, names, to_f32, Runtime};
+    use crate::util::error::Result;
 
-use super::{Backend, BwdOut};
-use crate::config::LayerShape;
-use crate::model::{GradBuf, LayerParams};
-use crate::runtime::{lit_f32, lit_i32, lit_scalar, names, to_f32, Runtime};
+    pub struct XlaBackend {
+        rt: Runtime,
+    }
 
-pub struct XlaBackend {
-    rt: Runtime,
+    impl XlaBackend {
+        pub fn new(rt: Runtime) -> Self {
+            XlaBackend { rt }
+        }
+
+        pub fn open_default() -> Result<Self> {
+            Ok(XlaBackend { rt: Runtime::open_default()? })
+        }
+
+        pub fn runtime(&self) -> &Runtime {
+            &self.rt
+        }
+
+        fn ab(&self) -> usize {
+            self.rt.batch()
+        }
+
+        /// Pad a (batch, dim) row-major buffer with zero rows up to the
+        /// artifact batch.
+        fn pad_rows(&self, x: &[f32], batch: usize, dim: usize) -> Vec<f32> {
+            let ab = self.ab();
+            assert!(batch <= ab, "batch {batch} exceeds artifact batch {ab}");
+            if batch == ab {
+                return x.to_vec();
+            }
+            let mut out = vec![0.0f32; ab * dim];
+            out[..batch * dim].copy_from_slice(x);
+            out
+        }
+
+        fn unpad_rows(&self, x: Vec<f32>, batch: usize, dim: usize) -> Vec<f32> {
+            if batch == self.ab() {
+                x
+            } else {
+                x[..batch * dim].to_vec()
+            }
+        }
+    }
+
+    impl Backend for XlaBackend {
+        fn dense_fwd(
+            &self,
+            shape: &LayerShape,
+            p: &LayerParams,
+            x: &[f32],
+            batch: usize,
+        ) -> Vec<f32> {
+            let (k, n, ab) = (shape.in_dim, shape.out_dim, self.ab());
+            let xp = self.pad_rows(x, batch, k);
+            let out = self
+                .rt
+                .exec(
+                    &names::dense_fwd(shape),
+                    &[
+                        lit_f32(&xp, &[ab as i64, k as i64]).unwrap(),
+                        lit_f32(&p.w, &[k as i64, n as i64]).unwrap(),
+                        lit_f32(&p.b, &[n as i64]).unwrap(),
+                    ],
+                )
+                .expect("dense_fwd artifact");
+            self.unpad_rows(to_f32(&out[0]).unwrap(), batch, n)
+        }
+
+        fn dense_bwd(
+            &self,
+            shape: &LayerShape,
+            p: &LayerParams,
+            x: &[f32],
+            g: &[f32],
+            batch: usize,
+        ) -> BwdOut {
+            let (k, n, ab) = (shape.in_dim, shape.out_dim, self.ab());
+            let xp = self.pad_rows(x, batch, k);
+            let gp = self.pad_rows(g, batch, n);
+            let out = self
+                .rt
+                .exec(
+                    &names::dense_bwd(shape),
+                    &[
+                        lit_f32(&xp, &[ab as i64, k as i64]).unwrap(),
+                        lit_f32(&p.w, &[k as i64, n as i64]).unwrap(),
+                        lit_f32(&p.b, &[n as i64]).unwrap(),
+                        lit_f32(&gp, &[ab as i64, n as i64]).unwrap(),
+                    ],
+                )
+                .expect("dense_bwd artifact");
+            // Padded rows have zero upstream grad, so gw/gb are unaffected.
+            BwdOut {
+                gx: self.unpad_rows(to_f32(&out[0]).unwrap(), batch, k),
+                grads: GradBuf {
+                    gw: to_f32(&out[1]).unwrap(),
+                    gb: to_f32(&out[2]).unwrap(),
+                },
+            }
+        }
+
+        fn loss_grad_ce(&self, classes: usize, logits: &[f32], labels: &[i32]) -> (Vec<f32>, f32) {
+            let (batch, ab) = (labels.len(), self.ab());
+            let lp = self.pad_rows(logits, batch, classes);
+            let mut yp = labels.to_vec();
+            yp.resize(ab, 0);
+            let out = self
+                .rt
+                .exec(
+                    &names::loss_ce(classes),
+                    &[
+                        lit_f32(&lp, &[ab as i64, classes as i64]).unwrap(),
+                        lit_i32(&yp),
+                    ],
+                )
+                .expect("loss_ce artifact");
+            let mut g = self.unpad_rows(to_f32(&out[0]).unwrap(), batch, classes);
+            let loss = to_f32(&out[1]).unwrap()[0];
+            // The artifact divides by the *artifact* batch; rescale to the
+            // logical batch and drop the padded rows' (nonzero)
+            // contribution.
+            if batch != ab {
+                let scale = ab as f32 / batch as f32;
+                g.iter_mut().for_each(|v| *v *= scale);
+                // loss over padded rows is garbage — recompute natively.
+                return (g, super::super::ce_loss(classes, logits, labels));
+            }
+            (g, loss)
+        }
+
+        fn loss_grad_lwf(
+            &self,
+            classes: usize,
+            logits: &[f32],
+            labels: &[i32],
+            teacher: &[f32],
+            alpha: f32,
+        ) -> (Vec<f32>, f32) {
+            let (batch, ab) = (labels.len(), self.ab());
+            let lp = self.pad_rows(logits, batch, classes);
+            let tp = self.pad_rows(teacher, batch, classes);
+            let mut yp = labels.to_vec();
+            yp.resize(ab, 0);
+            let out = self
+                .rt
+                .exec(
+                    &names::loss_lwf(classes),
+                    &[
+                        lit_f32(&lp, &[ab as i64, classes as i64]).unwrap(),
+                        lit_i32(&yp),
+                        lit_f32(&tp, &[ab as i64, classes as i64]).unwrap(),
+                        lit_scalar(alpha),
+                    ],
+                )
+                .expect("loss_lwf artifact");
+            let mut g = self.unpad_rows(to_f32(&out[0]).unwrap(), batch, classes);
+            let loss = to_f32(&out[1]).unwrap()[0];
+            if batch != ab {
+                let scale = ab as f32 / batch as f32;
+                g.iter_mut().for_each(|v| *v *= scale);
+                // like loss_ce: the padded rows' CE+distillation terms
+                // poison the artifact's mean loss — recompute natively.
+                let (_, native_loss) = crate::backend::native::NativeBackend
+                    .loss_grad_lwf(classes, logits, labels, teacher, alpha);
+                return (g, native_loss);
+            }
+            (g, loss)
+        }
+
+        fn compensate(&self, g: &GradBuf, d: &GradBuf, lam: f32) -> GradBuf {
+            // Shape is recoverable from the buffer lengths: gw is (K, N),
+            // gb is (N,).
+            let n = g.gb.len();
+            let k = g.gw.len() / n;
+            let shape = LayerShape { in_dim: k, out_dim: n, act: crate::config::Act::Relu };
+            let out = self
+                .rt
+                .exec(
+                    &names::compensate(&shape),
+                    &[
+                        lit_f32(&g.gw, &[k as i64, n as i64]).unwrap(),
+                        lit_f32(&g.gb, &[n as i64]).unwrap(),
+                        lit_f32(&d.gw, &[k as i64, n as i64]).unwrap(),
+                        lit_f32(&d.gb, &[n as i64]).unwrap(),
+                        lit_scalar(lam),
+                    ],
+                )
+                .expect("compensate artifact");
+            GradBuf {
+                gw: to_f32(&out[0]).unwrap(),
+                gb: to_f32(&out[1]).unwrap(),
+            }
+        }
+
+        fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams {
+            let n = p.b.len();
+            let k = p.w.len() / n;
+            let shape = LayerShape { in_dim: k, out_dim: n, act: crate::config::Act::Relu };
+            let out = self
+                .rt
+                .exec(
+                    &names::sgd(&shape),
+                    &[
+                        lit_f32(&p.w, &[k as i64, n as i64]).unwrap(),
+                        lit_f32(&p.b, &[n as i64]).unwrap(),
+                        lit_f32(&g.gw, &[k as i64, n as i64]).unwrap(),
+                        lit_f32(&g.gb, &[n as i64]).unwrap(),
+                        lit_scalar(lr),
+                    ],
+                )
+                .expect("sgd artifact");
+            LayerParams {
+                w: to_f32(&out[0]).unwrap(),
+                b: to_f32(&out[1]).unwrap(),
+            }
+        }
+    }
 }
 
-impl XlaBackend {
-    pub fn new(rt: Runtime) -> Self {
-        XlaBackend { rt }
+#[cfg(feature = "xla")]
+pub use real::XlaBackend;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::super::{Backend, BwdOut};
+    use crate::config::LayerShape;
+    use crate::model::{GradBuf, LayerParams};
+    use crate::runtime::Runtime;
+    use crate::util::error::Result;
+
+    /// Uninhabited without the `xla` feature: `open_default()` always
+    /// returns the stub runtime's error, so none of the `Backend` methods
+    /// can ever be reached.
+    pub struct XlaBackend {
+        rt: Runtime,
     }
 
-    pub fn open_default() -> Result<Self> {
-        Ok(XlaBackend { rt: Runtime::open_default()? })
-    }
-
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
-    }
-
-    fn ab(&self) -> usize {
-        self.rt.batch()
-    }
-
-    /// Pad a (batch, dim) row-major buffer with zero rows up to the
-    /// artifact batch.
-    fn pad_rows(&self, x: &[f32], batch: usize, dim: usize) -> Vec<f32> {
-        let ab = self.ab();
-        assert!(batch <= ab, "batch {batch} exceeds artifact batch {ab}");
-        if batch == ab {
-            return x.to_vec();
+    impl XlaBackend {
+        pub fn new(rt: Runtime) -> Self {
+            XlaBackend { rt }
         }
-        let mut out = vec![0.0f32; ab * dim];
-        out[..batch * dim].copy_from_slice(x);
-        out
-    }
 
-    fn unpad_rows(&self, x: Vec<f32>, batch: usize, dim: usize) -> Vec<f32> {
-        if batch == self.ab() {
-            x
-        } else {
-            x[..batch * dim].to_vec()
+        pub fn open_default() -> Result<Self> {
+            Ok(XlaBackend { rt: Runtime::open_default()? })
         }
-    }
-}
 
-impl Backend for XlaBackend {
-    fn dense_fwd(&self, shape: &LayerShape, p: &LayerParams, x: &[f32], batch: usize) -> Vec<f32> {
-        let (k, n, ab) = (shape.in_dim, shape.out_dim, self.ab());
-        let xp = self.pad_rows(x, batch, k);
-        let out = self
-            .rt
-            .exec(
-                &names::dense_fwd(shape),
-                &[
-                    lit_f32(&xp, &[ab as i64, k as i64]).unwrap(),
-                    lit_f32(&p.w, &[k as i64, n as i64]).unwrap(),
-                    lit_f32(&p.b, &[n as i64]).unwrap(),
-                ],
-            )
-            .expect("dense_fwd artifact");
-        self.unpad_rows(to_f32(&out[0]).unwrap(), batch, n)
-    }
-
-    fn dense_bwd(
-        &self,
-        shape: &LayerShape,
-        p: &LayerParams,
-        x: &[f32],
-        g: &[f32],
-        batch: usize,
-    ) -> BwdOut {
-        let (k, n, ab) = (shape.in_dim, shape.out_dim, self.ab());
-        let xp = self.pad_rows(x, batch, k);
-        let gp = self.pad_rows(g, batch, n);
-        let out = self
-            .rt
-            .exec(
-                &names::dense_bwd(shape),
-                &[
-                    lit_f32(&xp, &[ab as i64, k as i64]).unwrap(),
-                    lit_f32(&p.w, &[k as i64, n as i64]).unwrap(),
-                    lit_f32(&p.b, &[n as i64]).unwrap(),
-                    lit_f32(&gp, &[ab as i64, n as i64]).unwrap(),
-                ],
-            )
-            .expect("dense_bwd artifact");
-        // Padded rows have zero upstream grad, so gw/gb are unaffected.
-        BwdOut {
-            gx: self.unpad_rows(to_f32(&out[0]).unwrap(), batch, k),
-            grads: GradBuf {
-                gw: to_f32(&out[1]).unwrap(),
-                gb: to_f32(&out[2]).unwrap(),
-            },
+        pub fn runtime(&self) -> &Runtime {
+            &self.rt
         }
     }
 
-    fn loss_grad_ce(&self, classes: usize, logits: &[f32], labels: &[i32]) -> (Vec<f32>, f32) {
-        let (batch, ab) = (labels.len(), self.ab());
-        let lp = self.pad_rows(logits, batch, classes);
-        let mut yp = labels.to_vec();
-        yp.resize(ab, 0);
-        let out = self
-            .rt
-            .exec(
-                &names::loss_ce(classes),
-                &[
-                    lit_f32(&lp, &[ab as i64, classes as i64]).unwrap(),
-                    lit_i32(&yp),
-                ],
-            )
-            .expect("loss_ce artifact");
-        let mut g = self.unpad_rows(to_f32(&out[0]).unwrap(), batch, classes);
-        let loss = to_f32(&out[1]).unwrap()[0];
-        // The artifact divides by the *artifact* batch; rescale to the
-        // logical batch and drop the padded rows' (nonzero) contribution.
-        if batch != ab {
-            let scale = ab as f32 / batch as f32;
-            g.iter_mut().for_each(|v| *v *= scale);
-            // loss over padded rows is garbage — recompute natively.
-            return (g, super::ce_loss(classes, logits, labels));
+    impl Backend for XlaBackend {
+        fn dense_fwd(&self, _: &LayerShape, _: &LayerParams, _: &[f32], _: usize) -> Vec<f32> {
+            unreachable!("built without the xla feature")
         }
-        (g, loss)
-    }
 
-    fn loss_grad_lwf(
-        &self,
-        classes: usize,
-        logits: &[f32],
-        labels: &[i32],
-        teacher: &[f32],
-        alpha: f32,
-    ) -> (Vec<f32>, f32) {
-        let (batch, ab) = (labels.len(), self.ab());
-        let lp = self.pad_rows(logits, batch, classes);
-        let tp = self.pad_rows(teacher, batch, classes);
-        let mut yp = labels.to_vec();
-        yp.resize(ab, 0);
-        let out = self
-            .rt
-            .exec(
-                &names::loss_lwf(classes),
-                &[
-                    lit_f32(&lp, &[ab as i64, classes as i64]).unwrap(),
-                    lit_i32(&yp),
-                    lit_f32(&tp, &[ab as i64, classes as i64]).unwrap(),
-                    lit_scalar(alpha),
-                ],
-            )
-            .expect("loss_lwf artifact");
-        let mut g = self.unpad_rows(to_f32(&out[0]).unwrap(), batch, classes);
-        let loss = to_f32(&out[1]).unwrap()[0];
-        if batch != ab {
-            let scale = ab as f32 / batch as f32;
-            g.iter_mut().for_each(|v| *v *= scale);
+        fn dense_bwd(
+            &self,
+            _: &LayerShape,
+            _: &LayerParams,
+            _: &[f32],
+            _: &[f32],
+            _: usize,
+        ) -> BwdOut {
+            unreachable!("built without the xla feature")
         }
-        (g, loss)
-    }
 
-    fn compensate(&self, g: &GradBuf, d: &GradBuf, lam: f32) -> GradBuf {
-        // Shape is recoverable from the buffer lengths: gw is (K, N),
-        // gb is (N,).
-        let n = g.gb.len();
-        let k = g.gw.len() / n;
-        let shape = LayerShape { in_dim: k, out_dim: n, act: crate::config::Act::Relu };
-        let out = self
-            .rt
-            .exec(
-                &names::compensate(&shape),
-                &[
-                    lit_f32(&g.gw, &[k as i64, n as i64]).unwrap(),
-                    lit_f32(&g.gb, &[n as i64]).unwrap(),
-                    lit_f32(&d.gw, &[k as i64, n as i64]).unwrap(),
-                    lit_f32(&d.gb, &[n as i64]).unwrap(),
-                    lit_scalar(lam),
-                ],
-            )
-            .expect("compensate artifact");
-        GradBuf {
-            gw: to_f32(&out[0]).unwrap(),
-            gb: to_f32(&out[1]).unwrap(),
+        fn loss_grad_ce(&self, _: usize, _: &[f32], _: &[i32]) -> (Vec<f32>, f32) {
+            unreachable!("built without the xla feature")
         }
-    }
 
-    fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams {
-        let n = p.b.len();
-        let k = p.w.len() / n;
-        let shape = LayerShape { in_dim: k, out_dim: n, act: crate::config::Act::Relu };
-        let out = self
-            .rt
-            .exec(
-                &names::sgd(&shape),
-                &[
-                    lit_f32(&p.w, &[k as i64, n as i64]).unwrap(),
-                    lit_f32(&p.b, &[n as i64]).unwrap(),
-                    lit_f32(&g.gw, &[k as i64, n as i64]).unwrap(),
-                    lit_f32(&g.gb, &[n as i64]).unwrap(),
-                    lit_scalar(lr),
-                ],
-            )
-            .expect("sgd artifact");
-        LayerParams {
-            w: to_f32(&out[0]).unwrap(),
-            b: to_f32(&out[1]).unwrap(),
+        fn loss_grad_lwf(
+            &self,
+            _: usize,
+            _: &[f32],
+            _: &[i32],
+            _: &[f32],
+            _: f32,
+        ) -> (Vec<f32>, f32) {
+            unreachable!("built without the xla feature")
+        }
+
+        fn compensate(&self, _: &GradBuf, _: &GradBuf, _: f32) -> GradBuf {
+            unreachable!("built without the xla feature")
+        }
+
+        fn sgd(&self, _: &LayerParams, _: &GradBuf, _: f32) -> LayerParams {
+            unreachable!("built without the xla feature")
         }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaBackend;

@@ -10,13 +10,14 @@ pub mod coreset;
 
 use crate::backend::{accuracy, backward_all, forward_all, Backend};
 use crate::metrics::{eval_tacc, RunMetrics};
-use crate::model::{LayerParams, ModelParams};
+use crate::model::{LiveParams, SharedParams};
 use crate::ocl::{OclCtx, OclPlugin};
 use crate::pipeline::{EngineParams, RunResult};
 use crate::planner::costmodel::single_copy_bytes;
 use crate::planner::Profile;
 use crate::stream::{Batch, SyntheticStream};
 use crate::util::Rng;
+use std::sync::Arc;
 
 /// Admission policy of the sequential trainer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,7 +100,7 @@ pub fn run_baseline_with_model(
     let prof = Profile::analytic(model, spec.batch);
     let td = if ep.td == 0 { prof.default_td() } else { ep.td };
     let t_train: u64 = prof.t_f.iter().sum::<u64>() + prof.t_b.iter().sum::<u64>();
-    let mut params = ModelParams::init(model, ep.seed).layers;
+    let mut params = LiveParams::init(model, ep.seed).layers;
     let mut metrics = RunMetrics::default();
     let mut rng = Rng::new(ep.seed ^ 0xBA5E);
     let ctx = OclCtx {
@@ -207,7 +208,7 @@ pub fn run_baseline_with_model(
 fn train_step(
     backend: &dyn Backend,
     shapes: &[crate::config::LayerShape],
-    params: &mut Vec<LayerParams>,
+    params: &mut Vec<SharedParams>,
     plugin: &mut dyn OclPlugin,
     ctx: &OclCtx,
     pending: Pending,
@@ -224,7 +225,7 @@ fn train_step(
         plugin.adjust_layer_grad(i, g, p, ctx);
     }
     for (p, g) in params.iter_mut().zip(&grads) {
-        *p = backend.sgd(p, g, ep.lr);
+        *p = Arc::new(backend.sgd(p, g, ep.lr));
     }
     plugin.after_update(params, ctx);
     metrics.record_loss(done, loss);

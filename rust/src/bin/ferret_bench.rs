@@ -1,17 +1,23 @@
 //! ferret-bench — regenerate the paper's tables and figures.
 //!
 //! Usage:
-//!   ferret-bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all
+//!   ferret_bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all
 //!                [--quick] [--batches N] [--seeds a,b,...] [--settings i,j,...]
+//!                [--executor sim|threaded]
+//!
+//! `--executor threaded` runs the async engines on one OS thread per
+//! (worker, stage) device and reports real wall-clock samples/sec; `sim`
+//! (default) is the single-threaded virtual-time simulation.
 //!
 //! Results are printed as markdown and saved under results/ as .md + .csv.
 
 use ferret::harness::{Bench, BenchCfg, Table};
+use ferret::pipeline::executor::ExecutorKind;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ferret-bench --exp <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all> \
-         [--quick] [--batches N] [--seeds a,b] [--settings i,j]"
+        "usage: ferret_bench --exp <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all> \
+         [--quick] [--batches N] [--seeds a,b] [--settings i,j] [--executor sim|threaded]"
     );
     std::process::exit(2)
 }
@@ -20,6 +26,11 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut exp = String::from("all");
     let mut cfg = BenchCfg::default();
+    // apply the --quick preset first so explicit --batches/--seeds/
+    // --settings override it regardless of flag order
+    if args.iter().any(|a| a == "--quick") {
+        cfg = BenchCfg { quiet: cfg.quiet, executor: cfg.executor, ..BenchCfg::quick() };
+    }
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -27,7 +38,7 @@ fn main() {
                 i += 1;
                 exp = args.get(i).unwrap_or_else(|| usage()).clone();
             }
-            "--quick" => cfg = BenchCfg { quiet: cfg.quiet, ..BenchCfg::quick() },
+            "--quick" => {} // applied above
             "--batches" => {
                 i += 1;
                 cfg.num_batches =
@@ -52,6 +63,13 @@ fn main() {
                         .collect(),
                 );
             }
+            "--executor" => {
+                i += 1;
+                cfg.executor = args
+                    .get(i)
+                    .and_then(|s| ExecutorKind::parse(s))
+                    .unwrap_or_else(|| usage());
+            }
             "--quiet" => cfg.quiet = true,
             _ => usage(),
         }
@@ -59,6 +77,7 @@ fn main() {
     }
 
     let t0 = std::time::Instant::now();
+    let executor = cfg.executor;
     let mut bench = Bench::new(cfg);
     let emit = |name: &str, table: Table| {
         println!("\n{}", table.to_markdown());
@@ -103,5 +122,12 @@ fn main() {
         let t = bench.fig7();
         emit("fig7", t);
     }
-    eprintln!("[ferret-bench] done in {:.0}s", t0.elapsed().as_secs_f64());
+    let wall = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "[ferret-bench] done in {wall:.0}s | executor={} | max worker threads observed={} | \
+         {:.1} engine-batches/s wall-clock",
+        executor.name(),
+        bench.max_threads_seen,
+        bench.batches_run as f64 / wall.max(1e-9),
+    );
 }

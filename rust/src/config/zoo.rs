@@ -4,7 +4,7 @@
 //! set, so artifact names derived here (`runtime::artifact_names`) always
 //! agree with what `make artifacts` produced.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Error, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -154,7 +154,7 @@ pub fn parse_zoo(text: &str, origin: &str) -> Result<Zoo> {
                 let name = parts[1].to_string();
                 let dims = parts[2..]
                     .iter()
-                    .map(|p| p.parse::<usize>().map_err(anyhow::Error::from))
+                    .map(|p| p.parse::<usize>().map_err(Error::from))
                     .collect::<Result<Vec<_>>>()?;
                 if dims.iter().any(|&d| d == 0) {
                     bail!("{origin}:{}: dims must be positive", lineno + 1);

@@ -15,11 +15,13 @@ use crate::compensate::CompKind;
 use crate::config::{zoo::default_zoo, ModelSpec, Zoo};
 use crate::metrics::{agm, RunMetrics};
 use crate::ocl::OclKind;
-use crate::pipeline::engine::{run_async, AsyncCfg, AsyncSchedule};
+use crate::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
+use crate::pipeline::executor::ExecutorKind;
 use crate::pipeline::sync::{run_sync, SyncSchedule};
 use crate::pipeline::EngineParams;
 use crate::planner::{plan, Partition, Profile};
 use crate::stream::{paper_settings, Setting, SyntheticStream};
+pub use crate::util::math::pearson;
 pub use report::{Cell, Table};
 
 /// Ferret memory tiers of the paper's tables.
@@ -73,11 +75,21 @@ pub struct BenchCfg {
     pub settings: Option<Vec<usize>>,
     pub lr: f32,
     pub quiet: bool,
+    /// executor for the async engines (sim = virtual-time inline,
+    /// threaded = one OS thread per (worker, stage) device)
+    pub executor: ExecutorKind,
 }
 
 impl Default for BenchCfg {
     fn default() -> Self {
-        BenchCfg { num_batches: 160, seeds: vec![1, 2], settings: None, lr: 0.04, quiet: false }
+        BenchCfg {
+            num_batches: 160,
+            seeds: vec![1, 2],
+            settings: None,
+            lr: 0.04,
+            quiet: false,
+            executor: ExecutorKind::Sim,
+        }
     }
 }
 
@@ -90,6 +102,7 @@ impl BenchCfg {
             settings: Some(vec![0, 19]),
             lr: 0.05,
             quiet: true,
+            ..Default::default()
         }
     }
 }
@@ -101,6 +114,11 @@ pub struct Bench {
     backend: Box<dyn Backend>,
     runs: HashMap<(usize, String, u64), RunMetrics>,
     plans: HashMap<(String, u64), (Partition, Profile, u64)>, // model -> shared partition
+    /// max executor threads observed across async runs (observability for
+    /// the `--executor threaded` mode)
+    pub max_threads_seen: usize,
+    /// total microbatches pushed through engines (wall-clock throughput)
+    pub batches_run: u64,
 }
 
 impl Bench {
@@ -111,6 +129,8 @@ impl Bench {
             backend: Box::new(NativeBackend),
             runs: HashMap::new(),
             plans: HashMap::new(),
+            max_threads_seen: 0,
+            batches_run: 0,
         }
     }
 
@@ -240,16 +260,34 @@ impl Bench {
             Method::Async(schedule) => {
                 let (part, prof, td) = self.shared_partition(&model);
                 let cfg = AsyncCfg::baseline(schedule, part, &prof, td);
-                run_async(cfg, &mut stream, self.backend.as_ref(), plugin.as_mut(), &ep, &model)
+                run_async_with(
+                    cfg,
+                    &mut stream,
+                    self.backend.as_ref(),
+                    plugin.as_mut(),
+                    &ep,
+                    &model,
+                    self.cfg.executor,
+                )
             }
             Method::Ferret { tier, comp } => {
                 let budget = self.tier_budget(&model, tier);
                 let (_, prof, td) = self.shared_partition(&model);
                 let out = plan(&prof, td, budget, crate::planner::costmodel::decay_for_td(td));
                 let cfg = AsyncCfg::ferret(out.partition, out.config, comp);
-                run_async(cfg, &mut stream, self.backend.as_ref(), plugin.as_mut(), &ep, &model)
+                run_async_with(
+                    cfg,
+                    &mut stream,
+                    self.backend.as_ref(),
+                    plugin.as_mut(),
+                    &ep,
+                    &model,
+                    self.cfg.executor,
+                )
             }
         };
+        self.max_threads_seen = self.max_threads_seen.max(result.metrics.exec_threads);
+        self.batches_run += self.cfg.num_batches as u64;
         self.runs.insert(key, result.metrics.clone());
         result.metrics
     }
@@ -504,6 +542,7 @@ impl Bench {
                 let budget = lo * (hi / lo).powf(frac);
                 let (_, prof, td) = self.shared_partition(&model);
                 let out = plan(&prof, td, budget, crate::planner::costmodel::decay_for_td(td));
+                let mut threads_seen = 0usize;
                 let (mems, oaccs): (Vec<f64>, Vec<f64>) = seeds
                     .iter()
                     .map(|&seed| {
@@ -515,17 +554,23 @@ impl Bench {
                         );
                         let ep = EngineParams { lr: self.cfg.lr, seed, ..Default::default() };
                         let mut plugin = OclKind::Vanilla.build(seed);
-                        let r = run_async(
+                        let r = run_async_with(
                             cfg,
                             &mut stream,
                             self.backend.as_ref(),
                             plugin.as_mut(),
                             &ep,
                             &model,
+                            self.cfg.executor,
                         );
+                        threads_seen = threads_seen.max(r.metrics.exec_threads);
                         (r.metrics.mem_bytes / 1e6, r.metrics.oacc.value())
                     })
                     .unzip();
+                // direct engine runs bypass run(): keep the observability
+                // counters honest
+                self.max_threads_seen = self.max_threads_seen.max(threads_seen);
+                self.batches_run += (self.cfg.num_batches * seeds.len()) as u64;
                 table.push_row(
                     format!("{}/Ferret@B{k}", setting.label),
                     vec![Some(Cell::from_samples(&mems)), Some(Cell::from_samples(&oaccs))],
@@ -571,42 +616,9 @@ impl Bench {
     }
 }
 
-/// Pearson correlation coefficient.
-pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
-    if xs.len() < 2 {
-        return 0.0;
-    }
-    let n = xs.len() as f64;
-    let mx = xs.iter().sum::<f64>() / n;
-    let my = ys.iter().sum::<f64>() / n;
-    let mut cov = 0.0;
-    let mut vx = 0.0;
-    let mut vy = 0.0;
-    for (x, y) in xs.iter().zip(ys) {
-        cov += (x - mx) * (y - my);
-        vx += (x - mx) * (x - mx);
-        vy += (y - my) * (y - my);
-    }
-    if vx == 0.0 || vy == 0.0 {
-        0.0
-    } else {
-        cov / (vx.sqrt() * vy.sqrt())
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn pearson_basics() {
-        let xs = [1.0, 2.0, 3.0, 4.0];
-        let ys = [2.0, 4.0, 6.0, 8.0];
-        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
-        let yneg = [8.0, 6.0, 4.0, 2.0];
-        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
-        assert_eq!(pearson(&[1.0], &[1.0]), 0.0);
-    }
 
     #[test]
     fn quick_table1_runs_and_has_expected_shape() {

@@ -36,7 +36,8 @@ impl Table {
     pub fn to_markdown(&self) -> String {
         let mut out = format!("### {}\n\n", self.title);
         out.push_str(&format!("| Setting | {} |\n", self.columns.join(" | ")));
-        out.push_str(&format!("|---|{}|\n", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+        let dashes = self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|");
+        out.push_str(&format!("|---|{dashes}|\n"));
         for (label, cells) in &self.rows {
             let cells_str: Vec<String> = cells
                 .iter()

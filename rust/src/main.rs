@@ -8,9 +8,11 @@
 //!
 //!   run   --setting <idx|label> [--budget-mb M] [--batches N] [--seed S]
 //!         [--comp none|step|gap|fisher|iter] [--ocl vanilla|er|mir|lwf|mas]
-//!         [--backend native|xla]
+//!         [--backend native|xla] [--executor sim|threaded]
 //!         Plan + run full Ferret on one of the paper's 20 settings and
-//!         report oacc/tacc/memory/adaptation rate.
+//!         report oacc/tacc/memory/adaptation rate. `--executor threaded`
+//!         runs one OS thread per (worker, stage) device (real
+//!         parallelism); `sim` is the virtual-time simulation.
 //!
 //!   settings
 //!         List the 20 paper settings with their indices.
@@ -19,7 +21,8 @@ use ferret::backend::{native::NativeBackend, xla::XlaBackend, Backend};
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async, AsyncCfg};
+use ferret::pipeline::engine::{run_async_with, AsyncCfg};
+use ferret::pipeline::executor::ExecutorKind;
 use ferret::pipeline::EngineParams;
 use ferret::planner::{plan, Profile};
 use ferret::stream::{paper_settings, SyntheticStream};
@@ -79,7 +82,9 @@ fn cmd_plan(opts: &Opts) {
     println!("partition L: {:?} ({} stages)", out.partition.bounds, out.partition.num_stages());
     println!("feasible   : {}", out.feasible);
     println!("R_F (Eq.3) : {:.6}", out.rate);
-    println!("M_F (Eq.4) : {:.2} MB (budget {})", out.mem_bytes / 1e6, if budget.is_finite() { format!("{:.2} MB", budget / 1e6) } else { "∞".into() });
+    let budget_str =
+        if budget.is_finite() { format!("{:.2} MB", budget / 1e6) } else { "∞".into() };
+    println!("M_F (Eq.4) : {:.2} MB (budget {budget_str})", out.mem_bytes / 1e6);
     for (n, w) in out.config.workers.iter().enumerate() {
         println!(
             "worker {n}: delay={} recompute={} accum={:?} omit={:?}",
@@ -126,6 +131,10 @@ fn cmd_run(opts: &Opts) {
         "xla" => Box::new(XlaBackend::open_default().expect("artifacts (run `make artifacts`)")),
         _ => usage(),
     };
+    let executor = match ExecutorKind::parse(opts.get("executor").unwrap_or("sim")) {
+        Some(k) => k,
+        None => usage(),
+    };
 
     let prof = Profile::analytic(&model, zoo.batch);
     let td = prof.default_td();
@@ -154,9 +163,10 @@ fn cmd_run(opts: &Opts) {
     let ep = EngineParams { lr: 0.1, seed, ..Default::default() };
     let cfg = AsyncCfg::ferret(out.partition, out.config, comp);
     let t0 = std::time::Instant::now();
-    let r = run_async(cfg, &mut stream, backend.as_ref(), plugin.as_mut(), &ep, &model);
+    let r = run_async_with(cfg, &mut stream, backend.as_ref(), plugin.as_mut(), &ep, &model, executor);
     println!("setting    : {}", setting.label);
     println!("ocl/comp   : {} / {}", ocl.name(), comp.name());
+    println!("executor   : {} ({} worker threads)", executor.name(), r.metrics.exec_threads);
     println!("oacc       : {:.2}%", r.metrics.oacc.value());
     println!("tacc       : {:.2}%", r.metrics.tacc);
     println!("adaptation : {:.4}", r.metrics.adaptation_rate());

@@ -71,6 +71,9 @@ pub struct RunMetrics {
     pub peak_live_bytes: usize,
     /// final test accuracy in percent (filled by `eval_tacc`)
     pub tacc: f64,
+    /// compute threads the executor ran with (1 = inline simulation;
+    /// 0 = engine predates executors / not applicable)
+    pub exec_threads: usize,
 }
 
 impl RunMetrics {
@@ -122,10 +125,10 @@ impl RunMetrics {
 }
 
 /// Evaluate test accuracy (percent) of a parameter set over a test set.
-pub fn eval_tacc(
+pub fn eval_tacc<P: std::borrow::Borrow<LayerParams>>(
     backend: &dyn Backend,
     shapes: &[LayerShape],
-    params: &[LayerParams],
+    params: &[P],
     classes: usize,
     test: &TestSet,
     batch: usize,

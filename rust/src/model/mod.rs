@@ -1,9 +1,11 @@
 //! Model state: per-layer parameters, gradients, initialization, and the
 //! version stash used by asynchronous pipeline schedules (weight stashing /
-//! Iter-Fisher delta chains).
+//! Iter-Fisher delta chains). Live parameters are `Arc`-shared
+//! ([`SharedParams`]) so the stash, the planner, and executor device
+//! threads can all hold the same snapshot without copies.
 
 pub mod params;
 pub mod stash;
 
-pub use params::{GradBuf, LayerParams, ModelParams};
-pub use stash::VersionStash;
+pub use params::{GradBuf, LayerParams, LiveParams, ModelParams, SharedParams};
+pub use stash::{StashSet, VersionStash};

@@ -1,7 +1,13 @@
 //! Layer parameter and gradient buffers.
+//!
+//! Live parameters are held as [`SharedParams`] (`Arc<LayerParams>`):
+//! engines update copy-on-write (each SGD step replaces the `Arc`), so
+//! executor device threads and the version stash keep the exact snapshot
+//! they were handed without cloning buffers.
 
 use crate::config::{LayerShape, ModelSpec};
 use crate::util::Rng;
+use std::sync::Arc;
 
 /// Parameters of one dense layer (row-major w: in_dim x out_dim).
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +94,46 @@ impl ModelParams {
 
     pub fn param_count(&self) -> usize {
         self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Wrap each layer in an `Arc` for engines that share parameters with
+    /// executor threads / the version stash.
+    pub fn into_shared(self) -> Vec<SharedParams> {
+        self.layers.into_iter().map(Arc::new).collect()
+    }
+}
+
+/// One layer's parameters, shareable across threads and stash versions.
+pub type SharedParams = Arc<LayerParams>;
+
+/// The live (most recent) full-model parameters of an engine run.
+///
+/// Updates go through [`LiveParams::set`], which installs a *new* `Arc`
+/// per layer: snapshots previously handed to in-flight pipeline work or
+/// pushed into a [`crate::model::VersionStash`] stay untouched — this is
+/// what makes asynchronous weight stashing race-free under the threaded
+/// executor.
+#[derive(Debug, Clone)]
+pub struct LiveParams {
+    pub layers: Vec<SharedParams>,
+}
+
+impl LiveParams {
+    pub fn init(spec: &ModelSpec, seed: u64) -> Self {
+        LiveParams { layers: ModelParams::init(spec, seed).into_shared() }
+    }
+
+    pub fn layer(&self, l: usize) -> &SharedParams {
+        &self.layers[l]
+    }
+
+    /// Install freshly updated parameters for layer `l` (copy-on-write).
+    pub fn set(&mut self, l: usize, p: LayerParams) {
+        self.layers[l] = Arc::new(p);
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
     }
 }
 

@@ -6,15 +6,22 @@
 //! between the stashed fwd version and the live version, so the stash keeps
 //! a bounded history of `(version, params)` pairs and can produce the
 //! per-step deltas Δθ^{v→v+1} needed by Eq. 9.
+//!
+//! Entries are [`SharedParams`] (`Arc`s): pushing a version is an `Arc`
+//! clone, not a buffer copy, and the same snapshot can simultaneously be
+//! live, stashed, and in flight on an executor device thread.
+//! [`VersionStash::bytes`] still reports *logical* bytes (one full copy
+//! per stashed version) to stay comparable with the analytic Eq. 4
+//! footprint the planner optimizes.
 
-use crate::model::params::{GradBuf, LayerParams};
+use crate::model::params::{GradBuf, LiveParams, SharedParams};
 use std::collections::VecDeque;
 
-/// Bounded history of parameter versions for one (worker, stage) slot.
+/// Bounded history of parameter versions for one layer.
 #[derive(Debug, Clone)]
 pub struct VersionStash {
     cap: usize,
-    entries: VecDeque<(u64, LayerParams)>,
+    entries: VecDeque<(u64, SharedParams)>,
 }
 
 impl VersionStash {
@@ -24,7 +31,7 @@ impl VersionStash {
     }
 
     /// Record a new version snapshot (monotonically increasing versions).
-    pub fn push(&mut self, version: u64, params: LayerParams) {
+    pub fn push(&mut self, version: u64, params: SharedParams) {
         if let Some((last, _)) = self.entries.back() {
             assert!(version > *last, "versions must increase");
         }
@@ -38,7 +45,7 @@ impl VersionStash {
         self.entries.back().map(|(v, _)| *v)
     }
 
-    pub fn get(&self, version: u64) -> Option<&LayerParams> {
+    pub fn get(&self, version: u64) -> Option<&SharedParams> {
         self.entries.iter().find(|(v, _)| *v == version).map(|(_, p)| p)
     }
 
@@ -59,19 +66,22 @@ impl VersionStash {
         }
         let mut chain = Vec::with_capacity((to - from) as usize);
         for v in from..to {
-            let old = self.get(v)?;
+            let old = self.get(v)?.clone();
             let new = self.get(v + 1)?;
-            chain.push(new.delta(old));
+            chain.push(new.delta(&old));
         }
         Some(chain)
     }
 
     /// Single-jump delta θ_to − θ_from (the non-iterative Fisher baseline).
     pub fn jump_delta(&self, from: u64, to: u64) -> Option<GradBuf> {
-        Some(self.get(to)?.delta(self.get(from)?))
+        let old = self.get(from)?.clone();
+        Some(self.get(to)?.delta(&old))
     }
 
-    /// Live bytes held by the stash (for the measured-memory cross-check).
+    /// Logical bytes held by the stash (for the measured-memory
+    /// cross-check against Eq. 4; Arc sharing makes the physical footprint
+    /// smaller).
     pub fn bytes(&self) -> usize {
         self.entries
             .iter()
@@ -80,12 +90,71 @@ impl VersionStash {
     }
 }
 
+/// Per-layer version stashes of a whole model — the stage-state bookkeeping
+/// the async engines delegate their weight stashing to.
+#[derive(Debug, Clone)]
+pub struct StashSet {
+    stashes: Vec<VersionStash>,
+}
+
+impl StashSet {
+    /// One stash per layer, seeded with version 0 of the live parameters.
+    pub fn new(live: &LiveParams, cap: usize) -> Self {
+        let stashes = live
+            .layers
+            .iter()
+            .map(|p| {
+                let mut s = VersionStash::new(cap.max(2));
+                s.push(0, p.clone());
+                s
+            })
+            .collect();
+        StashSet { stashes }
+    }
+
+    /// Resolve the parameters layer `l` was forwarded with at `version`,
+    /// falling back to the live copy (zero staleness) after eviction.
+    pub fn resolve(&self, l: usize, version: u64, live: &LiveParams) -> SharedParams {
+        match self.stashes[l].get(version) {
+            Some(p) => p.clone(),
+            None => live.layers[l].clone(),
+        }
+    }
+
+    /// Record the new version of every layer in `layers` after a stage
+    /// update.
+    pub fn push_stage(&mut self, layers: &[usize], version: u64, live: &LiveParams) {
+        for &l in layers {
+            self.stashes[l].push(version, live.layers[l].clone());
+        }
+    }
+
+    pub fn delta_chain(&self, l: usize, from: u64, to: u64) -> Option<Vec<GradBuf>> {
+        self.stashes[l].delta_chain(from, to)
+    }
+
+    pub fn jump_delta(&self, l: usize, from: u64, to: u64) -> Option<GradBuf> {
+        self.stashes[l].jump_delta(from, to)
+    }
+
+    /// Logical bytes across all layers (measured-memory cross-check).
+    pub fn bytes(&self) -> usize {
+        self.stashes.iter().map(|s| s.bytes()).sum()
+    }
+
+    pub fn layer(&self, l: usize) -> &VersionStash {
+        &self.stashes[l]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::params::LayerParams;
+    use std::sync::Arc;
 
-    fn p(v: f32) -> LayerParams {
-        LayerParams { w: vec![v, v * 2.0], b: vec![v * 3.0] }
+    fn p(v: f32) -> SharedParams {
+        Arc::new(LayerParams { w: vec![v, v * 2.0], b: vec![v * 3.0] })
     }
 
     #[test]
@@ -153,5 +222,25 @@ mod tests {
         s.push(0, p(1.0));
         s.push(1, p(2.0));
         assert_eq!(s.bytes(), 2 * 3 * 4);
+    }
+
+    #[test]
+    fn stash_set_resolves_with_live_fallback() {
+        let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![3, 2, 2] };
+        let mut live = LiveParams::init(&spec, 1);
+        let mut set = StashSet::new(&live, 2);
+        assert_eq!(set.bytes(), (3 * 2 + 2 + 2 * 2 + 2) * 4);
+        // update layer 0 through three versions; cap 2 evicts version 0
+        for ver in 1..=3u64 {
+            live.set(0, LayerParams { w: vec![ver as f32; 6], b: vec![0.0; 2] });
+            set.push_stage(&[0], ver, &live);
+        }
+        // evicted version resolves to the live copy (zero staleness)
+        assert_eq!(set.resolve(0, 0, &live).w, live.layers[0].w);
+        // retained version resolves to its snapshot
+        assert_eq!(set.resolve(0, 2, &live).w, vec![2.0; 6]);
+        assert!(set.delta_chain(0, 0, 3).is_none(), "evicted chain");
+        assert!(set.delta_chain(0, 2, 3).is_some());
+        assert_eq!(set.layer(1).latest_version(), Some(0), "untouched layer");
     }
 }

@@ -1,7 +1,7 @@
 //! ER — Experience Replay [12]: reservoir buffer + half-replay batches.
 
 use super::{mix_replay, OclCtx, OclPlugin, ReplayBuffer};
-use crate::model::LayerParams;
+use crate::model::SharedParams;
 use crate::stream::Batch;
 
 /// Paper §12 uses a 5e3-sample buffer; scaled to the synthetic streams.
@@ -22,7 +22,7 @@ impl OclPlugin for ErPlugin {
         "ER"
     }
 
-    fn augment(&mut self, mut batch: Batch, _params: &[LayerParams], ctx: &OclCtx) -> Batch {
+    fn augment(&mut self, mut batch: Batch, _params: &[SharedParams], ctx: &OclCtx) -> Batch {
         // mix first so the incoming rows aren't immediately replayed back
         if !self.buf.is_empty() {
             let picks = self.buf.draw(batch.y.len() / 2);

@@ -3,7 +3,7 @@
 
 use super::{OclCtx, OclPlugin};
 use crate::backend::forward_all;
-use crate::model::LayerParams;
+use crate::model::SharedParams;
 
 pub struct LwfPlugin {
     /// distillation weight α of the LwF head
@@ -11,7 +11,8 @@ pub struct LwfPlugin {
     /// refresh the teacher every `refresh` after_update calls
     refresh: u64,
     updates: u64,
-    teacher: Option<Vec<LayerParams>>,
+    /// frozen teacher snapshot (`Arc` clones of the live model)
+    teacher: Option<Vec<SharedParams>>,
 }
 
 impl LwfPlugin {
@@ -47,7 +48,7 @@ impl OclPlugin for LwfPlugin {
         }
     }
 
-    fn after_update(&mut self, params: &[LayerParams], _ctx: &OclCtx) {
+    fn after_update(&mut self, params: &[SharedParams], _ctx: &OclCtx) {
         if self.updates % self.refresh == 0 {
             self.teacher = Some(params.to_vec());
         }
@@ -76,7 +77,7 @@ mod tests {
         let shapes = [LayerShape { in_dim: 3, out_dim: 2, act: Act::None }];
         let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 3 };
         let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![3, 2] };
-        let p = ModelParams::init(&spec, 1).layers;
+        let p = ModelParams::init(&spec, 1).into_shared();
         let mut lwf = LwfPlugin::new(0.3, 4);
         assert!(!lwf.has_teacher());
         assert_eq!(lwf.memory_bytes(), 0);
@@ -91,7 +92,7 @@ mod tests {
         let shapes = [LayerShape { in_dim: 3, out_dim: 2, act: Act::None }];
         let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 3 };
         let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![3, 2] };
-        let p = ModelParams::init(&spec, 2).layers;
+        let p = ModelParams::init(&spec, 2).into_shared();
         let mut lwf = LwfPlugin::new(0.5, 1);
         let x = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
         let logits = vec![0.3, -0.2, 0.1, 0.4];

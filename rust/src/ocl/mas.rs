@@ -4,7 +4,7 @@
 
 use super::{OclCtx, OclPlugin};
 use crate::backend::{backward_all, forward_all};
-use crate::model::{GradBuf, LayerParams};
+use crate::model::{GradBuf, LayerParams, SharedParams};
 use crate::stream::Batch;
 
 pub struct MasPlugin {
@@ -14,8 +14,8 @@ pub struct MasPlugin {
     updates: u64,
     /// per-layer importance Ω (grad-magnitude EMA)
     omega: Option<Vec<GradBuf>>,
-    /// anchor parameters θ*
-    anchor: Option<Vec<LayerParams>>,
+    /// anchor parameters θ* (`Arc` clones of the live model)
+    anchor: Option<Vec<SharedParams>>,
     /// most recent batch input kept for importance estimation
     last_x: Option<Vec<f32>>,
     last_rows: usize,
@@ -35,7 +35,7 @@ impl MasPlugin {
     }
 
     /// Accumulate Ω += |∂ ||f(x)||² / ∂θ| on the stored batch.
-    fn accumulate_importance(&mut self, params: &[LayerParams], ctx: &OclCtx) {
+    fn accumulate_importance(&mut self, params: &[SharedParams], ctx: &OclCtx) {
         let Some(x) = &self.last_x else { return };
         let rows = self.last_rows;
         let (inputs, logits) = forward_all(ctx.backend, ctx.shapes, params, x, rows);
@@ -62,7 +62,7 @@ impl OclPlugin for MasPlugin {
         "MAS"
     }
 
-    fn augment(&mut self, batch: Batch, _params: &[LayerParams], _ctx: &OclCtx) -> Batch {
+    fn augment(&mut self, batch: Batch, _params: &[SharedParams], _ctx: &OclCtx) -> Batch {
         self.last_x = Some(batch.x.clone());
         self.last_rows = batch.y.len();
         batch
@@ -98,7 +98,7 @@ impl OclPlugin for MasPlugin {
         }
     }
 
-    fn after_update(&mut self, params: &[LayerParams], ctx: &OclCtx) {
+    fn after_update(&mut self, params: &[SharedParams], ctx: &OclCtx) {
         if self.updates % self.refresh == 0 {
             self.accumulate_importance(params, ctx);
             self.anchor = Some(params.to_vec());
@@ -128,10 +128,10 @@ mod tests {
     use crate::config::{Act, LayerShape};
     use crate::model::ModelParams;
 
-    fn setup() -> ([LayerShape; 1], Vec<LayerParams>) {
+    fn setup() -> ([LayerShape; 1], Vec<SharedParams>) {
         let shapes = [LayerShape { in_dim: 3, out_dim: 2, act: Act::None }];
         let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![3, 2] };
-        (shapes, ModelParams::init(&spec, 5).layers)
+        (shapes, ModelParams::init(&spec, 5).into_shared())
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use super::{mix_replay, OclCtx, OclPlugin, ReplayBuffer};
 use crate::backend::{backward_all, ce_loss, forward_all};
-use crate::model::LayerParams;
+use crate::model::{LayerParams, SharedParams};
 use crate::stream::Batch;
 
 /// candidate pool multiplier: score 2x the replay slots, keep the top half
@@ -23,7 +23,7 @@ impl MirPlugin {
     /// One virtual SGD step of the current model on the incoming batch.
     fn virtual_step(
         &self,
-        params: &[LayerParams],
+        params: &[SharedParams],
         batch: &Batch,
         ctx: &OclCtx,
     ) -> Vec<LayerParams> {
@@ -41,7 +41,7 @@ impl MirPlugin {
     fn interference(
         &self,
         cands: &[usize],
-        params: &[LayerParams],
+        params: &[SharedParams],
         virt: &[LayerParams],
         ctx: &OclCtx,
     ) -> Vec<(usize, f32)> {
@@ -64,7 +64,7 @@ impl OclPlugin for MirPlugin {
         "MIR"
     }
 
-    fn augment(&mut self, mut batch: Batch, params: &[LayerParams], ctx: &OclCtx) -> Batch {
+    fn augment(&mut self, mut batch: Batch, params: &[SharedParams], ctx: &OclCtx) -> Batch {
         let half = batch.y.len() / 2;
         if !self.buf.is_empty() && half > 0 && !params.is_empty() {
             let cands = self.buf.draw(half * CANDIDATE_FACTOR);
@@ -95,7 +95,7 @@ mod tests {
         let shapes = [LayerShape { in_dim: 4, out_dim: 4, act: Act::None }];
         let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 4, batch: 4, features: 4 };
         let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![4, 4] };
-        let params = ModelParams::init(&spec, 3).layers;
+        let params = ModelParams::init(&spec, 3).into_shared();
         let mut mir = MirPlugin::new(32, 7);
         // seed the buffer with class-0 and class-1 prototype samples
         for i in 0..8 {
@@ -125,7 +125,7 @@ mod tests {
         let shapes = [LayerShape { in_dim: 2, out_dim: 2, act: Act::None }];
         let ctx = OclCtx { backend: &be, shapes: &shapes, classes: 2, batch: 2, features: 2 };
         let spec = crate::config::ModelSpec { name: "t".into(), dims: vec![2, 2] };
-        let params = ModelParams::init(&spec, 1).layers;
+        let params = ModelParams::init(&spec, 1).into_shared();
         let mir = MirPlugin::new(8, 1);
         let b = Batch { id: 0, x: vec![1.0, 0.0, 0.0, 1.0], y: vec![0, 1] };
         let virt = mir.virtual_step(&params, &b, &ctx);

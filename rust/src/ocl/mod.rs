@@ -19,7 +19,7 @@ pub use mir::MirPlugin;
 
 use crate::backend::Backend;
 use crate::config::LayerShape;
-use crate::model::{GradBuf, LayerParams};
+use crate::model::{GradBuf, LayerParams, SharedParams};
 use crate::stream::Batch;
 use crate::util::Rng;
 
@@ -70,12 +70,15 @@ impl OclKind {
 }
 
 /// Plugin hook surface. Default impls are no-ops (Vanilla behaviour).
+/// Full-model hooks receive [`SharedParams`] slices — the engines' live
+/// `Arc` snapshots — so teacher/anchor copies are `Arc` clones, not buffer
+/// copies.
 pub trait OclPlugin: Send {
     fn name(&self) -> &'static str;
 
     /// Observe/modify an admitted batch (replay mixing). `params` is the
     /// current full model (for interference scoring).
-    fn augment(&mut self, batch: Batch, _params: &[LayerParams], _ctx: &OclCtx) -> Batch {
+    fn augment(&mut self, batch: Batch, _params: &[SharedParams], _ctx: &OclCtx) -> Batch {
         batch
     }
 
@@ -103,7 +106,7 @@ pub trait OclPlugin: Send {
 
     /// Called periodically with the assembled live model (teacher/anchor
     /// refresh, importance accumulation).
-    fn after_update(&mut self, _params: &[LayerParams], _ctx: &OclCtx) {}
+    fn after_update(&mut self, _params: &[SharedParams], _ctx: &OclCtx) {}
 
     /// Extra memory the plugin holds (buffers, teachers, importances).
     fn memory_bytes(&self) -> usize {

@@ -9,24 +9,28 @@
 //!   Ferret          a planned `PipeConfig` (T1–T4 per worker/stage) from
 //!                   Alg. 2/3 + a gradient-compensation policy.
 //!
-//! Mechanics: a discrete-event simulation over virtual time. Each
-//! (worker, stage) pair is a device with its own timeline; 1F1B priority
-//! (backward work preempts queued forward work). Microbatch `i` goes to
-//! worker `i mod N_active`. Stage parameters are shared across workers
-//! (asynchronous data-parallel pipelining — the source of the staleness
-//! the compensation algorithms fight). Weight stashing keeps, per layer,
-//! the snapshots in-flight forwards were computed with; Iter-Fisher walks
-//! the snapshot chain at update time (Eq. 9).
+//! Mechanics: the engine drives the scheduling core
+//! ([`crate::pipeline::sched::SchedCore`] — event queue, 1F1B priority,
+//! routing) and dispatches stage math to an
+//! [`Executor`](crate::pipeline::executor::Executor): virtual-time
+//! simulation inline ([`ExecutorKind::Sim`]) or genuinely parallel device
+//! threads ([`ExecutorKind::Threaded`]). Each (worker, stage) pair is a
+//! device with its own timeline; 1F1B priority (backward work preempts
+//! queued forward work). Microbatch `i` goes to worker `i mod N_active`.
+//! Stage parameters are shared across workers (asynchronous data-parallel
+//! pipelining — the source of the staleness the compensation algorithms
+//! fight). Weight stashing keeps, per layer, the `Arc` snapshots in-flight
+//! forwards were computed with; Iter-Fisher walks the snapshot chain at
+//! update time (Eq. 9).
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
-
-use crate::backend::{accuracy, Backend};
+use crate::backend::Backend;
 use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::{eval_tacc, RunMetrics};
-use crate::model::{GradBuf, LayerParams, ModelParams, VersionStash};
+use crate::model::{GradBuf, LiveParams, StashSet};
 use crate::ocl::{OclCtx, OclPlugin};
+use crate::pipeline::executor::{Executor, ExecutorKind, SimExecutor, StageTask, ThreadedExecutor};
+use crate::pipeline::sched::{predict_only, Ev, Job, SchedCore, StageMeta, WorkSel};
 use crate::pipeline::{EngineParams, RunResult};
 use crate::planner::costmodel::{mem_footprint, PipeConfig};
 use crate::planner::{Partition, Profile};
@@ -100,79 +104,24 @@ impl AsyncCfg {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum Ev {
-    /// next stream batch arrives
-    Arrive,
-    /// a (worker, stage) device finished a pass for a job
-    Done { worker: usize, stage: usize, job: usize, bwd: bool },
-}
-
-struct Job {
-    arrival: u64,
-    seq: u64,
-    y: Vec<i32>,
-    /// original input rows (LwF teacher forward)
-    batch_x: Vec<f32>,
-    /// per-stage input activations (filled as the forward advances)
-    stage_inputs: Vec<Option<Vec<f32>>>,
-    /// stage version each forward used (weight stashing)
-    fwd_version: Vec<u64>,
-    /// upstream grad flowing backward
-    grad: Option<Vec<f32>>,
-    /// per-layer grads computed by the in-progress backward (delivered at
-    /// the Done event)
-    pending_grads: Option<Vec<GradBuf>>,
-    pending_gx: Option<Vec<f32>>,
-    done: bool,
-}
-
-/// One (worker, stage) device.
-struct Slot {
-    busy_until: u64,
-    fwd_q: VecDeque<usize>,
-    bwd_q: VecDeque<usize>,
-    /// accumulated grads (per layer of the stage), T2
-    acc: Option<Vec<GradBuf>>,
-    acc_count: u64,
-    acc_arrivals: Vec<u64>,
-    acc_from_version: u64,
-}
-
-struct StageMeta {
-    layers: std::ops::Range<usize>,
-    tf: u64,
-    tb: u64,
-    params: usize,
-}
-
-/// The engine proper.
+/// The engine proper: policy (stashing, compensation, plugins, metrics) on
+/// top of the scheduling core, numeric work delegated to an executor.
 pub struct AsyncEngine<'a> {
     backend: &'a dyn Backend,
     shapes: Vec<LayerShape>,
     cfg: AsyncCfg,
-    stages: Vec<StageMeta>,
-    /// live parameters, one entry per model layer (stages index into it)
-    params: Vec<LayerParams>,
-    /// per-stage version counter
-    version: Vec<u64>,
+    sched: SchedCore,
+    /// live parameters, one `Arc` per model layer (stages index into it)
+    params: LiveParams,
     /// per-layer snapshot history
-    stash: Vec<VersionStash>,
-    /// slots[worker][stage]
-    slots: Vec<Vec<Slot>>,
-    active_workers: Vec<usize>,
+    stash: StashSet,
     /// per-layer compensators, shared across workers (λ and the EMA
     /// buffers are stage-level statistics — Alg. 1's O(2Σ|w|) memory)
     comps: Vec<Box<dyn Compensator>>,
-    jobs: Vec<Job>,
-    heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
-    heap_seq: u64,
     lr: f32,
     decay_c: f64,
     total_params: usize,
     update_count: u64,
-    inflight: usize,
-    inflight_cap: usize,
 }
 
 impl<'a> AsyncEngine<'a> {
@@ -192,33 +141,15 @@ impl<'a> AsyncEngine<'a> {
                 params: cfg.partition.stage_params(&prof, j),
             })
             .collect();
-        let params = ModelParams::init(model, ep.seed).layers;
+        let params = LiveParams::init(model, ep.seed);
         let n_workers = cfg.pipe.workers.len();
         let p = stages.len();
-        let stash_cap = n_workers * (p + 2) + 4;
-        let stash: Vec<VersionStash> = params
-            .iter()
-            .map(|lp| {
-                let mut s = VersionStash::new(stash_cap.max(2));
-                s.push(0, lp.clone());
-                s
-            })
-            .collect();
-        let slots: Vec<Vec<Slot>> = (0..n_workers)
-            .map(|_| {
-                (0..p)
-                    .map(|_| Slot {
-                        busy_until: 0,
-                        fwd_q: VecDeque::new(),
-                        bwd_q: VecDeque::new(),
-                        acc: None,
-                        acc_count: 0,
-                        acc_arrivals: Vec::new(),
-                        acc_from_version: u64::MAX,
-                    })
-                    .collect()
-            })
-            .collect();
+        let stash_cap = if ep.stash_cap > 0 {
+            ep.stash_cap
+        } else {
+            n_workers * (p + 2) + 4
+        };
+        let stash = StashSet::new(&params, stash_cap);
         let active_workers: Vec<usize> = cfg
             .pipe
             .workers
@@ -233,132 +164,96 @@ impl<'a> AsyncEngine<'a> {
             backend,
             shapes,
             cfg,
-            stages,
+            sched: SchedCore::new(stages, n_workers, active_workers),
             params,
-            version: vec![0; p],
             stash,
-            slots,
-            active_workers,
             comps,
-            jobs: Vec::new(),
-            heap: BinaryHeap::new(),
-            heap_seq: 0,
             lr: ep.lr,
             decay_c: 0.0, // resolved in run() once td is known
             total_params,
             update_count: 0,
-            inflight: 0,
-            inflight_cap: 2 * (p + 1),
         }
     }
 
-    fn push_ev(&mut self, t: u64, ev: Ev) {
-        self.heap_seq += 1;
-        self.heap.push(Reverse((t, self.heap_seq, ev)));
+    /// Active (worker, stage) devices — the executor's thread set.
+    pub fn devices(&self) -> Vec<(usize, usize)> {
+        self.sched.devices()
     }
 
     fn stage_times(&mut self, part_prof: &Profile) {
-        for j in 0..self.stages.len() {
-            self.stages[j].tf = self.cfg.partition.stage_tf(part_prof, j);
-            self.stages[j].tb = self.cfg.partition.stage_tb(part_prof, j);
-            self.stages[j].params = self.cfg.partition.stage_params(part_prof, j);
+        for j in 0..self.sched.stages.len() {
+            self.sched.stages[j].tf = self.cfg.partition.stage_tf(part_prof, j);
+            self.sched.stages[j].tb = self.cfg.partition.stage_tb(part_prof, j);
+            self.sched.stages[j].params = self.cfg.partition.stage_params(part_prof, j);
         }
     }
 
-    /// Forward one stage's layer chain on the live parameters.
-    fn stage_fwd(&self, stage: usize, x: &[f32], rows: usize) -> Vec<f32> {
-        let mut h = x.to_vec();
-        for l in self.stages[stage].layers.clone() {
-            h = self.backend.dense_fwd(&self.shapes[l], &self.params[l], &h, rows);
+    /// Build the stage task for a forward on the live parameters.
+    fn fwd_task(&self, s: usize, x: Vec<f32>, rows: usize) -> StageTask {
+        let layers = self.sched.stages[s].layers.clone();
+        StageTask {
+            shapes: layers.clone().map(|l| self.shapes[l]).collect(),
+            params: layers.map(|l| self.params.layers[l].clone()).collect(),
+            x,
+            rows,
+            gout: None,
         }
-        h
     }
 
-    /// Backward one stage using stashed parameters of `ver`, recomputing
-    /// inner activations from the stashed stage input.
-    fn stage_bwd(
-        &self,
-        stage: usize,
-        ver: u64,
-        x: &[f32],
-        gout: &[f32],
-        rows: usize,
-    ) -> (Vec<f32>, Vec<GradBuf>) {
-        let layers: Vec<usize> = self.stages[stage].layers.clone().collect();
-        // resolve stashed params (fallback: live = zero staleness)
-        let stage_params: Vec<&LayerParams> = layers
-            .iter()
-            .map(|&l| self.stash[l].get(ver).unwrap_or(&self.params[l]))
-            .collect();
-        // recompute inner activations (T1-style; numerically identical)
-        let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(layers.len());
-        let mut h = x.to_vec();
-        for (i, &l) in layers.iter().enumerate() {
-            inputs.push(h.clone());
-            if i + 1 < layers.len() {
-                h = self.backend.dense_fwd(&self.shapes[l], stage_params[i], &h, rows);
-            }
+    /// Build the stage task for a backward against the stashed version
+    /// `ver` (fallback: live = zero staleness).
+    fn bwd_task(&self, s: usize, ver: u64, x: Vec<f32>, gout: Vec<f32>, rows: usize) -> StageTask {
+        let layers = self.sched.stages[s].layers.clone();
+        StageTask {
+            shapes: layers.clone().map(|l| self.shapes[l]).collect(),
+            params: layers.map(|l| self.stash.resolve(l, ver, &self.params)).collect(),
+            x,
+            rows,
+            gout: Some(gout),
         }
-        let mut grads: Vec<Option<GradBuf>> = layers.iter().map(|_| None).collect();
-        let mut g = gout.to_vec();
-        for i in (0..layers.len()).rev() {
-            let l = layers[i];
-            let out = self
-                .backend
-                .dense_bwd(&self.shapes[l], stage_params[i], &inputs[i], &g, rows);
-            g = out.gx;
-            grads[i] = Some(out.grads);
-        }
-        (g, grads.into_iter().map(Option::unwrap).collect())
     }
 
     /// Try to start work on a (worker, stage) device at time `t`.
-    fn kick(&mut self, w: usize, s: usize, t: u64) {
+    fn kick(&mut self, w: usize, s: usize, t: u64, executor: &mut dyn Executor) {
         loop {
-            if self.slots[w][s].busy_until > t {
-                return;
-            }
-            // 1F1B: backward first
-            if let Some(job) = self.slots[w][s].bwd_q.pop_front() {
-                let omit = self.cfg.pipe.workers[w].omit[s];
-                if omit > 0 && self.jobs[job].seq % (omit + 1) != 0 {
-                    // T3: skip this backward (and the whole upstream chain)
-                    self.jobs[job].done = true;
-                    self.inflight -= 1;
-                    continue; // device still free: look for more work
+            let sel = match self.sched.select_work(w, s, t) {
+                None => return,
+                Some(sel) => sel,
+            };
+            match sel {
+                WorkSel::Bwd(job) => {
+                    let omit = self.cfg.pipe.workers[w].omit[s];
+                    if omit > 0 && self.sched.jobs[job].seq % (omit + 1) != 0 {
+                        // T3: skip this backward (and the whole upstream
+                        // chain); device still free — look for more work
+                        self.sched.retire(job);
+                        continue;
+                    }
+                    let rows = self.sched.jobs[job].y.len();
+                    let ver = self.sched.jobs[job].fwd_version[s];
+                    // both buffers are dead after this dispatch: the stage-s
+                    // input was already consumed by the stage-s forward, and
+                    // grad is overwritten with gx at the Done event
+                    let x = self.sched.jobs[job].stage_inputs[s].take().expect("stage input");
+                    let gout = self.sched.jobs[job].grad.take().expect("upstream grad");
+                    executor.start((w, s), self.bwd_task(s, ver, x, gout, rows));
+                    let mut dur = self.sched.stages[s].tb;
+                    if self.cfg.pipe.workers[w].recompute {
+                        dur += self.sched.stages[s].tf; // T1: extra forward
+                    }
+                    self.sched.dispatch(w, s, t + dur.max(1), job, true);
+                    return;
                 }
-                let rows = self.jobs[job].y.len();
-                let ver = self.jobs[job].fwd_version[s];
-                let x = self.jobs[job].stage_inputs[s].clone().expect("stage input");
-                let gout = self.jobs[job].grad.clone().expect("upstream grad");
-                let (gx, grads) = self.stage_bwd(s, ver, &x, &gout, rows);
-                self.jobs[job].pending_gx = Some(gx);
-                self.jobs[job].pending_grads = Some(grads);
-                let mut dur = self.stages[s].tb;
-                if self.cfg.pipe.workers[w].recompute {
-                    dur += self.stages[s].tf; // T1: extra forward pass
+                WorkSel::Fwd(job) => {
+                    let rows = self.sched.jobs[job].y.len();
+                    let x = self.sched.jobs[job].stage_inputs[s].clone().expect("stage input");
+                    self.sched.jobs[job].fwd_version[s] = self.sched.version[s];
+                    executor.start((w, s), self.fwd_task(s, x, rows));
+                    let end = t + self.sched.stages[s].tf.max(1);
+                    self.sched.dispatch(w, s, end, job, false);
+                    return;
                 }
-                let end = t + dur.max(1);
-                self.slots[w][s].busy_until = end;
-                self.push_ev(end, Ev::Done { worker: w, stage: s, job, bwd: true });
-                return;
             }
-            if let Some(job) = self.slots[w][s].fwd_q.pop_front() {
-                let rows = self.jobs[job].y.len();
-                let x = self.jobs[job].stage_inputs[s].clone().expect("stage input");
-                let out = self.stage_fwd(s, &x, rows);
-                self.jobs[job].fwd_version[s] = self.version[s];
-                if s + 1 < self.stages.len() {
-                    self.jobs[job].stage_inputs[s + 1] = Some(out);
-                } else {
-                    self.jobs[job].pending_gx = Some(out); // logits parked here
-                }
-                let end = t + self.stages[s].tf.max(1);
-                self.slots[w][s].busy_until = end;
-                self.push_ev(end, Ev::Done { worker: w, stage: s, job, bwd: false });
-                return;
-            }
-            return;
         }
     }
 
@@ -372,7 +267,7 @@ impl<'a> AsyncEngine<'a> {
         ctx: &OclCtx,
         metrics: &mut RunMetrics,
     ) {
-        let slot = &mut self.slots[w][s];
+        let slot = &mut self.sched.slots[w][s];
         let mut grads = slot.acc.take().expect("accumulated grads");
         let count = slot.acc_count;
         let arrivals = std::mem::take(&mut slot.acc_arrivals);
@@ -381,9 +276,9 @@ impl<'a> AsyncEngine<'a> {
         slot.acc_from_version = u64::MAX;
 
         let scale = 1.0 / count as f32;
-        let cur_ver = self.version[s];
+        let cur_ver = self.sched.version[s];
         let tau = cur_ver.saturating_sub(from_ver);
-        let layers: Vec<usize> = self.stages[s].layers.clone().collect();
+        let layers: Vec<usize> = self.sched.stages[s].layers.clone().collect();
         for (i, &l) in layers.iter().enumerate() {
             let mut g = std::mem::replace(&mut grads[i], GradBuf { gw: vec![], gb: vec![] });
             g.scale(scale);
@@ -392,8 +287,8 @@ impl<'a> AsyncEngine<'a> {
             // does not consume it — the NoComp/StepAware hot path
             let (chain, jump) = if self.comps[l].needs_deltas() && tau > 0 {
                 (
-                    self.stash[l].delta_chain(from_ver, cur_ver).unwrap_or_default(),
-                    self.stash[l].jump_delta(from_ver, cur_ver),
+                    self.stash.delta_chain(l, from_ver, cur_ver).unwrap_or_default(),
+                    self.stash.jump_delta(l, from_ver, cur_ver),
                 )
             } else {
                 (Vec::new(), None)
@@ -406,35 +301,32 @@ impl<'a> AsyncEngine<'a> {
                 lr: self.lr,
             };
             let (mut g, lr_scale) = self.comps[l].compensate(g, &cctx);
-            plugin.adjust_layer_grad(l, &mut g, &self.params[l], ctx);
-            self.params[l] = self.backend.sgd(&self.params[l], &g, self.lr * lr_scale);
+            plugin.adjust_layer_grad(l, &mut g, &self.params.layers[l], ctx);
+            let updated = self.backend.sgd(&self.params.layers[l], &g, self.lr * lr_scale);
+            self.params.set(l, updated);
         }
-        self.version[s] += 1;
-        let new_ver = self.version[s];
-        for &l in &layers {
-            self.stash[l].push(new_ver, self.params[l].clone());
-        }
-        let frac = self.stages[s].params as f64 / self.total_params as f64;
+        self.sched.version[s] += 1;
+        let new_ver = self.sched.version[s];
+        self.stash.push_stage(&layers, new_ver, &self.params);
+        let frac = self.sched.stages[s].params as f64 / self.total_params as f64;
         for a in arrivals {
             metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
         }
         self.update_count += 1;
         if self.update_count % self.cfg.plugin_cadence == 0 {
-            plugin.after_update(&self.params, ctx);
+            plugin.after_update(&self.params.layers, ctx);
         }
     }
 
-    fn live_stash_bytes(&self) -> usize {
-        self.stash.iter().map(|s| s.bytes()).sum()
-    }
-
-    /// Run to completion over the stream.
+    /// Run to completion over the stream, dispatching stage math to
+    /// `executor`.
     pub fn run(
         mut self,
         stream: &mut SyntheticStream,
         plugin: &mut dyn OclPlugin,
         ep: &EngineParams,
         model: &ModelSpec,
+        executor: &mut dyn Executor,
     ) -> RunResult {
         let spec = stream.spec().clone();
         let prof = Profile::analytic(model, spec.batch);
@@ -451,15 +343,16 @@ impl<'a> AsyncEngine<'a> {
         };
         let mut metrics = RunMetrics::default();
         let test = stream.test_set(ep.tacc_per_class);
-        let p = self.stages.len();
+        metrics.exec_threads = executor.threads();
+        let p = self.sched.num_stages();
 
         let mut arrived = 0u64;
         let mut next_batch = stream.next_batch();
         if next_batch.is_some() {
-            self.push_ev(0, Ev::Arrive);
+            self.sched.events.push(0, Ev::Arrive);
         }
 
-        while let Some(Reverse((t, _, ev))) = self.heap.pop() {
+        while let Some((t, ev)) = self.sched.events.pop() {
             match ev {
                 Ev::Arrive => {
                     let batch = next_batch.take().expect("arrive without batch");
@@ -468,28 +361,26 @@ impl<'a> AsyncEngine<'a> {
                     arrived += 1;
                     next_batch = stream.next_batch();
                     if next_batch.is_some() {
-                        self.push_ev(arrived * td, Ev::Arrive);
+                        self.sched.events.push(arrived * td, Ev::Arrive);
                     }
-                    let over_capacity = self.active_workers.is_empty()
-                        || self.inflight >= self.inflight_cap * self.active_workers.len();
-                    if over_capacity {
+                    if self.sched.over_capacity() {
                         // predict with live weights; drop from training
-                        let (_, logits) = crate::backend::forward_all(
+                        predict_only(
                             self.backend,
                             &self.shapes,
-                            &self.params,
+                            &self.params.layers,
+                            spec.classes,
                             &batch.x,
-                            batch.y.len(),
+                            &batch.y,
+                            t,
+                            &mut metrics,
                         );
-                        metrics.record_prediction(t, accuracy(spec.classes, &logits, &batch.y));
-                        metrics.record_drop();
                         continue;
                     }
-                    let w = self.active_workers[(seq as usize) % self.active_workers.len()];
-                    let batch = plugin.augment(batch, &self.params, &ctx);
+                    let batch = plugin.augment(batch, &self.params.layers, &ctx);
                     let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
                     stage_inputs[0] = Some(batch.x.clone());
-                    self.jobs.push(Job {
+                    let (_, w) = self.sched.admit(Job {
                         arrival: t,
                         seq,
                         y: batch.y,
@@ -497,36 +388,38 @@ impl<'a> AsyncEngine<'a> {
                         stage_inputs,
                         fwd_version: vec![0; p],
                         grad: None,
-                        pending_grads: None,
-                        pending_gx: None,
                         done: false,
                     });
-                    self.inflight += 1;
-                    let id = self.jobs.len() - 1;
-                    self.slots[w][0].fwd_q.push_back(id);
-                    self.kick(w, 0, t);
+                    self.kick(w, 0, t, executor);
                 }
                 Ev::Done { worker: w, stage: s, job, bwd } => {
+                    let result = executor.finish((w, s));
                     if !bwd {
                         if s + 1 < p {
-                            self.slots[w][s + 1].fwd_q.push_back(job);
-                            self.kick(w, s + 1, t);
+                            self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
+                            self.sched.slots[w][s + 1].fwd_q.push_back(job);
+                            self.kick(w, s + 1, t, executor);
                         } else {
                             // logits ready: prediction + loss head
-                            let logits = self.jobs[job].pending_gx.take().expect("logits");
-                            let (y, bx) =
-                                (self.jobs[job].y.clone(), self.jobs[job].batch_x.clone());
-                            metrics.record_prediction(t, accuracy(spec.classes, &logits, &y));
+                            let logits = result.out;
+                            let (y, bx) = (
+                                self.sched.jobs[job].y.clone(),
+                                self.sched.jobs[job].batch_x.clone(),
+                            );
+                            metrics.record_prediction(
+                                t,
+                                crate::backend::accuracy(spec.classes, &logits, &y),
+                            );
                             let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, &ctx);
                             metrics.record_loss(t, loss);
-                            self.jobs[job].grad = Some(gl);
-                            self.slots[w][s].bwd_q.push_back(job);
+                            self.sched.jobs[job].grad = Some(gl);
+                            self.sched.slots[w][s].bwd_q.push_back(job);
                         }
                     } else {
-                        // deliver the backward results computed at dispatch
-                        let grads = self.jobs[job].pending_grads.take().expect("grads");
-                        let gx = self.jobs[job].pending_gx.take().expect("gx");
-                        let slot = &mut self.slots[w][s];
+                        // deliver the backward results to the accumulator
+                        let grads = result.grads.expect("bwd grads");
+                        let gx = result.out;
+                        let slot = &mut self.sched.slots[w][s];
                         match &mut slot.acc {
                             None => slot.acc = Some(grads),
                             Some(a) => {
@@ -536,27 +429,22 @@ impl<'a> AsyncEngine<'a> {
                             }
                         }
                         slot.acc_count += 1;
-                        slot.acc_arrivals.push(self.jobs[job].arrival);
+                        slot.acc_arrivals.push(self.sched.jobs[job].arrival);
                         slot.acc_from_version =
-                            slot.acc_from_version.min(self.jobs[job].fwd_version[s]);
+                            slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
                         if slot.acc_count >= self.cfg.pipe.workers[w].accum[s] {
                             self.apply_update(w, s, t, plugin, &ctx, &mut metrics);
                         }
                         if s > 0 {
-                            self.jobs[job].grad = Some(gx);
-                            self.slots[w][s - 1].bwd_q.push_back(job);
-                            self.kick(w, s - 1, t);
+                            self.sched.jobs[job].grad = Some(gx);
+                            self.sched.slots[w][s - 1].bwd_q.push_back(job);
+                            self.kick(w, s - 1, t, executor);
                         } else {
-                            self.jobs[job].done = true;
-                            self.inflight -= 1;
-                            // free payloads
-                            self.jobs[job].stage_inputs = vec![];
-                            self.jobs[job].batch_x = vec![];
-                            self.jobs[job].grad = None;
+                            self.sched.retire(job);
                         }
                     }
-                    self.kick(w, s, t);
-                    metrics.observe_live_bytes(self.live_stash_bytes());
+                    self.kick(w, s, t, executor);
+                    metrics.observe_live_bytes(self.stash.bytes());
                 }
             }
         }
@@ -569,16 +457,43 @@ impl<'a> AsyncEngine<'a> {
         metrics.tacc = eval_tacc(
             self.backend,
             &self.shapes,
-            &self.params,
+            &self.params.layers,
             spec.classes,
             &test,
             spec.batch,
         );
-        RunResult { metrics, params: self.params }
+        RunResult { metrics, params: self.params.layers }
     }
 }
 
-/// Convenience: build + run in one call.
+/// Build + run with an explicit executor choice. `Threaded` spawns one OS
+/// thread per active (worker, stage) device for the duration of the run.
+pub fn run_async_with(
+    cfg: AsyncCfg,
+    stream: &mut SyntheticStream,
+    backend: &dyn Backend,
+    plugin: &mut dyn OclPlugin,
+    ep: &EngineParams,
+    model: &ModelSpec,
+    kind: ExecutorKind,
+) -> RunResult {
+    let engine = AsyncEngine::new(backend, model, cfg, ep);
+    match kind {
+        ExecutorKind::Sim => {
+            let mut ex = SimExecutor::new(backend);
+            engine.run(stream, plugin, ep, model, &mut ex)
+        }
+        ExecutorKind::Threaded => {
+            let devices = engine.devices();
+            std::thread::scope(|scope| {
+                let mut ex = ThreadedExecutor::spawn(scope, backend, &devices);
+                engine.run(stream, plugin, ep, model, &mut ex)
+            })
+        }
+    }
+}
+
+/// Convenience: build + run in one call on the simulation executor.
 pub fn run_async(
     cfg: AsyncCfg,
     stream: &mut SyntheticStream,
@@ -587,7 +502,7 @@ pub fn run_async(
     ep: &EngineParams,
     model: &ModelSpec,
 ) -> RunResult {
-    AsyncEngine::new(backend, model, cfg, ep).run(stream, plugin, ep, model)
+    run_async_with(cfg, stream, backend, plugin, ep, model, ExecutorKind::Sim)
 }
 
 #[cfg(test)]
@@ -732,6 +647,29 @@ mod tests {
             let ep = EngineParams { lr: 0.2, ..Default::default() };
             let r = run_async(cfg, &mut mk_stream(50, 9), &NativeBackend, plugin.as_mut(), &ep, &m);
             assert!(r.metrics.trained > 0, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn threaded_executor_runs_every_schedule() {
+        for schedule in [AsyncSchedule::Pipedream, AsyncSchedule::Pipedream2BW] {
+            let m = model();
+            let prof = Profile::analytic(&m, 8);
+            let part = Partition::per_layer(m.num_layers());
+            let td = prof.default_td();
+            let cfg = AsyncCfg::baseline(schedule, part, &prof, td);
+            let ep = EngineParams { lr: 0.2, ..Default::default() };
+            let r = run_async_with(
+                cfg,
+                &mut mk_stream(60, 31),
+                &NativeBackend,
+                &mut Vanilla,
+                &ep,
+                &m,
+                ExecutorKind::Threaded,
+            );
+            assert!(r.metrics.trained > 0, "{}", schedule.name());
+            assert!(r.metrics.exec_threads > 1, "{}", schedule.name());
         }
     }
 }

@@ -1,0 +1,316 @@
+//! Execution backends for the asynchronous pipeline scheduler.
+//!
+//! The scheduler ([`crate::pipeline::sched`]) decides *what* runs on which
+//! (worker, stage) device and *when* in virtual time; an [`Executor`]
+//! decides *where* the numeric work actually happens:
+//!
+//!   - [`SimExecutor`]      — runs each stage task inline on the scheduler
+//!     thread at dispatch time. This is the discrete-event simulation used
+//!     by the planner sweeps: cheap, deterministic, single-threaded.
+//!   - [`ThreadedExecutor`] — one OS thread per (worker, stage) device,
+//!     fed over channels. Stage tasks carry `Arc`-shared parameter
+//!     snapshots, so device threads compute concurrently while the
+//!     scheduler keeps ordering updates in virtual time ("lockstep").
+//!
+//! Both executors run the *same* schedule and the same math on the same
+//! inputs, so a run's `RunMetrics` are identical between them — the
+//! equivalence test in `tests/executor_equiv.rs` pins this. The contract:
+//! per device, tasks complete FIFO — `start` dispatches, `finish` joins at
+//! that task's `Done` event. A device normally has one task in flight, but
+//! at an exact-tick boundary (`busy_until == t`) the scheduler may dispatch
+//! the next task while the previous `Done` is still queued, so executors
+//! must queue per-device results rather than hold a single slot.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::Scope;
+
+use crate::backend::Backend;
+use crate::config::LayerShape;
+use crate::model::{GradBuf, SharedParams};
+
+/// Which executor to run an async engine with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Discrete-event simulation on the scheduler thread (virtual time).
+    Sim,
+    /// One OS thread per (worker, stage) device; real parallel compute.
+    Threaded,
+}
+
+impl ExecutorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorKind::Sim => "sim",
+            ExecutorKind::Threaded => "threaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sim" => Some(ExecutorKind::Sim),
+            "threaded" => Some(ExecutorKind::Threaded),
+            _ => None,
+        }
+    }
+}
+
+/// One unit of device work: a stage forward (`gout == None`) or a stage
+/// backward with activation recomputation (`gout == Some`). Parameters are
+/// the exact snapshots the scheduler resolved at dispatch (live for
+/// forward, stashed-by-version for backward).
+pub struct StageTask {
+    pub shapes: Vec<LayerShape>,
+    pub params: Vec<SharedParams>,
+    /// stage input activations, (rows, in_dim) row-major
+    pub x: Vec<f32>,
+    pub rows: usize,
+    /// upstream gradient — present iff this is a backward task
+    pub gout: Option<Vec<f32>>,
+}
+
+/// Result of a [`StageTask`]: forward output activations (or logits), or
+/// the input-gradient plus per-layer parameter gradients for a backward.
+pub struct StageOutput {
+    pub out: Vec<f32>,
+    pub grads: Option<Vec<GradBuf>>,
+}
+
+/// Execute one stage task through a backend — the single numeric routine
+/// shared by every executor (and therefore bit-identical across them).
+/// Consumes the task so activation/gradient buffers move instead of copy.
+pub fn run_stage(backend: &dyn Backend, task: StageTask) -> StageOutput {
+    match task.gout {
+        None => {
+            // forward the stage's layer chain
+            let mut h = task.x;
+            for (shape, p) in task.shapes.iter().zip(&task.params) {
+                h = backend.dense_fwd(shape, p, &h, task.rows);
+            }
+            StageOutput { out: h, grads: None }
+        }
+        Some(gout) => {
+            // recompute inner activations from the stage input (T1-style;
+            // numerically identical to stashing them)
+            let n = task.shapes.len();
+            let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut h = task.x;
+            for i in 0..n {
+                if i + 1 < n {
+                    let next = backend.dense_fwd(&task.shapes[i], &task.params[i], &h, task.rows);
+                    inputs.push(std::mem::replace(&mut h, next));
+                } else {
+                    inputs.push(std::mem::take(&mut h));
+                }
+            }
+            let mut grads: Vec<Option<GradBuf>> = (0..n).map(|_| None).collect();
+            let mut g = gout;
+            for i in (0..n).rev() {
+                let out =
+                    backend.dense_bwd(&task.shapes[i], &task.params[i], &inputs[i], &g, task.rows);
+                g = out.gx;
+                grads[i] = Some(out.grads);
+            }
+            StageOutput {
+                out: g,
+                grads: Some(grads.into_iter().map(Option::unwrap).collect()),
+            }
+        }
+    }
+}
+
+/// Where stage tasks run. Per device, `finish` returns results in
+/// `start` order (the scheduler's per-device `Done` events are strictly
+/// time-ordered, so FIFO pairing is exact).
+pub trait Executor {
+    fn start(&mut self, dev: (usize, usize), task: StageTask);
+    fn finish(&mut self, dev: (usize, usize)) -> StageOutput;
+    /// Number of compute threads backing this executor (1 = inline).
+    fn threads(&self) -> usize;
+}
+
+/// Inline executor: computes at dispatch on the calling thread and parks
+/// the result until the scheduler's `Done` event collects it — exactly the
+/// historical single-threaded simulation behavior.
+pub struct SimExecutor<'a> {
+    backend: &'a dyn Backend,
+    /// per-device FIFO of parked results (mirrors the threaded executor's
+    /// channel semantics, so exact-tick double dispatch pairs correctly)
+    pending: HashMap<(usize, usize), VecDeque<StageOutput>>,
+}
+
+impl<'a> SimExecutor<'a> {
+    pub fn new(backend: &'a dyn Backend) -> Self {
+        SimExecutor { backend, pending: HashMap::new() }
+    }
+}
+
+impl Executor for SimExecutor<'_> {
+    fn start(&mut self, dev: (usize, usize), task: StageTask) {
+        let out = run_stage(self.backend, task);
+        self.pending.entry(dev).or_default().push_back(out);
+    }
+
+    fn finish(&mut self, dev: (usize, usize)) -> StageOutput {
+        self.pending
+            .get_mut(&dev)
+            .and_then(VecDeque::pop_front)
+            .expect("no in-flight task on device")
+    }
+
+    fn threads(&self) -> usize {
+        1
+    }
+}
+
+struct DeviceLink {
+    tx: Sender<StageTask>,
+    rx: Receiver<StageOutput>,
+}
+
+/// One OS thread per (worker, stage) device, exchanging activations and
+/// gradients over channels. Spawned inside a [`std::thread::scope`] so the
+/// backend can be borrowed (it must be `Sync` — enforced by the `Backend`
+/// supertrait). Dropping the executor closes the task channels and the
+/// device threads exit; the scope joins them.
+pub struct ThreadedExecutor {
+    links: HashMap<(usize, usize), DeviceLink>,
+}
+
+impl ThreadedExecutor {
+    pub fn spawn<'scope, 'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        backend: &'env dyn Backend,
+        devices: &[(usize, usize)],
+    ) -> Self {
+        let mut links = HashMap::new();
+        for &dev in devices {
+            let (task_tx, task_rx) = channel::<StageTask>();
+            let (out_tx, out_rx) = channel::<StageOutput>();
+            scope.spawn(move || {
+                while let Ok(task) = task_rx.recv() {
+                    if out_tx.send(run_stage(backend, task)).is_err() {
+                        break;
+                    }
+                }
+            });
+            links.insert(dev, DeviceLink { tx: task_tx, rx: out_rx });
+        }
+        ThreadedExecutor { links }
+    }
+}
+
+impl Executor for ThreadedExecutor {
+    fn start(&mut self, dev: (usize, usize), task: StageTask) {
+        self.links[&dev].tx.send(task).expect("device thread alive");
+    }
+
+    fn finish(&mut self, dev: (usize, usize)) -> StageOutput {
+        self.links[&dev].rx.recv().expect("device thread alive")
+    }
+
+    fn threads(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::Act;
+    use crate::model::LayerParams;
+    use std::sync::Arc;
+
+    fn task(bwd: bool) -> StageTask {
+        let shapes = vec![
+            LayerShape { in_dim: 2, out_dim: 3, act: Act::Relu },
+            LayerShape { in_dim: 3, out_dim: 2, act: Act::None },
+        ];
+        let params = vec![
+            Arc::new(LayerParams { w: vec![0.5; 6], b: vec![0.1; 3] }),
+            Arc::new(LayerParams { w: vec![-0.25; 6], b: vec![0.0; 2] }),
+        ];
+        StageTask {
+            shapes,
+            params,
+            x: vec![1.0, -2.0, 0.5, 0.25],
+            rows: 2,
+            gout: bwd.then(|| vec![0.3, -0.1, 0.2, 0.4]),
+        }
+    }
+
+    #[test]
+    fn sim_and_threaded_produce_identical_stage_results() {
+        let be = NativeBackend;
+        for bwd in [false, true] {
+            let mut sim = SimExecutor::new(&be);
+            sim.start((0, 0), task(bwd));
+            let a = sim.finish((0, 0));
+            let b = std::thread::scope(|s| {
+                let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
+                th.start((0, 0), task(bwd));
+                th.finish((0, 0))
+            });
+            assert_eq!(a.out, b.out, "bwd={bwd}");
+            match (a.grads, b.grads) {
+                (None, None) => assert!(!bwd),
+                (Some(ga), Some(gb)) => {
+                    assert!(bwd);
+                    assert_eq!(ga.len(), gb.len());
+                    for (x, y) in ga.iter().zip(&gb) {
+                        assert_eq!(x.gw, y.gw);
+                        assert_eq!(x.gb, y.gb);
+                    }
+                }
+                _ => panic!("executor grads disagree"),
+            }
+        }
+    }
+
+    /// At an exact-tick boundary the scheduler can dispatch a device's
+    /// next task while the previous Done is still queued — results must
+    /// pair FIFO on both executors.
+    #[test]
+    fn double_dispatch_on_one_device_pairs_fifo() {
+        let be = NativeBackend;
+        let fwd = run_stage(&be, task(false));
+        let bwd = run_stage(&be, task(true));
+        let mut sim = SimExecutor::new(&be);
+        sim.start((0, 0), task(true)); // earlier bwd, Done still queued
+        sim.start((0, 0), task(false)); // next fwd dispatched at same tick
+        let first = sim.finish((0, 0));
+        let second = sim.finish((0, 0));
+        assert_eq!(first.out, bwd.out, "first finish gets the earlier task");
+        assert!(first.grads.is_some());
+        assert_eq!(second.out, fwd.out);
+        assert!(second.grads.is_none());
+        let (tf, ts) = std::thread::scope(|s| {
+            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
+            th.start((0, 0), task(true));
+            th.start((0, 0), task(false));
+            (th.finish((0, 0)), th.finish((0, 0)))
+        });
+        assert_eq!(tf.out, bwd.out);
+        assert_eq!(ts.out, fwd.out);
+    }
+
+    #[test]
+    fn threaded_executor_overlaps_devices() {
+        let be = NativeBackend;
+        let devices = [(0, 0), (0, 1), (1, 0), (1, 1)];
+        let outs = std::thread::scope(|s| {
+            let mut th = ThreadedExecutor::spawn(s, &be, &devices);
+            assert_eq!(th.threads(), 4);
+            // all four devices in flight simultaneously before any join
+            for &d in &devices {
+                th.start(d, task(false));
+            }
+            devices.map(|d| th.finish(d))
+        });
+        let reference = run_stage(&be, task(false));
+        for o in outs {
+            assert_eq!(o.out, reference.out);
+        }
+    }
+}

@@ -1,24 +1,44 @@
-//! Training engines over virtual time.
+//! Training engines over virtual time — layered as scheduler / executor.
 //!
 //! All engines share the same contract: consume a [`SyntheticStream`],
 //! train through a [`Backend`] with an [`OclPlugin`], and fill a
 //! [`RunMetrics`]. Virtual time is measured in ticks; data arrives every
 //! `t^d` ticks (one microbatch per arrival, the paper's `D^t`).
 //!
-//! - [`sync`]   — flight-based synchronous pipeline schedules
-//!   (DAPPLE, Zero-Bubble, Hanayo-kW): Table 3's left half.
-//! - [`engine`] — the fine-grained asynchronous event engine
-//!   (Ferret, PipeDream, PipeDream-2BW): Table 3's right half and the
-//!   system under test everywhere else.
+//! The subsystem is split into three layers:
+//!
+//!   - [`sched`]    — the reusable scheduling core: virtual-time event
+//!     queue, 1F1B backward-preemption priority, microbatch→worker
+//!     routing, per-stage version counters, admission capacity, and the
+//!     shared predict-and-drop path. Pure mechanism; no numerics.
+//!   - [`executor`] — where stage math runs. [`executor::SimExecutor`]
+//!     computes inline on the scheduler thread (the planner's cheap
+//!     discrete-event simulation); [`executor::ThreadedExecutor`] runs one
+//!     OS thread per (worker, stage) device with channel-based
+//!     activation/gradient exchange over `Arc`-shared parameter snapshots
+//!     (real wall-clock parallelism, same schedule, identical metrics).
+//!   - [`engine`] / [`sync`] — policy: the fine-grained asynchronous
+//!     engine (Ferret, PipeDream, PipeDream-2BW — Table 3's right half)
+//!     drives sched + executor and layers weight stashing, gradient
+//!     compensation, and OCL plugins on top; [`sync`] covers the
+//!     flight-based synchronous schedules (DAPPLE, Zero-Bubble,
+//!     Hanayo-kW — Table 3's left half).
 //!
 //! Single-device stream baselines (Oracle/1-Skip/…) live in
 //! [`crate::baselines`].
+//!
+//! [`SyntheticStream`]: crate::stream::SyntheticStream
+//! [`Backend`]: crate::backend::Backend
+//! [`OclPlugin`]: crate::ocl::OclPlugin
+//! [`RunMetrics`]: crate::metrics::RunMetrics
 
 pub mod engine;
+pub mod executor;
+pub mod sched;
 pub mod sync;
 
 use crate::metrics::RunMetrics;
-use crate::model::LayerParams;
+use crate::model::SharedParams;
 
 /// Engine-independent run parameters.
 #[derive(Debug, Clone, Copy)]
@@ -34,6 +54,9 @@ pub struct EngineParams {
     pub tacc_per_class: usize,
     /// weight-init / tie-break seed
     pub seed: u64,
+    /// per-layer version-stash capacity; 0 = derive from the worker/stage
+    /// counts (deep-pipeline tests shrink it to force eviction fallbacks)
+    pub stash_cap: usize,
 }
 
 impl Default for EngineParams {
@@ -44,6 +67,7 @@ impl Default for EngineParams {
             td: 0, // 0 = derive from profile (max layer fwd time)
             tacc_per_class: 8,
             seed: 42,
+            stash_cap: 0,
         }
     }
 }
@@ -63,5 +87,5 @@ impl EngineParams {
 pub struct RunResult {
     pub metrics: RunMetrics,
     /// final full-model parameters (for external evaluation)
-    pub params: Vec<LayerParams>,
+    pub params: Vec<SharedParams>,
 }

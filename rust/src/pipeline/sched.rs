@@ -1,0 +1,312 @@
+//! Reusable scheduling core of the pipeline engines.
+//!
+//! Owns the mechanisms every schedule needs, independent of *where* the
+//! math runs (see [`crate::pipeline::executor`]) and of the policy knobs
+//! (compensation, plugins) the engine layers on top:
+//!
+//!   - [`EventQueue`] — deterministic virtual-time event heap (ties broken
+//!     by insertion order).
+//!   - [`SchedCore`]  — (worker, stage) device slots with 1F1B
+//!     backward-preemption priority, microbatch→worker round-robin
+//!     routing, per-stage version counters, in-flight accounting and
+//!     admission capacity.
+//!   - [`predict_only`] — the shared "over capacity: predict with live
+//!     weights, drop from training" path used by both the async and the
+//!     sync engines.
+
+use std::borrow::Borrow;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::backend::{accuracy, forward_all, Backend};
+use crate::config::LayerShape;
+use crate::metrics::RunMetrics;
+use crate::model::{GradBuf, LayerParams};
+
+/// Scheduler event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Ev {
+    /// next stream batch arrives
+    Arrive,
+    /// a (worker, stage) device finished a pass for a job
+    Done { worker: usize, stage: usize, job: usize, bwd: bool },
+}
+
+/// Virtual-time event heap; equal-time events pop in push order.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn push(&mut self, t: u64, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Reverse((t, self.seq, ev)));
+    }
+
+    pub fn pop(&mut self) -> Option<(u64, Ev)> {
+        self.heap.pop().map(|Reverse((t, _, ev))| (t, ev))
+    }
+}
+
+/// One in-flight microbatch.
+pub struct Job {
+    pub arrival: u64,
+    pub seq: u64,
+    pub y: Vec<i32>,
+    /// original input rows (LwF teacher forward)
+    pub batch_x: Vec<f32>,
+    /// per-stage input activations (filled as the forward advances)
+    pub stage_inputs: Vec<Option<Vec<f32>>>,
+    /// stage version each forward used (weight stashing)
+    pub fwd_version: Vec<u64>,
+    /// upstream grad flowing backward
+    pub grad: Option<Vec<f32>>,
+    pub done: bool,
+}
+
+/// One (worker, stage) device.
+pub struct Slot {
+    pub busy_until: u64,
+    pub fwd_q: VecDeque<usize>,
+    pub bwd_q: VecDeque<usize>,
+    /// accumulated grads (per layer of the stage), T2
+    pub acc: Option<Vec<GradBuf>>,
+    pub acc_count: u64,
+    pub acc_arrivals: Vec<u64>,
+    pub acc_from_version: u64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            busy_until: 0,
+            fwd_q: VecDeque::new(),
+            bwd_q: VecDeque::new(),
+            acc: None,
+            acc_count: 0,
+            acc_arrivals: Vec::new(),
+            acc_from_version: u64::MAX,
+        }
+    }
+}
+
+/// Static per-stage metadata (layer range + virtual-time costs).
+pub struct StageMeta {
+    pub layers: std::ops::Range<usize>,
+    pub tf: u64,
+    pub tb: u64,
+    pub params: usize,
+}
+
+/// Work selected for an idle device: job index to run backward/forward.
+pub enum WorkSel {
+    Bwd(usize),
+    Fwd(usize),
+}
+
+/// Scheduling state shared by the async schedules: device slots, routing,
+/// versions, events, and in-flight accounting. The engine applies policy
+/// (omission, compensation, plugins) on top.
+pub struct SchedCore {
+    pub stages: Vec<StageMeta>,
+    /// slots[worker][stage]
+    pub slots: Vec<Vec<Slot>>,
+    pub active_workers: Vec<usize>,
+    /// per-stage parameter version counter
+    pub version: Vec<u64>,
+    pub jobs: Vec<Job>,
+    pub events: EventQueue,
+    pub inflight: usize,
+    /// per-active-worker cap on in-flight jobs
+    pub inflight_cap: usize,
+}
+
+impl SchedCore {
+    pub fn new(stages: Vec<StageMeta>, n_workers: usize, active_workers: Vec<usize>) -> Self {
+        let p = stages.len();
+        let slots = (0..n_workers)
+            .map(|_| (0..p).map(|_| Slot::new()).collect())
+            .collect();
+        SchedCore {
+            stages,
+            slots,
+            active_workers,
+            version: vec![0; p],
+            jobs: Vec::new(),
+            events: EventQueue::default(),
+            inflight: 0,
+            inflight_cap: 2 * (p + 1),
+        }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// True when a new arrival cannot be admitted for training.
+    pub fn over_capacity(&self) -> bool {
+        self.active_workers.is_empty()
+            || self.inflight >= self.inflight_cap * self.active_workers.len()
+    }
+
+    /// Microbatch `seq` goes to active worker `seq mod N_active`.
+    pub fn route(&self, seq: u64) -> usize {
+        self.active_workers[(seq as usize) % self.active_workers.len()]
+    }
+
+    /// Admit a job: queue its first forward on its routed worker. Returns
+    /// (job id, worker).
+    pub fn admit(&mut self, job: Job) -> (usize, usize) {
+        let w = self.route(job.seq);
+        self.jobs.push(job);
+        self.inflight += 1;
+        let id = self.jobs.len() - 1;
+        self.slots[w][0].fwd_q.push_back(id);
+        (id, w)
+    }
+
+    /// 1F1B: pick the next queued work for device (w, s) at time `t` —
+    /// backward work preempts queued forwards. `None` when the device is
+    /// busy or idle with empty queues.
+    pub fn select_work(&mut self, w: usize, s: usize, t: u64) -> Option<WorkSel> {
+        if self.slots[w][s].busy_until > t {
+            return None;
+        }
+        if let Some(job) = self.slots[w][s].bwd_q.pop_front() {
+            return Some(WorkSel::Bwd(job));
+        }
+        self.slots[w][s].fwd_q.pop_front().map(WorkSel::Fwd)
+    }
+
+    /// Mark device (w, s) busy until `end` and schedule its completion.
+    pub fn dispatch(&mut self, w: usize, s: usize, end: u64, job: usize, bwd: bool) {
+        self.slots[w][s].busy_until = end;
+        self.events.push(end, Ev::Done { worker: w, stage: s, job, bwd });
+    }
+
+    /// Retire a job from the in-flight set, freeing its payloads.
+    pub fn retire(&mut self, job: usize) {
+        let j = &mut self.jobs[job];
+        j.done = true;
+        j.stage_inputs = vec![];
+        j.batch_x = vec![];
+        j.grad = None;
+        self.inflight -= 1;
+    }
+
+    /// Active (worker, stage) device pairs — the executor's thread set.
+    pub fn devices(&self) -> Vec<(usize, usize)> {
+        let p = self.num_stages();
+        self.active_workers
+            .iter()
+            .flat_map(|&w| (0..p).map(move |s| (w, s)))
+            .collect()
+    }
+}
+
+/// Shared over-capacity path: predict the arriving batch with the live
+/// weights and record it as dropped from training.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_only<P: Borrow<LayerParams>>(
+    backend: &dyn Backend,
+    shapes: &[LayerShape],
+    params: &[P],
+    classes: usize,
+    x: &[f32],
+    y: &[i32],
+    t: u64,
+    metrics: &mut RunMetrics,
+) {
+    let (_, logits) = forward_all(backend, shapes, params, x, y.len());
+    metrics.record_prediction(t, accuracy(classes, &logits, y));
+    metrics.record_drop();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core(workers: usize, stages: usize) -> SchedCore {
+        let stages = (0..stages)
+            .map(|j| StageMeta { layers: j..j + 1, tf: 10, tb: 20, params: 100 })
+            .collect();
+        SchedCore::new(stages, workers, (0..workers).collect())
+    }
+
+    fn job(seq: u64) -> Job {
+        Job {
+            arrival: seq * 10,
+            seq,
+            y: vec![0, 1],
+            batch_x: vec![0.0; 4],
+            stage_inputs: vec![Some(vec![0.0; 4]), None],
+            fwd_version: vec![0; 2],
+            grad: None,
+            done: false,
+        }
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_insertion() {
+        let mut q = EventQueue::default();
+        q.push(5, Ev::Arrive);
+        q.push(3, Ev::Done { worker: 0, stage: 0, job: 0, bwd: false });
+        q.push(5, Ev::Done { worker: 1, stage: 0, job: 1, bwd: true });
+        assert_eq!(q.pop().unwrap().0, 3);
+        // equal times: first-pushed first
+        assert_eq!(q.pop().unwrap(), (5, Ev::Arrive));
+        assert!(matches!(q.pop().unwrap().1, Ev::Done { worker: 1, .. }));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn routing_round_robins_over_active_workers() {
+        let mut c = core(3, 2);
+        c.active_workers = vec![0, 2]; // worker 1 removed (T4)
+        assert_eq!(c.route(0), 0);
+        assert_eq!(c.route(1), 2);
+        assert_eq!(c.route(2), 0);
+    }
+
+    #[test]
+    fn one_f_one_b_priority_and_busy_gating() {
+        let mut c = core(1, 2);
+        c.jobs.push(job(0));
+        c.jobs.push(job(1));
+        c.slots[0][0].fwd_q.push_back(0);
+        c.slots[0][0].bwd_q.push_back(1);
+        // backward preempts the queued forward
+        assert!(matches!(c.select_work(0, 0, 0), Some(WorkSel::Bwd(1))));
+        c.dispatch(0, 0, 25, 1, true);
+        // device busy: nothing selectable before t=25
+        assert!(c.select_work(0, 0, 10).is_none());
+        assert!(matches!(c.select_work(0, 0, 25), Some(WorkSel::Fwd(0))));
+    }
+
+    #[test]
+    fn admission_capacity_and_retire() {
+        let mut c = core(1, 2);
+        assert!(!c.over_capacity());
+        let cap = c.inflight_cap;
+        for i in 0..cap as u64 {
+            c.admit(job(i));
+        }
+        assert!(c.over_capacity());
+        c.retire(0);
+        assert!(!c.over_capacity());
+        assert!(c.jobs[0].done);
+        assert!(c.jobs[0].stage_inputs.is_empty(), "payload freed");
+        // no active workers -> always over capacity
+        c.active_workers.clear();
+        assert!(c.over_capacity());
+    }
+
+    #[test]
+    fn devices_enumerates_active_worker_stages() {
+        let mut c = core(2, 3);
+        c.active_workers = vec![1];
+        assert_eq!(c.devices(), vec![(1, 0), (1, 1), (1, 2)]);
+    }
+}

@@ -20,12 +20,14 @@
 
 use crate::backend::{accuracy, backward_all, forward_all, Backend};
 use crate::metrics::{eval_tacc, RunMetrics};
-use crate::model::{GradBuf, LayerParams, ModelParams};
+use crate::model::{GradBuf, LiveParams, SharedParams};
 use crate::ocl::{OclCtx, OclPlugin};
+use crate::pipeline::sched::predict_only;
 use crate::pipeline::{EngineParams, RunResult};
 use crate::planner::{Partition, Profile};
 use crate::stream::{Batch, SyntheticStream};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Which synchronous schedule to simulate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,7 +93,7 @@ impl FlightState<'_> {
         &self,
         schedule: SyncSchedule,
         queue: &mut VecDeque<(Batch, u64)>,
-        params: &mut [LayerParams],
+        params: &mut [SharedParams],
         plugin: &mut dyn OclPlugin,
         ctx: &OclCtx,
         metrics: &mut RunMetrics,
@@ -133,7 +135,7 @@ impl FlightState<'_> {
             plugin.adjust_layer_grad(i, g, &params[i], ctx);
         }
         for (pm, g) in params.iter_mut().zip(&grads) {
-            *pm = self.backend.sgd(pm, g, self.lr);
+            *pm = Arc::new(self.backend.sgd(pm, g, self.lr));
         }
         plugin.after_update(params, ctx);
         for arrival in arrivals {
@@ -173,7 +175,7 @@ pub fn run_sync(
         decay_c: ep.decay(td),
     };
 
-    let mut params = ModelParams::init(model, ep.seed).layers;
+    let mut params = LiveParams::init(model, ep.seed).layers;
     let mut metrics = RunMetrics::default();
     let ctx = OclCtx {
         backend,
@@ -199,10 +201,8 @@ pub fn run_sync(
             busy_until = fs.process(schedule, &mut queue, &mut params, plugin, &ctx, &mut metrics, start);
         }
         if queue.len() >= queue_cap {
-            // queue overflow: predict with live weights, drop from training
-            let (_, logits) = forward_all(backend, &shapes, &params, &batch.x, batch.y.len());
-            metrics.record_prediction(t, accuracy(spec.classes, &logits, &batch.y));
-            metrics.record_drop();
+            // queue overflow: the shared predict-and-drop path
+            predict_only(backend, &shapes, &params, spec.classes, &batch.x, &batch.y, t, &mut metrics);
         } else {
             queue.push_back((batch, t));
         }

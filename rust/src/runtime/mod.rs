@@ -5,12 +5,18 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md). Executables are compiled
 //! lazily on first use and cached for the lifetime of the runtime, so the
-//! request path pays compile cost exactly once per artifact.
+//! request path pays compile cost exactly once per artifact. The cache is
+//! behind a `Mutex` (not `RefCell`): [`crate::backend::Backend`] is
+//! `Send + Sync` so the threaded pipeline executor can share one runtime
+//! across device threads.
+//!
+//! The PJRT client itself lives behind the `xla` cargo feature (the crate
+//! is vendored, not on crates.io). Without the feature this module compiles
+//! a stub [`Runtime`] whose `open()` fails with a clear message — callers
+//! (tests, benches, the CLI `--backend xla` path) degrade gracefully.
 
-use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
+use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 
 /// Artifact naming — MUST stay in sync with `python/compile/aot.py`.
 pub mod names {
@@ -67,117 +73,179 @@ pub fn parse_manifest(text: &str) -> Result<Manifest> {
     })
 }
 
-/// PJRT-backed executor over an artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    execs: RefCell<u64>,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::{parse_manifest, Manifest};
+    use crate::util::error::{bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-impl Runtime {
-    /// Open the artifact dir (e.g. `artifacts/`) and start a CPU client.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "reading {} — run `make artifacts` first",
-                manifest_path.display()
-            )
-        })?;
-        let manifest = parse_manifest(&text)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            execs: RefCell::new(0),
-        })
+    /// PJRT-backed executor over an artifact directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+        execs: Mutex<u64>,
     }
 
-    /// Default artifact dir resolved against the repo root.
-    pub fn open_default() -> Result<Self> {
-        Self::open(crate::config::repo_path("artifacts"))
-    }
-
-    pub fn batch(&self) -> usize {
-        self.manifest.batch
-    }
-
-    /// Number of PJRT executions performed (perf counters).
-    pub fn exec_count(&self) -> u64 {
-        *self.execs.borrow()
-    }
-
-    fn load(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
+    impl Runtime {
+        /// Open the artifact dir (e.g. `artifacts/`) and start a CPU client.
+        pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest_path = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!(
+                    "reading {} — run `make artifacts` first",
+                    manifest_path.display()
+                )
+            })?;
+            let manifest = parse_manifest(&text)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                dir,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+                execs: Mutex::new(0),
+            })
         }
-        let file = self
-            .manifest
-            .artifacts
-            .get(name)
-            .with_context(|| format!("artifact {name:?} not in manifest"))?;
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+
+        /// Default artifact dir resolved against the repo root.
+        pub fn open_default() -> Result<Self> {
+            Self::open(crate::config::repo_path("artifacts"))
+        }
+
+        pub fn batch(&self) -> usize {
+            self.manifest.batch
+        }
+
+        /// Number of PJRT executions performed (perf counters).
+        pub fn exec_count(&self) -> u64 {
+            *self.execs.lock().unwrap()
+        }
+
+        fn load(&self, name: &str) -> Result<()> {
+            // Hold the cache lock across the compile: two device threads
+            // first-touching the same artifact must not both pay the
+            // (dominant) compile cost — the cache's once-per-artifact
+            // contract is per runtime, not per thread.
+            let mut cache = self.cache.lock().unwrap();
+            if cache.contains_key(name) {
+                return Ok(());
+            }
+            let file = self
+                .manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("artifact {name:?} not in manifest"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute artifact `name` with literal inputs; returns the
+        /// flattened tuple elements (all artifacts are lowered with
+        /// return_tuple=True). The executable cache lock is held for the
+        /// duration of the dispatch, serializing device threads per
+        /// runtime — one PJRT CPU client is a single device anyway.
+        pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            self.load(name)?;
+            let cache = self.cache.lock().unwrap();
+            let exe = cache.get(name).unwrap();
+            *self.execs.lock().unwrap() += 1;
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing artifact {name}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetching result of {name}"))?;
+            lit.to_tuple().with_context(|| format!("untupling result of {name}"))
+        }
+
+        /// Number of artifacts compiled so far.
+        pub fn compiled_count(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
     }
 
-    /// Execute artifact `name` with literal inputs; returns the flattened
-    /// tuple elements (all artifacts are lowered with return_tuple=True).
-    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.load(name)?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).unwrap();
-        *self.execs.borrow_mut() += 1;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing artifact {name}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {name}"))?;
-        lit.to_tuple().with_context(|| format!("untupling result of {name}"))
+    /// f32 literal of the given logical dims from a flat slice.
+    pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let expect: i64 = dims.iter().product();
+        if expect != data.len() as i64 {
+            bail!("lit_f32: {} values for dims {dims:?}", data.len());
+        }
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
     }
 
-    /// Number of artifacts compiled so far.
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+    /// i32 literal (1-D).
+    pub fn lit_i32(data: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// Scalar-as-(1,) f32 literal (the artifact calling convention for
+    /// lam/lr).
+    pub fn lit_scalar(v: f32) -> xla::Literal {
+        xla::Literal::vec1(&[v])
+    }
+
+    /// Flatten a literal back to Vec<f32>.
+    pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
     }
 }
 
-/// f32 literal of the given logical dims from a flat slice.
-pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    if expect != data.len() as i64 {
-        bail!("lit_f32: {} values for dims {dims:?}", data.len());
+#[cfg(feature = "xla")]
+pub use pjrt::{lit_f32, lit_i32, lit_scalar, to_f32, Runtime};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::util::error::{bail, Result};
+    use std::path::Path;
+
+    /// Stub runtime compiled without the `xla` feature: `open()` always
+    /// fails, so every artifact-dependent path reports a clear skip
+    /// message instead of failing to build.
+    pub struct Runtime {
+        never: std::convert::Infallible,
     }
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+
+    impl Runtime {
+        pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
+            bail!(
+                "ferret was built without the `xla` cargo feature; rebuild with \
+                 --features xla (requires the vendored xla crate)"
+            )
+        }
+
+        pub fn open_default() -> Result<Self> {
+            Self::open("artifacts")
+        }
+
+        pub fn batch(&self) -> usize {
+            match self.never {}
+        }
+
+        pub fn exec_count(&self) -> u64 {
+            match self.never {}
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            match self.never {}
+        }
+    }
 }
 
-/// i32 literal (1-D).
-pub fn lit_i32(data: &[i32]) -> xla::Literal {
-    xla::Literal::vec1(data)
-}
-
-/// Scalar-as-(1,) f32 literal (the artifact calling convention for lam/lr).
-pub fn lit_scalar(v: f32) -> xla::Literal {
-    xla::Literal::vec1(&[v])
-}
-
-/// Flatten a literal back to Vec<f32>.
-pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -205,6 +273,7 @@ mod tests {
         assert_eq!(names::loss_lwf(62), "loss_lwf_62");
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn lit_roundtrip() {
         let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();

@@ -73,7 +73,14 @@ pub fn paper_settings() -> Vec<Setting> {
         s("SplitCIFAR10/ConvNet", "split-cifar10", "convnet10", ClassIncremental { tasks: 5 }, 4.0, 0.8),
         s("SplitCIFAR100/ConvNet", "split-cifar100", "convnet100", ClassIncremental { tasks: 5 }, 2.8, 1.0),
         s("SplitSVHN/ConvNet", "split-svhn", "convnet10", ClassIncremental { tasks: 5 }, 6.0, 0.7),
-        s("SplitTinyImagenet/ConvNet", "split-tinyimagenet", "convnet200", ClassIncremental { tasks: 5 }, 1.8, 1.0),
+        s(
+            "SplitTinyImagenet/ConvNet",
+            "split-tinyimagenet",
+            "convnet200",
+            ClassIncremental { tasks: 5 },
+            1.8,
+            1.0,
+        ),
         s("CLEAR10/ResNet", "clear10", "resnet11", Covariate { cycles: 0.5 }, 7.0, 0.6),
         s("CLEAR10/MobileNet", "clear10", "mobilenet11", Covariate { cycles: 0.5 }, 5.0, 0.6),
         s("CLEAR100/ResNet", "clear100", "resnet101", Covariate { cycles: 0.5 }, 6.0, 0.8),

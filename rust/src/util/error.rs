@@ -1,0 +1,110 @@
+//! Dependency-free error handling with an `anyhow`-shaped surface
+//! (`Result`, `bail!`, `.context(..)` / `.with_context(..)`), so the crate
+//! builds hermetically. The context chain is flattened into one message,
+//! printed identically by `{}`, `{:#}`, and `{:?}`.
+
+use std::fmt;
+
+/// Crate-wide error: a single human-readable message with any context
+/// prefixes already applied.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow's blanket conversion. Sound because `Error` itself does
+// NOT implement `std::error::Error`, so this cannot overlap the reflexive
+// `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub use crate::bail;
+
+/// Attach context to errors/`None`, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse()?; // std error converts via the blanket From
+        if n == 0 {
+            bail!("zero is not allowed (got {s:?})");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn conversions_and_bail() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        let e = parse("0").unwrap_err();
+        assert!(e.to_string().contains("zero is not allowed"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        // `{:#}` prints the same flattened chain
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}

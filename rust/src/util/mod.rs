@@ -1,10 +1,11 @@
 //! Dependency-free utilities: deterministic RNG, math helpers, and a tiny
 //! property-testing harness used by unit tests across the crate.
 
+pub mod error;
 pub mod math;
 pub mod rng;
 
-pub use math::{argmax, cdiv, dot, gcd, lcm, lcm_all, mean, norm2, std_dev};
+pub use math::{argmax, cdiv, dot, gcd, lcm, lcm_all, mean, norm2, pearson, std_dev};
 pub use rng::Rng;
 
 /// Minimal property-test harness (proptest is not vendored): runs `f` over

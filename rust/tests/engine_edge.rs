@@ -169,7 +169,8 @@ fn planner_output_always_runnable() {
     for frac in [0.05, 0.2, 0.5, 1.0] {
         let out = plan(&prof, td, hi * frac, decay);
         let cfg = AsyncCfg::ferret(out.partition.clone(), out.config.clone(), CompKind::IterFisher);
-        let r = run_async(cfg, &mut stream(30, DriftKind::Stationary), &NativeBackend, &mut Vanilla, &ep(), &m);
+        let mut s = stream(30, DriftKind::Stationary);
+        let r = run_async(cfg, &mut s, &NativeBackend, &mut Vanilla, &ep(), &m);
         assert_eq!(r.metrics.oacc.count() as u64, 30, "frac {frac}");
     }
 }

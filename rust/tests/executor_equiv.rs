@@ -1,0 +1,157 @@
+//! Executor equivalence: the threaded executor runs the *same schedule*
+//! and the *same math* as the virtual-time simulation, so with the same
+//! seed and plan both must produce identical `RunMetrics` and final
+//! parameters ("lockstep" determinism). Plus stash-capacity edge cases
+//! under deep pipelines.
+
+use ferret::backend::native::NativeBackend;
+use ferret::compensate::CompKind;
+use ferret::config::ModelSpec;
+use ferret::ocl::{OclKind, Vanilla};
+use ferret::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
+use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::{EngineParams, RunResult};
+use ferret::planner::{plan, Partition, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn model() -> ModelSpec {
+    ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
+}
+
+fn deep_model() -> ModelSpec {
+    ModelSpec { name: "deep".into(), dims: vec![16, 16, 16, 16, 16, 16, 16, 4] }
+}
+
+fn stream(n: usize, seed: u64) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "equiv".into(),
+        features: 16,
+        classes: 4,
+        batch: 8,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 3.0,
+        noise: 0.5,
+        seed,
+    })
+}
+
+/// Assert two runs are observably identical: every metric the harness
+/// consumes plus the final weights.
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.metrics.oacc.value(), b.metrics.oacc.value(), "{what}: oacc");
+    assert_eq!(a.metrics.oacc.count(), b.metrics.oacc.count(), "{what}: predictions");
+    assert_eq!(a.metrics.oacc.curve, b.metrics.oacc.curve, "{what}: oacc curve");
+    assert_eq!(a.metrics.losses, b.metrics.losses, "{what}: loss curve");
+    assert_eq!(a.metrics.trained, b.metrics.trained, "{what}: trained");
+    assert_eq!(a.metrics.dropped, b.metrics.dropped, "{what}: dropped");
+    assert_eq!(a.metrics.mem_bytes, b.metrics.mem_bytes, "{what}: mem");
+    assert_eq!(a.metrics.peak_live_bytes, b.metrics.peak_live_bytes, "{what}: live bytes");
+    assert_eq!(a.metrics.tacc, b.metrics.tacc, "{what}: tacc");
+    assert_eq!(
+        a.metrics.adaptation_rate(),
+        b.metrics.adaptation_rate(),
+        "{what}: adaptation"
+    );
+    assert_eq!(a.params.len(), b.params.len(), "{what}: layer count");
+    for (i, (pa, pb)) in a.params.iter().zip(&b.params).enumerate() {
+        assert_eq!(pa.w, pb.w, "{what}: layer {i} weights");
+        assert_eq!(pa.b, pb.b, "{what}: layer {i} bias");
+    }
+}
+
+fn run_with(
+    cfg_for: impl Fn() -> (AsyncCfg, ModelSpec),
+    ep: &EngineParams,
+    n: usize,
+    kind: ExecutorKind,
+) -> RunResult {
+    let (cfg, m) = cfg_for();
+    run_async_with(cfg, &mut stream(n, 31), &NativeBackend, &mut Vanilla, ep, &m, kind)
+}
+
+#[test]
+fn sim_and_threaded_produce_identical_metrics_pipedream() {
+    let mk = || {
+        let m = model();
+        let prof = Profile::analytic(&m, 8);
+        let part = Partition::per_layer(m.num_layers());
+        (AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, prof.default_td()), m)
+    };
+    let ep = EngineParams { lr: 0.2, ..Default::default() };
+    let sim = run_with(mk, &ep, 100, ExecutorKind::Sim);
+    let thr = run_with(mk, &ep, 100, ExecutorKind::Threaded);
+    assert_eq!(sim.metrics.exec_threads, 1);
+    assert!(thr.metrics.exec_threads > 1, "threaded mode must spawn device threads");
+    assert_runs_identical(&sim, &thr, "pipedream");
+}
+
+#[test]
+fn sim_and_threaded_produce_identical_metrics_planned_ferret() {
+    let mk = || {
+        let m = model();
+        let prof = Profile::analytic(&m, 8);
+        let td = prof.default_td();
+        let unconstrained = plan(&prof, td, f64::INFINITY, 1e-4);
+        let out = plan(&prof, td, unconstrained.mem_bytes * 0.5, 1e-4);
+        (AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher), m)
+    };
+    let ep = EngineParams { lr: 0.2, ..Default::default() };
+    let sim = run_with(mk, &ep, 80, ExecutorKind::Sim);
+    let thr = run_with(mk, &ep, 80, ExecutorKind::Threaded);
+    assert_runs_identical(&sim, &thr, "ferret");
+}
+
+#[test]
+fn equivalence_holds_across_ocl_plugins() {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let td = prof.default_td();
+    for ocl in [OclKind::Er, OclKind::Lwf] {
+        let run = |kind: ExecutorKind| {
+            let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream2BW, part.clone(), &prof, td);
+            let mut plugin = ocl.build(23);
+            let ep = EngineParams { lr: 0.2, ..Default::default() };
+            run_async_with(cfg, &mut stream(60, 9), &NativeBackend, plugin.as_mut(), &ep, &m, kind)
+        };
+        let sim = run(ExecutorKind::Sim);
+        let thr = run(ExecutorKind::Threaded);
+        assert_runs_identical(&sim, &thr, ocl.name());
+    }
+}
+
+/// Deep pipeline + heavy accumulation + a deliberately tiny stash: the
+/// delta chain is evicted constantly and Iter-Fisher must fall back to the
+/// jump (or nothing) without panicking — on both executors, identically.
+#[test]
+fn stash_capacity_overflow_under_deep_pipeline() {
+    let mk = || {
+        let m = deep_model();
+        let prof = Profile::analytic(&m, 8);
+        let part = Partition::per_layer(m.num_layers());
+        let mut cfg = AsyncCfg::baseline(AsyncSchedule::Ferret, part, &prof, prof.default_td());
+        cfg.comp_kind = CompKind::IterFisher;
+        for w in &mut cfg.pipe.workers {
+            w.accum = vec![4; m.num_layers()];
+        }
+        (cfg, m)
+    };
+    // stash_cap 2 is the floor: versions are evicted almost immediately
+    let ep = EngineParams { lr: 0.1, stash_cap: 2, ..Default::default() };
+    let sim = run_with(mk, &ep, 80, ExecutorKind::Sim);
+    assert!(sim.metrics.trained > 0, "deep pipeline must still train");
+    assert_eq!(sim.metrics.oacc.count() as u64, 80, "every arrival predicted");
+    let thr = run_with(mk, &ep, 80, ExecutorKind::Threaded);
+    assert_runs_identical(&sim, &thr, "deep/tiny-stash");
+    // the tiny stash must actually bound the live snapshot memory below
+    // the auto-sized stash's
+    let auto_ep = EngineParams { lr: 0.1, ..Default::default() };
+    let auto = run_with(mk, &auto_ep, 80, ExecutorKind::Sim);
+    assert!(
+        sim.metrics.peak_live_bytes < auto.metrics.peak_live_bytes,
+        "cap 2: {} !< auto: {}",
+        sim.metrics.peak_live_bytes,
+        auto.metrics.peak_live_bytes
+    );
+}
