@@ -11,6 +11,7 @@ use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
 use ferret::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
 use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
 use ferret::pipeline::sync::{run_sync, SyncSchedule};
 use ferret::pipeline::EngineParams;
 use ferret::planner::costmodel::decay_for_td;
@@ -76,7 +77,16 @@ fn main() {
                 let t0 = std::time::Instant::now();
                 let mut p = OclKind::Vanilla.build(1);
                 let mut s = mk_stream(&model, zoo.batch, n);
-                let r = run_async_with(cfg, &mut s, &NativeBackend, p.as_mut(), &ep, &model, kind);
+                let r = run_async_with(
+                    cfg,
+                    &mut s,
+                    &NativeBackend,
+                    p.as_mut(),
+                    &ep,
+                    &model,
+                    kind,
+                    Mode::Lockstep,
+                );
                 let dt = t0.elapsed().as_secs_f64();
                 println!(
                     "{:<28} {:>12.1} {:>14.1}   ({} threads)",
@@ -87,5 +97,31 @@ fn main() {
                 );
             }
         }
+
+        // free-running wall-clock mode: real arrival pacing + device-thread
+        // updates; reports observed latency instead of replayed costs
+        let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, out.partition.clone(), &prof, td);
+        let mut p = OclKind::Vanilla.build(1);
+        let mut s = mk_stream(&model, zoo.batch, n);
+        let t0 = std::time::Instant::now();
+        let r = run_async_with(
+            cfg,
+            &mut s,
+            &NativeBackend,
+            p.as_mut(),
+            &ep,
+            &model,
+            ExecutorKind::Threaded,
+            Mode::Freerun,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<28} {:>12.1} {:>14.1}   latency {} | staleness {}",
+            format!("pipedream[freerun]/{model_name}"),
+            dt * 1e3,
+            n as f64 / dt,
+            r.metrics.latency_summary(),
+            r.metrics.staleness_summary()
+        );
     }
 }

@@ -3,21 +3,28 @@
 //! Usage:
 //!   ferret_bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all
 //!                [--quick] [--batches N] [--seeds a,b,...] [--settings i,j,...]
-//!                [--executor sim|threaded]
+//!                [--executor sim|threaded] [--mode lockstep|freerun]
 //!
 //! `--executor threaded` runs the async engines on one OS thread per
 //! (worker, stage) device and reports real wall-clock samples/sec; `sim`
 //! (default) is the single-threaded virtual-time simulation.
 //!
+//! `--mode freerun` paces each async run against the wall clock (1 tick =
+//! 1µs) with stage updates on the owning device threads, and reports
+//! observed per-batch latency percentiles plus the staleness histogram;
+//! `lockstep` (default) replays virtual time (deterministic).
+//!
 //! Results are printed as markdown and saved under results/ as .md + .csv.
 
 use ferret::harness::{Bench, BenchCfg, Table};
 use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
 
 fn usage() -> ! {
     eprintln!(
         "usage: ferret_bench --exp <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all> \
-         [--quick] [--batches N] [--seeds a,b] [--settings i,j] [--executor sim|threaded]"
+         [--quick] [--batches N] [--seeds a,b] [--settings i,j] [--executor sim|threaded] \
+         [--mode lockstep|freerun]"
     );
     std::process::exit(2)
 }
@@ -29,7 +36,12 @@ fn main() {
     // apply the --quick preset first so explicit --batches/--seeds/
     // --settings override it regardless of flag order
     if args.iter().any(|a| a == "--quick") {
-        cfg = BenchCfg { quiet: cfg.quiet, executor: cfg.executor, ..BenchCfg::quick() };
+        cfg = BenchCfg {
+            quiet: cfg.quiet,
+            executor: cfg.executor,
+            mode: cfg.mode,
+            ..BenchCfg::quick()
+        };
     }
     let mut i = 0;
     while i < args.len() {
@@ -70,6 +82,10 @@ fn main() {
                     .and_then(|s| ExecutorKind::parse(s))
                     .unwrap_or_else(|| usage());
             }
+            "--mode" => {
+                i += 1;
+                cfg.mode = args.get(i).and_then(|s| Mode::parse(s)).unwrap_or_else(|| usage());
+            }
             "--quiet" => cfg.quiet = true,
             _ => usage(),
         }
@@ -78,6 +94,7 @@ fn main() {
 
     let t0 = std::time::Instant::now();
     let executor = cfg.executor;
+    let mode = cfg.mode;
     let mut bench = Bench::new(cfg);
     let emit = |name: &str, table: Table| {
         println!("\n{}", table.to_markdown());
@@ -122,11 +139,22 @@ fn main() {
         let t = bench.fig7();
         emit("fig7", t);
     }
+    if mode == Mode::Freerun {
+        eprintln!(
+            "[ferret-bench] wall-clock batch latency µs: {}",
+            bench.observability.latency_summary()
+        );
+        eprintln!(
+            "[ferret-bench] observed staleness histogram: {}",
+            bench.observability.staleness_summary()
+        );
+    }
     let wall = t0.elapsed().as_secs_f64();
     eprintln!(
-        "[ferret-bench] done in {wall:.0}s | executor={} | max worker threads observed={} | \
-         {:.1} engine-batches/s wall-clock",
+        "[ferret-bench] done in {wall:.0}s | executor={} | mode={} | \
+         max worker threads observed={} | {:.1} engine-batches/s wall-clock",
         executor.name(),
+        mode.name(),
         bench.max_threads_seen,
         bench.batches_run as f64 / wall.max(1e-9),
     );

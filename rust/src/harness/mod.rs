@@ -17,6 +17,7 @@ use crate::metrics::{agm, RunMetrics};
 use crate::ocl::OclKind;
 use crate::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
 use crate::pipeline::executor::ExecutorKind;
+use crate::pipeline::sched::Mode;
 use crate::pipeline::sync::{run_sync, SyncSchedule};
 use crate::pipeline::EngineParams;
 use crate::planner::{plan, Partition, Profile};
@@ -78,6 +79,9 @@ pub struct BenchCfg {
     /// executor for the async engines (sim = virtual-time inline,
     /// threaded = one OS thread per (worker, stage) device)
     pub executor: ExecutorKind,
+    /// time mode for the async engines (lockstep = virtual event heap,
+    /// freerun = wall-clock pacing with device-thread updates)
+    pub mode: Mode,
 }
 
 impl Default for BenchCfg {
@@ -89,6 +93,7 @@ impl Default for BenchCfg {
             lr: 0.04,
             quiet: false,
             executor: ExecutorKind::Sim,
+            mode: Mode::Lockstep,
         }
     }
 }
@@ -119,6 +124,9 @@ pub struct Bench {
     pub max_threads_seen: usize,
     /// total microbatches pushed through engines (wall-clock throughput)
     pub batches_run: u64,
+    /// latency samples + staleness histogram aggregated across every async
+    /// run (reported after `--mode freerun` sweeps)
+    pub observability: RunMetrics,
 }
 
 impl Bench {
@@ -131,6 +139,7 @@ impl Bench {
             plans: HashMap::new(),
             max_threads_seen: 0,
             batches_run: 0,
+            observability: RunMetrics::default(),
         }
     }
 
@@ -268,6 +277,7 @@ impl Bench {
                     &ep,
                     &model,
                     self.cfg.executor,
+                    self.cfg.mode,
                 )
             }
             Method::Ferret { tier, comp } => {
@@ -283,9 +293,11 @@ impl Bench {
                     &ep,
                     &model,
                     self.cfg.executor,
+                    self.cfg.mode,
                 )
             }
         };
+        self.observability.absorb_observability(&result.metrics);
         self.max_threads_seen = self.max_threads_seen.max(result.metrics.exec_threads);
         self.batches_run += self.cfg.num_batches as u64;
         self.runs.insert(key, result.metrics.clone());
@@ -543,6 +555,7 @@ impl Bench {
                 let (_, prof, td) = self.shared_partition(&model);
                 let out = plan(&prof, td, budget, crate::planner::costmodel::decay_for_td(td));
                 let mut threads_seen = 0usize;
+                let mut run_metrics: Vec<RunMetrics> = Vec::new();
                 let (mems, oaccs): (Vec<f64>, Vec<f64>) = seeds
                     .iter()
                     .map(|&seed| {
@@ -562,15 +575,21 @@ impl Bench {
                             &ep,
                             &model,
                             self.cfg.executor,
+                            self.cfg.mode,
                         );
                         threads_seen = threads_seen.max(r.metrics.exec_threads);
-                        (r.metrics.mem_bytes / 1e6, r.metrics.oacc.value())
+                        let point = (r.metrics.mem_bytes / 1e6, r.metrics.oacc.value());
+                        run_metrics.push(r.metrics);
+                        point
                     })
                     .unzip();
                 // direct engine runs bypass run(): keep the observability
                 // counters honest
                 self.max_threads_seen = self.max_threads_seen.max(threads_seen);
                 self.batches_run += (self.cfg.num_batches * seeds.len()) as u64;
+                for m in &run_metrics {
+                    self.observability.absorb_observability(m);
+                }
                 table.push_row(
                     format!("{}/Ferret@B{k}", setting.label),
                     vec![Some(Cell::from_samples(&mems)), Some(Cell::from_samples(&oaccs))],

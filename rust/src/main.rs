@@ -9,10 +9,15 @@
 //!   run   --setting <idx|label> [--budget-mb M] [--batches N] [--seed S]
 //!         [--comp none|step|gap|fisher|iter] [--ocl vanilla|er|mir|lwf|mas]
 //!         [--backend native|xla] [--executor sim|threaded]
+//!         [--mode lockstep|freerun]
 //!         Plan + run full Ferret on one of the paper's 20 settings and
 //!         report oacc/tacc/memory/adaptation rate. `--executor threaded`
 //!         runs one OS thread per (worker, stage) device (real
 //!         parallelism); `sim` is the virtual-time simulation.
+//!         `--mode freerun` paces the run against the wall clock (1 tick
+//!         = 1µs), runs stage updates on the owning device threads, and
+//!         reports observed per-batch latency percentiles plus the
+//!         staleness histogram; `lockstep` replays virtual time.
 //!
 //!   settings
 //!         List the 20 paper settings with their indices.
@@ -23,6 +28,7 @@ use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
 use ferret::pipeline::engine::{run_async_with, AsyncCfg};
 use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
 use ferret::pipeline::EngineParams;
 use ferret::planner::{plan, Profile};
 use ferret::stream::{paper_settings, SyntheticStream};
@@ -135,6 +141,10 @@ fn cmd_run(opts: &Opts) {
         Some(k) => k,
         None => usage(),
     };
+    let mode = match Mode::parse(opts.get("mode").unwrap_or("lockstep")) {
+        Some(m) => m,
+        None => usage(),
+    };
 
     let prof = Profile::analytic(&model, zoo.batch);
     let td = prof.default_td();
@@ -163,15 +173,29 @@ fn cmd_run(opts: &Opts) {
     let ep = EngineParams { lr: 0.1, seed, ..Default::default() };
     let cfg = AsyncCfg::ferret(out.partition, out.config, comp);
     let t0 = std::time::Instant::now();
-    let r = run_async_with(cfg, &mut stream, backend.as_ref(), plugin.as_mut(), &ep, &model, executor);
+    let r = run_async_with(
+        cfg,
+        &mut stream,
+        backend.as_ref(),
+        plugin.as_mut(),
+        &ep,
+        &model,
+        executor,
+        mode,
+    );
     println!("setting    : {}", setting.label);
     println!("ocl/comp   : {} / {}", ocl.name(), comp.name());
     println!("executor   : {} ({} worker threads)", executor.name(), r.metrics.exec_threads);
+    println!("mode       : {}", mode.name());
     println!("oacc       : {:.2}%", r.metrics.oacc.value());
     println!("tacc       : {:.2}%", r.metrics.tacc);
     println!("adaptation : {:.4}", r.metrics.adaptation_rate());
     println!("memory     : {:.2} MB (analytic Eq. 4)", r.metrics.mem_bytes / 1e6);
     println!("trained    : {} updates, dropped {}", r.metrics.trained, r.metrics.dropped);
+    if mode == Mode::Freerun {
+        println!("latency µs : {}", r.metrics.latency_summary());
+        println!("staleness  : {}", r.metrics.staleness_summary());
+    }
     println!("final loss : {:.4}", r.metrics.mean_recent_loss(16));
     println!("wallclock  : {:.1}s", t0.elapsed().as_secs_f64());
 }

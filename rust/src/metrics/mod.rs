@@ -74,6 +74,25 @@ pub struct RunMetrics {
     /// compute threads the executor ran with (1 = inline simulation;
     /// 0 = engine predates executors / not applicable)
     pub exec_threads: usize,
+    /// per-batch arrival→prediction latency samples for trained batches
+    /// (virtual ticks in lockstep mode, real microseconds in freerun)
+    pub latencies: Vec<u64>,
+    /// observed-staleness histogram: `staleness_hist[τ]` = updates applied
+    /// τ versions stale; the last bucket aggregates τ ≥ STALENESS_BUCKETS
+    pub staleness_hist: Vec<u64>,
+}
+
+/// Histogram cap: staleness beyond this lands in the overflow bucket.
+pub const STALENESS_BUCKETS: usize = 32;
+
+/// Nearest-rank percentile over an already-sorted sample slice (`p` in
+/// 0..=100); 0 when empty. Single definition shared by every caller.
+fn percentile_of_sorted(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
 }
 
 impl RunMetrics {
@@ -112,6 +131,77 @@ impl RunMetrics {
 
     pub fn observe_live_bytes(&mut self, bytes: usize) {
         self.peak_live_bytes = self.peak_live_bytes.max(bytes);
+    }
+
+    /// Record one batch's arrival→prediction latency.
+    pub fn record_latency(&mut self, latency: u64) {
+        self.latencies.push(latency);
+    }
+
+    /// Record the staleness an update was applied at.
+    pub fn record_staleness(&mut self, tau: u64) {
+        let b = (tau as usize).min(STALENESS_BUCKETS);
+        if self.staleness_hist.len() <= b {
+            self.staleness_hist.resize(b + 1, 0);
+        }
+        self.staleness_hist[b] += 1;
+    }
+
+    /// Nearest-rank latency percentile (`p` in 0..=100); 0 if no samples.
+    pub fn latency_percentile(&self, p: f64) -> u64 {
+        let mut v = self.latencies.clone();
+        v.sort_unstable();
+        percentile_of_sorted(&v, p)
+    }
+
+    /// "p50=.. p95=.. p99=.." one-liner for run reports (single sort).
+    pub fn latency_summary(&self) -> String {
+        let mut v = self.latencies.clone();
+        v.sort_unstable();
+        format!(
+            "p50={} p95={} p99={} max={} (n={})",
+            percentile_of_sorted(&v, 50.0),
+            percentile_of_sorted(&v, 95.0),
+            percentile_of_sorted(&v, 99.0),
+            v.last().copied().unwrap_or(0),
+            v.len()
+        )
+    }
+
+    /// "τ=0:12 τ=1:3 ... τ≥32:N" histogram one-liner for run reports.
+    pub fn staleness_summary(&self) -> String {
+        if self.staleness_hist.is_empty() {
+            return "(no updates)".into();
+        }
+        self.staleness_hist
+            .iter()
+            .enumerate()
+            .map(|(tau, n)| {
+                if tau == STALENESS_BUCKETS {
+                    format!("τ≥{tau}:{n}")
+                } else {
+                    format!("τ={tau}:{n}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Total batches that arrived (adaptation-rate denominator).
+    pub fn arrivals(&self) -> u64 {
+        self.adaptation_batches
+    }
+
+    /// Fold another run's latency samples and staleness histogram into
+    /// this sink (harness-level aggregation across a run matrix).
+    pub fn absorb_observability(&mut self, other: &RunMetrics) {
+        self.latencies.extend_from_slice(&other.latencies);
+        if self.staleness_hist.len() < other.staleness_hist.len() {
+            self.staleness_hist.resize(other.staleness_hist.len(), 0);
+        }
+        for (i, n) in other.staleness_hist.iter().enumerate() {
+            self.staleness_hist[i] += n;
+        }
     }
 
     pub fn mean_recent_loss(&self, k: usize) -> f32 {
@@ -204,6 +294,33 @@ mod tests {
             }
         }
         assert!((m2.adaptation_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles_and_staleness_histogram() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.latency_percentile(50.0), 0, "empty -> 0");
+        for l in [10, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            m.record_latency(l);
+        }
+        assert_eq!(m.latency_percentile(50.0), 50);
+        assert_eq!(m.latency_percentile(95.0), 100);
+        assert_eq!(m.latency_percentile(99.0), 100);
+        assert!(m.latency_percentile(50.0) <= m.latency_percentile(95.0));
+        m.record_staleness(0);
+        m.record_staleness(0);
+        m.record_staleness(3);
+        m.record_staleness(10_000); // overflow bucket
+        assert_eq!(m.staleness_hist[0], 2);
+        assert_eq!(m.staleness_hist[3], 1);
+        assert_eq!(m.staleness_hist[STALENESS_BUCKETS], 1);
+        // aggregation across runs
+        let mut agg = RunMetrics::default();
+        agg.record_staleness(3);
+        agg.absorb_observability(&m);
+        assert_eq!(agg.staleness_hist[3], 2);
+        assert_eq!(agg.latencies.len(), 10);
+        assert!(agg.staleness_summary().contains("τ=0:2"));
     }
 
     #[test]

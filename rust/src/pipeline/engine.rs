@@ -23,18 +23,27 @@
 //! forwards were computed with; Iter-Fisher walks the snapshot chain at
 //! update time (Eq. 9).
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use crate::backend::Backend;
 use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::{eval_tacc, RunMetrics};
-use crate::model::{GradBuf, LiveParams, StashSet};
+use crate::model::{GradBuf, LiveParams, SharedParams, StashSet};
 use crate::ocl::{OclCtx, OclPlugin};
-use crate::pipeline::executor::{Executor, ExecutorKind, SimExecutor, StageTask, ThreadedExecutor};
-use crate::pipeline::sched::{predict_only, Ev, Job, SchedCore, StageMeta, WorkSel};
+use crate::pipeline::executor::{
+    DeviceTask, Executor, ExecutorKind, SimExecutor, StageCell, StageTask, ThreadedExecutor,
+    UpdateTask,
+};
+use crate::pipeline::sched::{
+    predict_only, Clock, Ev, Flight, Job, Mode, SchedCore, StageMeta, VirtualClock, WallClock,
+    WorkSel,
+};
 use crate::pipeline::{EngineParams, RunResult};
 use crate::planner::costmodel::{mem_footprint, PipeConfig};
 use crate::planner::{Partition, Profile};
-use crate::stream::SyntheticStream;
+use crate::stream::{arrival_interval_us, Batch, SyntheticStream};
 
 /// Asynchronous schedule family (Table 3's right half).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,6 +131,13 @@ pub struct AsyncEngine<'a> {
     decay_c: f64,
     total_params: usize,
     update_count: u64,
+    /// stash capacity per layer (resolved in `new`; freerun cells reuse it)
+    stash_cap: usize,
+    /// freerun: per-stage live state owned jointly with the device threads
+    /// (empty in lockstep mode)
+    cells: Vec<Arc<StageCell>>,
+    /// freerun: device tasks dispatched but not yet completed
+    flights: usize,
 }
 
 impl<'a> AsyncEngine<'a> {
@@ -172,6 +188,9 @@ impl<'a> AsyncEngine<'a> {
             decay_c: 0.0, // resolved in run() once td is known
             total_params,
             update_count: 0,
+            stash_cap,
+            cells: Vec::new(),
+            flights: 0,
         }
     }
 
@@ -188,29 +207,34 @@ impl<'a> AsyncEngine<'a> {
         }
     }
 
+    /// Assemble a stage task from an already-resolved parameter snapshot
+    /// — the single construction point shared by the lockstep
+    /// (`self.params`/`self.stash`) and freerun (`StageCell`) sources.
+    fn stage_task(
+        &self,
+        s: usize,
+        params: Vec<SharedParams>,
+        x: Vec<f32>,
+        rows: usize,
+        gout: Option<Vec<f32>>,
+    ) -> StageTask {
+        let layers = self.sched.stages[s].layers.clone();
+        StageTask { shapes: layers.map(|l| self.shapes[l]).collect(), params, x, rows, gout }
+    }
+
     /// Build the stage task for a forward on the live parameters.
     fn fwd_task(&self, s: usize, x: Vec<f32>, rows: usize) -> StageTask {
         let layers = self.sched.stages[s].layers.clone();
-        StageTask {
-            shapes: layers.clone().map(|l| self.shapes[l]).collect(),
-            params: layers.map(|l| self.params.layers[l].clone()).collect(),
-            x,
-            rows,
-            gout: None,
-        }
+        let params = layers.map(|l| self.params.layers[l].clone()).collect();
+        self.stage_task(s, params, x, rows, None)
     }
 
     /// Build the stage task for a backward against the stashed version
     /// `ver` (fallback: live = zero staleness).
     fn bwd_task(&self, s: usize, ver: u64, x: Vec<f32>, gout: Vec<f32>, rows: usize) -> StageTask {
         let layers = self.sched.stages[s].layers.clone();
-        StageTask {
-            shapes: layers.clone().map(|l| self.shapes[l]).collect(),
-            params: layers.map(|l| self.stash.resolve(l, ver, &self.params)).collect(),
-            x,
-            rows,
-            gout: Some(gout),
-        }
+        let params = layers.map(|l| self.stash.resolve(l, ver, &self.params)).collect();
+        self.stage_task(s, params, x, rows, Some(gout))
     }
 
     /// Try to start work on a (worker, stage) device at time `t`.
@@ -236,7 +260,7 @@ impl<'a> AsyncEngine<'a> {
                     // grad is overwritten with gx at the Done event
                     let x = self.sched.jobs[job].stage_inputs[s].take().expect("stage input");
                     let gout = self.sched.jobs[job].grad.take().expect("upstream grad");
-                    executor.start((w, s), self.bwd_task(s, ver, x, gout, rows));
+                    executor.start((w, s), DeviceTask::Stage(self.bwd_task(s, ver, x, gout, rows)));
                     let mut dur = self.sched.stages[s].tb;
                     if self.cfg.pipe.workers[w].recompute {
                         dur += self.sched.stages[s].tf; // T1: extra forward
@@ -248,7 +272,7 @@ impl<'a> AsyncEngine<'a> {
                     let rows = self.sched.jobs[job].y.len();
                     let x = self.sched.jobs[job].stage_inputs[s].clone().expect("stage input");
                     self.sched.jobs[job].fwd_version[s] = self.sched.version[s];
-                    executor.start((w, s), self.fwd_task(s, x, rows));
+                    executor.start((w, s), DeviceTask::Stage(self.fwd_task(s, x, rows)));
                     let end = t + self.sched.stages[s].tf.max(1);
                     self.sched.dispatch(w, s, end, job, false);
                     return;
@@ -278,6 +302,7 @@ impl<'a> AsyncEngine<'a> {
         let scale = 1.0 / count as f32;
         let cur_ver = self.sched.version[s];
         let tau = cur_ver.saturating_sub(from_ver);
+        metrics.record_staleness(tau);
         let layers: Vec<usize> = self.sched.stages[s].layers.clone().collect();
         for (i, &l) in layers.iter().enumerate() {
             let mut g = std::mem::replace(&mut grads[i], GradBuf { gw: vec![], gb: vec![] });
@@ -319,8 +344,25 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Run to completion over the stream, dispatching stage math to
-    /// `executor`.
+    /// `executor`, under the given time `mode`.
     pub fn run(
+        self,
+        stream: &mut SyntheticStream,
+        plugin: &mut dyn OclPlugin,
+        ep: &EngineParams,
+        model: &ModelSpec,
+        executor: &mut dyn Executor,
+        mode: Mode,
+    ) -> RunResult {
+        match mode {
+            Mode::Lockstep => self.run_lockstep(stream, plugin, ep, model, executor),
+            Mode::Freerun => self.run_freerun(stream, plugin, ep, model, executor),
+        }
+    }
+
+    /// Lockstep: the event heap replays virtual `tf`/`tb` costs; metrics
+    /// are identical across executors (tests/executor_equiv.rs).
+    fn run_lockstep(
         mut self,
         stream: &mut SyntheticStream,
         plugin: &mut dyn OclPlugin,
@@ -346,13 +388,16 @@ impl<'a> AsyncEngine<'a> {
         metrics.exec_threads = executor.threads();
         let p = self.sched.num_stages();
 
+        let mut clock = VirtualClock::new();
         let mut arrived = 0u64;
         let mut next_batch = stream.next_batch();
         if next_batch.is_some() {
             self.sched.events.push(0, Ev::Arrive);
         }
 
-        while let Some((t, ev)) = self.sched.events.pop() {
+        while let Some((te, ev)) = self.sched.events.pop() {
+            clock.advance(te);
+            let t = clock.now();
             match ev {
                 Ev::Arrive => {
                     let batch = next_batch.take().expect("arrive without batch");
@@ -393,7 +438,7 @@ impl<'a> AsyncEngine<'a> {
                     self.kick(w, 0, t, executor);
                 }
                 Ev::Done { worker: w, stage: s, job, bwd } => {
-                    let result = executor.finish((w, s));
+                    let result = executor.finish((w, s)).into_stage();
                     if !bwd {
                         if s + 1 < p {
                             self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
@@ -410,6 +455,8 @@ impl<'a> AsyncEngine<'a> {
                                 t,
                                 crate::backend::accuracy(spec.classes, &logits, &y),
                             );
+                            metrics
+                                .record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
                             let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, &ctx);
                             metrics.record_loss(t, loss);
                             self.sched.jobs[job].grad = Some(gl);
@@ -464,10 +511,375 @@ impl<'a> AsyncEngine<'a> {
         );
         RunResult { metrics, params: self.params.layers }
     }
+
+    // -----------------------------------------------------------------
+    // Free-running wall-clock mode
+    // -----------------------------------------------------------------
+
+    /// Move the per-stage live state (params, stash, compensators) into
+    /// `Arc`-shared [`StageCell`]s so updates can run on device threads.
+    fn build_cells(&mut self) {
+        let p = self.sched.num_stages();
+        self.cells = (0..p)
+            .map(|s| {
+                let layers: Vec<usize> = self.sched.stages[s].layers.clone().collect();
+                let params: Vec<SharedParams> =
+                    layers.iter().map(|&l| self.params.layers[l].clone()).collect();
+                let comps: Vec<Box<dyn Compensator>> = layers
+                    .iter()
+                    .map(|_| make(self.cfg.comp_kind, self.cfg.comp_params))
+                    .collect();
+                StageCell::new(layers, params, self.stash_cap, comps)
+            })
+            .collect();
+    }
+
+    /// Full-model live snapshot assembled from the stage cells (stages
+    /// cover contiguous layer ranges in order).
+    fn free_params(&self) -> Vec<SharedParams> {
+        let mut v = Vec::with_capacity(self.shapes.len());
+        for cell in &self.cells {
+            v.extend(cell.snapshot().0);
+        }
+        v
+    }
+
+    /// Try to start stage work on device (w, s) at wall time `t`.
+    fn kick_free(&mut self, w: usize, s: usize, t: u64, executor: &mut dyn Executor) {
+        loop {
+            let sel = match self.sched.select_work(w, s, t) {
+                None => return,
+                Some(sel) => sel,
+            };
+            match sel {
+                WorkSel::Bwd(job) => {
+                    let omit = self.cfg.pipe.workers[w].omit[s];
+                    if omit > 0 && self.sched.jobs[job].seq % (omit + 1) != 0 {
+                        // T3: skip this backward (and the whole upstream
+                        // chain); device still free — look for more work
+                        self.sched.retire(job);
+                        continue;
+                    }
+                    let rows = self.sched.jobs[job].y.len();
+                    let ver = self.sched.jobs[job].fwd_version[s];
+                    let x = self.sched.jobs[job].stage_inputs[s].take().expect("stage input");
+                    let gout = self.sched.jobs[job].grad.take().expect("upstream grad");
+                    let task = self.stage_task(s, self.cells[s].resolve(ver), x, rows, Some(gout));
+                    executor.start((w, s), DeviceTask::Stage(task));
+                    self.sched.dispatch_flight(w, s, Flight::Bwd { job });
+                    self.flights += 1;
+                    return;
+                }
+                WorkSel::Fwd(job) => {
+                    let rows = self.sched.jobs[job].y.len();
+                    let x = self.sched.jobs[job].stage_inputs[s].clone().expect("stage input");
+                    let (params, ver) = self.cells[s].snapshot();
+                    self.sched.jobs[job].fwd_version[s] = ver;
+                    let task = self.stage_task(s, params, x, rows, None);
+                    executor.start((w, s), DeviceTask::Stage(task));
+                    self.sched.dispatch_flight(w, s, Flight::Fwd { job });
+                    self.flights += 1;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Ship an accumulated update to its owning device thread. Plugin
+    /// gradient adjustment happens here (the OCL policy stays on the
+    /// control thread); compensation + SGD run wherever the executor puts
+    /// the task — under the threaded executor, on device (w, s) itself.
+    ///
+    /// Deliberate ordering difference vs lockstep's `apply_update`: there,
+    /// compensation runs first and `adjust_layer_grad` sees the
+    /// compensated gradient against the live params; here the plugin
+    /// adjusts the raw averaged gradient against the dispatch-time
+    /// snapshot, and the device compensates the result toward whatever
+    /// version is live at execution. Keeping the plugin at dispatch is
+    /// what lets the update itself leave the scheduler thread; the
+    /// freerun-vs-lockstep tolerance tests use the plugin-free path where
+    /// the orders coincide.
+    fn dispatch_update_free(
+        &mut self,
+        w: usize,
+        s: usize,
+        plugin: &mut dyn OclPlugin,
+        ctx: &OclCtx,
+        executor: &mut dyn Executor,
+    ) {
+        let slot = &mut self.sched.slots[w][s];
+        let mut grads = slot.acc.take().expect("accumulated grads");
+        let count = slot.acc_count;
+        let arrivals = std::mem::take(&mut slot.acc_arrivals);
+        let from_version = slot.acc_from_version;
+        slot.acc_count = 0;
+        slot.acc_from_version = u64::MAX;
+        let scale = 1.0 / count as f32;
+        let layers: Vec<usize> = self.sched.stages[s].layers.clone().collect();
+        let (snap, _) = self.cells[s].snapshot();
+        for (i, &l) in layers.iter().enumerate() {
+            grads[i].scale(scale);
+            plugin.adjust_layer_grad(l, &mut grads[i], &snap[i], ctx);
+        }
+        executor.start(
+            (w, s),
+            DeviceTask::Update(UpdateTask {
+                cell: self.cells[s].clone(),
+                grads,
+                from_version,
+                lr: self.lr,
+            }),
+        );
+        self.sched.dispatch_flight(w, s, Flight::Update { arrivals });
+        self.flights += 1;
+    }
+
+    /// One arriving batch at wall time `now` (its scheduled arrival stamp
+    /// is `arrival`; admission may run late under load).
+    #[allow(clippy::too_many_arguments)]
+    fn on_arrive_free(
+        &mut self,
+        batch: Batch,
+        seq: u64,
+        arrival: u64,
+        now: u64,
+        plugin: &mut dyn OclPlugin,
+        ctx: &OclCtx,
+        metrics: &mut RunMetrics,
+        executor: &mut dyn Executor,
+    ) {
+        metrics.record_arrival();
+        if self.sched.over_capacity() {
+            // predict with live weights; drop from training
+            let params = self.free_params();
+            predict_only(
+                self.backend,
+                &self.shapes,
+                &params,
+                ctx.classes,
+                &batch.x,
+                &batch.y,
+                now,
+                metrics,
+            );
+            return;
+        }
+        let params = self.free_params();
+        let batch = plugin.augment(batch, &params, ctx);
+        let p = self.sched.num_stages();
+        let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
+        stage_inputs[0] = Some(batch.x.clone());
+        let (_, w) = self.sched.admit(Job {
+            arrival,
+            seq,
+            y: batch.y,
+            batch_x: batch.x,
+            stage_inputs,
+            fwd_version: vec![0; p],
+            grad: None,
+            done: false,
+        });
+        self.kick_free(w, 0, now, executor);
+    }
+
+    /// One device completion at wall time `t`, paired FIFO with its
+    /// dispatch via the slot's flight queue.
+    #[allow(clippy::too_many_arguments)]
+    fn on_done_free(
+        &mut self,
+        w: usize,
+        s: usize,
+        out: crate::pipeline::executor::DeviceOutput,
+        t: u64,
+        plugin: &mut dyn OclPlugin,
+        ctx: &OclCtx,
+        metrics: &mut RunMetrics,
+        executor: &mut dyn Executor,
+    ) {
+        self.flights -= 1;
+        let flight = self.sched.complete_flight(w, s, t);
+        let p = self.sched.num_stages();
+        match flight {
+            Flight::Fwd { job } => {
+                let result = out.into_stage();
+                if s + 1 < p {
+                    self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
+                    self.sched.slots[w][s + 1].fwd_q.push_back(job);
+                    self.kick_free(w, s + 1, t, executor);
+                } else {
+                    // logits ready: prediction + loss head
+                    let logits = result.out;
+                    let (y, bx) =
+                        (self.sched.jobs[job].y.clone(), self.sched.jobs[job].batch_x.clone());
+                    metrics
+                        .record_prediction(t, crate::backend::accuracy(ctx.classes, &logits, &y));
+                    metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                    let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, ctx);
+                    metrics.record_loss(t, loss);
+                    self.sched.jobs[job].grad = Some(gl);
+                    self.sched.slots[w][s].bwd_q.push_back(job);
+                }
+            }
+            Flight::Bwd { job } => {
+                let result = out.into_stage();
+                let grads = result.grads.expect("bwd grads");
+                let gx = result.out;
+                let slot = &mut self.sched.slots[w][s];
+                match &mut slot.acc {
+                    None => slot.acc = Some(grads),
+                    Some(a) => {
+                        for (ag, g) in a.iter_mut().zip(&grads) {
+                            ag.add(g);
+                        }
+                    }
+                }
+                slot.acc_count += 1;
+                slot.acc_arrivals.push(self.sched.jobs[job].arrival);
+                slot.acc_from_version =
+                    slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
+                if self.sched.slots[w][s].acc_count >= self.cfg.pipe.workers[w].accum[s] {
+                    self.dispatch_update_free(w, s, plugin, ctx, executor);
+                }
+                if s > 0 {
+                    self.sched.jobs[job].grad = Some(gx);
+                    self.sched.slots[w][s - 1].bwd_q.push_back(job);
+                    self.kick_free(w, s - 1, t, executor);
+                } else {
+                    self.sched.retire(job);
+                }
+            }
+            Flight::Update { arrivals } => {
+                let outcome = out.into_update();
+                metrics.record_staleness(outcome.staleness);
+                let frac = self.sched.stages[s].params as f64 / self.total_params as f64;
+                for a in arrivals {
+                    metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
+                }
+                self.update_count += 1;
+                if self.update_count % self.cfg.plugin_cadence == 0 {
+                    let snap = self.free_params();
+                    plugin.after_update(&snap, ctx);
+                }
+                let bytes: usize = self.cells.iter().map(|c| c.stash_bytes()).sum();
+                metrics.observe_live_bytes(bytes);
+            }
+        }
+        self.kick_free(w, s, t, executor);
+    }
+
+    /// Freerun: arrivals are paced by the wall clock, completions land
+    /// whenever device threads actually finish, and stage updates run on
+    /// the owning device thread — contention, imbalance, and staleness
+    /// are observed properties of the run, not replayed costs.
+    fn run_freerun(
+        mut self,
+        stream: &mut SyntheticStream,
+        plugin: &mut dyn OclPlugin,
+        ep: &EngineParams,
+        model: &ModelSpec,
+        executor: &mut dyn Executor,
+    ) -> RunResult {
+        let spec = stream.spec().clone();
+        let prof = Profile::analytic(model, spec.batch);
+        self.stage_times(&prof);
+        let td = if ep.td == 0 { prof.default_td() } else { ep.td };
+        // decay is resolved per virtual tick; freerun ages updates in wall
+        // microseconds (1 tick replayed as WALL_TICK_US µs), so rescale to
+        // keep the adaptation rate comparable with lockstep at any replay
+        // speed
+        self.decay_c = ep.decay(td) / crate::stream::WALL_TICK_US as f64;
+        let td_us = arrival_interval_us(td);
+        self.build_cells();
+        let shapes = self.shapes.clone();
+        let ctx = OclCtx {
+            backend: self.backend,
+            shapes: &shapes,
+            classes: spec.classes,
+            batch: spec.batch,
+            features: spec.features,
+        };
+        let mut metrics = RunMetrics::default();
+        let test = stream.test_set(ep.tacc_per_class);
+        metrics.exec_threads = executor.threads();
+
+        let clock = WallClock::new();
+        let mut arrived = 0u64;
+        let mut next_batch = stream.next_batch();
+        loop {
+            // admit every arrival already due at the wall clock
+            while next_batch.is_some() && clock.now() >= arrived * td_us {
+                let batch = next_batch.take().expect("due arrival");
+                let due = arrived * td_us;
+                let seq = arrived;
+                arrived += 1;
+                next_batch = stream.next_batch();
+                self.on_arrive_free(
+                    batch,
+                    seq,
+                    due,
+                    clock.now(),
+                    plugin,
+                    &ctx,
+                    &mut metrics,
+                    executor,
+                );
+            }
+            // react to whichever device finished first
+            while let Some(((w, s), out)) = executor.try_finish_any() {
+                self.on_done_free(w, s, out, clock.now(), plugin, &ctx, &mut metrics, executor);
+            }
+            if next_batch.is_none() && self.flights == 0 {
+                break;
+            }
+            if self.flights > 0 {
+                // sleep on the completion channel, but wake for the next
+                // scheduled arrival
+                let timeout = if next_batch.is_some() {
+                    Duration::from_micros((arrived * td_us).saturating_sub(clock.now()).max(1))
+                } else {
+                    Duration::from_millis(100)
+                };
+                if let Some(((w, s), out)) = executor.wait_any(timeout) {
+                    self.on_done_free(
+                        w,
+                        s,
+                        out,
+                        clock.now(),
+                        plugin,
+                        &ctx,
+                        &mut metrics,
+                        executor,
+                    );
+                }
+            } else {
+                clock.sleep_until(arrived * td_us);
+            }
+        }
+        debug_assert_eq!(self.sched.inflight, 0, "every admitted job retired");
+
+        // analytic memory (Eq. 4) + plugin + compensator state
+        let comp_bytes: usize = self.cells.iter().map(|c| c.comp_state_bytes()).sum();
+        metrics.mem_bytes = mem_footprint(&self.cfg.partition, &prof, &self.cfg.pipe)
+            + plugin.memory_bytes() as f64
+            + comp_bytes as f64;
+        let final_params = self.free_params();
+        metrics.tacc = eval_tacc(
+            self.backend,
+            &self.shapes,
+            &final_params,
+            spec.classes,
+            &test,
+            spec.batch,
+        );
+        RunResult { metrics, params: final_params }
+    }
 }
 
-/// Build + run with an explicit executor choice. `Threaded` spawns one OS
-/// thread per active (worker, stage) device for the duration of the run.
+/// Build + run with an explicit executor and time-mode choice. `Threaded`
+/// spawns one OS thread per active (worker, stage) device for the
+/// duration of the run; `Mode::Freerun` paces the run against the wall
+/// clock instead of the virtual event heap.
+#[allow(clippy::too_many_arguments)]
 pub fn run_async_with(
     cfg: AsyncCfg,
     stream: &mut SyntheticStream,
@@ -476,24 +888,26 @@ pub fn run_async_with(
     ep: &EngineParams,
     model: &ModelSpec,
     kind: ExecutorKind,
+    mode: Mode,
 ) -> RunResult {
     let engine = AsyncEngine::new(backend, model, cfg, ep);
     match kind {
         ExecutorKind::Sim => {
             let mut ex = SimExecutor::new(backend);
-            engine.run(stream, plugin, ep, model, &mut ex)
+            engine.run(stream, plugin, ep, model, &mut ex, mode)
         }
         ExecutorKind::Threaded => {
             let devices = engine.devices();
             std::thread::scope(|scope| {
                 let mut ex = ThreadedExecutor::spawn(scope, backend, &devices);
-                engine.run(stream, plugin, ep, model, &mut ex)
+                engine.run(stream, plugin, ep, model, &mut ex, mode)
             })
         }
     }
 }
 
-/// Convenience: build + run in one call on the simulation executor.
+/// Convenience: build + run in one call on the simulation executor in
+/// lockstep (virtual-time) mode.
 pub fn run_async(
     cfg: AsyncCfg,
     stream: &mut SyntheticStream,
@@ -502,7 +916,7 @@ pub fn run_async(
     ep: &EngineParams,
     model: &ModelSpec,
 ) -> RunResult {
-    run_async_with(cfg, stream, backend, plugin, ep, model, ExecutorKind::Sim)
+    run_async_with(cfg, stream, backend, plugin, ep, model, ExecutorKind::Sim, Mode::Lockstep)
 }
 
 #[cfg(test)]
@@ -667,9 +1081,21 @@ mod tests {
                 &ep,
                 &m,
                 ExecutorKind::Threaded,
+                Mode::Lockstep,
             );
             assert!(r.metrics.trained > 0, "{}", schedule.name());
             assert!(r.metrics.exec_threads > 1, "{}", schedule.name());
         }
+    }
+
+    #[test]
+    fn lockstep_records_latency_and_staleness_observability() {
+        let r = run_sched(AsyncSchedule::Pipedream, 80);
+        // one latency sample per trained-path prediction
+        assert_eq!(r.metrics.latencies.len() as u64, 80 - r.metrics.dropped);
+        assert!(r.metrics.latency_percentile(50.0) > 0, "pipeline latency is nonzero");
+        // every update recorded a staleness bucket
+        let hist_total: u64 = r.metrics.staleness_hist.iter().sum();
+        assert_eq!(hist_total, r.metrics.trained);
     }
 }

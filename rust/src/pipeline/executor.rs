@@ -1,33 +1,45 @@
 //! Execution backends for the asynchronous pipeline scheduler.
 //!
 //! The scheduler ([`crate::pipeline::sched`]) decides *what* runs on which
-//! (worker, stage) device and *when* in virtual time; an [`Executor`]
-//! decides *where* the numeric work actually happens:
+//! (worker, stage) device and *when*; an [`Executor`] decides *where* the
+//! numeric work actually happens:
 //!
-//!   - [`SimExecutor`]      — runs each stage task inline on the scheduler
+//!   - [`SimExecutor`]      — runs each device task inline on the scheduler
 //!     thread at dispatch time. This is the discrete-event simulation used
 //!     by the planner sweeps: cheap, deterministic, single-threaded.
 //!   - [`ThreadedExecutor`] — one OS thread per (worker, stage) device,
-//!     fed over channels. Stage tasks carry `Arc`-shared parameter
-//!     snapshots, so device threads compute concurrently while the
-//!     scheduler keeps ordering updates in virtual time ("lockstep").
+//!     fed over channels. Device tasks carry `Arc`-shared parameter
+//!     snapshots, so device threads compute concurrently.
 //!
-//! Both executors run the *same* schedule and the same math on the same
-//! inputs, so a run's `RunMetrics` are identical between them — the
-//! equivalence test in `tests/executor_equiv.rs` pins this. The contract:
-//! per device, tasks complete FIFO — `start` dispatches, `finish` joins at
-//! that task's `Done` event. A device normally has one task in flight, but
-//! at an exact-tick boundary (`busy_until == t`) the scheduler may dispatch
-//! the next task while the previous `Done` is still queued, so executors
-//! must queue per-device results rather than hold a single slot.
+//! A device task is either a [`StageTask`] (forward / backward math) or an
+//! [`UpdateTask`] (SGD + gradient compensation against a [`StageCell`],
+//! the stage state owned by its device thread in free-running mode).
+//!
+//! Two completion paths serve the two scheduling modes
+//! ([`crate::pipeline::sched::Mode`]):
+//!
+//!   - `finish(dev)` — blocking, per-device FIFO. The lockstep engine
+//!     joins each task at its virtual `Done` event, so with the same seed
+//!     both executors produce identical `RunMetrics`
+//!     (tests/executor_equiv.rs pins this). A device normally has one
+//!     task in flight, but at an exact-tick boundary (`busy_until == t`)
+//!     the scheduler may dispatch the next task while the previous `Done`
+//!     is still queued, so executors queue per-device results rather than
+//!     hold a single slot.
+//!   - `try_finish_any` / `wait_any` — non-blocking (resp. bounded-wait)
+//!     drain of *any* device's completion, in real completion order. The
+//!     freerun engine reacts to whichever device finishes first.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::Scope;
+use std::time::Duration;
 
 use crate::backend::Backend;
+use crate::compensate::{CompContext, Compensator};
 use crate::config::LayerShape;
-use crate::model::{GradBuf, SharedParams};
+use crate::model::{GradBuf, SharedParams, VersionStash};
 
 /// Which executor to run an async engine with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,7 +67,7 @@ impl ExecutorKind {
     }
 }
 
-/// One unit of device work: a stage forward (`gout == None`) or a stage
+/// One unit of stage math: a stage forward (`gout == None`) or a stage
 /// backward with activation recomputation (`gout == Some`). Parameters are
 /// the exact snapshots the scheduler resolved at dispatch (live for
 /// forward, stashed-by-version for backward).
@@ -74,6 +86,173 @@ pub struct StageTask {
 pub struct StageOutput {
     pub out: Vec<f32>,
     pub grads: Option<Vec<GradBuf>>,
+}
+
+/// Live state of one pipeline stage, shared between the scheduler thread
+/// and the stage's device threads in free-running mode. Holds the stage's
+/// live `Arc`-shared versioned parameters, its weight stash, and its
+/// per-layer compensators behind one lock, so `apply_update` (SGD +
+/// gradient compensation) runs wherever the [`UpdateTask`] is executed —
+/// on the owning device thread under [`ThreadedExecutor`]. The scheduler
+/// only ever takes brief snapshots for dispatch; whatever version it
+/// observes *is* the staleness the update later measures.
+pub struct StageCell {
+    /// global layer ids this stage owns (immutable)
+    pub layers: Vec<usize>,
+    inner: Mutex<CellInner>,
+}
+
+struct CellInner {
+    /// live parameters, one entry per stage layer
+    params: Vec<SharedParams>,
+    /// per-layer bounded version history (weight stashing / delta chains)
+    stash: Vec<VersionStash>,
+    /// per-layer compensation policies (stateful: Iter-Fisher EMA)
+    comps: Vec<Box<dyn Compensator>>,
+    version: u64,
+}
+
+impl StageCell {
+    /// Seed a cell at version 0 from the engine's initial parameters.
+    pub fn new(
+        layers: Vec<usize>,
+        params: Vec<SharedParams>,
+        stash_cap: usize,
+        comps: Vec<Box<dyn Compensator>>,
+    ) -> Arc<Self> {
+        let stash = params
+            .iter()
+            .map(|p| {
+                let mut s = VersionStash::new(stash_cap.max(2));
+                s.push(0, p.clone());
+                s
+            })
+            .collect();
+        Arc::new(StageCell {
+            layers,
+            inner: Mutex::new(CellInner { params, stash, comps, version: 0 }),
+        })
+    }
+
+    /// Live parameter snapshot + its version (forward dispatch).
+    pub fn snapshot(&self) -> (Vec<SharedParams>, u64) {
+        let inner = self.inner.lock().expect("stage cell");
+        (inner.params.clone(), inner.version)
+    }
+
+    /// Parameters as of stashed `version`, falling back to the live copy
+    /// (zero staleness) after eviction — backward dispatch.
+    pub fn resolve(&self, version: u64) -> Vec<SharedParams> {
+        let inner = self.inner.lock().expect("stage cell");
+        inner
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, live)| inner.stash[i].get(version).cloned().unwrap_or_else(|| live.clone()))
+            .collect()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.lock().expect("stage cell").version
+    }
+
+    /// Logical stash bytes (measured-memory cross-check vs Eq. 4).
+    pub fn stash_bytes(&self) -> usize {
+        let inner = self.inner.lock().expect("stage cell");
+        inner.stash.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Extra compensator state bytes (Alg. 1's EMA buffers).
+    pub fn comp_state_bytes(&self) -> usize {
+        let inner = self.inner.lock().expect("stage cell");
+        inner.comps.iter().map(|c| c.state_bytes()).sum()
+    }
+
+    /// Apply an averaged gradient that was computed against `from_version`:
+    /// compensate toward the *current* live version (whatever it is by the
+    /// time this runs — the observed staleness), SGD-step every stage
+    /// layer, bump the version, and stash the new snapshot.
+    pub fn apply_update(
+        &self,
+        backend: &dyn Backend,
+        mut grads: Vec<GradBuf>,
+        from_version: u64,
+        lr: f32,
+    ) -> UpdateOutcome {
+        let mut guard = self.inner.lock().expect("stage cell");
+        let inner = &mut *guard;
+        let cur = inner.version;
+        let tau = cur.saturating_sub(from_version);
+        for i in 0..inner.params.len() {
+            let g = std::mem::replace(&mut grads[i], GradBuf { gw: vec![], gb: vec![] });
+            let (chain, jump) = if inner.comps[i].needs_deltas() && tau > 0 {
+                (
+                    inner.stash[i].delta_chain(from_version, cur).unwrap_or_default(),
+                    inner.stash[i].jump_delta(from_version, cur),
+                )
+            } else {
+                (Vec::new(), None)
+            };
+            let cctx = CompContext { backend, tau, chain: &chain, jump: jump.as_ref(), lr };
+            let (g, lr_scale) = inner.comps[i].compensate(g, &cctx);
+            let updated = backend.sgd(&inner.params[i], &g, lr * lr_scale);
+            inner.params[i] = Arc::new(updated);
+        }
+        inner.version += 1;
+        let new_version = inner.version;
+        for i in 0..inner.params.len() {
+            let p = inner.params[i].clone();
+            inner.stash[i].push(new_version, p);
+        }
+        UpdateOutcome { new_version, staleness: tau }
+    }
+}
+
+/// A parameter update shipped to the owning device thread (freerun).
+/// `grads` are already averaged over the accumulation window and
+/// plugin-adjusted at dispatch; compensation + SGD happen at execution.
+pub struct UpdateTask {
+    pub cell: Arc<StageCell>,
+    pub grads: Vec<GradBuf>,
+    /// minimum forward version of the contributing microbatches
+    pub from_version: u64,
+    pub lr: f32,
+}
+
+/// Result of an [`UpdateTask`].
+pub struct UpdateOutcome {
+    pub new_version: u64,
+    /// staleness τ observed at application time (versions the stage
+    /// advanced between the contributing forwards and this update)
+    pub staleness: u64,
+}
+
+/// One unit of device work.
+pub enum DeviceTask {
+    Stage(StageTask),
+    Update(UpdateTask),
+}
+
+/// Result of a [`DeviceTask`].
+pub enum DeviceOutput {
+    Stage(StageOutput),
+    Update(UpdateOutcome),
+}
+
+impl DeviceOutput {
+    pub fn into_stage(self) -> StageOutput {
+        match self {
+            DeviceOutput::Stage(s) => s,
+            DeviceOutput::Update(_) => panic!("expected stage output, got update outcome"),
+        }
+    }
+
+    pub fn into_update(self) -> UpdateOutcome {
+        match self {
+            DeviceOutput::Update(u) => u,
+            DeviceOutput::Stage(_) => panic!("expected update outcome, got stage output"),
+        }
+    }
 }
 
 /// Execute one stage task through a backend — the single numeric routine
@@ -119,43 +298,69 @@ pub fn run_stage(backend: &dyn Backend, task: StageTask) -> StageOutput {
     }
 }
 
-/// Where stage tasks run. Per device, `finish` returns results in
-/// `start` order (the scheduler's per-device `Done` events are strictly
-/// time-ordered, so FIFO pairing is exact).
+/// Execute any device task — stage math or a stage-cell update.
+pub fn run_device_task(backend: &dyn Backend, task: DeviceTask) -> DeviceOutput {
+    match task {
+        DeviceTask::Stage(t) => DeviceOutput::Stage(run_stage(backend, t)),
+        DeviceTask::Update(t) => {
+            DeviceOutput::Update(t.cell.apply_update(backend, t.grads, t.from_version, t.lr))
+        }
+    }
+}
+
+/// Where device tasks run. Per device, `finish` returns results in
+/// `start` order; `try_finish_any` / `wait_any` drain completions across
+/// all devices in completion order.
 pub trait Executor {
-    fn start(&mut self, dev: (usize, usize), task: StageTask);
-    fn finish(&mut self, dev: (usize, usize)) -> StageOutput;
+    fn start(&mut self, dev: (usize, usize), task: DeviceTask);
+    /// Blocking per-device FIFO join (the lockstep engine's `Done` path).
+    fn finish(&mut self, dev: (usize, usize)) -> DeviceOutput;
+    /// Non-blocking: the next completed task from any device, if ready.
+    fn try_finish_any(&mut self) -> Option<((usize, usize), DeviceOutput)>;
+    /// Block up to `timeout` for any device to complete.
+    fn wait_any(&mut self, timeout: Duration) -> Option<((usize, usize), DeviceOutput)>;
     /// Number of compute threads backing this executor (1 = inline).
     fn threads(&self) -> usize;
 }
 
 /// Inline executor: computes at dispatch on the calling thread and parks
-/// the result until the scheduler's `Done` event collects it — exactly the
-/// historical single-threaded simulation behavior.
+/// the result until the scheduler collects it — exactly the historical
+/// single-threaded simulation behavior.
 pub struct SimExecutor<'a> {
     backend: &'a dyn Backend,
-    /// per-device FIFO of parked results (mirrors the threaded executor's
-    /// channel semantics, so exact-tick double dispatch pairs correctly)
-    pending: HashMap<(usize, usize), VecDeque<StageOutput>>,
+    /// parked results in completion (== dispatch) order; per-device FIFO
+    /// is a consequence, so exact-tick double dispatch pairs correctly
+    pending: VecDeque<((usize, usize), DeviceOutput)>,
 }
 
 impl<'a> SimExecutor<'a> {
     pub fn new(backend: &'a dyn Backend) -> Self {
-        SimExecutor { backend, pending: HashMap::new() }
+        SimExecutor { backend, pending: VecDeque::new() }
     }
 }
 
 impl Executor for SimExecutor<'_> {
-    fn start(&mut self, dev: (usize, usize), task: StageTask) {
-        let out = run_stage(self.backend, task);
-        self.pending.entry(dev).or_default().push_back(out);
+    fn start(&mut self, dev: (usize, usize), task: DeviceTask) {
+        let out = run_device_task(self.backend, task);
+        self.pending.push_back((dev, out));
     }
 
-    fn finish(&mut self, dev: (usize, usize)) -> StageOutput {
-        self.pending
-            .get_mut(&dev)
-            .and_then(VecDeque::pop_front)
-            .expect("no in-flight task on device")
+    fn finish(&mut self, dev: (usize, usize)) -> DeviceOutput {
+        let i = self
+            .pending
+            .iter()
+            .position(|(d, _)| *d == dev)
+            .expect("no in-flight task on device");
+        self.pending.remove(i).expect("indexed entry").1
+    }
+
+    fn try_finish_any(&mut self) -> Option<((usize, usize), DeviceOutput)> {
+        self.pending.pop_front()
+    }
+
+    fn wait_any(&mut self, _timeout: Duration) -> Option<((usize, usize), DeviceOutput)> {
+        // inline execution: everything started has already completed
+        self.pending.pop_front()
     }
 
     fn threads(&self) -> usize {
@@ -163,18 +368,19 @@ impl Executor for SimExecutor<'_> {
     }
 }
 
-struct DeviceLink {
-    tx: Sender<StageTask>,
-    rx: Receiver<StageOutput>,
-}
-
-/// One OS thread per (worker, stage) device, exchanging activations and
-/// gradients over channels. Spawned inside a [`std::thread::scope`] so the
-/// backend can be borrowed (it must be `Sync` — enforced by the `Backend`
-/// supertrait). Dropping the executor closes the task channels and the
-/// device threads exit; the scope joins them.
+/// One OS thread per (worker, stage) device, exchanging tasks and results
+/// over channels. All devices report into one shared completion channel
+/// (per-device order is preserved — each device is a single producer), so
+/// the scheduler can block on "whichever device finishes first". Spawned
+/// inside a [`std::thread::scope`] so the backend can be borrowed (it must
+/// be `Sync` — enforced by the `Backend` supertrait). Dropping the
+/// executor closes the task channels and the device threads exit; the
+/// scope joins them.
 pub struct ThreadedExecutor {
-    links: HashMap<(usize, usize), DeviceLink>,
+    links: HashMap<(usize, usize), Sender<DeviceTask>>,
+    done_rx: Receiver<((usize, usize), DeviceOutput)>,
+    /// completions drained while waiting for a specific device in `finish`
+    parked: VecDeque<((usize, usize), DeviceOutput)>,
 }
 
 impl ThreadedExecutor {
@@ -183,30 +389,54 @@ impl ThreadedExecutor {
         backend: &'env dyn Backend,
         devices: &[(usize, usize)],
     ) -> Self {
+        let (done_tx, done_rx) = channel::<((usize, usize), DeviceOutput)>();
         let mut links = HashMap::new();
         for &dev in devices {
-            let (task_tx, task_rx) = channel::<StageTask>();
-            let (out_tx, out_rx) = channel::<StageOutput>();
+            let (task_tx, task_rx) = channel::<DeviceTask>();
+            let out_tx = done_tx.clone();
             scope.spawn(move || {
                 while let Ok(task) = task_rx.recv() {
-                    if out_tx.send(run_stage(backend, task)).is_err() {
+                    if out_tx.send((dev, run_device_task(backend, task))).is_err() {
                         break;
                     }
                 }
             });
-            links.insert(dev, DeviceLink { tx: task_tx, rx: out_rx });
+            links.insert(dev, task_tx);
         }
-        ThreadedExecutor { links }
+        ThreadedExecutor { links, done_rx, parked: VecDeque::new() }
     }
 }
 
 impl Executor for ThreadedExecutor {
-    fn start(&mut self, dev: (usize, usize), task: StageTask) {
-        self.links[&dev].tx.send(task).expect("device thread alive");
+    fn start(&mut self, dev: (usize, usize), task: DeviceTask) {
+        self.links[&dev].send(task).expect("device thread alive");
     }
 
-    fn finish(&mut self, dev: (usize, usize)) -> StageOutput {
-        self.links[&dev].rx.recv().expect("device thread alive")
+    fn finish(&mut self, dev: (usize, usize)) -> DeviceOutput {
+        if let Some(i) = self.parked.iter().position(|(d, _)| *d == dev) {
+            return self.parked.remove(i).expect("indexed entry").1;
+        }
+        loop {
+            let (d, out) = self.done_rx.recv().expect("device thread alive");
+            if d == dev {
+                return out;
+            }
+            self.parked.push_back((d, out));
+        }
+    }
+
+    fn try_finish_any(&mut self) -> Option<((usize, usize), DeviceOutput)> {
+        if let Some(x) = self.parked.pop_front() {
+            return Some(x);
+        }
+        self.done_rx.try_recv().ok()
+    }
+
+    fn wait_any(&mut self, timeout: Duration) -> Option<((usize, usize), DeviceOutput)> {
+        if let Some(x) = self.parked.pop_front() {
+            return Some(x);
+        }
+        self.done_rx.recv_timeout(timeout).ok()
     }
 
     fn threads(&self) -> usize {
@@ -218,6 +448,7 @@ impl Executor for ThreadedExecutor {
 mod tests {
     use super::*;
     use crate::backend::native::NativeBackend;
+    use crate::compensate::{make, CompKind, CompParams};
     use crate::config::Act;
     use crate::model::LayerParams;
     use std::sync::Arc;
@@ -240,17 +471,21 @@ mod tests {
         }
     }
 
+    fn stage(bwd: bool) -> DeviceTask {
+        DeviceTask::Stage(task(bwd))
+    }
+
     #[test]
     fn sim_and_threaded_produce_identical_stage_results() {
         let be = NativeBackend;
         for bwd in [false, true] {
             let mut sim = SimExecutor::new(&be);
-            sim.start((0, 0), task(bwd));
-            let a = sim.finish((0, 0));
+            sim.start((0, 0), stage(bwd));
+            let a = sim.finish((0, 0)).into_stage();
             let b = std::thread::scope(|s| {
                 let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
-                th.start((0, 0), task(bwd));
-                th.finish((0, 0))
+                th.start((0, 0), stage(bwd));
+                th.finish((0, 0)).into_stage()
             });
             assert_eq!(a.out, b.out, "bwd={bwd}");
             match (a.grads, b.grads) {
@@ -277,19 +512,19 @@ mod tests {
         let fwd = run_stage(&be, task(false));
         let bwd = run_stage(&be, task(true));
         let mut sim = SimExecutor::new(&be);
-        sim.start((0, 0), task(true)); // earlier bwd, Done still queued
-        sim.start((0, 0), task(false)); // next fwd dispatched at same tick
-        let first = sim.finish((0, 0));
-        let second = sim.finish((0, 0));
+        sim.start((0, 0), stage(true)); // earlier bwd, Done still queued
+        sim.start((0, 0), stage(false)); // next fwd dispatched at same tick
+        let first = sim.finish((0, 0)).into_stage();
+        let second = sim.finish((0, 0)).into_stage();
         assert_eq!(first.out, bwd.out, "first finish gets the earlier task");
         assert!(first.grads.is_some());
         assert_eq!(second.out, fwd.out);
         assert!(second.grads.is_none());
         let (tf, ts) = std::thread::scope(|s| {
             let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
-            th.start((0, 0), task(true));
-            th.start((0, 0), task(false));
-            (th.finish((0, 0)), th.finish((0, 0)))
+            th.start((0, 0), stage(true));
+            th.start((0, 0), stage(false));
+            (th.finish((0, 0)).into_stage(), th.finish((0, 0)).into_stage())
         });
         assert_eq!(tf.out, bwd.out);
         assert_eq!(ts.out, fwd.out);
@@ -304,13 +539,86 @@ mod tests {
             assert_eq!(th.threads(), 4);
             // all four devices in flight simultaneously before any join
             for &d in &devices {
-                th.start(d, task(false));
+                th.start(d, stage(false));
             }
-            devices.map(|d| th.finish(d))
+            devices.map(|d| th.finish(d).into_stage())
         });
         let reference = run_stage(&be, task(false));
         for o in outs {
             assert_eq!(o.out, reference.out);
         }
+    }
+
+    /// The completion-drain path returns whatever finished, across
+    /// devices, and reports nothing when the executor is idle.
+    #[test]
+    fn drain_any_returns_completions_then_empties() {
+        let be = NativeBackend;
+        std::thread::scope(|s| {
+            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0), (0, 1)]);
+            assert!(th.try_finish_any().is_none(), "idle executor");
+            th.start((0, 0), stage(false));
+            th.start((0, 1), stage(false));
+            let mut seen = Vec::new();
+            while seen.len() < 2 {
+                if let Some((dev, out)) = th.wait_any(Duration::from_secs(5)) {
+                    assert!(out.into_stage().grads.is_none());
+                    seen.push(dev);
+                }
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, vec![(0, 0), (0, 1)]);
+            assert!(th.wait_any(Duration::from_millis(10)).is_none(), "drained");
+        });
+        // the sim executor drains in dispatch order
+        let mut sim = SimExecutor::new(&be);
+        assert!(sim.try_finish_any().is_none());
+        sim.start((0, 1), stage(false));
+        sim.start((0, 0), stage(true));
+        assert_eq!(sim.try_finish_any().expect("first").0, (0, 1));
+        assert_eq!(sim.wait_any(Duration::ZERO).expect("second").0, (0, 0));
+        assert!(sim.try_finish_any().is_none());
+    }
+
+    /// Update tasks mutate the stage cell wherever they run; the observed
+    /// staleness is whatever the cell version advanced to in between.
+    #[test]
+    fn update_task_applies_sgd_on_the_device_thread() {
+        let be = NativeBackend;
+        let p0 = Arc::new(LayerParams { w: vec![1.0, 2.0], b: vec![0.5] });
+        let cell = StageCell::new(
+            vec![0],
+            vec![p0],
+            4,
+            vec![make(CompKind::NoComp, CompParams::default())],
+        );
+        let g = GradBuf { gw: vec![1.0, -1.0], gb: vec![2.0] };
+        let outcome = std::thread::scope(|s| {
+            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
+            th.start(
+                (0, 0),
+                DeviceTask::Update(UpdateTask {
+                    cell: cell.clone(),
+                    grads: vec![g],
+                    from_version: 0,
+                    lr: 0.5,
+                }),
+            );
+            th.finish((0, 0)).into_update()
+        });
+        assert_eq!(outcome.new_version, 1);
+        assert_eq!(outcome.staleness, 0);
+        assert_eq!(cell.version(), 1);
+        let (params, ver) = cell.snapshot();
+        assert_eq!(ver, 1);
+        assert_eq!(params[0].w, vec![0.5, 2.5]);
+        assert_eq!(params[0].b, vec![-0.5]);
+        // version 0 still resolvable from the stash (weight stashing)
+        assert_eq!(cell.resolve(0)[0].w, vec![1.0, 2.0]);
+        // a second update computed against version 0 observes staleness 1
+        let g2 = GradBuf { gw: vec![0.0, 0.0], gb: vec![0.0] };
+        let o2 = cell.apply_update(&be, vec![g2], 0, 0.5);
+        assert_eq!(o2.staleness, 1);
+        assert_eq!(o2.new_version, 2);
     }
 }

@@ -1,22 +1,32 @@
-//! Training engines over virtual time — layered as scheduler / executor.
+//! Training engines — layered as clock / scheduler / executor / policy.
 //!
 //! All engines share the same contract: consume a [`SyntheticStream`],
 //! train through a [`Backend`] with an [`OclPlugin`], and fill a
-//! [`RunMetrics`]. Virtual time is measured in ticks; data arrives every
-//! `t^d` ticks (one microbatch per arrival, the paper's `D^t`).
+//! [`RunMetrics`]. Time is measured in ticks; data arrives every `t^d`
+//! ticks (one microbatch per arrival, the paper's `D^t`).
 //!
-//! The subsystem is split into three layers:
+//! The subsystem is split into four layers:
 //!
-//!   - [`sched`]    — the reusable scheduling core: virtual-time event
-//!     queue, 1F1B backward-preemption priority, microbatch→worker
-//!     routing, per-stage version counters, admission capacity, and the
-//!     shared predict-and-drop path. Pure mechanism; no numerics.
-//!   - [`executor`] — where stage math runs. [`executor::SimExecutor`]
+//!   - [`sched`]    — the reusable scheduling core: event queue, 1F1B
+//!     backward-preemption priority, microbatch→worker routing, per-stage
+//!     version counters, admission capacity, freerun flight tracking, and
+//!     the shared predict-and-drop path. Pure mechanism; no numerics.
+//!     Also home of the time sources: [`sched::Mode`] selects between a
+//!     [`sched::VirtualClock`] (lockstep — the event heap replays analytic
+//!     `tf`/`tb` costs, deterministic and executor-independent) and a
+//!     [`sched::WallClock`] (freerun — 1 tick = 1µs of real time; arrivals
+//!     are paced by real intervals and `Done` completions are stamped when
+//!     device threads actually finish).
+//!   - [`executor`] — where device work runs. [`executor::SimExecutor`]
 //!     computes inline on the scheduler thread (the planner's cheap
 //!     discrete-event simulation); [`executor::ThreadedExecutor`] runs one
 //!     OS thread per (worker, stage) device with channel-based
-//!     activation/gradient exchange over `Arc`-shared parameter snapshots
-//!     (real wall-clock parallelism, same schedule, identical metrics).
+//!     activation/gradient exchange over `Arc`-shared parameter snapshots.
+//!     Lockstep joins per-device FIFO (`finish`, metric-identical across
+//!     executors); freerun drains whichever device finishes first
+//!     (`try_finish_any` / `wait_any`). In freerun, SGD + gradient
+//!     compensation also run on the owning device thread against
+//!     [`executor::StageCell`]s, so observed staleness is emergent.
 //!   - [`engine`] / [`sync`] — policy: the fine-grained asynchronous
 //!     engine (Ferret, PipeDream, PipeDream-2BW — Table 3's right half)
 //!     drives sched + executor and layers weight stashing, gradient
@@ -36,6 +46,8 @@ pub mod engine;
 pub mod executor;
 pub mod sched;
 pub mod sync;
+
+pub use sched::{Clock, Mode, VirtualClock, WallClock};
 
 use crate::metrics::RunMetrics;
 use crate::model::SharedParams;

@@ -4,12 +4,20 @@
 //! math runs (see [`crate::pipeline::executor`]) and of the policy knobs
 //! (compensation, plugins) the engine layers on top:
 //!
+//!   - [`Clock`] / [`Mode`] — *when* the schedule advances. A
+//!     [`VirtualClock`] replays the analytic `tf`/`tb` costs through the
+//!     event heap (lockstep: metrics identical on every executor); a
+//!     [`WallClock`] stamps events with real elapsed microseconds so
+//!     `Done` completions land whenever the device thread actually
+//!     finishes and `Arrive` events are paced by real arrival intervals
+//!     (freerun: staleness and latency are emergent, not simulated).
 //!   - [`EventQueue`] — deterministic virtual-time event heap (ties broken
 //!     by insertion order).
 //!   - [`SchedCore`]  — (worker, stage) device slots with 1F1B
 //!     backward-preemption priority, microbatch→worker round-robin
 //!     routing, per-stage version counters, in-flight accounting and
-//!     admission capacity.
+//!     admission capacity. In freerun the same slots track in-flight
+//!     [`Flight`]s paired FIFO with the executor's completion stream.
 //!   - [`predict_only`] — the shared "over capacity: predict with live
 //!     weights, drop from training" path used by both the async and the
 //!     sync engines.
@@ -17,11 +25,108 @@
 use std::borrow::Borrow;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::time::{Duration, Instant};
 
 use crate::backend::{accuracy, forward_all, Backend};
 use crate::config::LayerShape;
 use crate::metrics::RunMetrics;
 use crate::model::{GradBuf, LayerParams};
+
+/// How an async engine advances time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Virtual time: the event heap replays analytic `tf`/`tb` costs.
+    /// Deterministic; metrics are identical across executors.
+    Lockstep,
+    /// Wall-clock time: arrivals are paced in real microseconds and
+    /// completions are stamped when device threads actually finish, so
+    /// contention, stage imbalance, and staleness are observed, not
+    /// simulated. Requires a seeded stream but is not bit-deterministic.
+    Freerun,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Lockstep => "lockstep",
+            Mode::Freerun => "freerun",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lockstep" => Some(Mode::Lockstep),
+            "freerun" => Some(Mode::Freerun),
+            _ => None,
+        }
+    }
+}
+
+/// Time source of a pipeline run, in ticks. Lockstep ticks are the
+/// analytic profile's virtual unit; freerun ticks are real microseconds.
+pub trait Clock {
+    /// Current time in ticks.
+    fn now(&self) -> u64;
+    /// Advance to `t`. Virtual clocks follow the event heap; wall clocks
+    /// ignore this (real time advances on its own).
+    fn advance(&mut self, t: u64);
+}
+
+/// Lockstep clock: a cursor the engine advances to each popped event.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    t: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { t: 0 }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> u64 {
+        self.t
+    }
+
+    fn advance(&mut self, t: u64) {
+        self.t = self.t.max(t);
+    }
+}
+
+/// Freerun clock: 1 tick = 1 microsecond since the run started.
+#[derive(Debug)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+
+    /// Sleep the scheduler thread until tick `t` (no-op if already past).
+    pub fn sleep_until(&self, t: u64) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(Duration::from_micros(t - now));
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    fn advance(&mut self, _t: u64) {}
+}
 
 /// Scheduler event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -66,6 +171,20 @@ pub struct Job {
     pub done: bool,
 }
 
+/// Work in flight on a device in free-running mode, paired FIFO with the
+/// executor's per-device completion stream (wall-clock runs have no
+/// virtual `Done` events carrying the job id, so the scheduler remembers
+/// what it shipped).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Flight {
+    Fwd { job: usize },
+    Bwd { job: usize },
+    /// Parameter update shipped to the owning device thread; `arrivals`
+    /// are the arrival stamps of the contributing microbatches (for the
+    /// update-latency metrics when the completion lands).
+    Update { arrivals: Vec<u64> },
+}
+
 /// One (worker, stage) device.
 pub struct Slot {
     pub busy_until: u64,
@@ -76,6 +195,8 @@ pub struct Slot {
     pub acc_count: u64,
     pub acc_arrivals: Vec<u64>,
     pub acc_from_version: u64,
+    /// freerun: dispatched-but-not-completed work, in dispatch order
+    pub flight: VecDeque<Flight>,
 }
 
 impl Slot {
@@ -88,6 +209,7 @@ impl Slot {
             acc_count: 0,
             acc_arrivals: Vec::new(),
             acc_from_version: u64::MAX,
+            flight: VecDeque::new(),
         }
     }
 }
@@ -186,6 +308,24 @@ impl SchedCore {
         self.events.push(end, Ev::Done { worker: w, stage: s, job, bwd });
     }
 
+    /// Freerun dispatch: the device is busy until its real completion
+    /// arrives (no virtual `Done` event); remember what flew so the
+    /// completion can be paired FIFO.
+    pub fn dispatch_flight(&mut self, w: usize, s: usize, flight: Flight) {
+        self.slots[w][s].busy_until = u64::MAX;
+        self.slots[w][s].flight.push_back(flight);
+    }
+
+    /// Pair a freerun completion with its dispatch (per-device FIFO) and
+    /// free the device at wall time `t`.
+    pub fn complete_flight(&mut self, w: usize, s: usize, t: u64) -> Flight {
+        let f = self.slots[w][s].flight.pop_front().expect("completion without flight");
+        if self.slots[w][s].flight.is_empty() {
+            self.slots[w][s].busy_until = t;
+        }
+        f
+    }
+
     /// Retire a job from the in-flight set, freeing its payloads.
     pub fn retire(&mut self, job: usize) {
         let j = &mut self.jobs[job];
@@ -227,6 +367,7 @@ pub fn predict_only<P: Borrow<LayerParams>>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn core(workers: usize, stages: usize) -> SchedCore {
         let stages = (0..stages)
@@ -308,5 +449,55 @@ mod tests {
         let mut c = core(2, 3);
         c.active_workers = vec![1];
         assert_eq!(c.devices(), vec![(1, 0), (1, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [Mode::Lockstep, Mode::Freerun] {
+            assert_eq!(Mode::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mode::parse("warp"), None);
+    }
+
+    #[test]
+    fn virtual_clock_follows_events_monotonically() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance(7);
+        assert_eq!(c.now(), 7);
+        // never runs backwards, even if the caller hands an older stamp
+        c.advance(3);
+        assert_eq!(c.now(), 7);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_ignores_advance() {
+        let mut c = WallClock::new();
+        let a = c.now();
+        c.advance(u64::MAX); // ignored
+        std::thread::sleep(Duration::from_millis(2));
+        let b = c.now();
+        assert!(b >= a + 1000, "{a} -> {b}");
+        c.sleep_until(b + 500);
+        assert!(c.now() >= b + 500);
+    }
+
+    #[test]
+    fn flights_pair_fifo_and_gate_the_device() {
+        let mut c = core(1, 1);
+        c.dispatch_flight(0, 0, Flight::Fwd { job: 3 });
+        // busy for the whole flight: nothing selectable at any time
+        c.slots[0][0].fwd_q.push_back(4);
+        assert!(c.select_work(0, 0, u64::MAX - 1).is_none());
+        c.dispatch_flight(0, 0, Flight::Update { arrivals: vec![1, 2] });
+        assert_eq!(c.complete_flight(0, 0, 50), Flight::Fwd { job: 3 });
+        // still one flight outstanding -> still busy
+        assert!(c.select_work(0, 0, 60).is_none());
+        assert_eq!(
+            c.complete_flight(0, 0, 80),
+            Flight::Update { arrivals: vec![1, 2] }
+        );
+        // freed at the completion stamp
+        assert!(matches!(c.select_work(0, 0, 80), Some(WorkSel::Fwd(4))));
     }
 }

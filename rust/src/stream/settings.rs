@@ -6,6 +6,19 @@
 
 use super::generator::{DriftKind, StreamSpec};
 
+/// Wall-clock replay rate of the free-running pipeline mode: one virtual
+/// tick of a setting's arrival interval is replayed as this many real
+/// microseconds, so virtual-tick metrics (decay constants, adaptation
+/// rates) stay directly comparable between lockstep and freerun runs.
+pub const WALL_TICK_US: u64 = 1;
+
+/// Microseconds between consecutive `Arrive` events when a setting's
+/// stream is replayed against the wall clock (`Mode::Freerun`). Floored at
+/// 1µs so a degenerate profile cannot busy-spin the scheduler.
+pub fn arrival_interval_us(td_ticks: u64) -> u64 {
+    (td_ticks * WALL_TICK_US).max(1)
+}
+
 /// One evaluation setting of the paper's grid.
 #[derive(Debug, Clone)]
 pub struct Setting {
@@ -94,6 +107,12 @@ mod tests {
     use super::*;
     use crate::config::zoo::default_zoo;
     use crate::stream::SyntheticStream;
+
+    #[test]
+    fn wall_arrival_interval_scales_and_floors() {
+        assert_eq!(arrival_interval_us(500), 500 * WALL_TICK_US);
+        assert!(arrival_interval_us(0) >= 1, "degenerate td floored");
+    }
 
     #[test]
     fn grid_has_20_settings_with_known_models() {

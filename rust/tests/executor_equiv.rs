@@ -10,6 +10,7 @@ use ferret::config::ModelSpec;
 use ferret::ocl::{OclKind, Vanilla};
 use ferret::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
 use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
 use ferret::pipeline::{EngineParams, RunResult};
 use ferret::planner::{plan, Partition, Profile};
 use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
@@ -47,6 +48,8 @@ fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
     assert_eq!(a.metrics.dropped, b.metrics.dropped, "{what}: dropped");
     assert_eq!(a.metrics.mem_bytes, b.metrics.mem_bytes, "{what}: mem");
     assert_eq!(a.metrics.peak_live_bytes, b.metrics.peak_live_bytes, "{what}: live bytes");
+    assert_eq!(a.metrics.latencies, b.metrics.latencies, "{what}: latency samples");
+    assert_eq!(a.metrics.staleness_hist, b.metrics.staleness_hist, "{what}: staleness");
     assert_eq!(a.metrics.tacc, b.metrics.tacc, "{what}: tacc");
     assert_eq!(
         a.metrics.adaptation_rate(),
@@ -67,7 +70,16 @@ fn run_with(
     kind: ExecutorKind,
 ) -> RunResult {
     let (cfg, m) = cfg_for();
-    run_async_with(cfg, &mut stream(n, 31), &NativeBackend, &mut Vanilla, ep, &m, kind)
+    run_async_with(
+        cfg,
+        &mut stream(n, 31),
+        &NativeBackend,
+        &mut Vanilla,
+        ep,
+        &m,
+        kind,
+        Mode::Lockstep,
+    )
 }
 
 #[test]
@@ -102,18 +114,67 @@ fn sim_and_threaded_produce_identical_metrics_planned_ferret() {
     assert_runs_identical(&sim, &thr, "ferret");
 }
 
+/// Lockstep equivalence must hold for every OCL plugin — bare SGD
+/// (Vanilla) plus ER, MIR, LwF, and MAS — not just the friendly two:
+/// replay mixing, interference scoring, distillation heads, and
+/// importance-regularized updates all route through the executor.
 #[test]
-fn equivalence_holds_across_ocl_plugins() {
+fn equivalence_holds_across_all_five_ocl_plugins() {
     let m = model();
     let prof = Profile::analytic(&m, 8);
     let part = Partition::per_layer(m.num_layers());
     let td = prof.default_td();
-    for ocl in [OclKind::Er, OclKind::Lwf] {
+    for ocl in OclKind::all() {
         let run = |kind: ExecutorKind| {
             let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream2BW, part.clone(), &prof, td);
             let mut plugin = ocl.build(23);
             let ep = EngineParams { lr: 0.2, ..Default::default() };
-            run_async_with(cfg, &mut stream(60, 9), &NativeBackend, plugin.as_mut(), &ep, &m, kind)
+            run_async_with(
+                cfg,
+                &mut stream(60, 9),
+                &NativeBackend,
+                plugin.as_mut(),
+                &ep,
+                &m,
+                kind,
+                Mode::Lockstep,
+            )
+        };
+        let sim = run(ExecutorKind::Sim);
+        let thr = run(ExecutorKind::Threaded);
+        assert!(sim.metrics.trained > 0, "{}: plugin must train", ocl.name());
+        assert_runs_identical(&sim, &thr, ocl.name());
+    }
+}
+
+/// Same sweep on the planned-Ferret path (compensation enabled), pinning
+/// equivalence where delta chains and plugin grad adjustment interact.
+#[test]
+fn equivalence_holds_across_plugins_with_compensation() {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let td = prof.default_td();
+    let unconstrained = plan(&prof, td, f64::INFINITY, 1e-4);
+    let planned = plan(&prof, td, unconstrained.mem_bytes * 0.5, 1e-4);
+    for ocl in [OclKind::Er, OclKind::Mas] {
+        let run = |kind: ExecutorKind| {
+            let cfg = AsyncCfg::ferret(
+                planned.partition.clone(),
+                planned.config.clone(),
+                CompKind::IterFisher,
+            );
+            let mut plugin = ocl.build(5);
+            let ep = EngineParams { lr: 0.2, ..Default::default() };
+            run_async_with(
+                cfg,
+                &mut stream(60, 13),
+                &NativeBackend,
+                plugin.as_mut(),
+                &ep,
+                &m,
+                kind,
+                Mode::Lockstep,
+            )
         };
         let sim = run(ExecutorKind::Sim);
         let thr = run(ExecutorKind::Threaded);

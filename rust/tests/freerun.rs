@@ -1,0 +1,124 @@
+//! Free-running wall-clock mode smoke tests.
+//!
+//! Freerun is not bit-deterministic (completions land at real times), so
+//! these tests pin the *structural* guarantees — monotone event stamps,
+//! no lost or duplicated jobs, drop accounting consistent with the
+//! predict-only path — and band the learning outcome against a lockstep
+//! run of the same seeded stream. Arrival pacing is set slow relative to
+//! the tiny model's compute so runs stay fast and drop-free-ish on any
+//! CI box.
+
+use ferret::backend::native::NativeBackend;
+use ferret::compensate::CompKind;
+use ferret::config::ModelSpec;
+use ferret::ocl::Vanilla;
+use ferret::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
+use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
+use ferret::pipeline::{EngineParams, RunResult};
+use ferret::planner::{plan, Partition, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn model() -> ModelSpec {
+    ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
+}
+
+fn stream(n: usize, seed: u64) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "freerun".into(),
+        features: 16,
+        classes: 4,
+        batch: 8,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 3.0,
+        noise: 0.5,
+        seed,
+    })
+}
+
+/// A seeded Pipedream run; `td` is in ticks (freerun replays 1 tick = 1µs,
+/// so 2000 keeps arrivals far slower than the µs-scale stage compute).
+fn run(kind: ExecutorKind, mode: Mode, n: usize, td: u64) -> RunResult {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, td);
+    let ep = EngineParams { lr: 0.2, td, ..Default::default() };
+    run_async_with(cfg, &mut stream(n, 31), &NativeBackend, &mut Vanilla, &ep, &m, kind, mode)
+}
+
+#[test]
+fn freerun_loses_no_jobs_and_time_is_monotone() {
+    let n = 60;
+    let r = run(ExecutorKind::Threaded, Mode::Freerun, n, 2000);
+    // every arriving batch predicted exactly once: none lost, none doubled
+    assert_eq!(r.metrics.oacc.count() as u64, n as u64, "one prediction per arrival");
+    assert_eq!(r.metrics.arrivals(), n as u64);
+    // drop accounting consistent with predict_only: a dropped batch is
+    // predicted but never reaches the loss head; an admitted one does
+    assert_eq!(r.metrics.losses.len() as u64, n as u64 - r.metrics.dropped);
+    assert!(r.metrics.trained > 0, "updates landed");
+    // event timestamps stamped by the wall clock are non-decreasing
+    for w in r.metrics.oacc.curve.windows(2) {
+        assert!(w[0].0 <= w[1].0, "prediction stamps regressed: {} > {}", w[0].0, w[1].0);
+    }
+    for w in r.metrics.losses.windows(2) {
+        assert!(w[0].0 <= w[1].0, "loss stamps regressed");
+    }
+    // observability: one latency sample per admitted batch, ordered
+    // percentiles, and a populated staleness histogram
+    assert_eq!(r.metrics.latencies.len() as u64, n as u64 - r.metrics.dropped);
+    assert!(r.metrics.latency_percentile(50.0) <= r.metrics.latency_percentile(95.0));
+    assert!(r.metrics.latency_percentile(95.0) <= r.metrics.latency_percentile(99.0));
+    let hist_total: u64 = r.metrics.staleness_hist.iter().sum();
+    assert!(hist_total > 0, "staleness histogram populated");
+}
+
+#[test]
+fn freerun_accuracy_within_band_of_lockstep() {
+    let n = 80;
+    let lock = run(ExecutorKind::Sim, Mode::Lockstep, n, 2000);
+    let free = run(ExecutorKind::Threaded, Mode::Freerun, n, 2000);
+    let (lo, fo) = (lock.metrics.oacc.value(), free.metrics.oacc.value());
+    // same seeded stream, same model: wall-clock jitter moves the online
+    // accuracy, but not out of a broad band around the simulated run
+    assert!((lo - fo).abs() < 25.0, "lockstep {lo:.1}% vs freerun {fo:.1}%");
+    assert!(fo > 25.0, "freerun must still learn (got {fo:.1}%)");
+}
+
+#[test]
+fn freerun_runs_on_the_sim_executor_too() {
+    // inline executor under wall pacing: degenerate but legal (used by
+    // planner smoke runs); completions drain immediately
+    let n = 30;
+    let r = run(ExecutorKind::Sim, Mode::Freerun, n, 1000);
+    assert_eq!(r.metrics.oacc.count() as u64, n as u64);
+    assert!(r.metrics.trained > 0);
+    assert_eq!(r.metrics.exec_threads, 1);
+}
+
+#[test]
+fn freerun_planned_ferret_with_compensation_trains() {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let td = prof.default_td();
+    let unconstrained = plan(&prof, td, f64::INFINITY, 1e-4);
+    let planned = plan(&prof, td, unconstrained.mem_bytes * 0.5, 1e-4);
+    assert!(planned.feasible);
+    let cfg = AsyncCfg::ferret(planned.partition, planned.config, CompKind::IterFisher);
+    let ep = EngineParams { lr: 0.2, td: 1500, ..Default::default() };
+    let r = run_async_with(
+        cfg,
+        &mut stream(60, 7),
+        &NativeBackend,
+        &mut Vanilla,
+        &ep,
+        &m,
+        ExecutorKind::Threaded,
+        Mode::Freerun,
+    );
+    assert_eq!(r.metrics.oacc.count() as u64, 60, "no lost jobs under compensation");
+    assert!(r.metrics.trained > 0);
+    assert!(r.metrics.exec_threads > 1);
+}
