@@ -1,9 +1,18 @@
 //! ferret-bench — regenerate the paper's tables and figures.
 //!
 //! Usage:
-//!   ferret_bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all
+//!   ferret_bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|budget_shift|all
 //!                [--quick] [--batches N] [--seeds a,b,...] [--settings i,j,...]
 //!                [--executor sim|threaded] [--mode lockstep|freerun]
+//!                [--budget-schedule <bytes>@<at>[,...]]
+//!
+//! `--exp budget_shift` emits the dynamic-memory table: the budget halves
+//! mid-stream and Ferret's live re-plan is compared against a
+//! static-min-budget plan and a restart-from-scratch baseline; results
+//! are also dumped as results/budget_shift.json (CI artifact).
+//! `--budget-schedule` overrides the default per-model halving, e.g.
+//! `12mb@b20` or `24mb@0,8mb@b100` (`u<N>` positions are wall-clock µs
+//! for freerun runs).
 //!
 //! `--executor threaded` runs the async engines on one OS thread per
 //! (worker, stage) device and reports real wall-clock samples/sec; `sim`
@@ -16,15 +25,17 @@
 //!
 //! Results are printed as markdown and saved under results/ as .md + .csv.
 
+use ferret::budget::BudgetSchedule;
 use ferret::harness::{Bench, BenchCfg, Table};
 use ferret::pipeline::executor::ExecutorKind;
 use ferret::pipeline::sched::Mode;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ferret_bench --exp <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|all> \
+        "usage: ferret_bench --exp \
+         <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|budget_shift|all> \
          [--quick] [--batches N] [--seeds a,b] [--settings i,j] [--executor sim|threaded] \
-         [--mode lockstep|freerun]"
+         [--mode lockstep|freerun] [--budget-schedule <bytes>@<at>[,...]]"
     );
     std::process::exit(2)
 }
@@ -86,6 +97,17 @@ fn main() {
                 i += 1;
                 cfg.mode = args.get(i).and_then(|s| Mode::parse(s)).unwrap_or_else(|| usage());
             }
+            "--budget-schedule" => {
+                i += 1;
+                let spec = args.get(i).unwrap_or_else(|| usage());
+                cfg.budget_schedule = match BudgetSchedule::parse(spec) {
+                    Ok(b) => Some(b),
+                    Err(e) => {
+                        eprintln!("error: --budget-schedule: {e}");
+                        std::process::exit(2);
+                    }
+                };
+            }
             "--quiet" => cfg.quiet = true,
             _ => usage(),
         }
@@ -134,6 +156,12 @@ fn main() {
     if want("fig6") {
         let t = bench.fig6();
         emit("fig6", t);
+    }
+    if want("budget_shift") {
+        let sched = bench.cfg.budget_schedule.clone();
+        let t = bench.budget_shift(sched.as_ref());
+        t.save_json("budget_shift").expect("writing results/");
+        emit("budget_shift", t);
     }
     if want("fig7") {
         let t = bench.fig7();

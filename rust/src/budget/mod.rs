@@ -1,0 +1,406 @@
+//! Time-varying memory budgets and measured-memory accounting.
+//!
+//! Ferret's headline claim is adapting to *varying* memory constraints;
+//! this module makes the budget a first-class time-varying signal:
+//!
+//!   - [`BudgetSchedule`] — a piecewise-constant budget over the run: a
+//!     list of `(at, bytes)` steps, where `at` is a stream batch index
+//!     (lockstep replans at batch boundaries) or a wall-clock microsecond
+//!     stamp (freerun). Parseable from the CLI (`--budget-schedule`), e.g.
+//!     `"24mb@0,12mb@b80,8mb@u500000"`.
+//!   - [`BudgetState`]    — the engine-side cursor: advances through due
+//!     steps, exposes the budget currently in force, and arms a one-shot
+//!     measured-bytes breach trigger per schedule window.
+//!   - [`LedgerSnapshot`] / [`MemoryLedger`] — the live memory ledger: the
+//!     engine meters the bytes it *actually* holds (live parameters,
+//!     stashed weight versions distinct from the live copy, in-flight
+//!     activations/gradients, compensator state) and the ledger keeps
+//!     per-category peaks, the latest snapshot, and a memory-over-time
+//!     trace (one point per parameter update).
+//!
+//! When a step fires (or the ledger breaches the budget in force) the
+//! engine drains in-flight work, re-invokes the planner against the new
+//! budget with a profile refreshed from this run's measured stage times,
+//! and executes a plan transition — see `pipeline::engine`.
+
+/// When a budget step takes effect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepAt {
+    /// at the arrival of stream batch `seq` (the lockstep replan boundary)
+    Batch(u64),
+    /// at wall-clock microsecond `us` since the run started (freerun
+    /// only; lockstep drops wall-time steps up front —
+    /// [`BudgetState::without_wall_steps`] — so they cannot block
+    /// batch-index steps queued behind them)
+    Us(u64),
+}
+
+/// One step of the budget schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetStep {
+    pub at: StepAt,
+    pub bytes: f64,
+}
+
+/// A piecewise-constant memory budget over the run. Steps fire in list
+/// order; a step at batch 0 (or µs 0) sets the budget in force from the
+/// start without triggering a re-plan.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BudgetSchedule {
+    pub steps: Vec<BudgetStep>,
+}
+
+/// Parse a byte size with an optional `b`/`kb`/`mb`/`gb` suffix; a bare
+/// number means megabytes; `inf` means unconstrained.
+fn parse_bytes(s: &str) -> Result<f64, String> {
+    let t = s.trim().to_ascii_lowercase();
+    if t == "inf" || t == "unlimited" {
+        return Ok(f64::INFINITY);
+    }
+    let (num, mult) = if let Some(x) = t.strip_suffix("gb") {
+        (x, 1e9)
+    } else if let Some(x) = t.strip_suffix("mb") {
+        (x, 1e6)
+    } else if let Some(x) = t.strip_suffix("kb") {
+        (x, 1e3)
+    } else if let Some(x) = t.strip_suffix('b') {
+        (x, 1.0)
+    } else {
+        (t.as_str(), 1e6)
+    };
+    match num.trim().parse::<f64>() {
+        Ok(v) if v >= 0.0 => Ok(v * mult),
+        _ => Err(format!("bad byte size '{s}' (expected e.g. '12mb', '800kb', 'inf')")),
+    }
+}
+
+fn parse_at(s: &str) -> Result<StepAt, String> {
+    let t = s.trim().to_ascii_lowercase();
+    let (kind, digits) = if let Some(x) = t.strip_prefix('b') {
+        ("b", x)
+    } else if let Some(x) = t.strip_prefix('u') {
+        ("u", x)
+    } else {
+        ("b", t.as_str())
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad step position '{s}' (expected e.g. 'b80' or 'u500000')"))?;
+    Ok(if kind == "u" { StepAt::Us(n) } else { StepAt::Batch(n) })
+}
+
+impl BudgetSchedule {
+    /// The static (non-varying) schedule: the budget the run was planned
+    /// for stays in force for the whole stream.
+    pub fn fixed() -> Self {
+        BudgetSchedule::default()
+    }
+
+    /// True when the schedule carries any step — the engine then meters
+    /// the ledger against the budget in force and re-plans at steps.
+    pub fn is_dynamic(&self) -> bool {
+        !self.steps.is_empty()
+    }
+
+    /// Convenience: a single mid-stream step to `bytes` at batch `at`.
+    pub fn step_at_batch(at: u64, bytes: f64) -> Self {
+        BudgetSchedule { steps: vec![BudgetStep { at: StepAt::Batch(at), bytes }] }
+    }
+
+    /// Parse a comma-separated schedule spec: each entry is
+    /// `<bytes>@<at>` where `<bytes>` takes a `b|kb|mb|gb` suffix (bare
+    /// number = MB, `inf` = unconstrained) and `<at>` is `b<N>` (batch
+    /// index, the default for a bare number) or `u<N>` (microseconds).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut steps = Vec::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (bytes_s, at_s) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("bad schedule entry '{entry}' (expected '<bytes>@<at>')"))?;
+            steps.push(BudgetStep { at: parse_at(at_s)?, bytes: parse_bytes(bytes_s)? });
+        }
+        if steps.is_empty() {
+            return Err("empty budget schedule".into());
+        }
+        // steps fire in list order: a same-kind position that does not
+        // increase can never fire at its stated point — reject it rather
+        // than silently running at the wrong budget (batch/µs
+        // interleavings are the caller's call)
+        let (mut last_batch, mut last_us) = (None, None);
+        for step in &steps {
+            let out_of_order = match step.at {
+                StepAt::Batch(b) => {
+                    let bad = last_batch.map_or(false, |x| b <= x);
+                    last_batch = Some(b);
+                    bad
+                }
+                StepAt::Us(u) => {
+                    let bad = last_us.map_or(false, |x| u <= x);
+                    last_us = Some(u);
+                    bad
+                }
+            };
+            if out_of_order {
+                return Err(format!(
+                    "schedule steps out of order: {:?} cannot fire after a later same-kind step",
+                    step.at
+                ));
+            }
+        }
+        Ok(BudgetSchedule { steps })
+    }
+}
+
+/// Engine-side cursor over a [`BudgetSchedule`]: tracks the budget in
+/// force and arms the measured-bytes breach trigger once per window.
+#[derive(Debug, Clone)]
+pub struct BudgetState {
+    steps: Vec<BudgetStep>,
+    idx: usize,
+    current: f64,
+    breach_armed: bool,
+}
+
+impl BudgetState {
+    /// Start the cursor; steps already due at (batch 0, µs 0) set the
+    /// initial budget in force without counting as a re-plan trigger.
+    pub fn new(schedule: &BudgetSchedule) -> Self {
+        let mut st = BudgetState {
+            steps: schedule.steps.clone(),
+            idx: 0,
+            current: f64::INFINITY,
+            breach_armed: true,
+        };
+        while st.idx < st.steps.len()
+            && matches!(st.steps[st.idx].at, StepAt::Batch(0) | StepAt::Us(0))
+        {
+            st.current = st.steps[st.idx].bytes;
+            st.idx += 1;
+        }
+        st
+    }
+
+    /// Lockstep cursor: virtual time never reaches wall-clock stamps, so
+    /// `u<N>` steps are dropped up front — otherwise an early wall-time
+    /// step would sit at the head of the queue and block every
+    /// batch-index step behind it from ever firing.
+    pub fn without_wall_steps(schedule: &BudgetSchedule) -> Self {
+        let filtered = BudgetSchedule {
+            steps: schedule
+                .steps
+                .iter()
+                .copied()
+                .filter(|s| matches!(s.at, StepAt::Batch(_)))
+                .collect(),
+        };
+        BudgetState::new(&filtered)
+    }
+
+    /// The budget currently in force, in bytes.
+    pub fn current(&self) -> f64 {
+        self.current
+    }
+
+    /// Advance past every step due at stream position `seq` / wall time
+    /// `us`; returns true when any step fired (the engine must then drain
+    /// and re-plan). Lockstep passes `us = 0`, so wall-time steps only
+    /// fire in freerun.
+    pub fn step_due(&mut self, seq: u64, us: u64) -> bool {
+        let mut fired = false;
+        while self.idx < self.steps.len() {
+            let due = match self.steps[self.idx].at {
+                StepAt::Batch(b) => seq >= b,
+                StepAt::Us(u) => us >= u,
+            };
+            if !due {
+                break;
+            }
+            self.current = self.steps[self.idx].bytes;
+            self.idx += 1;
+            self.breach_armed = true;
+            fired = true;
+        }
+        fired
+    }
+
+    /// One-shot measured-bytes breach: true the first time the ledger
+    /// exceeds the budget in force within the current schedule window.
+    /// (Re-planning at the same budget cannot loop: the trigger re-arms
+    /// only when the next step fires.)
+    pub fn breached(&mut self, total_bytes: usize) -> bool {
+        if self.breach_armed && (total_bytes as f64) > self.current {
+            self.breach_armed = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Steps not yet fired.
+    pub fn remaining_steps(&self) -> usize {
+        self.steps.len() - self.idx
+    }
+}
+
+/// Measured bytes by category at one observation point. `stash` counts
+/// only versions physically distinct from the live copy (the newest stash
+/// entry aliases the live `Arc` by construction), so `total` reflects
+/// bytes actually held, not the logical Eq. 4 accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LedgerSnapshot {
+    /// live model parameters
+    pub params: usize,
+    /// stashed weight versions distinct from the live copy
+    pub stash: usize,
+    /// in-flight activations, gradients, labels, and accumulators
+    pub acts: usize,
+    /// compensator EMA state (Alg. 1's O(2Σ|w|))
+    pub comps: usize,
+}
+
+impl LedgerSnapshot {
+    pub fn total(&self) -> usize {
+        self.params + self.stash + self.acts + self.comps
+    }
+}
+
+/// Accumulated measured-memory accounting over one engine run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MemoryLedger {
+    /// per-category peaks (not necessarily simultaneous)
+    pub peak: LedgerSnapshot,
+    /// peak of the summed snapshot
+    pub peak_total: usize,
+    /// the latest snapshot (end-of-run state after the final event)
+    pub last: LedgerSnapshot,
+    /// memory-over-time trace: one `(t, total_bytes)` point per parameter
+    /// update (bounded by the number of updates in the run)
+    pub trace: Vec<(u64, usize)>,
+}
+
+impl MemoryLedger {
+    /// Fold one snapshot into the peaks without extending the trace (the
+    /// engine observes at every scheduler event).
+    pub fn observe(&mut self, snap: LedgerSnapshot) {
+        self.peak.params = self.peak.params.max(snap.params);
+        self.peak.stash = self.peak.stash.max(snap.stash);
+        self.peak.acts = self.peak.acts.max(snap.acts);
+        self.peak.comps = self.peak.comps.max(snap.comps);
+        self.peak_total = self.peak_total.max(snap.total());
+        self.last = snap;
+    }
+
+    /// Observe and append a trace point (called once per update).
+    pub fn record(&mut self, t: u64, snap: LedgerSnapshot) {
+        self.observe(snap);
+        self.trace.push((t, snap.total()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sizes_positions_and_errors() {
+        let s = BudgetSchedule::parse("24mb@0,12mb@b80,1gb@u5000,800kb@b90,64b@b99").unwrap();
+        assert_eq!(s.steps.len(), 5);
+        assert_eq!(s.steps[0], BudgetStep { at: StepAt::Batch(0), bytes: 24e6 });
+        assert_eq!(s.steps[1], BudgetStep { at: StepAt::Batch(80), bytes: 12e6 });
+        assert_eq!(s.steps[2], BudgetStep { at: StepAt::Us(5000), bytes: 1e9 });
+        assert_eq!(s.steps[3], BudgetStep { at: StepAt::Batch(90), bytes: 800e3 });
+        assert_eq!(s.steps[4], BudgetStep { at: StepAt::Batch(99), bytes: 64.0 });
+        // bare number = MB; inf = unconstrained
+        let s = BudgetSchedule::parse("3@b10,inf@b20").unwrap();
+        assert_eq!(s.steps[0].bytes, 3e6);
+        assert!(s.steps[1].bytes.is_infinite());
+        assert!(BudgetSchedule::parse("").is_err());
+        assert!(BudgetSchedule::parse("12mb").is_err(), "missing @at");
+        assert!(BudgetSchedule::parse("x@b3").is_err(), "bad bytes");
+        assert!(BudgetSchedule::parse("5mb@z3").is_err(), "bad position");
+        assert!(BudgetSchedule::parse("-5mb@b3").is_err(), "negative budget");
+        assert!(
+            BudgetSchedule::parse("8mb@b100,2mb@b20").is_err(),
+            "out-of-order steps can never fire at their stated point"
+        );
+        assert!(BudgetSchedule::parse("8mb@u90,2mb@u20").is_err(), "same for wall time");
+        assert!(!BudgetSchedule::fixed().is_dynamic());
+        assert!(BudgetSchedule::step_at_batch(8, 1e6).is_dynamic());
+    }
+
+    #[test]
+    fn state_absorbs_initial_step_and_fires_in_order() {
+        let s = BudgetSchedule::parse("24mb@0,12mb@b80,6mb@b120").unwrap();
+        let mut st = BudgetState::new(&s);
+        assert_eq!(st.current(), 24e6, "batch-0 step sets the initial budget");
+        assert_eq!(st.remaining_steps(), 2);
+        assert!(!st.step_due(79, 0));
+        assert_eq!(st.current(), 24e6);
+        assert!(st.step_due(80, 0));
+        assert_eq!(st.current(), 12e6);
+        assert!(!st.step_due(81, 0), "a step fires once");
+        // jumping past several steps fires them all, landing on the last
+        assert!(st.step_due(500, 0));
+        assert_eq!(st.current(), 6e6);
+        assert_eq!(st.remaining_steps(), 0);
+    }
+
+    #[test]
+    fn wall_time_steps_never_fire_in_lockstep() {
+        let s = BudgetSchedule::parse("12mb@u100").unwrap();
+        let mut st = BudgetState::new(&s);
+        assert!(!st.step_due(1_000_000, 0), "lockstep passes us=0");
+        assert!(st.step_due(0, 100), "freerun wall time fires it");
+        assert_eq!(st.current(), 12e6);
+    }
+
+    #[test]
+    fn lockstep_cursor_drops_wall_steps_instead_of_wedging() {
+        // a mixed schedule: a never-due-in-lockstep wall step queued ahead
+        // of a batch step must not block it
+        let s = BudgetSchedule::parse("24mb@u1000,12mb@b80").unwrap();
+        let mut st = BudgetState::without_wall_steps(&s);
+        assert_eq!(st.remaining_steps(), 1, "wall step dropped");
+        assert!(st.step_due(80, 0), "the batch step behind it still fires");
+        assert_eq!(st.current(), 12e6);
+        // a wall step at 0 would have set the initial budget; dropped too
+        let st0 = BudgetState::without_wall_steps(&BudgetSchedule::parse("9mb@u0").unwrap());
+        assert_eq!(st0.current(), f64::INFINITY);
+    }
+
+    #[test]
+    fn breach_fires_once_per_window() {
+        let s = BudgetSchedule::parse("1kb@0,2kb@b10").unwrap();
+        let mut st = BudgetState::new(&s);
+        assert!(!st.breached(1000), "at the budget is not a breach");
+        assert!(st.breached(1001));
+        assert!(!st.breached(5000), "disarmed until the next step");
+        assert!(st.step_due(10, 0));
+        assert!(st.breached(2001), "re-armed by the step");
+        // static schedules (infinite budget) never breach
+        let mut free = BudgetState::new(&BudgetSchedule::fixed());
+        assert!(!free.breached(usize::MAX));
+        assert_eq!(free.current(), f64::INFINITY);
+    }
+
+    #[test]
+    fn ledger_tracks_peaks_last_and_trace() {
+        let mut l = MemoryLedger::default();
+        l.observe(LedgerSnapshot { params: 10, stash: 20, acts: 5, comps: 1 });
+        l.observe(LedgerSnapshot { params: 10, stash: 5, acts: 50, comps: 1 });
+        assert_eq!(l.peak.stash, 20);
+        assert_eq!(l.peak.acts, 50);
+        assert_eq!(l.peak_total, 66, "peak of totals, not total of peaks");
+        assert_eq!(l.last.acts, 50);
+        assert!(l.trace.is_empty(), "observe does not trace");
+        l.record(7, LedgerSnapshot { params: 10, stash: 5, acts: 0, comps: 1 });
+        assert_eq!(l.trace, vec![(7, 16)]);
+        assert_eq!(l.last.total(), 16);
+        assert_eq!(l.peak_total, 66);
+    }
+}

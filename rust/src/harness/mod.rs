@@ -11,6 +11,7 @@ use std::collections::HashMap;
 
 use crate::backend::{native::NativeBackend, Backend};
 use crate::baselines::{run_baseline_with_model, StreamPolicy};
+use crate::budget::{BudgetSchedule, StepAt};
 use crate::compensate::CompKind;
 use crate::config::{zoo::default_zoo, ModelSpec, Zoo};
 use crate::metrics::{agm, RunMetrics};
@@ -82,6 +83,9 @@ pub struct BenchCfg {
     /// time mode for the async engines (lockstep = virtual event heap,
     /// freerun = wall-clock pacing with device-thread updates)
     pub mode: Mode,
+    /// budget schedule for the budget-shift table (None = halve the
+    /// unconstrained footprint at mid-stream, per model)
+    pub budget_schedule: Option<BudgetSchedule>,
 }
 
 impl Default for BenchCfg {
@@ -94,6 +98,7 @@ impl Default for BenchCfg {
             quiet: false,
             executor: ExecutorKind::Sim,
             mode: Mode::Lockstep,
+            budget_schedule: None,
         }
     }
 }
@@ -162,14 +167,73 @@ impl Bench {
     }
 
     fn stream(&self, s: &Setting, seed: u64) -> SyntheticStream {
+        let n = self.cfg.num_batches;
+        self.stream_slice(s, seed, 0, n, n)
+    }
+
+    /// A window of a setting's stream: `skip` batches consumed, then
+    /// `len` yielded, out of a `total`-batch stream. The drift/task
+    /// schedule follows `total`, so windows of the same stream are
+    /// distribution-consistent with each other (the restart baseline
+    /// trains on the head and tail of one stream, not two different
+    /// compressed ones).
+    fn stream_slice(
+        &self,
+        s: &Setting,
+        seed: u64,
+        skip: usize,
+        len: usize,
+        total: usize,
+    ) -> SyntheticStream {
         let m = self.model(s);
-        SyntheticStream::new(s.stream_spec(
+        let mut stream = SyntheticStream::new(s.stream_spec(
             m.features(),
             m.classes(),
             self.zoo.batch,
-            self.cfg.num_batches,
+            total,
             seed,
-        ))
+        ));
+        for _ in 0..skip {
+            let _ = stream.next_batch();
+        }
+        stream.truncate_after(len);
+        stream
+    }
+
+    /// Run one explicitly-configured engine outside the cached `run()`
+    /// matrix — the shared bookkeeping (thread/observability/batch
+    /// counters) every direct engine run must keep honest. `skip`/`len`
+    /// window the stream; `weight_seed` seeds the model init (the restart
+    /// baseline uses a fresh one).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_planned(
+        &mut self,
+        setting: &Setting,
+        model: &ModelSpec,
+        cfg: AsyncCfg,
+        stream_seed: u64,
+        skip: usize,
+        len: usize,
+        total: usize,
+        weight_seed: u64,
+    ) -> RunMetrics {
+        let mut stream = self.stream_slice(setting, stream_seed, skip, len, total);
+        let mut plugin = OclKind::Vanilla.build(stream_seed);
+        let ep = EngineParams { lr: self.cfg.lr, seed: weight_seed, ..Default::default() };
+        let r = run_async_with(
+            cfg,
+            &mut stream,
+            self.backend.as_ref(),
+            plugin.as_mut(),
+            &ep,
+            model,
+            self.cfg.executor,
+            self.cfg.mode,
+        );
+        self.max_threads_seen = self.max_threads_seen.max(r.metrics.exec_threads);
+        self.batches_run += len as u64;
+        self.observability.absorb_observability(&r.metrics);
+        r.metrics
     }
 
     /// Shared (unconstrained-planned) partition per model — §12: "L* and
@@ -554,45 +618,151 @@ impl Bench {
                 let budget = lo * (hi / lo).powf(frac);
                 let (_, prof, td) = self.shared_partition(&model);
                 let out = plan(&prof, td, budget, crate::planner::costmodel::decay_for_td(td));
-                let mut threads_seen = 0usize;
-                let mut run_metrics: Vec<RunMetrics> = Vec::new();
-                let (mems, oaccs): (Vec<f64>, Vec<f64>) = seeds
-                    .iter()
-                    .map(|&seed| {
-                        let mut stream = self.stream(&setting, seed);
-                        let cfg = AsyncCfg::ferret(
-                            out.partition.clone(),
-                            out.config.clone(),
-                            CompKind::IterFisher,
-                        );
-                        let ep = EngineParams { lr: self.cfg.lr, seed, ..Default::default() };
-                        let mut plugin = OclKind::Vanilla.build(seed);
-                        let r = run_async_with(
-                            cfg,
-                            &mut stream,
-                            self.backend.as_ref(),
-                            plugin.as_mut(),
-                            &ep,
-                            &model,
-                            self.cfg.executor,
-                            self.cfg.mode,
-                        );
-                        threads_seen = threads_seen.max(r.metrics.exec_threads);
-                        let point = (r.metrics.mem_bytes / 1e6, r.metrics.oacc.value());
-                        run_metrics.push(r.metrics);
-                        point
-                    })
-                    .unzip();
-                // direct engine runs bypass run(): keep the observability
-                // counters honest
-                self.max_threads_seen = self.max_threads_seen.max(threads_seen);
-                self.batches_run += (self.cfg.num_batches * seeds.len()) as u64;
-                for m in &run_metrics {
-                    self.observability.absorb_observability(m);
+                let n = self.cfg.num_batches;
+                let mut mems = Vec::new();
+                let mut oaccs = Vec::new();
+                for &seed in &seeds {
+                    let cfg = AsyncCfg::ferret(
+                        out.partition.clone(),
+                        out.config.clone(),
+                        CompKind::IterFisher,
+                    );
+                    let m = self.run_planned(&setting, &model, cfg, seed, 0, n, n, seed);
+                    mems.push(m.mem_bytes / 1e6);
+                    oaccs.push(m.oacc.value());
                 }
                 table.push_row(
                     format!("{}/Ferret@B{k}", setting.label),
                     vec![Some(Cell::from_samples(&mems)), Some(Cell::from_samples(&oaccs))],
+                );
+            }
+        }
+        table
+    }
+
+    /// Budget-shift table (dynamic-memory headline): halve the memory
+    /// budget mid-stream and compare three responses on the same seeded
+    /// stream —
+    ///
+    ///   - `dynamic`    Ferret under a `BudgetSchedule`: runs the
+    ///     unconstrained plan, then drains, re-plans at the halved budget
+    ///     and resumes with its learned weights (replans ≥ 1);
+    ///   - `static-min` plan once at the halved (post-shift) budget and
+    ///     run the whole stream under it — pays the constraint everywhere;
+    ///   - `restart`    run the unconstrained plan to the shift point,
+    ///     then restart from scratch (fresh weights) at the halved budget
+    ///     — what "stop and relaunch the learner" costs in oacc.
+    ///
+    /// `schedule` overrides the default per-model halving (e.g. from
+    /// `ferret_bench --budget-schedule`).
+    pub fn budget_shift(&mut self, schedule: Option<&BudgetSchedule>) -> Table {
+        let mut table = Table::new(
+            "Budget shift — mid-stream halving: live re-plan vs static-min vs restart",
+            vec!["oacc".into(), "mem_mb".into(), "replans".into()],
+        );
+        let seeds = self.cfg.seeds.clone();
+        let n = self.cfg.num_batches;
+        let picks: Vec<(usize, Setting)> = self.settings().into_iter().take(2).collect();
+        for (_, setting) in picks {
+            let model = self.model(&setting);
+            let (_, prof, td) = self.shared_partition(&model);
+            let decay = crate::planner::costmodel::decay_for_td(td);
+            let hi_plan = plan(&prof, td, f64::INFINITY, decay);
+            let sched = schedule.cloned().unwrap_or_else(|| {
+                BudgetSchedule::step_at_batch((n as u64 / 2).max(1), hi_plan.mem_bytes * 0.5)
+            });
+            // the baselines answer the same shift the dynamic run sees:
+            // split where the schedule's first batch step fires, and size
+            // the static-min/restart plans at its final budget
+            let shift = sched
+                .steps
+                .iter()
+                .find_map(|s| match s.at {
+                    StepAt::Batch(b) if b > 0 => Some(b as usize),
+                    _ => None,
+                })
+                .unwrap_or((n / 2).max(1))
+                .min(n);
+            let lo_budget = sched
+                .steps
+                .last()
+                .map(|s| s.bytes)
+                .unwrap_or(hi_plan.mem_bytes * 0.5);
+            let lo_plan = plan(&prof, td, lo_budget, decay);
+
+            let mut rows: Vec<(String, Vec<f64>, Vec<f64>, Vec<f64>)> = vec![
+                ("dynamic".into(), vec![], vec![], vec![]),
+                ("static-min".into(), vec![], vec![], vec![]),
+                ("restart".into(), vec![], vec![], vec![]),
+            ];
+            for &seed in &seeds {
+                // dynamic: live re-plan at the schedule step
+                let cfg = AsyncCfg::ferret(
+                    hi_plan.partition.clone(),
+                    hi_plan.config.clone(),
+                    CompKind::IterFisher,
+                )
+                .with_budget(sched.clone());
+                let m = self.run_planned(&setting, &model, cfg, seed, 0, n, n, seed);
+                rows[0].1.push(m.oacc.value());
+                // peak analytic footprint across phases: the dynamic run
+                // spent its pre-shift half at the unconstrained plan
+                rows[0].2.push(hi_plan.mem_bytes.max(m.mem_bytes) / 1e6);
+                rows[0].3.push(m.replans as f64);
+
+                // static-min: the post-shift budget for the whole stream
+                let cfg = AsyncCfg::ferret(
+                    lo_plan.partition.clone(),
+                    lo_plan.config.clone(),
+                    CompKind::IterFisher,
+                );
+                let m = self.run_planned(&setting, &model, cfg, seed, 0, n, n, seed);
+                rows[1].1.push(m.oacc.value());
+                rows[1].2.push(m.mem_bytes / 1e6);
+                rows[1].3.push(0.0);
+
+                // restart: first half unconstrained, then fresh weights at
+                // the halved budget on the tail of the same stream
+                let cfg_a = AsyncCfg::ferret(
+                    hi_plan.partition.clone(),
+                    hi_plan.config.clone(),
+                    CompKind::IterFisher,
+                );
+                let a = self.run_planned(&setting, &model, cfg_a, seed, 0, shift, n, seed);
+                let cfg_b = AsyncCfg::ferret(
+                    lo_plan.partition.clone(),
+                    lo_plan.config.clone(),
+                    CompKind::IterFisher,
+                );
+                let b = self.run_planned(
+                    &setting,
+                    &model,
+                    cfg_b,
+                    seed,
+                    shift,
+                    n - shift,
+                    n,
+                    seed ^ 0xFE55,
+                );
+                let total = a.oacc.count() + b.oacc.count();
+                let oacc = if total > 0.0 {
+                    (a.oacc.value() * a.oacc.count() + b.oacc.value() * b.oacc.count()) / total
+                } else {
+                    0.0
+                };
+                rows[2].1.push(oacc);
+                // restart also ran its first half at the unconstrained plan
+                rows[2].2.push(a.mem_bytes.max(b.mem_bytes) / 1e6);
+                rows[2].3.push(0.0);
+            }
+            for (name, oaccs, mems, replans) in rows {
+                table.push_row(
+                    format!("{}/{}", setting.label, name),
+                    vec![
+                        Some(Cell::from_samples(&oaccs)),
+                        Some(Cell::from_samples(&mems)),
+                        Some(Cell::from_samples(&replans)),
+                    ],
                 );
             }
         }
@@ -650,6 +820,23 @@ mod tests {
         for (_, cells) in &t.rows {
             let c = cells[skip_col].unwrap();
             assert!(c.mean.abs() < 1e-9, "1-skip agm {}", c.mean);
+        }
+    }
+
+    #[test]
+    fn quick_budget_shift_table_shape_and_replans() {
+        let mut b = Bench::new(BenchCfg::quick());
+        let t = b.budget_shift(None);
+        assert_eq!(t.rows.len(), 6, "2 settings x 3 responses");
+        assert_eq!(t.columns, vec!["oacc", "mem_mb", "replans"]);
+        let replans = t.col("replans");
+        for (label, cells) in &t.rows {
+            let r = cells[replans].unwrap().mean;
+            if label.ends_with("/dynamic") {
+                assert!(r >= 1.0, "{label}: dynamic run must re-plan (got {r})");
+            } else {
+                assert_eq!(r, 0.0, "{label}: static baselines never re-plan");
+            }
         }
     }
 

@@ -66,6 +66,40 @@ impl Table {
         out
     }
 
+    /// Machine-readable dump (CI artifacts); no serde dependency, so the
+    /// JSON is assembled by hand with minimal string escaping.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let cols: Vec<String> =
+            self.columns.iter().map(|c| format!("\"{}\"", esc(c))).collect();
+        let rows: Vec<String> = self
+            .rows
+            .iter()
+            .map(|(label, cells)| {
+                let cs: Vec<String> = cells
+                    .iter()
+                    .map(|c| match c {
+                        Some(c) => format!("{{\"mean\":{},\"std\":{}}}", c.mean, c.std),
+                        None => "null".into(),
+                    })
+                    .collect();
+                format!(
+                    "{{\"label\":\"{}\",\"cells\":[{}]}}",
+                    esc(label),
+                    cs.join(",")
+                )
+            })
+            .collect();
+        format!(
+            "{{\"title\":\"{}\",\"columns\":[{}],\"rows\":[{}]}}\n",
+            esc(&self.title),
+            cols.join(","),
+            rows.join(",")
+        )
+    }
+
     /// Write markdown + csv into `results/` under the repo root.
     pub fn save(&self, stem: &str) -> std::io::Result<()> {
         let dir = crate::config::repo_path("results");
@@ -73,6 +107,14 @@ impl Table {
         std::fs::write(format!("{dir}/{stem}.md"), self.to_markdown())?;
         std::fs::write(format!("{dir}/{stem}.csv"), self.to_csv())?;
         Ok(())
+    }
+
+    /// Write the JSON dump into `results/` (uploaded as a CI artifact by
+    /// the budget-shift smoke run).
+    pub fn save_json(&self, stem: &str) -> std::io::Result<()> {
+        let dir = crate::config::repo_path("results");
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(format!("{dir}/{stem}.json"), self.to_json())
     }
 
     /// Column index by name (panics if missing).
@@ -102,5 +144,9 @@ mod tests {
         assert!(csv.starts_with("setting,A,B\n"));
         assert!(csv.contains("row1,1.0000,0.1000,,"));
         assert_eq!(t.col("B"), 1);
+        let json = t.to_json();
+        assert!(json.contains("\"title\":\"Test\""));
+        assert!(json.contains("\"columns\":[\"A\",\"B\"]"));
+        assert!(json.contains("{\"label\":\"row1\",\"cells\":[{\"mean\":1,\"std\":0.1},null]}"));
     }
 }

@@ -8,6 +8,7 @@
 
 pub mod backend;
 pub mod baselines;
+pub mod budget;
 pub mod compensate;
 pub mod config;
 pub mod harness;

@@ -10,6 +10,7 @@
 //!         [--comp none|step|gap|fisher|iter] [--ocl vanilla|er|mir|lwf|mas]
 //!         [--backend native|xla] [--executor sim|threaded]
 //!         [--mode lockstep|freerun]
+//!         [--budget-schedule <bytes>@<at>[,...]]
 //!         Plan + run full Ferret on one of the paper's 20 settings and
 //!         report oacc/tacc/memory/adaptation rate. `--executor threaded`
 //!         runs one OS thread per (worker, stage) device (real
@@ -19,10 +20,16 @@
 //!         reports observed per-batch latency percentiles plus the
 //!         staleness histogram; `lockstep` replays virtual time.
 //!
+//!         `--budget-schedule` makes the memory budget a time-varying
+//!         signal: e.g. `12mb@b60` halves the budget at batch 60 — the
+//!         engine drains, re-plans against measured stage times, migrates
+//!         the learned weights into the new partition, and resumes.
+//!
 //!   settings
 //!         List the 20 paper settings with their indices.
 
 use ferret::backend::{native::NativeBackend, xla::XlaBackend, Backend};
+use ferret::budget::BudgetSchedule;
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
@@ -64,6 +71,15 @@ impl Opts {
     }
 }
 
+/// Parse a flag value or exit with a message naming the flag — never
+/// panic on user-supplied input.
+fn parse_or_exit<T: std::str::FromStr>(v: &str, flag: &str, expected: &str) -> T {
+    v.parse().unwrap_or_else(|_| {
+        eprintln!("error: --{flag} expects {expected}, got '{v}'");
+        std::process::exit(2)
+    })
+}
+
 fn cmd_settings() {
     println!("idx  label                          model          drift");
     for (i, s) in paper_settings().iter().enumerate() {
@@ -74,12 +90,15 @@ fn cmd_settings() {
 fn cmd_plan(opts: &Opts) {
     let zoo = default_zoo().expect("zoo");
     let model = zoo.model(opts.get("model").unwrap_or("convnet10")).expect("model");
-    let batch = opts.get("batch").map(|b| b.parse().unwrap()).unwrap_or(zoo.batch);
+    let batch = opts
+        .get("batch")
+        .map(|b| parse_or_exit::<usize>(b, "batch", "a batch size"))
+        .unwrap_or(zoo.batch);
     let prof = Profile::analytic(model, batch);
     let td = prof.default_td();
     let budget = opts
         .get("budget-mb")
-        .map(|m| m.parse::<f64>().unwrap() * 1e6)
+        .map(|m| parse_or_exit::<f64>(m, "budget-mb", "a budget in MB") * 1e6)
         .unwrap_or(f64::INFINITY);
     let out = plan(&prof, td, budget, ferret::planner::costmodel::decay_for_td(td));
     println!("model      : {} ({} params, {} layers)", model.name, model.param_count(), model.num_layers());
@@ -103,19 +122,36 @@ fn cmd_run(opts: &Opts) {
     let settings = paper_settings();
     let setting = match opts.get("setting") {
         Some(s) => match s.parse::<usize>() {
-            Ok(i) => settings[i].clone(),
+            Ok(i) => settings.get(i).cloned().unwrap_or_else(|| {
+                eprintln!(
+                    "error: --setting index {i} out of range (0..{})",
+                    settings.len() - 1
+                );
+                std::process::exit(2)
+            }),
             Err(_) => settings
                 .iter()
                 .find(|st| st.label.eq_ignore_ascii_case(s))
-                .expect("unknown setting label")
-                .clone(),
+                .cloned()
+                .unwrap_or_else(|| {
+                    eprintln!(
+                        "error: --setting '{s}' matches no label (try `ferret settings`)"
+                    );
+                    std::process::exit(2)
+                }),
         },
         None => settings[0].clone(),
     };
     let zoo = default_zoo().expect("zoo");
     let model = zoo.model(setting.model).expect("model").clone();
-    let batches = opts.get("batches").map(|b| b.parse().unwrap()).unwrap_or(120);
-    let seed = opts.get("seed").map(|s| s.parse().unwrap()).unwrap_or(42);
+    let batches = opts
+        .get("batches")
+        .map(|b| parse_or_exit::<usize>(b, "batches", "a stream length"))
+        .unwrap_or(120);
+    let seed = opts
+        .get("seed")
+        .map(|s| parse_or_exit::<u64>(s, "seed", "an integer seed"))
+        .unwrap_or(42);
     let comp = match opts.get("comp").unwrap_or("iter") {
         "none" => CompKind::NoComp,
         "step" => CompKind::StepAware,
@@ -145,12 +181,33 @@ fn cmd_run(opts: &Opts) {
         Some(m) => m,
         None => usage(),
     };
+    let budget_sched = match opts.get("budget-schedule") {
+        Some(s) => match BudgetSchedule::parse(s) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: --budget-schedule: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => BudgetSchedule::fixed(),
+    };
 
     let prof = Profile::analytic(&model, zoo.batch);
     let td = prof.default_td();
+    if budget_sched.is_dynamic() && mode == Mode::Freerun {
+        // show where batch-index steps land on the wall clock
+        for st in &budget_sched.steps {
+            if let ferret::budget::StepAt::Batch(b) = st.at {
+                eprintln!(
+                    "[ferret] budget step at batch {b} ≈ {}µs wall-clock",
+                    ferret::stream::batch_arrival_us(b, td)
+                );
+            }
+        }
+    }
     let budget = opts
         .get("budget-mb")
-        .map(|m| m.parse::<f64>().unwrap() * 1e6)
+        .map(|m| parse_or_exit::<f64>(m, "budget-mb", "a budget in MB") * 1e6)
         .unwrap_or(f64::INFINITY);
     let out = plan(&prof, td, budget, ferret::planner::costmodel::decay_for_td(td));
     eprintln!(
@@ -171,7 +228,8 @@ fn cmd_run(opts: &Opts) {
     ));
     let mut plugin = ocl.build(seed);
     let ep = EngineParams { lr: 0.1, seed, ..Default::default() };
-    let cfg = AsyncCfg::ferret(out.partition, out.config, comp);
+    let dynamic = budget_sched.is_dynamic();
+    let cfg = AsyncCfg::ferret(out.partition, out.config, comp).with_budget(budget_sched);
     let t0 = std::time::Instant::now();
     let r = run_async_with(
         cfg,
@@ -191,6 +249,17 @@ fn cmd_run(opts: &Opts) {
     println!("tacc       : {:.2}%", r.metrics.tacc);
     println!("adaptation : {:.4}", r.metrics.adaptation_rate());
     println!("memory     : {:.2} MB (analytic Eq. 4)", r.metrics.mem_bytes / 1e6);
+    if dynamic {
+        println!(
+            "replans    : {} (drain latencies {:?} ticks)",
+            r.metrics.replans, r.metrics.drains
+        );
+        println!(
+            "ledger     : peak {:.2} MB | final {:.2} MB (measured)",
+            r.metrics.ledger.peak_total as f64 / 1e6,
+            r.metrics.ledger.last.total() as f64 / 1e6
+        );
+    }
     println!("trained    : {} updates, dropped {}", r.metrics.trained, r.metrics.dropped);
     if mode == Mode::Freerun {
         println!("latency µs : {}", r.metrics.latency_summary());

@@ -3,6 +3,7 @@
 //! and the measured adaptation rate (Def. 4.1).
 
 use crate::backend::{accuracy, forward_all, Backend};
+use crate::budget::MemoryLedger;
 use crate::config::LayerShape;
 use crate::model::LayerParams;
 use crate::stream::TestSet;
@@ -80,6 +81,16 @@ pub struct RunMetrics {
     /// observed-staleness histogram: `staleness_hist[τ]` = updates applied
     /// τ versions stale; the last bucket aggregates τ ≥ STALENESS_BUCKETS
     pub staleness_hist: Vec<u64>,
+    /// measured-memory accounting: per-category peaks, end-of-run state,
+    /// and the memory-over-time trace (one point per update)
+    pub ledger: MemoryLedger,
+    /// number of mid-stream plan transitions executed
+    pub replans: u64,
+    /// drain latency of each plan transition (virtual ticks in lockstep,
+    /// real microseconds in freerun)
+    pub drains: Vec<u64>,
+    /// planner-predicted footprint after each re-plan: `(t, bytes)`
+    pub plan_trace: Vec<(u64, f64)>,
 }
 
 /// Histogram cap: staleness beyond this lands in the overflow bucket.
@@ -136,6 +147,14 @@ impl RunMetrics {
     /// Record one batch's arrival→prediction latency.
     pub fn record_latency(&mut self, latency: u64) {
         self.latencies.push(latency);
+    }
+
+    /// Record one executed plan transition: when it landed, how long the
+    /// in-flight drain took, and the footprint the new plan predicts.
+    pub fn record_replan(&mut self, t: u64, drain: u64, planned_bytes: f64) {
+        self.replans += 1;
+        self.drains.push(drain);
+        self.plan_trace.push((t, planned_bytes));
     }
 
     /// Record the staleness an update was applied at.

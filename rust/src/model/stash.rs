@@ -88,6 +88,17 @@ impl VersionStash {
             .map(|(_, p)| p.param_count() * std::mem::size_of::<f32>())
             .sum()
     }
+
+    /// Bytes of stashed versions that are *not* the same physical `Arc`
+    /// as `live` — the memory ledger's physical accounting (the newest
+    /// entry aliases the live copy right after every update).
+    pub fn bytes_excl(&self, live: &SharedParams) -> usize {
+        self.entries
+            .iter()
+            .filter(|(_, p)| !std::sync::Arc::ptr_eq(p, live))
+            .map(|(_, p)| p.param_count() * std::mem::size_of::<f32>())
+            .sum()
+    }
 }
 
 /// Per-layer version stashes of a whole model — the stage-state bookkeeping
@@ -140,6 +151,13 @@ impl StashSet {
     /// Logical bytes across all layers (measured-memory cross-check).
     pub fn bytes(&self) -> usize {
         self.stashes.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Physical bytes across all layers, excluding entries that alias the
+    /// live copy (see [`VersionStash::bytes_excl`]) — what the memory
+    /// ledger charges for weight stashing.
+    pub fn bytes_excl_live(&self, live: &LiveParams) -> usize {
+        self.stashes.iter().zip(&live.layers).map(|(s, p)| s.bytes_excl(p)).sum()
     }
 
     pub fn layer(&self, l: usize) -> &VersionStash {
@@ -222,6 +240,19 @@ mod tests {
         s.push(0, p(1.0));
         s.push(1, p(2.0));
         assert_eq!(s.bytes(), 2 * 3 * 4);
+    }
+
+    #[test]
+    fn bytes_excl_skips_entries_aliasing_live() {
+        let mut s = VersionStash::new(4);
+        let live = p(9.0);
+        s.push(0, p(1.0));
+        s.push(1, live.clone()); // the newest entry aliases the live copy
+        assert_eq!(s.bytes(), 2 * 3 * 4, "logical bytes count both");
+        assert_eq!(s.bytes_excl(&live), 3 * 4, "physical bytes skip the alias");
+        // an equal-valued but distinct allocation still counts
+        let other = p(9.0);
+        assert_eq!(s.bytes_excl(&other), 2 * 3 * 4);
     }
 
     #[test]

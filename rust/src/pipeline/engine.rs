@@ -27,6 +27,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::backend::Backend;
+use crate::budget::{BudgetSchedule, BudgetState, LedgerSnapshot};
 use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::{eval_tacc, RunMetrics};
@@ -41,8 +42,8 @@ use crate::pipeline::sched::{
     WorkSel,
 };
 use crate::pipeline::{EngineParams, RunResult};
-use crate::planner::costmodel::{mem_footprint, PipeConfig};
-use crate::planner::{Partition, Profile};
+use crate::planner::costmodel::{decay_for_td, mem_footprint, plan_versions, PipeConfig};
+use crate::planner::{plan, Partition, PlanOutcome, Profile};
 use crate::stream::{arrival_interval_us, Batch, SyntheticStream};
 
 /// Asynchronous schedule family (Table 3's right half).
@@ -72,6 +73,10 @@ pub struct AsyncCfg {
     pub comp_params: CompParams,
     /// call plugin.after_update every k-th stage update (teacher refresh)
     pub plugin_cadence: u64,
+    /// time-varying memory budget; when dynamic, the engine meters the
+    /// memory ledger against the budget in force and executes a plan
+    /// transition at each schedule step (or ledger breach)
+    pub budget: BudgetSchedule,
 }
 
 impl AsyncCfg {
@@ -98,6 +103,7 @@ impl AsyncCfg {
             comp_kind: CompKind::NoComp,
             comp_params: CompParams::default(),
             plugin_cadence: 8,
+            budget: BudgetSchedule::fixed(),
         }
     }
 
@@ -109,7 +115,14 @@ impl AsyncCfg {
             comp_kind,
             comp_params: CompParams::default(),
             plugin_cadence: 8,
+            budget: BudgetSchedule::fixed(),
         }
+    }
+
+    /// Attach a time-varying budget schedule (mid-stream re-planning).
+    pub fn with_budget(mut self, budget: BudgetSchedule) -> Self {
+        self.budget = budget;
+        self
     }
 }
 
@@ -133,11 +146,58 @@ pub struct AsyncEngine<'a> {
     update_count: u64,
     /// stash capacity per layer (resolved in `new`; freerun cells reuse it)
     stash_cap: usize,
+    /// the caller's explicit stash-capacity override (0 = derive), kept so
+    /// plan transitions can re-derive the capacity for the new plan
+    stash_override: usize,
+    /// per-stage measured service times of the current phase — seeds the
+    /// profile refresh when a plan transition re-invokes the planner
+    meas: Vec<StageObs>,
     /// freerun: per-stage live state owned jointly with the device threads
     /// (empty in lockstep mode)
     cells: Vec<Arc<StageCell>>,
     /// freerun: device tasks dispatched but not yet completed
     flights: usize,
+}
+
+/// Accumulated measured forward/backward service times of one stage
+/// (virtual ticks in lockstep — exactly the replayed analytic costs — and
+/// real microseconds in freerun).
+#[derive(Debug, Clone, Copy, Default)]
+struct StageObs {
+    tf_sum: u64,
+    tf_n: u64,
+    tb_sum: u64,
+    tb_n: u64,
+}
+
+impl StageObs {
+    fn mean_tf(&self) -> Option<f64> {
+        (self.tf_n > 0).then(|| self.tf_sum as f64 / self.tf_n as f64)
+    }
+
+    fn mean_tb(&self) -> Option<f64> {
+        (self.tb_n > 0).then(|| self.tb_sum as f64 / self.tb_n as f64)
+    }
+}
+
+/// Per-layer stash capacity: an explicit override wins; dynamic-budget
+/// runs derive it from the plan's Eq. 4 version count so measured stash
+/// bytes track the planned footprint across transitions; static runs keep
+/// the historical headroom sizing (metric-compatible with older runs).
+fn resolve_stash_cap(
+    override_cap: usize,
+    pipe: &PipeConfig,
+    p: usize,
+    n_workers: usize,
+    budget: &BudgetSchedule,
+) -> usize {
+    if override_cap > 0 {
+        override_cap
+    } else if budget.is_dynamic() {
+        plan_versions(pipe, p).max(2)
+    } else {
+        n_workers * (p + 2) + 4
+    }
 }
 
 impl<'a> AsyncEngine<'a> {
@@ -160,11 +220,7 @@ impl<'a> AsyncEngine<'a> {
         let params = LiveParams::init(model, ep.seed);
         let n_workers = cfg.pipe.workers.len();
         let p = stages.len();
-        let stash_cap = if ep.stash_cap > 0 {
-            ep.stash_cap
-        } else {
-            n_workers * (p + 2) + 4
-        };
+        let stash_cap = resolve_stash_cap(ep.stash_cap, &cfg.pipe, p, n_workers, &cfg.budget);
         let stash = StashSet::new(&params, stash_cap);
         let active_workers: Vec<usize> = cfg
             .pipe
@@ -189,6 +245,8 @@ impl<'a> AsyncEngine<'a> {
             total_params,
             update_count: 0,
             stash_cap,
+            stash_override: ep.stash_cap,
+            meas: vec![StageObs::default(); p],
             cells: Vec::new(),
             flights: 0,
         }
@@ -265,6 +323,10 @@ impl<'a> AsyncEngine<'a> {
                     if self.cfg.pipe.workers[w].recompute {
                         dur += self.sched.stages[s].tf; // T1: extra forward
                     }
+                    // lockstep "measures" the replayed analytic cost, so a
+                    // re-plan's profile refresh is exact (and deterministic)
+                    self.meas[s].tb_sum += self.sched.stages[s].tb;
+                    self.meas[s].tb_n += 1;
                     self.sched.dispatch(w, s, t + dur.max(1), job, true);
                     return;
                 }
@@ -274,6 +336,8 @@ impl<'a> AsyncEngine<'a> {
                     self.sched.jobs[job].fwd_version[s] = self.sched.version[s];
                     executor.start((w, s), DeviceTask::Stage(self.fwd_task(s, x, rows)));
                     let end = t + self.sched.stages[s].tf.max(1);
+                    self.meas[s].tf_sum += self.sched.stages[s].tf;
+                    self.meas[s].tf_n += 1;
                     self.sched.dispatch(w, s, end, job, false);
                     return;
                 }
@@ -341,6 +405,187 @@ impl<'a> AsyncEngine<'a> {
         if self.update_count % self.cfg.plugin_cadence == 0 {
             plugin.after_update(&self.params.layers, ctx);
         }
+        if self.cfg.budget.is_dynamic() {
+            metrics.ledger.record(t, self.ledger_snapshot());
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Dynamic budgets: the memory ledger and plan transitions
+    // -----------------------------------------------------------------
+
+    /// Meter the bytes the engine actually holds right now, by category:
+    /// live parameters, stashed weight versions physically distinct from
+    /// the live copy, in-flight activations/gradients/labels (plus the
+    /// per-slot gradient accumulators), and compensator state.
+    ///
+    /// Cost: one linear walk over the phase's job table and slots per
+    /// call (retired jobs are skipped but still iterated). Metering runs
+    /// once per scheduler event in dynamic-budget runs — O(phase length)
+    /// per event. If phases ever reach many thousands of batches, switch
+    /// to incremental byte counters maintained at admit/retire/accumulate.
+    fn ledger_snapshot(&self) -> LedgerSnapshot {
+        let f32s = std::mem::size_of::<f32>();
+        let params = self.total_params * f32s;
+        let (stash, comps) = if self.cells.is_empty() {
+            (
+                self.stash.bytes_excl_live(&self.params),
+                self.comps.iter().map(|c| c.state_bytes()).sum(),
+            )
+        } else {
+            (
+                self.cells.iter().map(|c| c.stash_bytes_excl_live()).sum(),
+                self.cells.iter().map(|c| c.comp_state_bytes()).sum(),
+            )
+        };
+        let mut acts = 0usize;
+        for j in &self.sched.jobs {
+            if j.done {
+                continue;
+            }
+            acts += j.batch_x.len() * f32s;
+            acts += j.y.len() * std::mem::size_of::<i32>();
+            acts += j.stage_inputs.iter().flatten().map(|x| x.len() * f32s).sum::<usize>();
+            acts += j.grad.as_ref().map_or(0, |g| g.len() * f32s);
+        }
+        for row in &self.sched.slots {
+            for slot in row {
+                if let Some(acc) = &slot.acc {
+                    acts += acc.iter().map(|g| (g.gw.len() + g.gb.len()) * f32s).sum::<usize>();
+                }
+            }
+        }
+        LedgerSnapshot { params, stash, acts, comps }
+    }
+
+    /// (worker, stage) slots holding a partially-filled gradient
+    /// accumulator — flushed as final updates under the old plan before a
+    /// transition tears its topology down, so the drain loses no training
+    /// signal even when `accum > 1` leaves an under-threshold remainder.
+    fn pending_accumulators(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for (w, row) in self.sched.slots.iter().enumerate() {
+            for (s, slot) in row.iter().enumerate() {
+                if slot.acc_count > 0 {
+                    v.push((w, s));
+                }
+            }
+        }
+        v
+    }
+
+    /// This run's profile: the analytic base rescaled so per-stage times
+    /// match the phase's measured means (`Profile::rescale_stages`). In
+    /// lockstep the measured means equal the replayed analytic costs, so
+    /// the refresh is exact; in freerun it folds real device-thread
+    /// service times (µs) into the next plan.
+    fn refreshed_profile(&self, base: &Profile) -> Profile {
+        let tf: Vec<Option<f64>> = self.meas.iter().map(|o| o.mean_tf()).collect();
+        let tb: Vec<Option<f64>> = self.meas.iter().map(|o| o.mean_tb()).collect();
+        base.rescale_stages(&self.cfg.partition, &tf, &tb)
+    }
+
+    /// Execute a plan transition after a full drain (no job in flight, no
+    /// device task outstanding):
+    ///
+    ///   1. learned weights survive — per-layer live parameters (and the
+    ///      per-layer compensator EMA state) carry over; stage grouping is
+    ///      only a view over layers, so merging/splitting stages loses
+    ///      nothing;
+    ///   2. the scheduling core is rebuilt for the new worker/stage
+    ///      topology (fresh version counters, empty queues);
+    ///   3. the weight stash restarts at version 0 of the live weights,
+    ///      with capacity re-derived from the new plan;
+    ///   4. freerun stage cells are rebuilt around the carried-over state;
+    ///   5. the executor re-spawns/retires device threads to match.
+    fn transition(&mut self, out: &PlanOutcome, prof: &Profile, executor: &mut dyn Executor) {
+        let freerun = !self.cells.is_empty();
+        let retained_comps: Vec<Box<dyn Compensator>> = if freerun {
+            let live = self.free_params();
+            for (l, p) in live.into_iter().enumerate() {
+                self.params.layers[l] = p;
+            }
+            self.cells.iter().flat_map(|c| c.take_comps()).collect()
+        } else {
+            Vec::new()
+        };
+        self.cfg.partition = out.partition.clone();
+        self.cfg.pipe = out.config.clone();
+        let p = self.cfg.partition.num_stages();
+        let stages: Vec<StageMeta> = (0..p)
+            .map(|j| StageMeta {
+                layers: self.cfg.partition.stage_layers(j),
+                tf: self.cfg.partition.stage_tf(prof, j),
+                tb: self.cfg.partition.stage_tb(prof, j),
+                params: self.cfg.partition.stage_params(prof, j),
+            })
+            .collect();
+        let n_workers = self.cfg.pipe.workers.len();
+        let active: Vec<usize> = self
+            .cfg
+            .pipe
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.active())
+            .map(|(i, _)| i)
+            .collect();
+        self.sched = SchedCore::new(stages, n_workers, active);
+        self.stash_cap =
+            resolve_stash_cap(self.stash_override, &self.cfg.pipe, p, n_workers, &self.cfg.budget);
+        self.stash = StashSet::new(&self.params, self.stash_cap);
+        self.meas = vec![StageObs::default(); p];
+        if freerun {
+            self.build_cells_from(retained_comps);
+        }
+        executor.reconfigure(&self.devices());
+    }
+
+    /// Admit one stream batch to the lockstep pipeline (or predict-and-
+    /// drop when over capacity). `arrival` is the batch's stream stamp;
+    /// `now` is when the engine actually gets to it (later than `arrival`
+    /// after a drain — the stream does not wait for a re-plan).
+    #[allow(clippy::too_many_arguments)]
+    fn admit_lockstep(
+        &mut self,
+        batch: Batch,
+        seq: u64,
+        arrival: u64,
+        now: u64,
+        plugin: &mut dyn OclPlugin,
+        ctx: &OclCtx,
+        metrics: &mut RunMetrics,
+        executor: &mut dyn Executor,
+    ) {
+        if self.sched.over_capacity() {
+            // predict with live weights; drop from training
+            predict_only(
+                self.backend,
+                &self.shapes,
+                &self.params.layers,
+                ctx.classes,
+                &batch.x,
+                &batch.y,
+                now,
+                metrics,
+            );
+            return;
+        }
+        let batch = plugin.augment(batch, &self.params.layers, ctx);
+        let p = self.sched.num_stages();
+        let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
+        stage_inputs[0] = Some(batch.x.clone());
+        let (_, w) = self.sched.admit(Job {
+            arrival,
+            seq,
+            y: batch.y,
+            batch_x: batch.x,
+            stage_inputs,
+            fwd_version: vec![0; p],
+            grad: None,
+            done: false,
+        });
+        self.kick(w, 0, now, executor);
     }
 
     /// Run to completion over the stream, dispatching stage math to
@@ -361,7 +606,12 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Lockstep: the event heap replays virtual `tf`/`tb` costs; metrics
-    /// are identical across executors (tests/executor_equiv.rs).
+    /// are identical across executors (tests/executor_equiv.rs), including
+    /// through plan transitions. Execution is phase-structured: each phase
+    /// runs one plan; a budget-schedule step (checked at batch arrivals —
+    /// the deterministic replan boundary) or a ledger breach drains the
+    /// in-flight microbatches, re-plans at the budget now in force, and
+    /// resumes the same stream under the new plan.
     fn run_lockstep(
         mut self,
         stream: &mut SyntheticStream,
@@ -375,6 +625,7 @@ impl<'a> AsyncEngine<'a> {
         self.stage_times(&prof);
         let td = if ep.td == 0 { prof.default_td() } else { ep.td };
         self.decay_c = ep.decay(td);
+        let decay = decay_for_td(td);
         let shapes = self.shapes.clone();
         let ctx = OclCtx {
             backend: self.backend,
@@ -386,7 +637,6 @@ impl<'a> AsyncEngine<'a> {
         let mut metrics = RunMetrics::default();
         let test = stream.test_set(ep.tacc_per_class);
         metrics.exec_threads = executor.threads();
-        let p = self.sched.num_stages();
 
         let mut clock = VirtualClock::new();
         let mut arrived = 0u64;
@@ -394,107 +644,146 @@ impl<'a> AsyncEngine<'a> {
         if next_batch.is_some() {
             self.sched.events.push(0, Ev::Arrive);
         }
+        // virtual time never reaches wall-clock stamps: drop `u<N>` steps
+        // so they cannot block batch-index steps queued behind them
+        let mut budget = BudgetState::without_wall_steps(&self.cfg.budget);
+        // metering only pays off when a budget can step/breach; static
+        // runs skip the O(jobs) ledger walks entirely (one final observe
+        // below keeps `ledger.last` meaningful)
+        let dynamic = self.cfg.budget.is_dynamic();
 
-        while let Some((te, ev)) = self.sched.events.pop() {
-            clock.advance(te);
-            let t = clock.now();
-            match ev {
-                Ev::Arrive => {
-                    let batch = next_batch.take().expect("arrive without batch");
-                    metrics.record_arrival();
-                    let seq = arrived;
-                    arrived += 1;
-                    next_batch = stream.next_batch();
-                    if next_batch.is_some() {
-                        self.sched.events.push(arrived * td, Ev::Arrive);
-                    }
-                    if self.sched.over_capacity() {
-                        // predict with live weights; drop from training
-                        predict_only(
-                            self.backend,
-                            &self.shapes,
-                            &self.params.layers,
-                            spec.classes,
-                            &batch.x,
-                            &batch.y,
-                            t,
-                            &mut metrics,
-                        );
-                        continue;
-                    }
-                    let batch = plugin.augment(batch, &self.params.layers, &ctx);
-                    let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
-                    stage_inputs[0] = Some(batch.x.clone());
-                    let (_, w) = self.sched.admit(Job {
-                        arrival: t,
-                        seq,
-                        y: batch.y,
-                        batch_x: batch.x,
-                        stage_inputs,
-                        fwd_version: vec![0; p],
-                        grad: None,
-                        done: false,
-                    });
-                    self.kick(w, 0, t, executor);
-                }
-                Ev::Done { worker: w, stage: s, job, bwd } => {
-                    let result = executor.finish((w, s)).into_stage();
-                    if !bwd {
-                        if s + 1 < p {
-                            self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
-                            self.sched.slots[w][s + 1].fwd_q.push_back(job);
-                            self.kick(w, s + 1, t, executor);
-                        } else {
-                            // logits ready: prediction + loss head
-                            let logits = result.out;
-                            let (y, bx) = (
-                                self.sched.jobs[job].y.clone(),
-                                self.sched.jobs[job].batch_x.clone(),
-                            );
-                            metrics.record_prediction(
-                                t,
-                                crate::backend::accuracy(spec.classes, &logits, &y),
-                            );
-                            metrics
-                                .record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
-                            let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, &ctx);
-                            metrics.record_loss(t, loss);
-                            self.sched.jobs[job].grad = Some(gl);
-                            self.sched.slots[w][s].bwd_q.push_back(job);
+        'run: loop {
+            // batch held across a drain: (payload, seq, arrival stamp)
+            let mut held: Option<(Batch, u64, u64)> = None;
+            let mut drain_from: Option<u64> = None;
+            while let Some((te, ev)) = self.sched.events.pop() {
+                clock.advance(te);
+                let t = clock.now();
+                match ev {
+                    Ev::Arrive => {
+                        let batch = next_batch.take().expect("arrive without batch");
+                        metrics.record_arrival();
+                        let seq = arrived;
+                        arrived += 1;
+                        next_batch = stream.next_batch();
+                        // advance the budget cursor even mid-drain so the
+                        // pending re-plan sees the newest budget in force
+                        let stepped = budget.step_due(seq, 0);
+                        if drain_from.is_some() || stepped {
+                            // budget boundary (or mid-drain arrival): hold
+                            // the batch, stop admitting, and let the
+                            // in-flight microbatches finish under the old
+                            // plan — nothing is dropped by the transition
+                            if drain_from.is_none() {
+                                drain_from = Some(t);
+                            }
+                            held = Some((batch, seq, te));
+                            continue;
                         }
-                    } else {
-                        // deliver the backward results to the accumulator
-                        let grads = result.grads.expect("bwd grads");
-                        let gx = result.out;
-                        let slot = &mut self.sched.slots[w][s];
-                        match &mut slot.acc {
-                            None => slot.acc = Some(grads),
-                            Some(a) => {
-                                for (ag, g) in a.iter_mut().zip(&grads) {
-                                    ag.add(g);
+                        if next_batch.is_some() {
+                            self.sched.events.push(arrived * td, Ev::Arrive);
+                        }
+                        // `te` is the scheduled stream stamp (seq*td): after
+                        // a drain the clock may already be past it, and the
+                        // latency/decay metrics must charge that wait
+                        self.admit_lockstep(
+                            batch, seq, te, t, plugin, &ctx, &mut metrics, executor,
+                        );
+                    }
+                    Ev::Done { worker: w, stage: s, job, bwd } => {
+                        let p = self.sched.num_stages();
+                        let result = executor.finish((w, s)).into_stage();
+                        if !bwd {
+                            if s + 1 < p {
+                                self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
+                                self.sched.slots[w][s + 1].fwd_q.push_back(job);
+                                self.kick(w, s + 1, t, executor);
+                            } else {
+                                // logits ready: prediction + loss head
+                                let logits = result.out;
+                                let (y, bx) = (
+                                    self.sched.jobs[job].y.clone(),
+                                    self.sched.jobs[job].batch_x.clone(),
+                                );
+                                metrics.record_prediction(
+                                    t,
+                                    crate::backend::accuracy(spec.classes, &logits, &y),
+                                );
+                                metrics
+                                    .record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                                let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, &ctx);
+                                metrics.record_loss(t, loss);
+                                self.sched.jobs[job].grad = Some(gl);
+                                self.sched.slots[w][s].bwd_q.push_back(job);
+                            }
+                        } else {
+                            // deliver the backward results to the accumulator
+                            let grads = result.grads.expect("bwd grads");
+                            let gx = result.out;
+                            let slot = &mut self.sched.slots[w][s];
+                            match &mut slot.acc {
+                                None => slot.acc = Some(grads),
+                                Some(a) => {
+                                    for (ag, g) in a.iter_mut().zip(&grads) {
+                                        ag.add(g);
+                                    }
                                 }
                             }
+                            slot.acc_count += 1;
+                            slot.acc_arrivals.push(self.sched.jobs[job].arrival);
+                            slot.acc_from_version =
+                                slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
+                            if slot.acc_count >= self.cfg.pipe.workers[w].accum[s] {
+                                self.apply_update(w, s, t, plugin, &ctx, &mut metrics);
+                            }
+                            if s > 0 {
+                                self.sched.jobs[job].grad = Some(gx);
+                                self.sched.slots[w][s - 1].bwd_q.push_back(job);
+                                self.kick(w, s - 1, t, executor);
+                            } else {
+                                self.sched.retire(job);
+                            }
                         }
-                        slot.acc_count += 1;
-                        slot.acc_arrivals.push(self.sched.jobs[job].arrival);
-                        slot.acc_from_version =
-                            slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
-                        if slot.acc_count >= self.cfg.pipe.workers[w].accum[s] {
-                            self.apply_update(w, s, t, plugin, &ctx, &mut metrics);
-                        }
-                        if s > 0 {
-                            self.sched.jobs[job].grad = Some(gx);
-                            self.sched.slots[w][s - 1].bwd_q.push_back(job);
-                            self.kick(w, s - 1, t, executor);
-                        } else {
-                            self.sched.retire(job);
+                        self.kick(w, s, t, executor);
+                        metrics.observe_live_bytes(self.stash.bytes());
+                        if dynamic {
+                            let snap = self.ledger_snapshot();
+                            metrics.ledger.observe(snap);
+                            if drain_from.is_none() && budget.breached(snap.total()) {
+                                drain_from = Some(t);
+                            }
                         }
                     }
-                    self.kick(w, s, t, executor);
-                    metrics.observe_live_bytes(self.stash.bytes());
                 }
             }
+            // the phase's event heap is empty: either the run is over, or a
+            // drain completed and the new plan takes effect
+            let Some(t0) = drain_from else { break 'run };
+            if held.is_none() && next_batch.is_none() {
+                break 'run; // a breach landed after the last arrival
+            }
+            let now = clock.now();
+            // flush partially-filled accumulators as final updates under
+            // the old plan — the drained backwards' gradients are applied,
+            // not discarded, even when `accum > 1` left a remainder
+            for (w, s) in self.pending_accumulators() {
+                self.apply_update(w, s, now, plugin, &ctx, &mut metrics);
+            }
+            let refreshed = self.refreshed_profile(&prof);
+            let out = plan(&refreshed, td, budget.current(), decay);
+            self.transition(&out, &refreshed, executor);
+            metrics.record_replan(now, now.saturating_sub(t0), out.mem_bytes);
+            metrics.exec_threads = metrics.exec_threads.max(executor.threads());
+            if let Some((batch, seq, at)) = held.take() {
+                self.admit_lockstep(batch, seq, at, now, plugin, &ctx, &mut metrics, executor);
+            }
+            if next_batch.is_some() {
+                // arrivals keep their original absolute cadence: the stream
+                // did not wait for the transition
+                self.sched.events.push(arrived * td, Ev::Arrive);
+            }
         }
+        metrics.ledger.observe(self.ledger_snapshot());
 
         // analytic memory (Eq. 4) + plugin + compensator state
         let comp_bytes: usize = self.comps.iter().map(|c| c.state_bytes()).sum();
@@ -519,17 +808,32 @@ impl<'a> AsyncEngine<'a> {
     /// Move the per-stage live state (params, stash, compensators) into
     /// `Arc`-shared [`StageCell`]s so updates can run on device threads.
     fn build_cells(&mut self) {
+        let comps: Vec<Box<dyn Compensator>> = self
+            .shapes
+            .iter()
+            .map(|_| make(self.cfg.comp_kind, self.cfg.comp_params))
+            .collect();
+        self.build_cells_from(comps);
+    }
+
+    /// (Re)build the freerun stage cells from the engine's live params,
+    /// regrouping the given per-layer compensators (one per model layer,
+    /// in layer order) by the current partition — plan transitions hand
+    /// back the previous cells' compensators so EMA state survives a
+    /// stage merge/split.
+    fn build_cells_from(&mut self, comps: Vec<Box<dyn Compensator>>) {
         let p = self.sched.num_stages();
+        let mut comps = comps.into_iter();
         self.cells = (0..p)
             .map(|s| {
                 let layers: Vec<usize> = self.sched.stages[s].layers.clone().collect();
                 let params: Vec<SharedParams> =
                     layers.iter().map(|&l| self.params.layers[l].clone()).collect();
-                let comps: Vec<Box<dyn Compensator>> = layers
+                let cell_comps: Vec<Box<dyn Compensator>> = layers
                     .iter()
-                    .map(|_| make(self.cfg.comp_kind, self.cfg.comp_params))
+                    .map(|_| comps.next().expect("one compensator per layer"))
                     .collect();
-                StageCell::new(layers, params, self.stash_cap, comps)
+                StageCell::new(layers, params, self.stash_cap, cell_comps)
             })
             .collect();
     }
@@ -566,7 +870,7 @@ impl<'a> AsyncEngine<'a> {
                     let gout = self.sched.jobs[job].grad.take().expect("upstream grad");
                     let task = self.stage_task(s, self.cells[s].resolve(ver), x, rows, Some(gout));
                     executor.start((w, s), DeviceTask::Stage(task));
-                    self.sched.dispatch_flight(w, s, Flight::Bwd { job });
+                    self.sched.dispatch_flight(w, s, Flight::Bwd { job }, t);
                     self.flights += 1;
                     return;
                 }
@@ -577,7 +881,7 @@ impl<'a> AsyncEngine<'a> {
                     self.sched.jobs[job].fwd_version[s] = ver;
                     let task = self.stage_task(s, params, x, rows, None);
                     executor.start((w, s), DeviceTask::Stage(task));
-                    self.sched.dispatch_flight(w, s, Flight::Fwd { job });
+                    self.sched.dispatch_flight(w, s, Flight::Fwd { job }, t);
                     self.flights += 1;
                     return;
                 }
@@ -599,10 +903,12 @@ impl<'a> AsyncEngine<'a> {
     /// what lets the update itself leave the scheduler thread; the
     /// freerun-vs-lockstep tolerance tests use the plugin-free path where
     /// the orders coincide.
+    #[allow(clippy::too_many_arguments)]
     fn dispatch_update_free(
         &mut self,
         w: usize,
         s: usize,
+        t: u64,
         plugin: &mut dyn OclPlugin,
         ctx: &OclCtx,
         executor: &mut dyn Executor,
@@ -630,12 +936,15 @@ impl<'a> AsyncEngine<'a> {
                 lr: self.lr,
             }),
         );
-        self.sched.dispatch_flight(w, s, Flight::Update { arrivals });
+        self.sched.dispatch_flight(w, s, Flight::Update { arrivals }, t);
         self.flights += 1;
     }
 
-    /// One arriving batch at wall time `now` (its scheduled arrival stamp
-    /// is `arrival`; admission may run late under load).
+    /// Admit one arriving batch at wall time `now` (its scheduled arrival
+    /// stamp is `arrival`; admission may run late under load or after a
+    /// plan-transition drain). The arrival itself is counted at the pull
+    /// site — batches held across a drain are admitted later but arrive
+    /// on time.
     #[allow(clippy::too_many_arguments)]
     fn on_arrive_free(
         &mut self,
@@ -648,7 +957,6 @@ impl<'a> AsyncEngine<'a> {
         metrics: &mut RunMetrics,
         executor: &mut dyn Executor,
     ) {
-        metrics.record_arrival();
         if self.sched.over_capacity() {
             // predict with live weights; drop from training
             let params = self.free_params();
@@ -697,10 +1005,13 @@ impl<'a> AsyncEngine<'a> {
         executor: &mut dyn Executor,
     ) {
         self.flights -= 1;
-        let flight = self.sched.complete_flight(w, s, t);
+        let (flight, dispatched) = self.sched.complete_flight(w, s, t);
         let p = self.sched.num_stages();
         match flight {
             Flight::Fwd { job } => {
+                // measured service time (µs) seeds the next re-plan
+                self.meas[s].tf_sum += t.saturating_sub(dispatched);
+                self.meas[s].tf_n += 1;
                 let result = out.into_stage();
                 if s + 1 < p {
                     self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
@@ -721,6 +1032,8 @@ impl<'a> AsyncEngine<'a> {
                 }
             }
             Flight::Bwd { job } => {
+                self.meas[s].tb_sum += t.saturating_sub(dispatched);
+                self.meas[s].tb_n += 1;
                 let result = out.into_stage();
                 let grads = result.grads.expect("bwd grads");
                 let gx = result.out;
@@ -738,7 +1051,7 @@ impl<'a> AsyncEngine<'a> {
                 slot.acc_from_version =
                     slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
                 if self.sched.slots[w][s].acc_count >= self.cfg.pipe.workers[w].accum[s] {
-                    self.dispatch_update_free(w, s, plugin, ctx, executor);
+                    self.dispatch_update_free(w, s, t, plugin, ctx, executor);
                 }
                 if s > 0 {
                     self.sched.jobs[job].grad = Some(gx);
@@ -762,6 +1075,9 @@ impl<'a> AsyncEngine<'a> {
                 }
                 let bytes: usize = self.cells.iter().map(|c| c.stash_bytes()).sum();
                 metrics.observe_live_bytes(bytes);
+                if self.cfg.budget.is_dynamic() {
+                    metrics.ledger.record(t, self.ledger_snapshot());
+                }
             }
         }
         self.kick_free(w, s, t, executor);
@@ -805,30 +1121,107 @@ impl<'a> AsyncEngine<'a> {
         let clock = WallClock::new();
         let mut arrived = 0u64;
         let mut next_batch = stream.next_batch();
+        let mut budget = BudgetState::new(&self.cfg.budget);
+        let decay = decay_for_td(td);
+        // per-iteration metering only pays off when a budget can
+        // step/breach; static runs keep the per-update trace + final observe
+        let dynamic = self.cfg.budget.is_dynamic();
+        // arrivals held while draining for a plan transition; the stream
+        // does not wait, so several can pile up: (payload, seq, due stamp)
+        let mut held: Vec<(Batch, u64, u64)> = Vec::new();
+        let mut drain_from: Option<u64> = None;
         loop {
-            // admit every arrival already due at the wall clock
+            // pull every arrival already due at the wall clock
             while next_batch.is_some() && clock.now() >= arrived * td_us {
                 let batch = next_batch.take().expect("due arrival");
                 let due = arrived * td_us;
                 let seq = arrived;
                 arrived += 1;
                 next_batch = stream.next_batch();
-                self.on_arrive_free(
-                    batch,
-                    seq,
-                    due,
-                    clock.now(),
-                    plugin,
-                    &ctx,
-                    &mut metrics,
-                    executor,
-                );
+                metrics.record_arrival();
+                // advance the budget cursor even mid-drain so the pending
+                // re-plan sees the newest budget in force
+                let stepped = budget.step_due(seq, clock.now());
+                if drain_from.is_some() || stepped {
+                    if drain_from.is_none() {
+                        drain_from = Some(clock.now());
+                    }
+                    held.push((batch, seq, due));
+                } else {
+                    self.on_arrive_free(
+                        batch,
+                        seq,
+                        due,
+                        clock.now(),
+                        plugin,
+                        &ctx,
+                        &mut metrics,
+                        executor,
+                    );
+                }
             }
             // react to whichever device finished first
             while let Some(((w, s), out)) = executor.try_finish_any() {
                 self.on_done_free(w, s, out, clock.now(), plugin, &ctx, &mut metrics, executor);
             }
-            if next_batch.is_none() && self.flights == 0 {
+            if dynamic {
+                // wall-time (`u<N>`) steps must fire between arrivals too;
+                // `arrived` = next seq, so a batch step fires here at the
+                // same boundary the pull-site check would give it
+                if budget.step_due(arrived, clock.now()) && drain_from.is_none() {
+                    drain_from = Some(clock.now());
+                }
+                let snap = self.ledger_snapshot();
+                metrics.ledger.observe(snap);
+                if drain_from.is_none() && budget.breached(snap.total()) {
+                    drain_from = Some(clock.now());
+                }
+            }
+            // plan transition once the drain completes (no task in flight)
+            if self.flights == 0 && drain_from.is_some() {
+                if held.is_empty() && next_batch.is_none() {
+                    drain_from = None; // nothing ahead to re-plan for
+                } else {
+                    // flush partially-filled accumulators as final updates
+                    // under the old plan (they fly as Update tasks; the
+                    // next fully-drained pass performs the transition)
+                    let pending = self.pending_accumulators();
+                    if !pending.is_empty() {
+                        for (w, s) in pending {
+                            self.dispatch_update_free(
+                                w,
+                                s,
+                                clock.now(),
+                                plugin,
+                                &ctx,
+                                executor,
+                            );
+                        }
+                        continue;
+                    }
+                    let t0 = drain_from.take().expect("drain pending");
+                    let now = clock.now();
+                    let refreshed = self.refreshed_profile(&prof);
+                    let out = plan(&refreshed, td, budget.current(), decay);
+                    self.transition(&out, &refreshed, executor);
+                    metrics.record_replan(now, now.saturating_sub(t0), out.mem_bytes);
+                    metrics.exec_threads = metrics.exec_threads.max(executor.threads());
+                    for (batch, seq, due) in held.drain(..) {
+                        self.on_arrive_free(
+                            batch,
+                            seq,
+                            due,
+                            clock.now(),
+                            plugin,
+                            &ctx,
+                            &mut metrics,
+                            executor,
+                        );
+                    }
+                    continue;
+                }
+            }
+            if next_batch.is_none() && self.flights == 0 && held.is_empty() {
                 break;
             }
             if self.flights > 0 {
@@ -855,6 +1248,7 @@ impl<'a> AsyncEngine<'a> {
                 clock.sleep_until(arrived * td_us);
             }
         }
+        metrics.ledger.observe(self.ledger_snapshot());
         debug_assert_eq!(self.sched.inflight, 0, "every admitted job retired");
 
         // analytic memory (Eq. 4) + plugin + compensator state

@@ -168,6 +168,26 @@ impl StageCell {
         inner.comps.iter().map(|c| c.state_bytes()).sum()
     }
 
+    /// Stash bytes excluding entries that alias the live `Arc` — the
+    /// memory ledger's physical accounting (`stash_bytes` stays logical,
+    /// comparable with Eq. 4).
+    pub fn stash_bytes_excl_live(&self) -> usize {
+        let inner = self.inner.lock().expect("stage cell");
+        inner
+            .stash
+            .iter()
+            .zip(&inner.params)
+            .map(|(s, live)| s.bytes_excl(live))
+            .sum()
+    }
+
+    /// Move the per-layer compensators out of a retiring cell (plan
+    /// transitions: the cell is fully drained, and the EMA state survives
+    /// into the stage that owns these layers under the next plan).
+    pub fn take_comps(&self) -> Vec<Box<dyn Compensator>> {
+        std::mem::take(&mut self.inner.lock().expect("stage cell").comps)
+    }
+
     /// Apply an averaged gradient that was computed against `from_version`:
     /// compensate toward the *current* live version (whatever it is by the
     /// time this runs — the observed staleness), SGD-step every stage
@@ -321,6 +341,11 @@ pub trait Executor {
     fn wait_any(&mut self, timeout: Duration) -> Option<((usize, usize), DeviceOutput)>;
     /// Number of compute threads backing this executor (1 = inline).
     fn threads(&self) -> usize;
+    /// Adjust the device set mid-run (plan transitions): spawn backing
+    /// threads for new devices, retire threads for removed ones. The
+    /// caller must be fully drained — no task in flight — when
+    /// reconfiguring. Inline executors need no adjustment.
+    fn reconfigure(&mut self, _devices: &[(usize, usize)]) {}
 }
 
 /// Inline executor: computes at dispatch on the calling thread and parks
@@ -373,41 +398,58 @@ impl Executor for SimExecutor<'_> {
 /// (per-device order is preserved — each device is a single producer), so
 /// the scheduler can block on "whichever device finishes first". Spawned
 /// inside a [`std::thread::scope`] so the backend can be borrowed (it must
-/// be `Sync` — enforced by the `Backend` supertrait). Dropping the
-/// executor closes the task channels and the device threads exit; the
-/// scope joins them.
-pub struct ThreadedExecutor {
+/// be `Sync` — enforced by the `Backend` supertrait); the scope handle is
+/// retained so plan transitions can spawn threads for new devices
+/// mid-run (`reconfigure`) — retired devices exit when their task sender
+/// drops. Dropping the executor closes every task channel and all device
+/// threads exit; the scope joins them.
+pub struct ThreadedExecutor<'scope, 'env> {
+    scope: &'scope Scope<'scope, 'env>,
+    backend: &'env dyn Backend,
     links: HashMap<(usize, usize), Sender<DeviceTask>>,
+    done_tx: Sender<((usize, usize), DeviceOutput)>,
     done_rx: Receiver<((usize, usize), DeviceOutput)>,
     /// completions drained while waiting for a specific device in `finish`
     parked: VecDeque<((usize, usize), DeviceOutput)>,
 }
 
-impl ThreadedExecutor {
-    pub fn spawn<'scope, 'env>(
+impl<'scope, 'env> ThreadedExecutor<'scope, 'env> {
+    pub fn spawn(
         scope: &'scope Scope<'scope, 'env>,
         backend: &'env dyn Backend,
         devices: &[(usize, usize)],
     ) -> Self {
         let (done_tx, done_rx) = channel::<((usize, usize), DeviceOutput)>();
-        let mut links = HashMap::new();
+        let mut ex = ThreadedExecutor {
+            scope,
+            backend,
+            links: HashMap::new(),
+            done_tx,
+            done_rx,
+            parked: VecDeque::new(),
+        };
         for &dev in devices {
-            let (task_tx, task_rx) = channel::<DeviceTask>();
-            let out_tx = done_tx.clone();
-            scope.spawn(move || {
-                while let Ok(task) = task_rx.recv() {
-                    if out_tx.send((dev, run_device_task(backend, task))).is_err() {
-                        break;
-                    }
-                }
-            });
-            links.insert(dev, task_tx);
+            ex.spawn_device(dev);
         }
-        ThreadedExecutor { links, done_rx, parked: VecDeque::new() }
+        ex
+    }
+
+    fn spawn_device(&mut self, dev: (usize, usize)) {
+        let (task_tx, task_rx) = channel::<DeviceTask>();
+        let out_tx = self.done_tx.clone();
+        let backend = self.backend;
+        self.scope.spawn(move || {
+            while let Ok(task) = task_rx.recv() {
+                if out_tx.send((dev, run_device_task(backend, task))).is_err() {
+                    break;
+                }
+            }
+        });
+        self.links.insert(dev, task_tx);
     }
 }
 
-impl Executor for ThreadedExecutor {
+impl Executor for ThreadedExecutor<'_, '_> {
     fn start(&mut self, dev: (usize, usize), task: DeviceTask) {
         self.links[&dev].send(task).expect("device thread alive");
     }
@@ -441,6 +483,17 @@ impl Executor for ThreadedExecutor {
 
     fn threads(&self) -> usize {
         self.links.len()
+    }
+
+    fn reconfigure(&mut self, devices: &[(usize, usize)]) {
+        // retire devices not in the new set: dropping the sender ends the
+        // device thread's recv loop (it is idle — the caller drained)
+        self.links.retain(|dev, _| devices.contains(dev));
+        for &dev in devices {
+            if !self.links.contains_key(&dev) {
+                self.spawn_device(dev);
+            }
+        }
     }
 }
 
@@ -578,6 +631,30 @@ mod tests {
         assert_eq!(sim.try_finish_any().expect("first").0, (0, 1));
         assert_eq!(sim.wait_any(Duration::ZERO).expect("second").0, (0, 0));
         assert!(sim.try_finish_any().is_none());
+    }
+
+    /// Plan transitions resize the device set mid-run: new devices spawn,
+    /// retired ones exit, surviving ones keep working.
+    #[test]
+    fn reconfigure_respawns_and_retires_devices() {
+        let be = NativeBackend;
+        std::thread::scope(|s| {
+            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0), (0, 1)]);
+            th.start((0, 0), stage(false));
+            let _ = th.finish((0, 0));
+            // drained: retire (0,1), keep (0,0), add (1,0)
+            th.reconfigure(&[(0, 0), (1, 0)]);
+            assert_eq!(th.threads(), 2);
+            th.start((0, 0), stage(false));
+            th.start((1, 0), stage(true));
+            assert!(th.finish((0, 0)).into_stage().grads.is_none());
+            assert!(th.finish((1, 0)).into_stage().grads.is_some());
+        });
+        // inline executor: reconfigure is a no-op
+        let mut sim = SimExecutor::new(&be);
+        sim.reconfigure(&[(9, 9)]);
+        sim.start((9, 9), stage(false));
+        assert!(sim.finish((9, 9)).into_stage().grads.is_none());
     }
 
     /// Update tasks mutate the stage cell wherever they run; the observed

@@ -34,6 +34,29 @@
 //!     flight-based synchronous schedules (DAPPLE, Zero-Bubble,
 //!     Hanayo-kW — Table 3's left half).
 //!
+//! Under a dynamic [`crate::budget::BudgetSchedule`], the async engine is
+//! **phase-structured**: each phase runs one plan; a schedule step (or a
+//! measured-memory ledger breach) triggers the plan-transition protocol —
+//!
+//!   1. *drain*: stop admitting, hold arriving batches (the stream does
+//!      not wait), and let every in-flight microbatch finish under the
+//!      old plan — no batch is lost or double-counted;
+//!   2. *re-plan*: re-invoke Alg. 2/3 at the budget now in force, seeded
+//!      with a profile refreshed from this run's measured per-stage
+//!      forward/backward times (exactly the replayed analytic costs in
+//!      lockstep, real device-thread service times in freerun);
+//!   3. *transition*: carry the per-layer live weights and compensator
+//!      state into the new partition (stages are views over layers, so
+//!      merges/splits lose nothing), rebuild the scheduling core for the
+//!      new worker/stage topology, restart the weight stash at version 0
+//!      with plan-derived capacity, and `Executor::reconfigure` the
+//!      device-thread set;
+//!   4. *resume*: admit the held batches and continue the same stream.
+//!
+//! Lockstep transitions happen at batch-arrival boundaries and stay
+//! deterministic and metric-identical across executors
+//! (tests/budget_replan.rs); freerun drains against the wall clock.
+//!
 //! Single-device stream baselines (Oracle/1-Skip/…) live in
 //! [`crate::baselines`].
 //!

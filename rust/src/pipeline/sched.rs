@@ -195,8 +195,10 @@ pub struct Slot {
     pub acc_count: u64,
     pub acc_arrivals: Vec<u64>,
     pub acc_from_version: u64,
-    /// freerun: dispatched-but-not-completed work, in dispatch order
-    pub flight: VecDeque<Flight>,
+    /// freerun: dispatched-but-not-completed work with its dispatch
+    /// stamp, in dispatch order (the stamp feeds measured per-stage
+    /// service times into re-planning)
+    pub flight: VecDeque<(Flight, u64)>,
 }
 
 impl Slot {
@@ -308,17 +310,19 @@ impl SchedCore {
         self.events.push(end, Ev::Done { worker: w, stage: s, job, bwd });
     }
 
-    /// Freerun dispatch: the device is busy until its real completion
-    /// arrives (no virtual `Done` event); remember what flew so the
-    /// completion can be paired FIFO.
-    pub fn dispatch_flight(&mut self, w: usize, s: usize, flight: Flight) {
+    /// Freerun dispatch at wall time `t`: the device is busy until its
+    /// real completion arrives (no virtual `Done` event); remember what
+    /// flew — and when — so the completion can be paired FIFO and the
+    /// service time measured.
+    pub fn dispatch_flight(&mut self, w: usize, s: usize, flight: Flight, t: u64) {
         self.slots[w][s].busy_until = u64::MAX;
-        self.slots[w][s].flight.push_back(flight);
+        self.slots[w][s].flight.push_back((flight, t));
     }
 
     /// Pair a freerun completion with its dispatch (per-device FIFO) and
-    /// free the device at wall time `t`.
-    pub fn complete_flight(&mut self, w: usize, s: usize, t: u64) -> Flight {
+    /// free the device at wall time `t`. Returns the flight and its
+    /// dispatch stamp.
+    pub fn complete_flight(&mut self, w: usize, s: usize, t: u64) -> (Flight, u64) {
         let f = self.slots[w][s].flight.pop_front().expect("completion without flight");
         if self.slots[w][s].flight.is_empty() {
             self.slots[w][s].busy_until = t;
@@ -485,17 +489,18 @@ mod tests {
     #[test]
     fn flights_pair_fifo_and_gate_the_device() {
         let mut c = core(1, 1);
-        c.dispatch_flight(0, 0, Flight::Fwd { job: 3 });
+        c.dispatch_flight(0, 0, Flight::Fwd { job: 3 }, 10);
         // busy for the whole flight: nothing selectable at any time
         c.slots[0][0].fwd_q.push_back(4);
         assert!(c.select_work(0, 0, u64::MAX - 1).is_none());
-        c.dispatch_flight(0, 0, Flight::Update { arrivals: vec![1, 2] });
-        assert_eq!(c.complete_flight(0, 0, 50), Flight::Fwd { job: 3 });
+        c.dispatch_flight(0, 0, Flight::Update { arrivals: vec![1, 2] }, 20);
+        // completion pairs FIFO and hands back the dispatch stamp
+        assert_eq!(c.complete_flight(0, 0, 50), (Flight::Fwd { job: 3 }, 10));
         // still one flight outstanding -> still busy
         assert!(c.select_work(0, 0, 60).is_none());
         assert_eq!(
             c.complete_flight(0, 0, 80),
-            Flight::Update { arrivals: vec![1, 2] }
+            (Flight::Update { arrivals: vec![1, 2] }, 20)
         );
         // freed at the completion stamp
         assert!(matches!(c.select_work(0, 0, 80), Some(WorkSel::Fwd(4))));

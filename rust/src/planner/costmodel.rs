@@ -141,6 +141,24 @@ pub fn mem_footprint(part: &Partition, prof: &Profile, cfg: &PipeConfig) -> f64 
     total * 4.0
 }
 
+/// Max stashed weight versions any stage needs under `cfg` — the version
+/// term of Eq. 4 (`1 + ceil((P-i-1)/c_a) - c_o`, floored at 1). Seeds the
+/// engine's per-layer stash capacity in dynamic-budget runs so measured
+/// stash bytes track the planned footprint instead of a fixed headroom.
+pub fn plan_versions(cfg: &PipeConfig, p: usize) -> usize {
+    let mut vers = 1u64;
+    for w in cfg.workers.iter().filter(|w| w.active()) {
+        for i in 0..p {
+            let ca = w.accum[i].max(1);
+            let v = (1 + crate::util::cdiv((p - i - 1) as u64, ca))
+                .saturating_sub(w.omit[i])
+                .max(1);
+            vers = vers.max(v);
+        }
+    }
+    vers as usize
+}
+
 /// Memory of a plain single-copy trainer (one model + one set of
 /// activations + one gradient buffer) — the `M_B` reference used for the
 /// 1-Skip/Oracle baselines in the agm tables.
@@ -269,6 +287,29 @@ mod tests {
         // earlier stages hold more versions -> bigger reduction from
         // fully omitting them
         assert!(one_stage_only(0) > one_stage_only(2));
+    }
+
+    #[test]
+    fn plan_versions_follows_accum_and_omission() {
+        let p = 4;
+        let cfg = PipeConfig {
+            workers: vec![WorkerCfg::fresh(0, p, false)],
+        };
+        // accum 1, no omission: stage 0 stores 1 + (P-1) = 4 versions
+        assert_eq!(plan_versions(&cfg, p), 4);
+        let mut acc = cfg.clone();
+        for j in 0..p {
+            acc.workers[0].accum[j] = 3;
+        }
+        // 1 + ceil(3/3) = 2 at stage 0
+        assert_eq!(plan_versions(&acc, p), 2);
+        let mut omitted = cfg.clone();
+        omitted.workers[0].omit[0] = 3;
+        // stage 0 fully omitted -> floor 1; stage 1 dominates with 3
+        assert_eq!(plan_versions(&omitted, p), 3);
+        let mut none = cfg;
+        none.workers[0].delay = -1;
+        assert_eq!(plan_versions(&none, p), 1, "no active workers");
     }
 
     #[test]

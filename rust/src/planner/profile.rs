@@ -84,6 +84,41 @@ impl Profile {
         }
     }
 
+    /// Refresh per-layer times from *measured* per-stage times of a run
+    /// under `part`: each stage's layer times are rescaled so their sum
+    /// matches the measured stage mean (`None` keeps the analytic value).
+    /// Sizes (`w`, `a`) are unchanged. Seeds mid-stream re-planning with
+    /// this run's observed costs instead of the analytic FLOPs model; a
+    /// lockstep run measures exactly the replayed analytic costs, so the
+    /// refresh is the identity there (re-plans stay deterministic).
+    pub fn rescale_stages(
+        &self,
+        part: &Partition,
+        stage_tf: &[Option<f64>],
+        stage_tb: &[Option<f64>],
+    ) -> Profile {
+        let mut out = self.clone();
+        for j in 0..part.num_stages() {
+            if let Some(m) = stage_tf.get(j).copied().flatten() {
+                let a = part.stage_tf(self, j) as f64;
+                if a > 0.0 {
+                    for l in part.stage_layers(j) {
+                        out.t_f[l] = ((self.t_f[l] as f64 * m / a).round() as u64).max(1);
+                    }
+                }
+            }
+            if let Some(m) = stage_tb.get(j).copied().flatten() {
+                let a = part.stage_tb(self, j) as f64;
+                if a > 0.0 {
+                    for l in part.stage_layers(j) {
+                        out.t_b[l] = ((self.t_b[l] as f64 * m / a).round() as u64).max(1);
+                    }
+                }
+            }
+        }
+        out
+    }
+
     pub fn num_layers(&self) -> usize {
         self.t_f.len()
     }
@@ -198,6 +233,30 @@ mod tests {
         }
         assert_eq!(p.total_params(), spec.param_count());
         assert_eq!(p.default_td(), *p.t_f.iter().max().unwrap());
+    }
+
+    #[test]
+    fn rescale_stages_identity_and_scaling() {
+        let p = prof();
+        let part = Partition { bounds: vec![0, 2, 4] };
+        // measured == analytic -> exact identity (lockstep determinism)
+        let same = p.rescale_stages(
+            &part,
+            &[Some(30.0), Some(70.0)],
+            &[Some(60.0), Some(140.0)],
+        );
+        assert_eq!(same.t_f, p.t_f);
+        assert_eq!(same.t_b, p.t_b);
+        // stage 0 measured twice as slow -> its layers double; stage 1
+        // unmeasured -> untouched; sizes never change
+        let scaled = p.rescale_stages(&part, &[Some(60.0), None], &[None, None]);
+        assert_eq!(scaled.t_f, vec![20, 40, 30, 40]);
+        assert_eq!(scaled.t_b, p.t_b);
+        assert_eq!(scaled.w, p.w);
+        assert_eq!(scaled.a, p.a);
+        // a measurement rounding to zero is floored at 1 tick
+        let floor = p.rescale_stages(&part, &[Some(0.001), None], &[None, None]);
+        assert!(floor.t_f[0] >= 1 && floor.t_f[1] >= 1);
     }
 
     #[test]

@@ -62,6 +62,11 @@ pub struct SyntheticStream {
     protos_b: Vec<Vec<f32>>,
     rng: Rng,
     pos: u64,
+    /// optional early cut-off (exclusive batch index). The drift/task
+    /// schedule keeps following `spec.num_batches`, so a truncated stream
+    /// is an exact prefix of the full one — unlike shrinking
+    /// `num_batches`, which would compress the schedule.
+    stop: Option<u64>,
 }
 
 impl SyntheticStream {
@@ -79,7 +84,7 @@ impl SyntheticStream {
         let protos = mk(&mut rng);
         let protos_b = mk(&mut rng);
         let rng = rng.fork(1);
-        SyntheticStream { spec, protos, protos_b, rng, pos: 0 }
+        SyntheticStream { spec, protos, protos_b, rng, pos: 0, stop: None }
     }
 
     pub fn spec(&self) -> &StreamSpec {
@@ -134,9 +139,19 @@ impl SyntheticStream {
         }
     }
 
+    /// End the stream after `k` more batches without altering its drift
+    /// schedule (`spec.num_batches` keeps shaping content): the truncated
+    /// stream is an exact prefix of the full one. Used by baselines that
+    /// train on a window of a longer stream.
+    pub fn truncate_after(&mut self, k: usize) {
+        self.stop = Some(self.pos + k as u64);
+    }
+
     /// Next microbatch, or None when the stream is exhausted.
     pub fn next_batch(&mut self) -> Option<Batch> {
-        if self.pos >= self.spec.num_batches as u64 {
+        if self.pos >= self.spec.num_batches as u64
+            || self.stop.is_some_and(|s| self.pos >= s)
+        {
             return None;
         }
         let t = self.pos;
@@ -197,6 +212,25 @@ mod tests {
             noise: 0.5,
             seed: 7,
         }
+    }
+
+    #[test]
+    fn truncate_is_an_exact_prefix_under_drift() {
+        // truncation must not compress the task schedule the way
+        // shrinking num_batches does
+        let k = DriftKind::ClassIncremental { tasks: 5 };
+        let mut full = SyntheticStream::new(spec(k));
+        let mut cut = SyntheticStream::new(spec(k));
+        cut.truncate_after(12);
+        let mut n = 0;
+        while let Some(b) = cut.next_batch() {
+            let f = full.next_batch().expect("full stream is longer");
+            assert_eq!(b.x, f.x);
+            assert_eq!(b.y, f.y);
+            n += 1;
+        }
+        assert_eq!(n, 12, "stops exactly at the cut");
+        assert!(full.next_batch().is_some(), "full stream continues");
     }
 
     #[test]

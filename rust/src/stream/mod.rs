@@ -17,4 +17,4 @@ pub mod generator;
 pub mod settings;
 
 pub use generator::{Batch, DriftKind, StreamSpec, SyntheticStream, TestSet};
-pub use settings::{arrival_interval_us, paper_settings, Setting, WALL_TICK_US};
+pub use settings::{arrival_interval_us, batch_arrival_us, paper_settings, Setting, WALL_TICK_US};

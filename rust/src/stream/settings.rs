@@ -19,6 +19,14 @@ pub fn arrival_interval_us(td_ticks: u64) -> u64 {
     (td_ticks * WALL_TICK_US).max(1)
 }
 
+/// Wall-clock stamp (µs) at which stream batch `seq` arrives in freerun —
+/// the bridge between a budget schedule's batch-index steps (the lockstep
+/// replan boundaries, `budget::StepAt::Batch`) and their wall-time
+/// equivalents (`budget::StepAt::Us`).
+pub fn batch_arrival_us(seq: u64, td_ticks: u64) -> u64 {
+    seq * arrival_interval_us(td_ticks)
+}
+
 /// One evaluation setting of the paper's grid.
 #[derive(Debug, Clone)]
 pub struct Setting {
@@ -112,6 +120,9 @@ mod tests {
     fn wall_arrival_interval_scales_and_floors() {
         assert_eq!(arrival_interval_us(500), 500 * WALL_TICK_US);
         assert!(arrival_interval_us(0) >= 1, "degenerate td floored");
+        // batch index -> wall stamp follows the arrival cadence
+        assert_eq!(batch_arrival_us(0, 500), 0);
+        assert_eq!(batch_arrival_us(7, 500), 7 * arrival_interval_us(500));
     }
 
     #[test]
