@@ -9,11 +9,11 @@ use ferret::baselines::{run_baseline_with_model, StreamPolicy};
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
+use ferret::pipeline::engine::{AsyncCfg, AsyncSchedule};
 use ferret::pipeline::executor::ExecutorKind;
 use ferret::pipeline::sched::Mode;
 use ferret::pipeline::sync::{run_sync, SyncSchedule};
-use ferret::pipeline::EngineParams;
+use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::costmodel::decay_for_td;
 use ferret::planner::{plan, Profile};
 use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
@@ -77,16 +77,16 @@ fn main() {
                 let t0 = std::time::Instant::now();
                 let mut p = OclKind::Vanilla.build(1);
                 let mut s = mk_stream(&model, zoo.batch, n);
-                let r = run_async_with(
-                    cfg,
-                    &mut s,
-                    &NativeBackend,
-                    p.as_mut(),
-                    &ep,
-                    &model,
-                    kind,
-                    Mode::Lockstep,
-                );
+                let r = Session::builder(&NativeBackend, &model)
+                    .config(cfg)
+                    .plugin(p.as_mut())
+                    .engine_params(ep)
+                    .executor(kind)
+                    .mode(Mode::Lockstep)
+                    .batch(zoo.batch)
+                    .build()
+                    .expect("bench session")
+                    .run_stream(&mut s);
                 let dt = t0.elapsed().as_secs_f64();
                 println!(
                     "{:<28} {:>12.1} {:>14.1}   ({} threads)",
@@ -104,16 +104,16 @@ fn main() {
         let mut p = OclKind::Vanilla.build(1);
         let mut s = mk_stream(&model, zoo.batch, n);
         let t0 = std::time::Instant::now();
-        let r = run_async_with(
-            cfg,
-            &mut s,
-            &NativeBackend,
-            p.as_mut(),
-            &ep,
-            &model,
-            ExecutorKind::Threaded,
-            Mode::Freerun,
-        );
+        let r = Session::builder(&NativeBackend, &model)
+            .config(cfg)
+            .plugin(p.as_mut())
+            .engine_params(ep)
+            .executor(ExecutorKind::Threaded)
+            .mode(Mode::Freerun)
+            .batch(zoo.batch)
+            .build()
+            .expect("bench session")
+            .run_stream(&mut s);
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{:<28} {:>12.1} {:>14.1}   latency {} | staleness {}",

@@ -9,8 +9,8 @@ use ferret::backend::native::NativeBackend;
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async, AsyncCfg};
-use ferret::pipeline::EngineParams;
+use ferret::pipeline::engine::AsyncCfg;
+use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::costmodel::{adaptation_rate, decay_for_td, mem_footprint, PipeConfig};
 use ferret::planner::{plan, Profile};
 use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
@@ -35,7 +35,14 @@ fn run(
     let acfg = AsyncCfg::ferret(partition.clone(), cfg.clone(), CompKind::NoComp);
     let ep = EngineParams { lr: 0.04, seed: 5, ..Default::default() };
     let mut plugin = OclKind::Vanilla.build(5);
-    let r = run_async(acfg, &mut stream, &NativeBackend, plugin.as_mut(), &ep, model);
+    let r = Session::builder(&NativeBackend, model)
+        .config(acfg)
+        .plugin(plugin.as_mut())
+        .engine_params(ep)
+        .batch(batch)
+        .build()
+        .expect("valid session config")
+        .run_stream(&mut stream);
     (r.metrics.adaptation_rate(), r.metrics.oacc.value(), r.metrics.mem_bytes)
 }
 

@@ -17,8 +17,8 @@ use ferret::backend::xla::XlaBackend;
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async, AsyncCfg};
-use ferret::pipeline::EngineParams;
+use ferret::pipeline::engine::AsyncCfg;
+use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::costmodel::decay_for_td;
 use ferret::planner::{plan, Profile};
 use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
@@ -65,7 +65,14 @@ fn main() {
     let ep = EngineParams { lr: 0.05, seed: 2026, ..Default::default() };
     let mut plugin = OclKind::Er.build(2026);
     let t0 = std::time::Instant::now();
-    let r = run_async(cfg, &mut stream, &backend, plugin.as_mut(), &ep, model);
+    let r = Session::builder(&backend, model)
+        .config(cfg)
+        .plugin(plugin.as_mut())
+        .engine_params(ep)
+        .batch(zoo.batch)
+        .build()
+        .expect("valid session config")
+        .run_stream(&mut stream);
     let wall = t0.elapsed().as_secs_f64();
 
     // loss / oacc curves, decimated

@@ -8,8 +8,8 @@ use ferret::backend::native::NativeBackend;
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async, AsyncCfg, AsyncSchedule};
-use ferret::pipeline::EngineParams;
+use ferret::pipeline::engine::{AsyncCfg, AsyncSchedule};
+use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::costmodel::decay_for_td;
 use ferret::planner::{plan, Profile};
 use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
@@ -48,7 +48,14 @@ fn main() {
         let cfg = AsyncCfg::ferret(out.partition.clone(), out.config.clone(), CompKind::IterFisher);
         let mut plugin = OclKind::Vanilla.build(3);
         let mut stream = mk_stream(model, zoo.batch, 3);
-        let r = run_async(cfg, &mut stream, &NativeBackend, plugin.as_mut(), &ep, model);
+        let r = Session::builder(&NativeBackend, model)
+            .config(cfg)
+            .plugin(plugin.as_mut())
+            .engine_params(ep)
+            .batch(zoo.batch)
+            .build()
+            .expect("valid session config")
+            .run_stream(&mut stream);
         println!(
             "{:<22} {:>9.2} {:>8.2} {:>8.4} {:>8}",
             format!("Ferret@{:.1}MB", budget / 1e6),
@@ -68,7 +75,14 @@ fn main() {
     );
     let mut plugin = OclKind::Vanilla.build(3);
     let mut stream = mk_stream(model, zoo.batch, 3);
-    let r = run_async(cfg, &mut stream, &NativeBackend, plugin.as_mut(), &ep, model);
+    let r = Session::builder(&NativeBackend, model)
+        .config(cfg)
+        .plugin(plugin.as_mut())
+        .engine_params(ep)
+        .batch(zoo.batch)
+        .build()
+        .expect("valid session config")
+        .run_stream(&mut stream);
     println!(
         "{:<22} {:>9.2} {:>8.2} {:>8.4} {:>8}",
         "Pipedream (fixed)",

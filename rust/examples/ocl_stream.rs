@@ -8,8 +8,8 @@ use ferret::backend::native::NativeBackend;
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async, AsyncCfg};
-use ferret::pipeline::EngineParams;
+use ferret::pipeline::engine::AsyncCfg;
+use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::costmodel::decay_for_td;
 use ferret::planner::{plan, Profile};
 use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
@@ -47,7 +47,14 @@ fn main() {
         let ep = EngineParams { lr: 0.05, seed: 11, ..Default::default() };
         let mut plugin = kind.build(11);
         let extra = |p: &dyn ferret::ocl::OclPlugin| p.memory_bytes() as f64 / 1e6;
-        let r = run_async(cfg, &mut stream, &NativeBackend, plugin.as_mut(), &ep, model);
+        let r = Session::builder(&NativeBackend, model)
+            .config(cfg)
+            .plugin(plugin.as_mut())
+            .engine_params(ep)
+            .batch(zoo.batch)
+            .build()
+            .expect("valid session config")
+            .run_stream(&mut stream);
         println!(
             "{:<8} {:>8.2} {:>8.2} {:>10.2}",
             kind.name(),

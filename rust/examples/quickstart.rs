@@ -10,8 +10,8 @@ use ferret::backend::native::NativeBackend;
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async, AsyncCfg};
-use ferret::pipeline::EngineParams;
+use ferret::pipeline::engine::AsyncCfg;
+use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::costmodel::decay_for_td;
 use ferret::planner::{plan, Profile};
 use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
@@ -50,12 +50,20 @@ fn main() {
         seed: 7,
     });
 
-    // 4. Run the planned pipeline with Iter-Fisher compensation.
+    // 4. Build a session for the planned pipeline (Iter-Fisher
+    //    compensation) and run the stream through it.
     let cfg = AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher);
     let ep = EngineParams { lr: 0.05, seed: 7, ..Default::default() };
     let mut plugin = OclKind::Vanilla.build(7);
     let t0 = std::time::Instant::now();
-    let r = run_async(cfg, &mut stream, &NativeBackend, plugin.as_mut(), &ep, model);
+    let r = Session::builder(&NativeBackend, model)
+        .config(cfg)
+        .plugin(plugin.as_mut())
+        .engine_params(ep)
+        .batch(zoo.batch)
+        .build()
+        .expect("valid session config")
+        .run_stream(&mut stream);
 
     println!("--- results ---");
     println!("online accuracy : {:.2}%", r.metrics.oacc.value());

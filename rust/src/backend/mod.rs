@@ -60,6 +60,15 @@ pub trait Backend: Send + Sync {
 
     /// SGD step: p - lr * g.
     fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams;
+
+    /// An owned, thread-shareable handle to this backend. Device threads
+    /// of the session-owned [`crate::pipeline::executor::ThreadedExecutor`]
+    /// capture the handle, which is what lets them outlive the borrow a
+    /// call entered with (no `std::thread::scope` on the entry path). The
+    /// handle must *share* internal state — e.g. compiled-executable
+    /// caches — with `self`, not reinitialize it; stateless backends may
+    /// return a fresh instance.
+    fn share(&self) -> std::sync::Arc<dyn Backend>;
 }
 
 /// Forward a full dense stack, returning per-layer inputs (stashed for the

@@ -101,6 +101,11 @@ fn softmax_rows(classes: usize, logits: &[f32], batch: usize) -> Vec<f32> {
 }
 
 impl Backend for NativeBackend {
+    fn share(&self) -> std::sync::Arc<dyn Backend> {
+        // stateless: a fresh instance is indistinguishable from `self`
+        std::sync::Arc::new(NativeBackend)
+    }
+
     fn dense_fwd(&self, shape: &LayerShape, p: &LayerParams, x: &[f32], batch: usize) -> Vec<f32> {
         let mut z = self.pre_activation(shape, p, x, batch);
         if shape.act == Act::Relu {

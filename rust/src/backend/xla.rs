@@ -15,17 +15,20 @@ mod real {
     use crate::runtime::{lit_f32, lit_i32, lit_scalar, names, to_f32, Runtime};
     use crate::util::error::Result;
 
+    /// The runtime sits behind an `Arc` so [`Backend::share`] handles
+    /// reuse one PJRT client and one compiled-executable cache across
+    /// every device thread.
     pub struct XlaBackend {
-        rt: Runtime,
+        rt: std::sync::Arc<Runtime>,
     }
 
     impl XlaBackend {
         pub fn new(rt: Runtime) -> Self {
-            XlaBackend { rt }
+            XlaBackend { rt: std::sync::Arc::new(rt) }
         }
 
         pub fn open_default() -> Result<Self> {
-            Ok(XlaBackend { rt: Runtime::open_default()? })
+            Ok(XlaBackend::new(Runtime::open_default()?))
         }
 
         pub fn runtime(&self) -> &Runtime {
@@ -59,6 +62,11 @@ mod real {
     }
 
     impl Backend for XlaBackend {
+        fn share(&self) -> std::sync::Arc<dyn Backend> {
+            // same PJRT client + executable cache, new owner
+            std::sync::Arc::new(XlaBackend { rt: std::sync::Arc::clone(&self.rt) })
+        }
+
         fn dense_fwd(
             &self,
             shape: &LayerShape,
@@ -266,6 +274,10 @@ mod stub {
     }
 
     impl Backend for XlaBackend {
+        fn share(&self) -> std::sync::Arc<dyn Backend> {
+            unreachable!("built without the xla feature")
+        }
+
         fn dense_fwd(&self, _: &LayerShape, _: &LayerParams, _: &[f32], _: usize) -> Vec<f32> {
             unreachable!("built without the xla feature")
         }

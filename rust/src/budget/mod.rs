@@ -245,6 +245,15 @@ impl BudgetState {
     pub fn remaining_steps(&self) -> usize {
         self.steps.len() - self.idx
     }
+
+    /// Imperatively override the budget in force
+    /// ([`Session::set_budget`](crate::pipeline::session::Session::set_budget)):
+    /// the scheduled steps keep their cursor, and the measured-bytes
+    /// breach trigger re-arms for the new window.
+    pub fn set_current(&mut self, bytes: f64) {
+        self.current = bytes;
+        self.breach_armed = true;
+    }
 }
 
 /// Measured bytes by category at one observation point. `stash` counts
@@ -269,8 +278,13 @@ impl LedgerSnapshot {
     }
 }
 
+/// Upper bound on the memory-over-time trace: reaching it halves the
+/// stored points and doubles the sampling stride, so a long-lived session
+/// holds at most this many points while the trace still spans the run.
+pub const TRACE_CAP: usize = 4096;
+
 /// Accumulated measured-memory accounting over one engine run.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MemoryLedger {
     /// per-category peaks (not necessarily simultaneous)
     pub peak: LedgerSnapshot,
@@ -278,9 +292,28 @@ pub struct MemoryLedger {
     pub peak_total: usize,
     /// the latest snapshot (end-of-run state after the final event)
     pub last: LedgerSnapshot,
-    /// memory-over-time trace: one `(t, total_bytes)` point per parameter
-    /// update (bounded by the number of updates in the run)
+    /// memory-over-time trace: `(t, total_bytes)` points, at most one per
+    /// parameter update and never more than [`TRACE_CAP`] in total
+    /// (long sessions are downsampled, not truncated)
     pub trace: Vec<(u64, usize)>,
+    /// record one trace point per this many updates (doubles at each
+    /// downsampling pass; peaks/last stay exact regardless)
+    stride: u64,
+    /// updates observed since the last appended trace point
+    pending: u64,
+}
+
+impl Default for MemoryLedger {
+    fn default() -> Self {
+        MemoryLedger {
+            peak: LedgerSnapshot::default(),
+            peak_total: 0,
+            last: LedgerSnapshot::default(),
+            trace: Vec::new(),
+            stride: 1,
+            pending: 0,
+        }
+    }
 }
 
 impl MemoryLedger {
@@ -295,10 +328,30 @@ impl MemoryLedger {
         self.last = snap;
     }
 
-    /// Observe and append a trace point (called once per update).
+    /// Observe and append a trace point (called once per update). Past
+    /// [`TRACE_CAP`] points the trace is decimated — every other point
+    /// dropped, sampling stride doubled — so unbounded sessions cannot
+    /// grow the metrics sink without limit. Deterministic: the same update
+    /// sequence always yields the same trace.
     pub fn record(&mut self, t: u64, snap: LedgerSnapshot) {
         self.observe(snap);
+        self.pending += 1;
+        if self.pending < self.stride {
+            return;
+        }
+        self.pending = 0;
         self.trace.push((t, snap.total()));
+        if self.trace.len() >= TRACE_CAP {
+            // keep odd positions so the just-pushed (newest) point always
+            // survives — live metrics readers see a fresh tail; the head
+            // loses at most one stride of early history per pass
+            let mut i = 0usize;
+            self.trace.retain(|_| {
+                i += 1;
+                i % 2 == 0
+            });
+            self.stride *= 2;
+        }
     }
 }
 
@@ -386,6 +439,47 @@ mod tests {
         let mut free = BudgetState::new(&BudgetSchedule::fixed());
         assert!(!free.breached(usize::MAX));
         assert_eq!(free.current(), f64::INFINITY);
+    }
+
+    #[test]
+    fn set_current_overrides_and_rearms_breach() {
+        let mut st = BudgetState::new(&BudgetSchedule::fixed());
+        assert_eq!(st.current(), f64::INFINITY);
+        st.set_current(1000.0);
+        assert_eq!(st.current(), 1000.0);
+        assert!(st.breached(1001), "override arms the breach trigger");
+        assert!(!st.breached(5000), "one-shot until re-armed");
+        st.set_current(100.0);
+        assert!(st.breached(101), "each override re-arms");
+    }
+
+    #[test]
+    fn trace_is_downsampled_past_the_cap() {
+        let mut l = MemoryLedger::default();
+        let n = 10 * TRACE_CAP as u64;
+        for t in 0..n {
+            l.record(t, LedgerSnapshot { params: 1, stash: 0, acts: t as usize, comps: 0 });
+        }
+        assert!(l.trace.len() <= TRACE_CAP, "trace {} > cap", l.trace.len());
+        assert!(l.trace.len() > TRACE_CAP / 4, "downsampling keeps coverage");
+        // downsampled, not truncated: the trace still spans the whole run
+        // (each pass sheds at most a stride of early history, and the
+        // newest point always survives — live readers see a fresh tail)
+        assert!(l.trace[0].0 < 64, "head stays early: {}", l.trace[0].0);
+        assert!(l.trace.last().unwrap().0 > n - 2 * (n / TRACE_CAP as u64).next_power_of_two());
+        // strictly increasing stamps (every point is a real observation)
+        for w in l.trace.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        // peaks/last are exact regardless of decimation
+        assert_eq!(l.peak.acts, n as usize - 1);
+        assert_eq!(l.last.acts, n as usize - 1);
+        // determinism: the same sequence yields the same trace
+        let mut m = MemoryLedger::default();
+        for t in 0..n {
+            m.record(t, LedgerSnapshot { params: 1, stash: 0, acts: t as usize, comps: 0 });
+        }
+        assert_eq!(l.trace, m.trace);
     }
 
     #[test]

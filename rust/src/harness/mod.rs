@@ -15,12 +15,13 @@ use crate::budget::{BudgetSchedule, StepAt};
 use crate::compensate::CompKind;
 use crate::config::{zoo::default_zoo, ModelSpec, Zoo};
 use crate::metrics::{agm, RunMetrics};
-use crate::ocl::OclKind;
-use crate::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
+use crate::ocl::{OclKind, OclPlugin};
+use crate::pipeline::RunResult;
+use crate::pipeline::engine::{AsyncCfg, AsyncSchedule};
 use crate::pipeline::executor::ExecutorKind;
 use crate::pipeline::sched::Mode;
 use crate::pipeline::sync::{run_sync, SyncSchedule};
-use crate::pipeline::EngineParams;
+use crate::pipeline::{EngineParams, Session};
 use crate::planner::{plan, Partition, Profile};
 use crate::stream::{paper_settings, Setting, SyntheticStream};
 pub use crate::util::math::pearson;
@@ -200,6 +201,29 @@ impl Bench {
         stream
     }
 
+    /// One async-engine run through the session API with this bench's
+    /// executor/mode/batch configuration — the single construction point
+    /// for every engine session the harness opens.
+    fn session_run(
+        &self,
+        cfg: AsyncCfg,
+        ep: EngineParams,
+        model: &ModelSpec,
+        plugin: &mut dyn OclPlugin,
+        stream: &mut SyntheticStream,
+    ) -> RunResult {
+        Session::builder(self.backend.as_ref(), model)
+            .config(cfg)
+            .plugin(plugin)
+            .engine_params(ep)
+            .executor(self.cfg.executor)
+            .mode(self.cfg.mode)
+            .batch(self.zoo.batch)
+            .build()
+            .expect("engine session")
+            .run_stream(stream)
+    }
+
     /// Run one explicitly-configured engine outside the cached `run()`
     /// matrix — the shared bookkeeping (thread/observability/batch
     /// counters) every direct engine run must keep honest. `skip`/`len`
@@ -220,16 +244,7 @@ impl Bench {
         let mut stream = self.stream_slice(setting, stream_seed, skip, len, total);
         let mut plugin = OclKind::Vanilla.build(stream_seed);
         let ep = EngineParams { lr: self.cfg.lr, seed: weight_seed, ..Default::default() };
-        let r = run_async_with(
-            cfg,
-            &mut stream,
-            self.backend.as_ref(),
-            plugin.as_mut(),
-            &ep,
-            model,
-            self.cfg.executor,
-            self.cfg.mode,
-        );
+        let r = self.session_run(cfg, ep, model, plugin.as_mut(), &mut stream);
         self.max_threads_seen = self.max_threads_seen.max(r.metrics.exec_threads);
         self.batches_run += len as u64;
         self.observability.absorb_observability(&r.metrics);
@@ -333,32 +348,14 @@ impl Bench {
             Method::Async(schedule) => {
                 let (part, prof, td) = self.shared_partition(&model);
                 let cfg = AsyncCfg::baseline(schedule, part, &prof, td);
-                run_async_with(
-                    cfg,
-                    &mut stream,
-                    self.backend.as_ref(),
-                    plugin.as_mut(),
-                    &ep,
-                    &model,
-                    self.cfg.executor,
-                    self.cfg.mode,
-                )
+                self.session_run(cfg, ep, &model, plugin.as_mut(), &mut stream)
             }
             Method::Ferret { tier, comp } => {
                 let budget = self.tier_budget(&model, tier);
                 let (_, prof, td) = self.shared_partition(&model);
                 let out = plan(&prof, td, budget, crate::planner::costmodel::decay_for_td(td));
                 let cfg = AsyncCfg::ferret(out.partition, out.config, comp);
-                run_async_with(
-                    cfg,
-                    &mut stream,
-                    self.backend.as_ref(),
-                    plugin.as_mut(),
-                    &ep,
-                    &model,
-                    self.cfg.executor,
-                    self.cfg.mode,
-                )
+                self.session_run(cfg, ep, &model, plugin.as_mut(), &mut stream)
             }
         };
         self.observability.absorb_observability(&result.metrics);

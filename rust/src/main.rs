@@ -33,10 +33,10 @@ use ferret::budget::BudgetSchedule;
 use ferret::compensate::CompKind;
 use ferret::config::zoo::default_zoo;
 use ferret::ocl::OclKind;
-use ferret::pipeline::engine::{run_async_with, AsyncCfg};
+use ferret::pipeline::engine::AsyncCfg;
 use ferret::pipeline::executor::ExecutorKind;
 use ferret::pipeline::sched::Mode;
-use ferret::pipeline::EngineParams;
+use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::{plan, Profile};
 use ferret::stream::{paper_settings, SyntheticStream};
 
@@ -231,16 +231,22 @@ fn cmd_run(opts: &Opts) {
     let dynamic = budget_sched.is_dynamic();
     let cfg = AsyncCfg::ferret(out.partition, out.config, comp).with_budget(budget_sched);
     let t0 = std::time::Instant::now();
-    let r = run_async_with(
-        cfg,
-        &mut stream,
-        backend.as_ref(),
-        plugin.as_mut(),
-        &ep,
-        &model,
-        executor,
-        mode,
-    );
+    let session = match Session::builder(backend.as_ref(), &model)
+        .config(cfg)
+        .plugin(plugin.as_mut())
+        .engine_params(ep)
+        .executor(executor)
+        .mode(mode)
+        .batch(zoo.batch)
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: invalid engine configuration: {e}");
+            std::process::exit(2);
+        }
+    };
+    let r = session.run_stream(&mut stream);
     println!("setting    : {}", setting.label);
     println!("ocl/comp   : {} / {}", ocl.name(), comp.name());
     println!("executor   : {} ({} worker threads)", executor.name(), r.metrics.exec_threads);

@@ -13,8 +13,15 @@
 //! ([`crate::pipeline::sched::SchedCore`] — event queue, 1F1B priority,
 //! routing) and dispatches stage math to an
 //! [`Executor`](crate::pipeline::executor::Executor): virtual-time
-//! simulation inline ([`ExecutorKind::Sim`]) or genuinely parallel device
-//! threads ([`ExecutorKind::Threaded`]). Each (worker, stage) pair is a
+//! simulation inline ([`crate::pipeline::executor::ExecutorKind::Sim`]) or
+//! genuinely parallel device threads
+//! ([`crate::pipeline::executor::ExecutorKind::Threaded`]). The run loop
+//! itself lives in [`crate::pipeline::session`]: a
+//! [`Session`](crate::pipeline::session::Session) owns the clocks, the
+//! budget cursor, and the executor, and drives this engine's
+//! step methods either incrementally (push-based `ingest`/`step`) or to
+//! completion (`run_stream` / the [`run_async_with`] shim).
+//! Each (worker, stage) pair is a
 //! device with its own timeline; 1F1B priority (backward work preempts
 //! queued forward work). Microbatch `i` goes to worker `i mod N_active`.
 //! Stage parameters are shared across workers (asynchronous data-parallel
@@ -24,27 +31,25 @@
 //! update time (Eq. 9).
 
 use std::sync::Arc;
-use std::time::Duration;
 
 use crate::backend::Backend;
-use crate::budget::{BudgetSchedule, BudgetState, LedgerSnapshot};
+use crate::budget::{BudgetSchedule, LedgerSnapshot};
 use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
 use crate::config::{LayerShape, ModelSpec};
-use crate::metrics::{eval_tacc, RunMetrics};
+use crate::metrics::RunMetrics;
 use crate::model::{GradBuf, LiveParams, SharedParams, StashSet};
 use crate::ocl::{OclCtx, OclPlugin};
-use crate::pipeline::executor::{
-    DeviceTask, Executor, ExecutorKind, SimExecutor, StageCell, StageTask, ThreadedExecutor,
-    UpdateTask,
-};
-use crate::pipeline::sched::{
-    predict_only, Clock, Ev, Flight, Job, Mode, SchedCore, StageMeta, VirtualClock, WallClock,
-    WorkSel,
-};
-use crate::pipeline::{EngineParams, RunResult};
-use crate::planner::costmodel::{decay_for_td, mem_footprint, plan_versions, PipeConfig};
-use crate::planner::{plan, Partition, PlanOutcome, Profile};
-use crate::stream::{arrival_interval_us, Batch, SyntheticStream};
+use crate::pipeline::executor::{DeviceTask, Executor, StageCell, StageTask, UpdateTask};
+use crate::pipeline::sched::{predict_only, Flight, Job, SchedCore, StageMeta, WorkSel};
+use crate::pipeline::EngineParams;
+use crate::planner::costmodel::{plan_versions, PipeConfig};
+use crate::planner::{Partition, PlanOutcome, Profile};
+use crate::stream::Batch;
+
+// The one-call entry points are thin shims over the session API; re-export
+// them here so `pipeline::engine::{run_async, run_async_with}` keeps
+// resolving for existing callers and tests.
+pub use crate::pipeline::session::{run_async, run_async_with};
 
 /// Asynchronous schedule family (Table 3's right half).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,13 +131,27 @@ impl AsyncCfg {
     }
 }
 
+/// Per-call engine I/O bundle: the policy hooks and metric sinks every
+/// engine step needs. The owning [`crate::pipeline::session::Session`]
+/// assembles one from its own (disjoint) fields at each step, which keeps
+/// the step methods' signatures small and the borrows untangled.
+pub(crate) struct EngineIo<'e> {
+    pub(crate) plugin: &'e mut dyn OclPlugin,
+    pub(crate) ctx: OclCtx<'e>,
+    pub(crate) metrics: &'e mut RunMetrics,
+    pub(crate) executor: &'e mut dyn Executor,
+}
+
 /// The engine proper: policy (stashing, compensation, plugins, metrics) on
-/// top of the scheduling core, numeric work delegated to an executor.
+/// top of the scheduling core, numeric work delegated to an executor. The
+/// step methods are driven incrementally by
+/// [`crate::pipeline::session::Session`], which owns the loop state
+/// (clocks, budget cursor, pending arrivals).
 pub struct AsyncEngine<'a> {
     backend: &'a dyn Backend,
     shapes: Vec<LayerShape>,
-    cfg: AsyncCfg,
-    sched: SchedCore,
+    pub(crate) cfg: AsyncCfg,
+    pub(crate) sched: SchedCore,
     /// live parameters, one `Arc` per model layer (stages index into it)
     params: LiveParams,
     /// per-layer snapshot history
@@ -141,7 +160,7 @@ pub struct AsyncEngine<'a> {
     /// buffers are stage-level statistics — Alg. 1's O(2Σ|w|) memory)
     comps: Vec<Box<dyn Compensator>>,
     lr: f32,
-    decay_c: f64,
+    pub(crate) decay_c: f64,
     total_params: usize,
     update_count: u64,
     /// stash capacity per layer (resolved in `new`; freerun cells reuse it)
@@ -156,7 +175,10 @@ pub struct AsyncEngine<'a> {
     /// (empty in lockstep mode)
     cells: Vec<Arc<StageCell>>,
     /// freerun: device tasks dispatched but not yet completed
-    flights: usize,
+    pub(crate) flights: usize,
+    /// an imperative `Session::set_budget` made the budget dynamic even
+    /// though the configured schedule is static
+    forced_dynamic: bool,
 }
 
 /// Accumulated measured forward/backward service times of one stage
@@ -189,11 +211,11 @@ fn resolve_stash_cap(
     pipe: &PipeConfig,
     p: usize,
     n_workers: usize,
-    budget: &BudgetSchedule,
+    dynamic: bool,
 ) -> usize {
     if override_cap > 0 {
         override_cap
-    } else if budget.is_dynamic() {
+    } else if dynamic {
         plan_versions(pipe, p).max(2)
     } else {
         n_workers * (p + 2) + 4
@@ -220,7 +242,8 @@ impl<'a> AsyncEngine<'a> {
         let params = LiveParams::init(model, ep.seed);
         let n_workers = cfg.pipe.workers.len();
         let p = stages.len();
-        let stash_cap = resolve_stash_cap(ep.stash_cap, &cfg.pipe, p, n_workers, &cfg.budget);
+        let stash_cap =
+            resolve_stash_cap(ep.stash_cap, &cfg.pipe, p, n_workers, cfg.budget.is_dynamic());
         let stash = StashSet::new(&params, stash_cap);
         let active_workers: Vec<usize> = cfg
             .pipe
@@ -241,7 +264,7 @@ impl<'a> AsyncEngine<'a> {
             stash,
             comps,
             lr: ep.lr,
-            decay_c: 0.0, // resolved in run() once td is known
+            decay_c: 0.0, // resolved by the session at build, once td is known
             total_params,
             update_count: 0,
             stash_cap,
@@ -249,7 +272,17 @@ impl<'a> AsyncEngine<'a> {
             meas: vec![StageObs::default(); p],
             cells: Vec::new(),
             flights: 0,
+            forced_dynamic: false,
         }
+    }
+
+    /// The budget is dynamic: a time-varying schedule is configured, or an
+    /// imperative [`Session::set_budget`] call made it so. Gates ledger
+    /// tracing and the plan-derived stash sizing.
+    ///
+    /// [`Session::set_budget`]: crate::pipeline::session::Session::set_budget
+    pub(crate) fn dynamic_budget(&self) -> bool {
+        self.forced_dynamic || self.cfg.budget.is_dynamic()
     }
 
     /// Active (worker, stage) devices — the executor's thread set.
@@ -257,7 +290,7 @@ impl<'a> AsyncEngine<'a> {
         self.sched.devices()
     }
 
-    fn stage_times(&mut self, part_prof: &Profile) {
+    pub(crate) fn stage_times(&mut self, part_prof: &Profile) {
         for j in 0..self.sched.stages.len() {
             self.sched.stages[j].tf = self.cfg.partition.stage_tf(part_prof, j);
             self.sched.stages[j].tb = self.cfg.partition.stage_tb(part_prof, j);
@@ -346,15 +379,7 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Apply an accumulated update on (worker, stage) at time `t`.
-    fn apply_update(
-        &mut self,
-        w: usize,
-        s: usize,
-        t: u64,
-        plugin: &mut dyn OclPlugin,
-        ctx: &OclCtx,
-        metrics: &mut RunMetrics,
-    ) {
+    pub(crate) fn apply_update(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) {
         let slot = &mut self.sched.slots[w][s];
         let mut grads = slot.acc.take().expect("accumulated grads");
         let count = slot.acc_count;
@@ -366,7 +391,7 @@ impl<'a> AsyncEngine<'a> {
         let scale = 1.0 / count as f32;
         let cur_ver = self.sched.version[s];
         let tau = cur_ver.saturating_sub(from_ver);
-        metrics.record_staleness(tau);
+        io.metrics.record_staleness(tau);
         let layers: Vec<usize> = self.sched.stages[s].layers.clone().collect();
         for (i, &l) in layers.iter().enumerate() {
             let mut g = std::mem::replace(&mut grads[i], GradBuf { gw: vec![], gb: vec![] });
@@ -390,7 +415,7 @@ impl<'a> AsyncEngine<'a> {
                 lr: self.lr,
             };
             let (mut g, lr_scale) = self.comps[l].compensate(g, &cctx);
-            plugin.adjust_layer_grad(l, &mut g, &self.params.layers[l], ctx);
+            io.plugin.adjust_layer_grad(l, &mut g, &self.params.layers[l], &io.ctx);
             let updated = self.backend.sgd(&self.params.layers[l], &g, self.lr * lr_scale);
             self.params.set(l, updated);
         }
@@ -399,14 +424,14 @@ impl<'a> AsyncEngine<'a> {
         self.stash.push_stage(&layers, new_ver, &self.params);
         let frac = self.sched.stages[s].params as f64 / self.total_params as f64;
         for a in arrivals {
-            metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
+            io.metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
         }
         self.update_count += 1;
         if self.update_count % self.cfg.plugin_cadence == 0 {
-            plugin.after_update(&self.params.layers, ctx);
+            io.plugin.after_update(&self.params.layers, &io.ctx);
         }
-        if self.cfg.budget.is_dynamic() {
-            metrics.ledger.record(t, self.ledger_snapshot());
+        if self.dynamic_budget() {
+            io.metrics.ledger.record(t, self.ledger_snapshot());
         }
     }
 
@@ -424,7 +449,7 @@ impl<'a> AsyncEngine<'a> {
     /// once per scheduler event in dynamic-budget runs — O(phase length)
     /// per event. If phases ever reach many thousands of batches, switch
     /// to incremental byte counters maintained at admit/retire/accumulate.
-    fn ledger_snapshot(&self) -> LedgerSnapshot {
+    pub(crate) fn ledger_snapshot(&self) -> LedgerSnapshot {
         let f32s = std::mem::size_of::<f32>();
         let params = self.total_params * f32s;
         let (stash, comps) = if self.cells.is_empty() {
@@ -462,7 +487,7 @@ impl<'a> AsyncEngine<'a> {
     /// accumulator — flushed as final updates under the old plan before a
     /// transition tears its topology down, so the drain loses no training
     /// signal even when `accum > 1` leaves an under-threshold remainder.
-    fn pending_accumulators(&self) -> Vec<(usize, usize)> {
+    pub(crate) fn pending_accumulators(&self) -> Vec<(usize, usize)> {
         let mut v = Vec::new();
         for (w, row) in self.sched.slots.iter().enumerate() {
             for (s, slot) in row.iter().enumerate() {
@@ -479,7 +504,7 @@ impl<'a> AsyncEngine<'a> {
     /// lockstep the measured means equal the replayed analytic costs, so
     /// the refresh is exact; in freerun it folds real device-thread
     /// service times (µs) into the next plan.
-    fn refreshed_profile(&self, base: &Profile) -> Profile {
+    pub(crate) fn refreshed_profile(&self, base: &Profile) -> Profile {
         let tf: Vec<Option<f64>> = self.meas.iter().map(|o| o.mean_tf()).collect();
         let tb: Vec<Option<f64>> = self.meas.iter().map(|o| o.mean_tb()).collect();
         base.rescale_stages(&self.cfg.partition, &tf, &tb)
@@ -498,7 +523,12 @@ impl<'a> AsyncEngine<'a> {
     ///      with capacity re-derived from the new plan;
     ///   4. freerun stage cells are rebuilt around the carried-over state;
     ///   5. the executor re-spawns/retires device threads to match.
-    fn transition(&mut self, out: &PlanOutcome, prof: &Profile, executor: &mut dyn Executor) {
+    pub(crate) fn transition(
+        &mut self,
+        out: &PlanOutcome,
+        prof: &Profile,
+        executor: &mut dyn Executor,
+    ) {
         let freerun = !self.cells.is_empty();
         let retained_comps: Vec<Box<dyn Compensator>> = if freerun {
             let live = self.free_params();
@@ -532,7 +562,7 @@ impl<'a> AsyncEngine<'a> {
             .collect();
         self.sched = SchedCore::new(stages, n_workers, active);
         self.stash_cap =
-            resolve_stash_cap(self.stash_override, &self.cfg.pipe, p, n_workers, &self.cfg.budget);
+            resolve_stash_cap(self.stash_override, &self.cfg.pipe, p, n_workers, self.dynamic_budget());
         self.stash = StashSet::new(&self.params, self.stash_cap);
         self.meas = vec![StageObs::default(); p];
         if freerun {
@@ -545,17 +575,13 @@ impl<'a> AsyncEngine<'a> {
     /// drop when over capacity). `arrival` is the batch's stream stamp;
     /// `now` is when the engine actually gets to it (later than `arrival`
     /// after a drain — the stream does not wait for a re-plan).
-    #[allow(clippy::too_many_arguments)]
-    fn admit_lockstep(
+    pub(crate) fn admit_lockstep(
         &mut self,
         batch: Batch,
         seq: u64,
         arrival: u64,
         now: u64,
-        plugin: &mut dyn OclPlugin,
-        ctx: &OclCtx,
-        metrics: &mut RunMetrics,
-        executor: &mut dyn Executor,
+        io: &mut EngineIo,
     ) {
         if self.sched.over_capacity() {
             // predict with live weights; drop from training
@@ -563,15 +589,15 @@ impl<'a> AsyncEngine<'a> {
                 self.backend,
                 &self.shapes,
                 &self.params.layers,
-                ctx.classes,
+                io.ctx.classes,
                 &batch.x,
                 &batch.y,
                 now,
-                metrics,
+                io.metrics,
             );
             return;
         }
-        let batch = plugin.augment(batch, &self.params.layers, ctx);
+        let batch = io.plugin.augment(batch, &self.params.layers, &io.ctx);
         let p = self.sched.num_stages();
         let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
         stage_inputs[0] = Some(batch.x.clone());
@@ -585,220 +611,103 @@ impl<'a> AsyncEngine<'a> {
             grad: None,
             done: false,
         });
-        self.kick(w, 0, now, executor);
+        self.kick(w, 0, now, io.executor);
     }
 
-    /// Run to completion over the stream, dispatching stage math to
-    /// `executor`, under the given time `mode`.
-    pub fn run(
-        self,
-        stream: &mut SyntheticStream,
-        plugin: &mut dyn OclPlugin,
-        ep: &EngineParams,
-        model: &ModelSpec,
-        executor: &mut dyn Executor,
-        mode: Mode,
-    ) -> RunResult {
-        match mode {
-            Mode::Lockstep => self.run_lockstep(stream, plugin, ep, model, executor),
-            Mode::Freerun => self.run_freerun(stream, plugin, ep, model, executor),
-        }
-    }
-
-    /// Lockstep: the event heap replays virtual `tf`/`tb` costs; metrics
-    /// are identical across executors (tests/executor_equiv.rs), including
-    /// through plan transitions. Execution is phase-structured: each phase
-    /// runs one plan; a budget-schedule step (checked at batch arrivals —
-    /// the deterministic replan boundary) or a ledger breach drains the
-    /// in-flight microbatches, re-plans at the budget now in force, and
-    /// resumes the same stream under the new plan.
-    fn run_lockstep(
-        mut self,
-        stream: &mut SyntheticStream,
-        plugin: &mut dyn OclPlugin,
-        ep: &EngineParams,
-        model: &ModelSpec,
-        executor: &mut dyn Executor,
-    ) -> RunResult {
-        let spec = stream.spec().clone();
-        let prof = Profile::analytic(model, spec.batch);
-        self.stage_times(&prof);
-        let td = if ep.td == 0 { prof.default_td() } else { ep.td };
-        self.decay_c = ep.decay(td);
-        let decay = decay_for_td(td);
-        let shapes = self.shapes.clone();
-        let ctx = OclCtx {
-            backend: self.backend,
-            shapes: &shapes,
-            classes: spec.classes,
-            batch: spec.batch,
-            features: spec.features,
-        };
-        let mut metrics = RunMetrics::default();
-        let test = stream.test_set(ep.tacc_per_class);
-        metrics.exec_threads = executor.threads();
-
-        let mut clock = VirtualClock::new();
-        let mut arrived = 0u64;
-        let mut next_batch = stream.next_batch();
-        if next_batch.is_some() {
-            self.sched.events.push(0, Ev::Arrive);
-        }
-        // virtual time never reaches wall-clock stamps: drop `u<N>` steps
-        // so they cannot block batch-index steps queued behind them
-        let mut budget = BudgetState::without_wall_steps(&self.cfg.budget);
-        // metering only pays off when a budget can step/breach; static
-        // runs skip the O(jobs) ledger walks entirely (one final observe
-        // below keeps `ledger.last` meaningful)
-        let dynamic = self.cfg.budget.is_dynamic();
-
-        'run: loop {
-            // batch held across a drain: (payload, seq, arrival stamp)
-            let mut held: Option<(Batch, u64, u64)> = None;
-            let mut drain_from: Option<u64> = None;
-            while let Some((te, ev)) = self.sched.events.pop() {
-                clock.advance(te);
-                let t = clock.now();
-                match ev {
-                    Ev::Arrive => {
-                        let batch = next_batch.take().expect("arrive without batch");
-                        metrics.record_arrival();
-                        let seq = arrived;
-                        arrived += 1;
-                        next_batch = stream.next_batch();
-                        // advance the budget cursor even mid-drain so the
-                        // pending re-plan sees the newest budget in force
-                        let stepped = budget.step_due(seq, 0);
-                        if drain_from.is_some() || stepped {
-                            // budget boundary (or mid-drain arrival): hold
-                            // the batch, stop admitting, and let the
-                            // in-flight microbatches finish under the old
-                            // plan — nothing is dropped by the transition
-                            if drain_from.is_none() {
-                                drain_from = Some(t);
-                            }
-                            held = Some((batch, seq, te));
-                            continue;
-                        }
-                        if next_batch.is_some() {
-                            self.sched.events.push(arrived * td, Ev::Arrive);
-                        }
-                        // `te` is the scheduled stream stamp (seq*td): after
-                        // a drain the clock may already be past it, and the
-                        // latency/decay metrics must charge that wait
-                        self.admit_lockstep(
-                            batch, seq, te, t, plugin, &ctx, &mut metrics, executor,
-                        );
-                    }
-                    Ev::Done { worker: w, stage: s, job, bwd } => {
-                        let p = self.sched.num_stages();
-                        let result = executor.finish((w, s)).into_stage();
-                        if !bwd {
-                            if s + 1 < p {
-                                self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
-                                self.sched.slots[w][s + 1].fwd_q.push_back(job);
-                                self.kick(w, s + 1, t, executor);
-                            } else {
-                                // logits ready: prediction + loss head
-                                let logits = result.out;
-                                let (y, bx) = (
-                                    self.sched.jobs[job].y.clone(),
-                                    self.sched.jobs[job].batch_x.clone(),
-                                );
-                                metrics.record_prediction(
-                                    t,
-                                    crate::backend::accuracy(spec.classes, &logits, &y),
-                                );
-                                metrics
-                                    .record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
-                                let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, &ctx);
-                                metrics.record_loss(t, loss);
-                                self.sched.jobs[job].grad = Some(gl);
-                                self.sched.slots[w][s].bwd_q.push_back(job);
-                            }
-                        } else {
-                            // deliver the backward results to the accumulator
-                            let grads = result.grads.expect("bwd grads");
-                            let gx = result.out;
-                            let slot = &mut self.sched.slots[w][s];
-                            match &mut slot.acc {
-                                None => slot.acc = Some(grads),
-                                Some(a) => {
-                                    for (ag, g) in a.iter_mut().zip(&grads) {
-                                        ag.add(g);
-                                    }
-                                }
-                            }
-                            slot.acc_count += 1;
-                            slot.acc_arrivals.push(self.sched.jobs[job].arrival);
-                            slot.acc_from_version =
-                                slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
-                            if slot.acc_count >= self.cfg.pipe.workers[w].accum[s] {
-                                self.apply_update(w, s, t, plugin, &ctx, &mut metrics);
-                            }
-                            if s > 0 {
-                                self.sched.jobs[job].grad = Some(gx);
-                                self.sched.slots[w][s - 1].bwd_q.push_back(job);
-                                self.kick(w, s - 1, t, executor);
-                            } else {
-                                self.sched.retire(job);
-                            }
-                        }
-                        self.kick(w, s, t, executor);
-                        metrics.observe_live_bytes(self.stash.bytes());
-                        if dynamic {
-                            let snap = self.ledger_snapshot();
-                            metrics.ledger.observe(snap);
-                            if drain_from.is_none() && budget.breached(snap.total()) {
-                                drain_from = Some(t);
-                            }
-                        }
+    /// Handle one lockstep `Done` event at virtual time `t`: join the
+    /// device's FIFO result, route activations/gradients onward, run the
+    /// loss head at the last stage, and apply updates when an accumulation
+    /// window fills. (The session layer owns the event heap and the
+    /// budget/breach bookkeeping around this.)
+    pub(crate) fn on_done_lockstep(
+        &mut self,
+        w: usize,
+        s: usize,
+        job: usize,
+        bwd: bool,
+        t: u64,
+        io: &mut EngineIo,
+    ) {
+        let p = self.sched.num_stages();
+        let result = io.executor.finish((w, s)).into_stage();
+        if !bwd {
+            if s + 1 < p {
+                self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
+                self.sched.slots[w][s + 1].fwd_q.push_back(job);
+                self.kick(w, s + 1, t, io.executor);
+            } else {
+                // logits ready: prediction + loss head
+                let logits = result.out;
+                let (y, bx) =
+                    (self.sched.jobs[job].y.clone(), self.sched.jobs[job].batch_x.clone());
+                io.metrics
+                    .record_prediction(t, crate::backend::accuracy(io.ctx.classes, &logits, &y));
+                io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                let (gl, loss) = io.plugin.loss_grad(&logits, &y, &bx, &io.ctx);
+                io.metrics.record_loss(t, loss);
+                self.sched.jobs[job].grad = Some(gl);
+                self.sched.slots[w][s].bwd_q.push_back(job);
+            }
+        } else {
+            // deliver the backward results to the accumulator
+            let grads = result.grads.expect("bwd grads");
+            let gx = result.out;
+            let slot = &mut self.sched.slots[w][s];
+            match &mut slot.acc {
+                None => slot.acc = Some(grads),
+                Some(a) => {
+                    for (ag, g) in a.iter_mut().zip(&grads) {
+                        ag.add(g);
                     }
                 }
             }
-            // the phase's event heap is empty: either the run is over, or a
-            // drain completed and the new plan takes effect
-            let Some(t0) = drain_from else { break 'run };
-            if held.is_none() && next_batch.is_none() {
-                break 'run; // a breach landed after the last arrival
+            slot.acc_count += 1;
+            slot.acc_arrivals.push(self.sched.jobs[job].arrival);
+            slot.acc_from_version =
+                slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
+            if slot.acc_count >= self.cfg.pipe.workers[w].accum[s] {
+                self.apply_update(w, s, t, io);
             }
-            let now = clock.now();
-            // flush partially-filled accumulators as final updates under
-            // the old plan — the drained backwards' gradients are applied,
-            // not discarded, even when `accum > 1` left a remainder
-            for (w, s) in self.pending_accumulators() {
-                self.apply_update(w, s, now, plugin, &ctx, &mut metrics);
-            }
-            let refreshed = self.refreshed_profile(&prof);
-            let out = plan(&refreshed, td, budget.current(), decay);
-            self.transition(&out, &refreshed, executor);
-            metrics.record_replan(now, now.saturating_sub(t0), out.mem_bytes);
-            metrics.exec_threads = metrics.exec_threads.max(executor.threads());
-            if let Some((batch, seq, at)) = held.take() {
-                self.admit_lockstep(batch, seq, at, now, plugin, &ctx, &mut metrics, executor);
-            }
-            if next_batch.is_some() {
-                // arrivals keep their original absolute cadence: the stream
-                // did not wait for the transition
-                self.sched.events.push(arrived * td, Ev::Arrive);
+            if s > 0 {
+                self.sched.jobs[job].grad = Some(gx);
+                self.sched.slots[w][s - 1].bwd_q.push_back(job);
+                self.kick(w, s - 1, t, io.executor);
+            } else {
+                self.sched.retire(job);
             }
         }
-        metrics.ledger.observe(self.ledger_snapshot());
+        self.kick(w, s, t, io.executor);
+        io.metrics.observe_live_bytes(self.stash.bytes());
+    }
 
-        // analytic memory (Eq. 4) + plugin + compensator state
-        let comp_bytes: usize = self.comps.iter().map(|c| c.state_bytes()).sum();
-        metrics.mem_bytes = mem_footprint(&self.cfg.partition, &prof, &self.cfg.pipe)
-            + plugin.memory_bytes() as f64
-            + comp_bytes as f64;
-        metrics.tacc = eval_tacc(
-            self.backend,
-            &self.shapes,
-            &self.params.layers,
-            spec.classes,
-            &test,
-            spec.batch,
-        );
-        RunResult { metrics, params: self.params.layers }
+    /// Mark the budget dynamic after an imperative
+    /// [`Session::set_budget`](crate::pipeline::session::Session::set_budget):
+    /// flips per-update ledger tracing on and makes the next transition
+    /// size the stash from the plan's version count, exactly as a
+    /// scheduled dynamic budget would. (A flag, not a synthetic schedule
+    /// step — the configured `BudgetSchedule` stays untouched.)
+    pub(crate) fn force_dynamic_budget(&mut self) {
+        self.forced_dynamic = true;
+    }
+
+    /// Compensator state bytes, from whichever side owns the compensators
+    /// (engine in lockstep, stage cells in freerun).
+    pub(crate) fn comp_state_bytes(&self) -> usize {
+        if self.cells.is_empty() {
+            self.comps.iter().map(|c| c.state_bytes()).sum()
+        } else {
+            self.cells.iter().map(|c| c.comp_state_bytes()).sum()
+        }
+    }
+
+    /// Final full-model parameters (live layers in lockstep, assembled
+    /// from the stage cells in freerun).
+    pub(crate) fn final_params(&self) -> Vec<SharedParams> {
+        if self.cells.is_empty() {
+            self.params.layers.clone()
+        } else {
+            self.free_params()
+        }
     }
 
     // -----------------------------------------------------------------
@@ -807,7 +716,7 @@ impl<'a> AsyncEngine<'a> {
 
     /// Move the per-stage live state (params, stash, compensators) into
     /// `Arc`-shared [`StageCell`]s so updates can run on device threads.
-    fn build_cells(&mut self) {
+    pub(crate) fn build_cells(&mut self) {
         let comps: Vec<Box<dyn Compensator>> = self
             .shapes
             .iter()
@@ -840,7 +749,7 @@ impl<'a> AsyncEngine<'a> {
 
     /// Full-model live snapshot assembled from the stage cells (stages
     /// cover contiguous layer ranges in order).
-    fn free_params(&self) -> Vec<SharedParams> {
+    pub(crate) fn free_params(&self) -> Vec<SharedParams> {
         let mut v = Vec::with_capacity(self.shapes.len());
         for cell in &self.cells {
             v.extend(cell.snapshot().0);
@@ -903,16 +812,7 @@ impl<'a> AsyncEngine<'a> {
     /// what lets the update itself leave the scheduler thread; the
     /// freerun-vs-lockstep tolerance tests use the plugin-free path where
     /// the orders coincide.
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch_update_free(
-        &mut self,
-        w: usize,
-        s: usize,
-        t: u64,
-        plugin: &mut dyn OclPlugin,
-        ctx: &OclCtx,
-        executor: &mut dyn Executor,
-    ) {
+    pub(crate) fn dispatch_update_free(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) {
         let slot = &mut self.sched.slots[w][s];
         let mut grads = slot.acc.take().expect("accumulated grads");
         let count = slot.acc_count;
@@ -925,9 +825,9 @@ impl<'a> AsyncEngine<'a> {
         let (snap, _) = self.cells[s].snapshot();
         for (i, &l) in layers.iter().enumerate() {
             grads[i].scale(scale);
-            plugin.adjust_layer_grad(l, &mut grads[i], &snap[i], ctx);
+            io.plugin.adjust_layer_grad(l, &mut grads[i], &snap[i], &io.ctx);
         }
-        executor.start(
+        io.executor.start(
             (w, s),
             DeviceTask::Update(UpdateTask {
                 cell: self.cells[s].clone(),
@@ -942,20 +842,16 @@ impl<'a> AsyncEngine<'a> {
 
     /// Admit one arriving batch at wall time `now` (its scheduled arrival
     /// stamp is `arrival`; admission may run late under load or after a
-    /// plan-transition drain). The arrival itself is counted at the pull
-    /// site — batches held across a drain are admitted later but arrive
-    /// on time.
-    #[allow(clippy::too_many_arguments)]
-    fn on_arrive_free(
+    /// plan-transition drain). The arrival itself is counted at the
+    /// admission site — batches held across a drain are admitted later but
+    /// arrive on time.
+    pub(crate) fn on_arrive_free(
         &mut self,
         batch: Batch,
         seq: u64,
         arrival: u64,
         now: u64,
-        plugin: &mut dyn OclPlugin,
-        ctx: &OclCtx,
-        metrics: &mut RunMetrics,
-        executor: &mut dyn Executor,
+        io: &mut EngineIo,
     ) {
         if self.sched.over_capacity() {
             // predict with live weights; drop from training
@@ -964,16 +860,16 @@ impl<'a> AsyncEngine<'a> {
                 self.backend,
                 &self.shapes,
                 &params,
-                ctx.classes,
+                io.ctx.classes,
                 &batch.x,
                 &batch.y,
                 now,
-                metrics,
+                io.metrics,
             );
             return;
         }
         let params = self.free_params();
-        let batch = plugin.augment(batch, &params, ctx);
+        let batch = io.plugin.augment(batch, &params, &io.ctx);
         let p = self.sched.num_stages();
         let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
         stage_inputs[0] = Some(batch.x.clone());
@@ -987,22 +883,18 @@ impl<'a> AsyncEngine<'a> {
             grad: None,
             done: false,
         });
-        self.kick_free(w, 0, now, executor);
+        self.kick_free(w, 0, now, io.executor);
     }
 
     /// One device completion at wall time `t`, paired FIFO with its
     /// dispatch via the slot's flight queue.
-    #[allow(clippy::too_many_arguments)]
-    fn on_done_free(
+    pub(crate) fn on_done_free(
         &mut self,
         w: usize,
         s: usize,
         out: crate::pipeline::executor::DeviceOutput,
         t: u64,
-        plugin: &mut dyn OclPlugin,
-        ctx: &OclCtx,
-        metrics: &mut RunMetrics,
-        executor: &mut dyn Executor,
+        io: &mut EngineIo,
     ) {
         self.flights -= 1;
         let (flight, dispatched) = self.sched.complete_flight(w, s, t);
@@ -1016,17 +908,17 @@ impl<'a> AsyncEngine<'a> {
                 if s + 1 < p {
                     self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
                     self.sched.slots[w][s + 1].fwd_q.push_back(job);
-                    self.kick_free(w, s + 1, t, executor);
+                    self.kick_free(w, s + 1, t, io.executor);
                 } else {
                     // logits ready: prediction + loss head
                     let logits = result.out;
                     let (y, bx) =
                         (self.sched.jobs[job].y.clone(), self.sched.jobs[job].batch_x.clone());
-                    metrics
-                        .record_prediction(t, crate::backend::accuracy(ctx.classes, &logits, &y));
-                    metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
-                    let (gl, loss) = plugin.loss_grad(&logits, &y, &bx, ctx);
-                    metrics.record_loss(t, loss);
+                    io.metrics
+                        .record_prediction(t, crate::backend::accuracy(io.ctx.classes, &logits, &y));
+                    io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                    let (gl, loss) = io.plugin.loss_grad(&logits, &y, &bx, &io.ctx);
+                    io.metrics.record_loss(t, loss);
                     self.sched.jobs[job].grad = Some(gl);
                     self.sched.slots[w][s].bwd_q.push_back(job);
                 }
@@ -1051,266 +943,37 @@ impl<'a> AsyncEngine<'a> {
                 slot.acc_from_version =
                     slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
                 if self.sched.slots[w][s].acc_count >= self.cfg.pipe.workers[w].accum[s] {
-                    self.dispatch_update_free(w, s, t, plugin, ctx, executor);
+                    self.dispatch_update_free(w, s, t, io);
                 }
                 if s > 0 {
                     self.sched.jobs[job].grad = Some(gx);
                     self.sched.slots[w][s - 1].bwd_q.push_back(job);
-                    self.kick_free(w, s - 1, t, executor);
+                    self.kick_free(w, s - 1, t, io.executor);
                 } else {
                     self.sched.retire(job);
                 }
             }
             Flight::Update { arrivals } => {
                 let outcome = out.into_update();
-                metrics.record_staleness(outcome.staleness);
+                io.metrics.record_staleness(outcome.staleness);
                 let frac = self.sched.stages[s].params as f64 / self.total_params as f64;
                 for a in arrivals {
-                    metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
+                    io.metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
                 }
                 self.update_count += 1;
                 if self.update_count % self.cfg.plugin_cadence == 0 {
                     let snap = self.free_params();
-                    plugin.after_update(&snap, ctx);
+                    io.plugin.after_update(&snap, &io.ctx);
                 }
                 let bytes: usize = self.cells.iter().map(|c| c.stash_bytes()).sum();
-                metrics.observe_live_bytes(bytes);
-                if self.cfg.budget.is_dynamic() {
-                    metrics.ledger.record(t, self.ledger_snapshot());
+                io.metrics.observe_live_bytes(bytes);
+                if self.dynamic_budget() {
+                    io.metrics.ledger.record(t, self.ledger_snapshot());
                 }
             }
         }
-        self.kick_free(w, s, t, executor);
+        self.kick_free(w, s, t, io.executor);
     }
-
-    /// Freerun: arrivals are paced by the wall clock, completions land
-    /// whenever device threads actually finish, and stage updates run on
-    /// the owning device thread — contention, imbalance, and staleness
-    /// are observed properties of the run, not replayed costs.
-    fn run_freerun(
-        mut self,
-        stream: &mut SyntheticStream,
-        plugin: &mut dyn OclPlugin,
-        ep: &EngineParams,
-        model: &ModelSpec,
-        executor: &mut dyn Executor,
-    ) -> RunResult {
-        let spec = stream.spec().clone();
-        let prof = Profile::analytic(model, spec.batch);
-        self.stage_times(&prof);
-        let td = if ep.td == 0 { prof.default_td() } else { ep.td };
-        // decay is resolved per virtual tick; freerun ages updates in wall
-        // microseconds (1 tick replayed as WALL_TICK_US µs), so rescale to
-        // keep the adaptation rate comparable with lockstep at any replay
-        // speed
-        self.decay_c = ep.decay(td) / crate::stream::WALL_TICK_US as f64;
-        let td_us = arrival_interval_us(td);
-        self.build_cells();
-        let shapes = self.shapes.clone();
-        let ctx = OclCtx {
-            backend: self.backend,
-            shapes: &shapes,
-            classes: spec.classes,
-            batch: spec.batch,
-            features: spec.features,
-        };
-        let mut metrics = RunMetrics::default();
-        let test = stream.test_set(ep.tacc_per_class);
-        metrics.exec_threads = executor.threads();
-
-        let clock = WallClock::new();
-        let mut arrived = 0u64;
-        let mut next_batch = stream.next_batch();
-        let mut budget = BudgetState::new(&self.cfg.budget);
-        let decay = decay_for_td(td);
-        // per-iteration metering only pays off when a budget can
-        // step/breach; static runs keep the per-update trace + final observe
-        let dynamic = self.cfg.budget.is_dynamic();
-        // arrivals held while draining for a plan transition; the stream
-        // does not wait, so several can pile up: (payload, seq, due stamp)
-        let mut held: Vec<(Batch, u64, u64)> = Vec::new();
-        let mut drain_from: Option<u64> = None;
-        loop {
-            // pull every arrival already due at the wall clock
-            while next_batch.is_some() && clock.now() >= arrived * td_us {
-                let batch = next_batch.take().expect("due arrival");
-                let due = arrived * td_us;
-                let seq = arrived;
-                arrived += 1;
-                next_batch = stream.next_batch();
-                metrics.record_arrival();
-                // advance the budget cursor even mid-drain so the pending
-                // re-plan sees the newest budget in force
-                let stepped = budget.step_due(seq, clock.now());
-                if drain_from.is_some() || stepped {
-                    if drain_from.is_none() {
-                        drain_from = Some(clock.now());
-                    }
-                    held.push((batch, seq, due));
-                } else {
-                    self.on_arrive_free(
-                        batch,
-                        seq,
-                        due,
-                        clock.now(),
-                        plugin,
-                        &ctx,
-                        &mut metrics,
-                        executor,
-                    );
-                }
-            }
-            // react to whichever device finished first
-            while let Some(((w, s), out)) = executor.try_finish_any() {
-                self.on_done_free(w, s, out, clock.now(), plugin, &ctx, &mut metrics, executor);
-            }
-            if dynamic {
-                // wall-time (`u<N>`) steps must fire between arrivals too;
-                // `arrived` = next seq, so a batch step fires here at the
-                // same boundary the pull-site check would give it
-                if budget.step_due(arrived, clock.now()) && drain_from.is_none() {
-                    drain_from = Some(clock.now());
-                }
-                let snap = self.ledger_snapshot();
-                metrics.ledger.observe(snap);
-                if drain_from.is_none() && budget.breached(snap.total()) {
-                    drain_from = Some(clock.now());
-                }
-            }
-            // plan transition once the drain completes (no task in flight)
-            if self.flights == 0 && drain_from.is_some() {
-                if held.is_empty() && next_batch.is_none() {
-                    drain_from = None; // nothing ahead to re-plan for
-                } else {
-                    // flush partially-filled accumulators as final updates
-                    // under the old plan (they fly as Update tasks; the
-                    // next fully-drained pass performs the transition)
-                    let pending = self.pending_accumulators();
-                    if !pending.is_empty() {
-                        for (w, s) in pending {
-                            self.dispatch_update_free(
-                                w,
-                                s,
-                                clock.now(),
-                                plugin,
-                                &ctx,
-                                executor,
-                            );
-                        }
-                        continue;
-                    }
-                    let t0 = drain_from.take().expect("drain pending");
-                    let now = clock.now();
-                    let refreshed = self.refreshed_profile(&prof);
-                    let out = plan(&refreshed, td, budget.current(), decay);
-                    self.transition(&out, &refreshed, executor);
-                    metrics.record_replan(now, now.saturating_sub(t0), out.mem_bytes);
-                    metrics.exec_threads = metrics.exec_threads.max(executor.threads());
-                    for (batch, seq, due) in held.drain(..) {
-                        self.on_arrive_free(
-                            batch,
-                            seq,
-                            due,
-                            clock.now(),
-                            plugin,
-                            &ctx,
-                            &mut metrics,
-                            executor,
-                        );
-                    }
-                    continue;
-                }
-            }
-            if next_batch.is_none() && self.flights == 0 && held.is_empty() {
-                break;
-            }
-            if self.flights > 0 {
-                // sleep on the completion channel, but wake for the next
-                // scheduled arrival
-                let timeout = if next_batch.is_some() {
-                    Duration::from_micros((arrived * td_us).saturating_sub(clock.now()).max(1))
-                } else {
-                    Duration::from_millis(100)
-                };
-                if let Some(((w, s), out)) = executor.wait_any(timeout) {
-                    self.on_done_free(
-                        w,
-                        s,
-                        out,
-                        clock.now(),
-                        plugin,
-                        &ctx,
-                        &mut metrics,
-                        executor,
-                    );
-                }
-            } else {
-                clock.sleep_until(arrived * td_us);
-            }
-        }
-        metrics.ledger.observe(self.ledger_snapshot());
-        debug_assert_eq!(self.sched.inflight, 0, "every admitted job retired");
-
-        // analytic memory (Eq. 4) + plugin + compensator state
-        let comp_bytes: usize = self.cells.iter().map(|c| c.comp_state_bytes()).sum();
-        metrics.mem_bytes = mem_footprint(&self.cfg.partition, &prof, &self.cfg.pipe)
-            + plugin.memory_bytes() as f64
-            + comp_bytes as f64;
-        let final_params = self.free_params();
-        metrics.tacc = eval_tacc(
-            self.backend,
-            &self.shapes,
-            &final_params,
-            spec.classes,
-            &test,
-            spec.batch,
-        );
-        RunResult { metrics, params: final_params }
-    }
-}
-
-/// Build + run with an explicit executor and time-mode choice. `Threaded`
-/// spawns one OS thread per active (worker, stage) device for the
-/// duration of the run; `Mode::Freerun` paces the run against the wall
-/// clock instead of the virtual event heap.
-#[allow(clippy::too_many_arguments)]
-pub fn run_async_with(
-    cfg: AsyncCfg,
-    stream: &mut SyntheticStream,
-    backend: &dyn Backend,
-    plugin: &mut dyn OclPlugin,
-    ep: &EngineParams,
-    model: &ModelSpec,
-    kind: ExecutorKind,
-    mode: Mode,
-) -> RunResult {
-    let engine = AsyncEngine::new(backend, model, cfg, ep);
-    match kind {
-        ExecutorKind::Sim => {
-            let mut ex = SimExecutor::new(backend);
-            engine.run(stream, plugin, ep, model, &mut ex, mode)
-        }
-        ExecutorKind::Threaded => {
-            let devices = engine.devices();
-            std::thread::scope(|scope| {
-                let mut ex = ThreadedExecutor::spawn(scope, backend, &devices);
-                engine.run(stream, plugin, ep, model, &mut ex, mode)
-            })
-        }
-    }
-}
-
-/// Convenience: build + run in one call on the simulation executor in
-/// lockstep (virtual-time) mode.
-pub fn run_async(
-    cfg: AsyncCfg,
-    stream: &mut SyntheticStream,
-    backend: &dyn Backend,
-    plugin: &mut dyn OclPlugin,
-    ep: &EngineParams,
-    model: &ModelSpec,
-) -> RunResult {
-    run_async_with(cfg, stream, backend, plugin, ep, model, ExecutorKind::Sim, Mode::Lockstep)
 }
 
 #[cfg(test)]
@@ -1318,7 +981,10 @@ mod tests {
     use super::*;
     use crate::backend::native::NativeBackend;
     use crate::ocl::Vanilla;
-    use crate::stream::{DriftKind, StreamSpec};
+    use crate::pipeline::executor::ExecutorKind;
+    use crate::pipeline::sched::Mode;
+    use crate::pipeline::RunResult;
+    use crate::stream::{DriftKind, StreamSpec, SyntheticStream};
 
     fn mk_stream(n: usize, seed: u64) -> SyntheticStream {
         SyntheticStream::new(StreamSpec {

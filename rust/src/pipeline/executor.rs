@@ -33,7 +33,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::thread::Scope;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::backend::Backend;
@@ -396,32 +396,37 @@ impl Executor for SimExecutor<'_> {
 /// One OS thread per (worker, stage) device, exchanging tasks and results
 /// over channels. All devices report into one shared completion channel
 /// (per-device order is preserved — each device is a single producer), so
-/// the scheduler can block on "whichever device finishes first". Spawned
-/// inside a [`std::thread::scope`] so the backend can be borrowed (it must
-/// be `Sync` — enforced by the `Backend` supertrait); the scope handle is
-/// retained so plan transitions can spawn threads for new devices
-/// mid-run (`reconfigure`) — retired devices exit when their task sender
-/// drops. Dropping the executor closes every task channel and all device
-/// threads exit; the scope joins them.
-pub struct ThreadedExecutor<'scope, 'env> {
-    scope: &'scope Scope<'scope, 'env>,
-    backend: &'env dyn Backend,
-    links: HashMap<(usize, usize), Sender<DeviceTask>>,
+/// the scheduler can block on "whichever device finishes first".
+///
+/// The executor *owns* its device threads: each thread captures an
+/// [`Backend::share`] handle (an `Arc`, so caches are shared with the
+/// caller's backend) and a [`JoinHandle`] is retained per device. That is
+/// what lets a long-lived [`crate::pipeline::session::Session`] keep
+/// devices running across an unbounded number of calls — a
+/// `std::thread::scope` cannot outlive the function that opened it. Plan
+/// transitions spawn/retire devices mid-run (`reconfigure`); dropping the
+/// executor closes every task channel and joins every device thread, so
+/// no thread outlives the session that owns it.
+pub struct ThreadedExecutor {
+    backend: Arc<dyn Backend>,
+    links: HashMap<(usize, usize), DeviceLink>,
     done_tx: Sender<((usize, usize), DeviceOutput)>,
     done_rx: Receiver<((usize, usize), DeviceOutput)>,
     /// completions drained while waiting for a specific device in `finish`
     parked: VecDeque<((usize, usize), DeviceOutput)>,
 }
 
-impl<'scope, 'env> ThreadedExecutor<'scope, 'env> {
-    pub fn spawn(
-        scope: &'scope Scope<'scope, 'env>,
-        backend: &'env dyn Backend,
-        devices: &[(usize, usize)],
-    ) -> Self {
+/// One device thread: its task channel plus the handle joined at retire
+/// or executor drop.
+struct DeviceLink {
+    task_tx: Sender<DeviceTask>,
+    thread: JoinHandle<()>,
+}
+
+impl ThreadedExecutor {
+    pub fn spawn(backend: Arc<dyn Backend>, devices: &[(usize, usize)]) -> Self {
         let (done_tx, done_rx) = channel::<((usize, usize), DeviceOutput)>();
         let mut ex = ThreadedExecutor {
-            scope,
             backend,
             links: HashMap::new(),
             done_tx,
@@ -437,21 +442,47 @@ impl<'scope, 'env> ThreadedExecutor<'scope, 'env> {
     fn spawn_device(&mut self, dev: (usize, usize)) {
         let (task_tx, task_rx) = channel::<DeviceTask>();
         let out_tx = self.done_tx.clone();
-        let backend = self.backend;
-        self.scope.spawn(move || {
+        let backend = Arc::clone(&self.backend);
+        let thread = std::thread::spawn(move || {
             while let Ok(task) = task_rx.recv() {
-                if out_tx.send((dev, run_device_task(backend, task))).is_err() {
+                if out_tx.send((dev, run_device_task(backend.as_ref(), task))).is_err() {
                     break;
                 }
             }
         });
-        self.links.insert(dev, task_tx);
+        self.links.insert(dev, DeviceLink { task_tx, thread });
+    }
+
+    /// Close one device's task channel and join its thread (it finishes
+    /// any task already received, then its recv loop ends). A device-task
+    /// panic is re-raised here — the behavior the old `thread::scope` join
+    /// gave — unless this thread is already unwinding, where a second
+    /// panic would abort the process; then it is reported and swallowed.
+    fn retire_device(link: DeviceLink) {
+        drop(link.task_tx);
+        if let Err(payload) = link.thread.join() {
+            if std::thread::panicking() {
+                eprintln!("ferret: device thread panicked during teardown (already unwinding)");
+            } else {
+                std::panic::resume_unwind(payload);
+            }
+        }
     }
 }
 
-impl Executor for ThreadedExecutor<'_, '_> {
+impl Drop for ThreadedExecutor {
+    fn drop(&mut self) {
+        // explicit join on drop: the session (or legacy shim) that owns
+        // this executor cannot leak device threads past its own lifetime
+        for (_, link) in std::mem::take(&mut self.links) {
+            Self::retire_device(link);
+        }
+    }
+}
+
+impl Executor for ThreadedExecutor {
     fn start(&mut self, dev: (usize, usize), task: DeviceTask) {
-        self.links[&dev].send(task).expect("device thread alive");
+        self.links[&dev].task_tx.send(task).expect("device thread alive");
     }
 
     fn finish(&mut self, dev: (usize, usize)) -> DeviceOutput {
@@ -487,8 +518,15 @@ impl Executor for ThreadedExecutor<'_, '_> {
 
     fn reconfigure(&mut self, devices: &[(usize, usize)]) {
         // retire devices not in the new set: dropping the sender ends the
-        // device thread's recv loop (it is idle — the caller drained)
-        self.links.retain(|dev, _| devices.contains(dev));
+        // device thread's recv loop (it is idle — the caller drained), and
+        // the join keeps thread count == device count at all times
+        let retired: Vec<(usize, usize)> =
+            self.links.keys().copied().filter(|d| !devices.contains(d)).collect();
+        for dev in retired {
+            if let Some(link) = self.links.remove(&dev) {
+                Self::retire_device(link);
+            }
+        }
         for &dev in devices {
             if !self.links.contains_key(&dev) {
                 self.spawn_device(dev);
@@ -535,11 +573,10 @@ mod tests {
             let mut sim = SimExecutor::new(&be);
             sim.start((0, 0), stage(bwd));
             let a = sim.finish((0, 0)).into_stage();
-            let b = std::thread::scope(|s| {
-                let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
-                th.start((0, 0), stage(bwd));
-                th.finish((0, 0)).into_stage()
-            });
+            let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0)]);
+            th.start((0, 0), stage(bwd));
+            let b = th.finish((0, 0)).into_stage();
+            drop(th); // owned threads join here, not at a scope's end
             assert_eq!(a.out, b.out, "bwd={bwd}");
             match (a.grads, b.grads) {
                 (None, None) => assert!(!bwd),
@@ -573,12 +610,10 @@ mod tests {
         assert!(first.grads.is_some());
         assert_eq!(second.out, fwd.out);
         assert!(second.grads.is_none());
-        let (tf, ts) = std::thread::scope(|s| {
-            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
-            th.start((0, 0), stage(true));
-            th.start((0, 0), stage(false));
-            (th.finish((0, 0)).into_stage(), th.finish((0, 0)).into_stage())
-        });
+        let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0)]);
+        th.start((0, 0), stage(true));
+        th.start((0, 0), stage(false));
+        let (tf, ts) = (th.finish((0, 0)).into_stage(), th.finish((0, 0)).into_stage());
         assert_eq!(tf.out, bwd.out);
         assert_eq!(ts.out, fwd.out);
     }
@@ -587,15 +622,13 @@ mod tests {
     fn threaded_executor_overlaps_devices() {
         let be = NativeBackend;
         let devices = [(0, 0), (0, 1), (1, 0), (1, 1)];
-        let outs = std::thread::scope(|s| {
-            let mut th = ThreadedExecutor::spawn(s, &be, &devices);
-            assert_eq!(th.threads(), 4);
-            // all four devices in flight simultaneously before any join
-            for &d in &devices {
-                th.start(d, stage(false));
-            }
-            devices.map(|d| th.finish(d).into_stage())
-        });
+        let mut th = ThreadedExecutor::spawn(be.share(), &devices);
+        assert_eq!(th.threads(), 4);
+        // all four devices in flight simultaneously before any join
+        for &d in &devices {
+            th.start(d, stage(false));
+        }
+        let outs = devices.map(|d| th.finish(d).into_stage());
         let reference = run_stage(&be, task(false));
         for o in outs {
             assert_eq!(o.out, reference.out);
@@ -607,22 +640,21 @@ mod tests {
     #[test]
     fn drain_any_returns_completions_then_empties() {
         let be = NativeBackend;
-        std::thread::scope(|s| {
-            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0), (0, 1)]);
-            assert!(th.try_finish_any().is_none(), "idle executor");
-            th.start((0, 0), stage(false));
-            th.start((0, 1), stage(false));
-            let mut seen = Vec::new();
-            while seen.len() < 2 {
-                if let Some((dev, out)) = th.wait_any(Duration::from_secs(5)) {
-                    assert!(out.into_stage().grads.is_none());
-                    seen.push(dev);
-                }
+        let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0), (0, 1)]);
+        assert!(th.try_finish_any().is_none(), "idle executor");
+        th.start((0, 0), stage(false));
+        th.start((0, 1), stage(false));
+        let mut seen = Vec::new();
+        while seen.len() < 2 {
+            if let Some((dev, out)) = th.wait_any(Duration::from_secs(5)) {
+                assert!(out.into_stage().grads.is_none());
+                seen.push(dev);
             }
-            seen.sort_unstable();
-            assert_eq!(seen, vec![(0, 0), (0, 1)]);
-            assert!(th.wait_any(Duration::from_millis(10)).is_none(), "drained");
-        });
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(0, 0), (0, 1)]);
+        assert!(th.wait_any(Duration::from_millis(10)).is_none(), "drained");
+        drop(th);
         // the sim executor drains in dispatch order
         let mut sim = SimExecutor::new(&be);
         assert!(sim.try_finish_any().is_none());
@@ -638,18 +670,18 @@ mod tests {
     #[test]
     fn reconfigure_respawns_and_retires_devices() {
         let be = NativeBackend;
-        std::thread::scope(|s| {
-            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0), (0, 1)]);
-            th.start((0, 0), stage(false));
-            let _ = th.finish((0, 0));
-            // drained: retire (0,1), keep (0,0), add (1,0)
-            th.reconfigure(&[(0, 0), (1, 0)]);
-            assert_eq!(th.threads(), 2);
-            th.start((0, 0), stage(false));
-            th.start((1, 0), stage(true));
-            assert!(th.finish((0, 0)).into_stage().grads.is_none());
-            assert!(th.finish((1, 0)).into_stage().grads.is_some());
-        });
+        let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0), (0, 1)]);
+        th.start((0, 0), stage(false));
+        let _ = th.finish((0, 0));
+        // drained: retire (0,1) — its thread joins inside reconfigure —
+        // keep (0,0), add (1,0)
+        th.reconfigure(&[(0, 0), (1, 0)]);
+        assert_eq!(th.threads(), 2);
+        th.start((0, 0), stage(false));
+        th.start((1, 0), stage(true));
+        assert!(th.finish((0, 0)).into_stage().grads.is_none());
+        assert!(th.finish((1, 0)).into_stage().grads.is_some());
+        drop(th);
         // inline executor: reconfigure is a no-op
         let mut sim = SimExecutor::new(&be);
         sim.reconfigure(&[(9, 9)]);
@@ -670,19 +702,18 @@ mod tests {
             vec![make(CompKind::NoComp, CompParams::default())],
         );
         let g = GradBuf { gw: vec![1.0, -1.0], gb: vec![2.0] };
-        let outcome = std::thread::scope(|s| {
-            let mut th = ThreadedExecutor::spawn(s, &be, &[(0, 0)]);
-            th.start(
-                (0, 0),
-                DeviceTask::Update(UpdateTask {
-                    cell: cell.clone(),
-                    grads: vec![g],
-                    from_version: 0,
-                    lr: 0.5,
-                }),
-            );
-            th.finish((0, 0)).into_update()
-        });
+        let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0)]);
+        th.start(
+            (0, 0),
+            DeviceTask::Update(UpdateTask {
+                cell: cell.clone(),
+                grads: vec![g],
+                from_version: 0,
+                lr: 0.5,
+            }),
+        );
+        let outcome = th.finish((0, 0)).into_update();
+        drop(th);
         assert_eq!(outcome.new_version, 1);
         assert_eq!(outcome.staleness, 0);
         assert_eq!(cell.version(), 1);

@@ -1,11 +1,13 @@
 //! Training engines — layered as clock / scheduler / executor / policy.
 //!
-//! All engines share the same contract: consume a [`SyntheticStream`],
-//! train through a [`Backend`] with an [`OclPlugin`], and fill a
-//! [`RunMetrics`]. Time is measured in ticks; data arrives every `t^d`
-//! ticks (one microbatch per arrival, the paper's `D^t`).
+//! All engines share the same contract: consume microbatches (from any
+//! [`Stream`] — [`SyntheticStream`] is the built-in generator — or pushed
+//! by hand through a [`session::Session`]), train through a [`Backend`]
+//! with an [`OclPlugin`], and fill a [`RunMetrics`]. Time is measured in
+//! ticks; data arrives every `t^d` ticks (one microbatch per arrival, the
+//! paper's `D^t`).
 //!
-//! The subsystem is split into four layers:
+//! The subsystem is split into five layers:
 //!
 //!   - [`sched`]    — the reusable scheduling core: event queue, 1F1B
 //!     backward-preemption priority, microbatch→worker routing, per-stage
@@ -33,6 +35,14 @@
 //!     compensation, and OCL plugins on top; [`sync`] covers the
 //!     flight-based synchronous schedules (DAPPLE, Zero-Bubble,
 //!     Hanayo-kW — Table 3's left half).
+//!   - [`session`] — the public run surface. A [`session::Session`] owns
+//!     the loop state the old run-to-completion functions kept on their
+//!     stack (clocks, budget cursor, pending arrivals, the executor —
+//!     including the device threads, joined on finish/drop), and exposes
+//!     it incrementally: push-based `ingest`, `step`/`drain`, live
+//!     `metrics()`, imperative `set_budget`, `finish`. Input comes from
+//!     any [`crate::stream::Stream`] (via `run_stream`) or from hand-fed
+//!     batches; `run_async`/`run_async_with` remain as thin shims.
 //!
 //! Under a dynamic [`crate::budget::BudgetSchedule`], the async engine is
 //! **phase-structured**: each phase runs one plan; a schedule step (or a
@@ -60,6 +70,7 @@
 //! Single-device stream baselines (Oracle/1-Skip/…) live in
 //! [`crate::baselines`].
 //!
+//! [`Stream`]: crate::stream::Stream
 //! [`SyntheticStream`]: crate::stream::SyntheticStream
 //! [`Backend`]: crate::backend::Backend
 //! [`OclPlugin`]: crate::ocl::OclPlugin
@@ -68,9 +79,11 @@
 pub mod engine;
 pub mod executor;
 pub mod sched;
+pub mod session;
 pub mod sync;
 
 pub use sched::{Clock, Mode, VirtualClock, WallClock};
+pub use session::{Session, SessionBuilder, SessionStep};
 
 use crate::metrics::RunMetrics;
 use crate::model::SharedParams;

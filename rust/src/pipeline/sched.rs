@@ -153,6 +153,13 @@ impl EventQueue {
     pub fn pop(&mut self) -> Option<(u64, Ev)> {
         self.heap.pop().map(|Reverse((t, _, ev))| (t, ev))
     }
+
+    /// Next event without removing it — the push-based session peeks so an
+    /// `Arrive` whose batch has not been ingested yet can stall (rather
+    /// than pop) and keep the heap's tie-break order intact.
+    pub fn peek(&self) -> Option<(u64, Ev)> {
+        self.heap.peek().map(|Reverse((t, _, ev))| (*t, *ev))
+    }
 }
 
 /// One in-flight microbatch.
@@ -235,7 +242,7 @@ pub enum WorkSel {
 /// (omission, compensation, plugins) on top.
 pub struct SchedCore {
     pub stages: Vec<StageMeta>,
-    /// slots[worker][stage]
+    /// `slots[worker][stage]`
     pub slots: Vec<Vec<Slot>>,
     pub active_workers: Vec<usize>,
     /// per-stage parameter version counter
@@ -396,11 +403,14 @@ mod tests {
     #[test]
     fn event_queue_orders_by_time_then_insertion() {
         let mut q = EventQueue::default();
+        assert!(q.peek().is_none());
         q.push(5, Ev::Arrive);
         q.push(3, Ev::Done { worker: 0, stage: 0, job: 0, bwd: false });
         q.push(5, Ev::Done { worker: 1, stage: 0, job: 1, bwd: true });
+        assert_eq!(q.peek().unwrap().0, 3, "peek sees the head");
         assert_eq!(q.pop().unwrap().0, 3);
         // equal times: first-pushed first
+        assert_eq!(q.peek().unwrap(), (5, Ev::Arrive), "peek does not remove");
         assert_eq!(q.pop().unwrap(), (5, Ev::Arrive));
         assert!(matches!(q.pop().unwrap().1, Ev::Done { worker: 1, .. }));
         assert!(q.pop().is_none());

@@ -1,0 +1,884 @@
+//! Session-oriented engine API: a long-lived, push-based surface over the
+//! asynchronous pipeline engine.
+//!
+//! The historical entry point ([`run_async_with`]) is a run-to-completion
+//! free function: it demands the whole stream up front and only returns
+//! once the stream ends. A production OCL service ingests *live* traffic —
+//! batches arrive one at a time, metrics must be observable mid-stream,
+//! and the memory budget can change while the learner is running. The
+//! session API decomposes the run loop into exactly those pieces:
+//!
+//!   - [`Session::builder`] — validated construction
+//!     (`Session::builder(backend, model).batch(..).plugin(..).build()?`);
+//!     configuration mistakes surface as typed
+//!     [`crate::util::error::Error`]s instead of engine panics. Omitting
+//!     [`SessionBuilder::config`] auto-plans an unconstrained Ferret
+//!     pipeline for the model.
+//!   - [`Session::ingest`] — push one batch (non-blocking: it is queued
+//!     and admitted at its scheduled arrival slot).
+//!   - [`Session::step`] / [`Session::drain`] — advance the lockstep event
+//!     heap (or the freerun completion loop) one event (resp. as far as it
+//!     goes without more input).
+//!   - [`Session::metrics`] — live [`RunMetrics`] snapshot mid-stream.
+//!   - [`Session::set_budget`] — imperative budget change: triggers the
+//!     same drain → re-plan → transition protocol as a
+//!     `--budget-schedule` step (see `pipeline::engine`).
+//!   - [`Session::finish`] — complete all outstanding work, evaluate the
+//!     final metrics, join the device threads, and return the
+//!     [`RunResult`].
+//!
+//! ## Lockstep exactness
+//!
+//! Driving a lockstep session by `ingest`/`step` reproduces the pull-based
+//! [`run_async_with`] metrics *bit for bit* (pinned by
+//! `tests/session.rs`). The subtlety is event-heap tie-breaking: equal
+//! virtual times pop in insertion order, so the session must insert each
+//! `Arrive` event at the same point in the event sequence the pull loop
+//! would — i.e. while processing the *previous* arrival, whether or not
+//! the next batch has been ingested yet. The session therefore schedules
+//! each next arrival speculatively; if its batch has not arrived when the
+//! event reaches the head of the heap, [`Session::step`] reports
+//! [`SessionStep::Starved`] and leaves the heap untouched (a pop would
+//! commit to an ordering the pull loop never sees). A speculative arrival
+//! that never materialises is discarded at [`Session::finish`], exactly
+//! where the pull loop would have stopped scheduling arrivals.
+//!
+//! ## Thread ownership
+//!
+//! A session owns its executor. For
+//! [`ExecutorKind::Threaded`] that means the device threads themselves:
+//! they capture [`Backend::share`] handles and are joined when the session
+//! is finished *or dropped* — a session abandoned mid-stream cannot leak
+//! device threads (`tests/session.rs` pins drop-without-finish). Nothing
+//! on this path uses `std::thread::scope`, which is what frees the session
+//! from the run-to-completion shape: a scope cannot outlive the function
+//! call that opened it.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::backend::Backend;
+use crate::bail;
+use crate::budget::{BudgetSchedule, BudgetState};
+use crate::compensate::CompKind;
+use crate::config::{LayerShape, ModelSpec};
+use crate::metrics::{eval_tacc, RunMetrics};
+use crate::ocl::{OclCtx, OclPlugin, Vanilla};
+use crate::pipeline::engine::{AsyncCfg, AsyncEngine, EngineIo};
+use crate::pipeline::executor::{Executor, ExecutorKind, SimExecutor, ThreadedExecutor};
+use crate::pipeline::sched::{Clock, Ev, Mode, VirtualClock, WallClock};
+use crate::pipeline::{EngineParams, RunResult};
+use crate::planner::costmodel::{decay_for_td, mem_footprint};
+use crate::planner::{plan, Profile};
+use crate::stream::{arrival_interval_us, Batch, Stream, SyntheticStream, TestSet};
+use crate::util::error::Result;
+
+/// The OCL plugin a session runs with: borrowed from the caller (the
+/// common case — plugins are stateful and callers often inspect them
+/// afterwards) or owned (the builder's default no-op `Vanilla`).
+enum PluginSlot<'a> {
+    Owned(Box<dyn OclPlugin>),
+    Borrowed(&'a mut dyn OclPlugin),
+}
+
+impl PluginSlot<'_> {
+    fn as_mut(&mut self) -> &mut dyn OclPlugin {
+        match self {
+            PluginSlot::Owned(p) => p.as_mut(),
+            PluginSlot::Borrowed(p) => &mut **p,
+        }
+    }
+
+    fn get(&self) -> &dyn OclPlugin {
+        match self {
+            PluginSlot::Owned(p) => p.as_ref(),
+            PluginSlot::Borrowed(p) => &**p,
+        }
+    }
+}
+
+/// Outcome of one [`Session::step`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionStep {
+    /// An event, completion, or plan transition was processed.
+    Progressed,
+    /// Blocked on something the caller controls or time provides: the
+    /// next scheduled arrival has no ingested batch yet (lockstep), or
+    /// all outstanding work is in flight / not yet due (freerun —
+    /// [`Session::drain`] blocks through these).
+    Starved,
+    /// Everything ingested so far is fully processed.
+    Idle,
+}
+
+/// Validated builder for a [`Session`] — see [`Session::builder`].
+pub struct SessionBuilder<'a> {
+    backend: &'a dyn Backend,
+    model: &'a ModelSpec,
+    cfg: Option<AsyncCfg>,
+    plugin: PluginSlot<'a>,
+    executor: ExecutorKind,
+    mode: Mode,
+    ep: EngineParams,
+    budget: Option<BudgetSchedule>,
+    batch: usize,
+    test: Option<TestSet>,
+}
+
+impl<'a> SessionBuilder<'a> {
+    /// Engine configuration (schedule family, partition, T1–T4 knobs,
+    /// compensation, budget schedule). Omitted: an unconstrained Ferret
+    /// plan for the model with Iter-Fisher compensation.
+    pub fn config(mut self, cfg: AsyncCfg) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// OCL plugin hooks (replay mixing, distillation, importance
+    /// regularization). Default: [`Vanilla`] (no forgetting mitigation).
+    pub fn plugin(mut self, plugin: &'a mut dyn OclPlugin) -> Self {
+        self.plugin = PluginSlot::Borrowed(plugin);
+        self
+    }
+
+    /// Owned variant of [`SessionBuilder::plugin`] for callers that do not
+    /// need the plugin back after the run.
+    pub fn owned_plugin(mut self, plugin: Box<dyn OclPlugin>) -> Self {
+        self.plugin = PluginSlot::Owned(plugin);
+        self
+    }
+
+    /// Where device work runs. Default: [`ExecutorKind::Sim`] (inline).
+    pub fn executor(mut self, kind: ExecutorKind) -> Self {
+        self.executor = kind;
+        self
+    }
+
+    /// Time source. Default: [`Mode::Lockstep`] (virtual, deterministic).
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Time-varying budget schedule; overrides the one in the config.
+    /// (For an *imperative* change mid-stream use [`Session::set_budget`].)
+    pub fn budget(mut self, schedule: BudgetSchedule) -> Self {
+        self.budget = Some(schedule);
+        self
+    }
+
+    /// Engine-independent run parameters (lr, seed, t^d, stash capacity).
+    pub fn engine_params(mut self, ep: EngineParams) -> Self {
+        self.ep = ep;
+        self
+    }
+
+    /// Microbatch rows per ingested batch. Required: the analytic profile
+    /// (stage times, default t^d) is resolved against it at build time.
+    pub fn batch(mut self, rows: usize) -> Self {
+        self.batch = rows;
+        self
+    }
+
+    /// Held-out evaluation set for the final test accuracy. Optional: a
+    /// hand-fed session without one reports `tacc = 0`, and
+    /// [`Session::run_stream`] takes the test set from its stream.
+    pub fn test_set(mut self, test: TestSet) -> Self {
+        self.test = Some(test);
+        self
+    }
+
+    /// Validate and assemble the session. Returns a typed error (never
+    /// panics) when the configuration cannot run: zero batch rows, a
+    /// partition that does not cover the model, worker knob vectors of the
+    /// wrong arity, zero accumulation counts, a zero plugin cadence, or a
+    /// malformed budget schedule.
+    pub fn build(self) -> Result<Session<'a>> {
+        let SessionBuilder { backend, model, cfg, plugin, executor, mode, ep, budget, batch, test } =
+            self;
+        if batch == 0 {
+            bail!("session: batch rows must be > 0 (set SessionBuilder::batch)");
+        }
+        // lr == 0 stays legal (frozen-weights ablations ran under the old
+        // entry point); only non-finite or negative rates are rejected
+        if !ep.lr.is_finite() || ep.lr < 0.0 {
+            bail!("session: learning rate must be finite and >= 0 (got {})", ep.lr);
+        }
+        let prof = Profile::analytic(model, batch);
+        let td = if ep.td == 0 { prof.default_td() } else { ep.td };
+        let decay = decay_for_td(td);
+        let mut cfg = match cfg {
+            Some(c) => c,
+            None => {
+                let out = plan(&prof, td, f64::INFINITY, decay);
+                AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher)
+            }
+        };
+        if let Some(b) = budget {
+            cfg.budget = b;
+        }
+        // validate() first: num_stages() is bounds.len() - 1 and would
+        // underflow on an empty hand-built partition
+        if !cfg.partition.validate(model.num_layers()) {
+            bail!(
+                "session: partition {:?} does not cover the model's {} layers",
+                cfg.partition.bounds,
+                model.num_layers()
+            );
+        }
+        let p = cfg.partition.num_stages();
+        if cfg.pipe.workers.is_empty() {
+            bail!("session: pipeline config has no workers");
+        }
+        if !cfg.pipe.workers.iter().any(|w| w.active()) {
+            bail!("session: pipeline config has no active worker (T4 removed them all)");
+        }
+        for (i, w) in cfg.pipe.workers.iter().enumerate() {
+            if w.accum.len() != p || w.omit.len() != p {
+                bail!(
+                    "session: worker {i} carries {} accum / {} omit entries for {p} stages",
+                    w.accum.len(),
+                    w.omit.len()
+                );
+            }
+            if w.accum.iter().any(|&a| a == 0) {
+                bail!("session: worker {i} has a zero accumulation count (T2 must be >= 1)");
+            }
+        }
+        if cfg.plugin_cadence == 0 {
+            bail!("session: plugin_cadence must be >= 1");
+        }
+        for step in &cfg.budget.steps {
+            if step.bytes.is_nan() || step.bytes < 0.0 {
+                bail!("session: budget step at {:?} has invalid byte count {}", step.at, step.bytes);
+            }
+        }
+        let features = model.features();
+        let classes = model.classes();
+        if let Some(t) = &test {
+            if t.n == 0 || t.x.len() != t.n * features || t.y.len() != t.n {
+                bail!(
+                    "session: test set shape mismatch ({} values / {} labels for {} samples x {} \
+                     features)",
+                    t.x.len(),
+                    t.y.len(),
+                    t.n,
+                    features
+                );
+            }
+        }
+
+        // lockstep virtual time never reaches wall-clock stamps: drop
+        // `u<N>` steps so they cannot block batch-index steps behind them
+        let budget_state = match mode {
+            Mode::Lockstep => BudgetState::without_wall_steps(&cfg.budget),
+            Mode::Freerun => BudgetState::new(&cfg.budget),
+        };
+        let mut engine = AsyncEngine::new(backend, model, cfg, &ep);
+        engine.stage_times(&prof);
+        engine.decay_c = match mode {
+            Mode::Lockstep => ep.decay(td),
+            // freerun ages updates in wall microseconds (1 tick replayed
+            // as WALL_TICK_US µs): rescale so the adaptation rate stays
+            // comparable with lockstep at any replay speed
+            Mode::Freerun => ep.decay(td) / crate::stream::WALL_TICK_US as f64,
+        };
+        if mode == Mode::Freerun {
+            engine.build_cells();
+        }
+        let executor: Box<dyn Executor + 'a> = match executor {
+            ExecutorKind::Sim => Box::new(SimExecutor::new(backend)),
+            ExecutorKind::Threaded => {
+                Box::new(ThreadedExecutor::spawn(backend.share(), &engine.devices()))
+            }
+        };
+        let metrics = RunMetrics { exec_threads: executor.threads(), ..Default::default() };
+        Ok(Session {
+            backend,
+            engine,
+            executor,
+            plugin,
+            metrics,
+            prof,
+            shapes: model.layers(),
+            classes,
+            features,
+            batch,
+            td,
+            td_us: arrival_interval_us(td),
+            decay,
+            mode,
+            ep,
+            vclock: VirtualClock::new(),
+            wclock: None,
+            budget: budget_state,
+            arrived: 0,
+            arrive_scheduled: false,
+            pending: VecDeque::new(),
+            held: VecDeque::new(),
+            drain_from: None,
+            test,
+        })
+    }
+}
+
+/// A long-lived engine run: push batches in, observe metrics live, change
+/// the budget imperatively, finish (or drop) whenever the caller decides.
+/// Construct with [`Session::builder`]; see the module docs for the
+/// surface and its guarantees.
+pub struct Session<'a> {
+    backend: &'a dyn Backend,
+    engine: AsyncEngine<'a>,
+    executor: Box<dyn Executor + 'a>,
+    plugin: PluginSlot<'a>,
+    metrics: RunMetrics,
+    /// analytic profile of the model at this session's batch size (base
+    /// for the measured rescale at each re-plan)
+    prof: Profile,
+    shapes: Vec<LayerShape>,
+    classes: usize,
+    features: usize,
+    batch: usize,
+    /// arrival interval in virtual ticks
+    td: u64,
+    /// arrival interval in wall microseconds (freerun pacing)
+    td_us: u64,
+    /// planner decay constant for mid-stream re-plans
+    decay: f64,
+    mode: Mode,
+    ep: EngineParams,
+    vclock: VirtualClock,
+    /// freerun wall clock, started lazily at the first timed operation so
+    /// setup (test-set generation, bulk ingest) is not charged as lateness
+    wclock: Option<WallClock>,
+    budget: BudgetState,
+    /// stream position: sequence number of the next arrival
+    arrived: u64,
+    /// lockstep: an `Arrive` event is in the heap for seq `arrived`
+    arrive_scheduled: bool,
+    /// ingested batches not yet admitted (FIFO = arrival order)
+    pending: VecDeque<Batch>,
+    /// batches held across a drain: (payload, seq, arrival stamp)
+    held: VecDeque<(Batch, u64, u64)>,
+    /// wall/virtual stamp when the current drain began (None = no drain)
+    drain_from: Option<u64>,
+    test: Option<TestSet>,
+}
+
+/// Assemble the per-step [`EngineIo`] bundle from the session's disjoint
+/// fields (a macro so the field borrows stay visible to the borrow
+/// checker at every call site).
+macro_rules! io {
+    ($s:expr) => {
+        &mut EngineIo {
+            plugin: $s.plugin.as_mut(),
+            ctx: OclCtx {
+                backend: $s.backend,
+                shapes: &$s.shapes,
+                classes: $s.classes,
+                batch: $s.batch,
+                features: $s.features,
+            },
+            metrics: &mut $s.metrics,
+            executor: &mut *$s.executor,
+        }
+    };
+}
+
+impl<'a> Session<'a> {
+    /// Start building a session for `model` on `backend`.
+    pub fn builder(backend: &'a dyn Backend, model: &'a ModelSpec) -> SessionBuilder<'a> {
+        SessionBuilder {
+            backend,
+            model,
+            cfg: None,
+            plugin: PluginSlot::Owned(Box::new(Vanilla)),
+            executor: ExecutorKind::Sim,
+            mode: Mode::Lockstep,
+            ep: EngineParams::default(),
+            budget: None,
+            batch: 0,
+            test: None,
+        }
+    }
+
+    /// Push one batch into the session. Non-blocking: the batch is queued
+    /// and admitted at its scheduled arrival slot (`seq * t^d` in virtual
+    /// ticks, or its due microsecond on the freerun wall clock) by the
+    /// next [`Session::step`]/[`Session::drain`]/[`Session::finish`].
+    ///
+    /// A misshapen batch is rejected with a typed error (and not queued)
+    /// instead of panicking later inside backend math: `x` must hold
+    /// exactly `y.len()` rows of the model's feature dimension, with at
+    /// least one and at most the builder's row count.
+    pub fn ingest(&mut self, batch: Batch) -> Result<()> {
+        if batch.y.is_empty() || batch.y.len() > self.batch {
+            bail!(
+                "session: batch {} carries {} rows (expected 1..={})",
+                batch.id,
+                batch.y.len(),
+                self.batch
+            );
+        }
+        if batch.x.len() != batch.y.len() * self.features {
+            bail!(
+                "session: batch {} has {} values for {} rows x {} features",
+                batch.id,
+                batch.x.len(),
+                batch.y.len(),
+                self.features
+            );
+        }
+        self.pending.push_back(batch);
+        if self.mode == Mode::Lockstep && !self.arrive_scheduled && self.drain_from.is_none() {
+            // first batch of a phase: schedule its arrival. (Mid-phase the
+            // previous arrival already scheduled this one speculatively,
+            // and during a drain the post-transition resume schedules it.)
+            self.engine.sched.events.push(self.arrived * self.td, Ev::Arrive);
+            self.arrive_scheduled = true;
+        }
+        Ok(())
+    }
+
+    /// Advance the session by (at most) one scheduler event — one heap pop
+    /// in lockstep; one admit/completion/transition sweep in freerun.
+    /// Never blocks; [`SessionStep::Starved`] says what a blocking caller
+    /// ([`Session::drain`] / [`Session::finish`]) would wait on.
+    pub fn step(&mut self) -> SessionStep {
+        match self.mode {
+            Mode::Lockstep => self.step_lockstep(false),
+            Mode::Freerun => self.step_freerun(false),
+        }
+    }
+
+    /// Run the session as far as it can go with what has been ingested:
+    /// until [`SessionStep::Idle`] (all work done) or
+    /// [`SessionStep::Starved`] on missing input. In freerun mode this
+    /// blocks on in-flight device work and not-yet-due arrivals; in
+    /// lockstep it never blocks on time (virtual time jumps).
+    pub fn drain(&mut self) {
+        match self.mode {
+            Mode::Lockstep => while self.step_lockstep(false) == SessionStep::Progressed {},
+            Mode::Freerun => self.drain_freerun(false),
+        }
+    }
+
+    /// Live metrics snapshot: online accuracy so far, losses, latency
+    /// samples, staleness histogram, ledger peaks/trace, re-plan history.
+    /// `mem_bytes` and `tacc` are finalized by [`Session::finish`].
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    /// Batches ingested but not yet admitted to the pipeline.
+    pub fn backlog(&self) -> usize {
+        self.pending.len() + self.held.len()
+    }
+
+    /// Imperatively change the memory budget: arms the drain → re-plan →
+    /// transition protocol exactly as a `--budget-schedule` step would
+    /// (in-flight microbatches finish under the old plan, learned weights
+    /// carry over, the stash and device threads are rebuilt for the new
+    /// plan). Also switches the session to dynamic-budget accounting
+    /// (per-update ledger trace, breach triggers) if it was static.
+    ///
+    /// Like a schedule step, the transition itself fires only if there is
+    /// traffic ahead to re-plan for: a budget change after the final batch
+    /// is discarded at [`Session::finish`] with `replans` unchanged (there
+    /// is no new plan to run anything under). A NaN or negative byte count
+    /// is rejected with a typed error (same rule the builder applies to
+    /// schedule steps) and leaves the session untouched.
+    pub fn set_budget(&mut self, bytes: f64) -> Result<()> {
+        if bytes.is_nan() || bytes < 0.0 {
+            bail!("session: set_budget expects a non-negative byte count (got {bytes})");
+        }
+        self.engine.force_dynamic_budget();
+        self.budget.set_current(bytes);
+        if self.drain_from.is_none() {
+            // read the clock without starting it: a pre-traffic budget
+            // change must not charge setup time as arrival lateness — the
+            // drain then nominally begins at t = 0, the start of the run
+            let now = match self.mode {
+                Mode::Lockstep => self.vclock.now(),
+                Mode::Freerun => self.wclock.as_ref().map_or(0, |c| c.now()),
+            };
+            self.drain_from = Some(now);
+        }
+        Ok(())
+    }
+
+    /// Complete every outstanding arrival and device task, finalize the
+    /// metrics (analytic memory, final ledger state, test accuracy if a
+    /// test set was provided), join the device threads, and return the
+    /// result. Ingested batches are all processed first — `finish` only
+    /// declares that no *further* batches will arrive.
+    pub fn finish(mut self) -> RunResult {
+        match self.mode {
+            Mode::Lockstep => loop {
+                match self.step_lockstep(true) {
+                    SessionStep::Progressed => {}
+                    SessionStep::Starved | SessionStep::Idle => break,
+                }
+            },
+            Mode::Freerun => self.drain_freerun(true),
+        }
+        self.metrics.ledger.observe(self.engine.ledger_snapshot());
+        debug_assert_eq!(self.engine.sched.inflight, 0, "every admitted job retired");
+
+        // analytic memory (Eq. 4) + plugin + compensator state
+        self.metrics.mem_bytes =
+            mem_footprint(&self.engine.cfg.partition, &self.prof, &self.engine.cfg.pipe)
+                + self.plugin.get().memory_bytes() as f64
+                + self.engine.comp_state_bytes() as f64;
+        let params = self.engine.final_params();
+        if let Some(test) = &self.test {
+            self.metrics.tacc =
+                eval_tacc(self.backend, &self.shapes, &params, self.classes, test, self.batch);
+        }
+        // moving the metrics out drops the executor, which joins every
+        // device thread — nothing survives the session
+        let Session { metrics, .. } = self;
+        RunResult { metrics, params }
+    }
+
+    /// Ingest an entire [`Stream`] and run to completion — the bridge from
+    /// the closed-world API (and what the [`run_async`]/[`run_async_with`]
+    /// shims call). Takes the test set from the stream unless the builder
+    /// provided one. Batches are generated one arrival ahead in both
+    /// modes, exactly like the historical pull loops — the stream is never
+    /// materialized in memory, so arbitrarily long streams run in O(1)
+    /// batch buffering.
+    pub fn run_stream(mut self, stream: &mut dyn Stream) -> RunResult {
+        if self.test.is_none() {
+            self.test = Some(stream.test_set(self.ep.tacc_per_class));
+        }
+        match self.mode {
+            Mode::Lockstep => {
+                while let Some(b) = stream.next_batch() {
+                    self.ingest(b).expect("stream batch matches the session's model");
+                    self.drain();
+                }
+            }
+            Mode::Freerun => {
+                while let Some(b) = stream.next_batch() {
+                    self.ingest(b).expect("stream batch matches the session's model");
+                    // admit (or hold) the queued batch before generating
+                    // the next one: at most a single-batch lookahead is
+                    // ever buffered, and completions are serviced while
+                    // waiting for its wall-clock due time
+                    while !self.pending.is_empty() {
+                        if self.step_freerun(false) != SessionStep::Progressed {
+                            self.wait_freerun();
+                        }
+                    }
+                }
+            }
+        }
+        self.finish()
+    }
+
+    // -----------------------------------------------------------------
+    // Lockstep stepping
+    // -----------------------------------------------------------------
+
+    fn step_lockstep(&mut self, finishing: bool) -> SessionStep {
+        let Some((_, head)) = self.engine.sched.events.peek() else {
+            return self.lockstep_phase_end(finishing);
+        };
+        if matches!(head, Ev::Arrive) && self.pending.is_empty() {
+            if !finishing {
+                // popping would commit a tie-break order the pull loop
+                // never sees — stall with the heap untouched
+                return SessionStep::Starved;
+            }
+            // stream over: the speculatively scheduled arrival never
+            // happened (the pull loop would not have scheduled it at all)
+            let _ = self.engine.sched.events.pop();
+            self.arrive_scheduled = false;
+            return SessionStep::Progressed;
+        }
+        let (te, ev) = self.engine.sched.events.pop().expect("peeked event");
+        self.vclock.advance(te);
+        let t = self.vclock.now();
+        match ev {
+            Ev::Arrive => self.lockstep_arrive(te, t),
+            Ev::Done { worker: w, stage: s, job, bwd } => {
+                self.engine.on_done_lockstep(w, s, job, bwd, t, io!(self));
+                if self.engine.dynamic_budget() {
+                    let snap = self.engine.ledger_snapshot();
+                    self.metrics.ledger.observe(snap);
+                    if self.drain_from.is_none() && self.budget.breached(snap.total()) {
+                        self.drain_from = Some(t);
+                    }
+                }
+            }
+        }
+        SessionStep::Progressed
+    }
+
+    /// Process one lockstep arrival: its event popped at stream stamp
+    /// `te`, the clock now at `t` (later than `te` right after a drain).
+    fn lockstep_arrive(&mut self, te: u64, t: u64) {
+        let batch = self.pending.pop_front().expect("arrival without batch");
+        self.metrics.record_arrival();
+        let seq = self.arrived;
+        self.arrived += 1;
+        self.arrive_scheduled = false;
+        // advance the budget cursor even mid-drain so the pending re-plan
+        // sees the newest budget in force
+        let stepped = self.budget.step_due(seq, 0);
+        if self.drain_from.is_some() || stepped {
+            // budget boundary (or mid-drain arrival): hold the batch, stop
+            // admitting, and let the in-flight microbatches finish under
+            // the old plan — nothing is dropped by the transition
+            if self.drain_from.is_none() {
+                self.drain_from = Some(t);
+            }
+            self.held.push_back((batch, seq, te));
+            return;
+        }
+        // schedule the next arrival *before* admitting (admission pushes
+        // `Done` events; the pull loop orders its pushes the same way) —
+        // speculative: finish() discards it if no further batch arrives
+        self.engine.sched.events.push(self.arrived * self.td, Ev::Arrive);
+        self.arrive_scheduled = true;
+        self.engine.admit_lockstep(batch, seq, te, t, io!(self));
+    }
+
+    /// The phase's event heap is empty: idle, or a completed drain whose
+    /// plan transition takes effect now.
+    fn lockstep_phase_end(&mut self, finishing: bool) -> SessionStep {
+        let Some(t0) = self.drain_from else { return SessionStep::Idle };
+        if self.held.is_empty() && self.pending.is_empty() {
+            if finishing {
+                // the breach/step landed after the last arrival: nothing
+                // ahead to re-plan for (the pull loop's final break)
+                self.drain_from = None;
+                return SessionStep::Idle;
+            }
+            return SessionStep::Starved;
+        }
+        let now = self.vclock.now();
+        // flush partially-filled accumulators as final updates under the
+        // old plan — the drained backwards' gradients are applied, not
+        // discarded, even when `accum > 1` left a remainder
+        for (w, s) in self.engine.pending_accumulators() {
+            self.engine.apply_update(w, s, now, io!(self));
+        }
+        self.replan(t0, now);
+        if let Some((batch, seq, at)) = self.held.pop_front() {
+            self.engine.admit_lockstep(batch, seq, at, now, io!(self));
+        }
+        // lockstep can hold at most one batch per drain: holding suppresses
+        // every further Arrive until the post-transition resume below
+        debug_assert!(self.held.is_empty(), "second lockstep batch held across a drain");
+        // arrivals keep their original absolute cadence: the stream did
+        // not wait for the transition
+        self.engine.sched.events.push(self.arrived * self.td, Ev::Arrive);
+        self.arrive_scheduled = true;
+        SessionStep::Progressed
+    }
+
+    /// Drain complete: re-plan at the budget in force — planner seeded by
+    /// the measured-profile refresh — and execute the plan transition.
+    /// One definition for both time modes, so the re-plan protocol cannot
+    /// silently diverge between them. `t0` is when the drain began; `now`
+    /// stamps the transition.
+    fn replan(&mut self, t0: u64, now: u64) {
+        let refreshed = self.engine.refreshed_profile(&self.prof);
+        let out = plan(&refreshed, self.td, self.budget.current(), self.decay);
+        self.engine.transition(&out, &refreshed, &mut *self.executor);
+        self.metrics.record_replan(now, now.saturating_sub(t0), out.mem_bytes);
+        self.metrics.exec_threads = self.metrics.exec_threads.max(self.executor.threads());
+        self.drain_from = None;
+    }
+
+    // -----------------------------------------------------------------
+    // Freerun stepping
+    // -----------------------------------------------------------------
+
+    /// The freerun wall clock, started on first use.
+    fn wall_now(&mut self) -> u64 {
+        if self.wclock.is_none() {
+            self.wclock = Some(WallClock::new());
+        }
+        self.wclock.as_ref().expect("wall clock").now()
+    }
+
+    /// One non-blocking freerun sweep: admit every due arrival, collect
+    /// every finished completion, meter the budget, and execute a plan
+    /// transition if a drain just completed.
+    fn step_freerun(&mut self, finishing: bool) -> SessionStep {
+        let mut progressed = false;
+        // admit every ingested arrival already due on the wall clock
+        while !self.pending.is_empty() && self.wall_now() >= self.arrived * self.td_us {
+            let batch = self.pending.pop_front().expect("due arrival");
+            let due = self.arrived * self.td_us;
+            let seq = self.arrived;
+            self.arrived += 1;
+            self.metrics.record_arrival();
+            // advance the budget cursor even mid-drain so the pending
+            // re-plan sees the newest budget in force
+            let now = self.wall_now();
+            let stepped = self.budget.step_due(seq, now);
+            if self.drain_from.is_some() || stepped {
+                if self.drain_from.is_none() {
+                    self.drain_from = Some(now);
+                }
+                self.held.push_back((batch, seq, due));
+            } else {
+                let t = self.wall_now();
+                self.engine.on_arrive_free(batch, seq, due, t, io!(self));
+            }
+            progressed = true;
+        }
+        // react to whichever device finished first
+        while let Some(((w, s), out)) = self.executor.try_finish_any() {
+            let t = self.wall_now();
+            self.engine.on_done_free(w, s, out, t, io!(self));
+            progressed = true;
+        }
+        if self.engine.dynamic_budget() {
+            // wall-time (`u<N>`) steps must fire between arrivals too;
+            // `arrived` = next seq, so a batch step fires here at the same
+            // boundary the admit-site check would give it
+            let now = self.wall_now();
+            if self.budget.step_due(self.arrived, now) && self.drain_from.is_none() {
+                self.drain_from = Some(now);
+            }
+            let snap = self.engine.ledger_snapshot();
+            self.metrics.ledger.observe(snap);
+            if self.drain_from.is_none() && self.budget.breached(snap.total()) {
+                self.drain_from = Some(self.wall_now());
+            }
+        }
+        // plan transition once the drain completes (no task in flight)
+        if self.engine.flights == 0 && self.drain_from.is_some() {
+            if self.held.is_empty() && self.pending.is_empty() {
+                if finishing {
+                    self.drain_from = None; // nothing ahead to re-plan for
+                }
+                // not finishing: the drain stays armed — the next ingest
+                // re-plans before its batch is admitted
+            } else {
+                // flush partially-filled accumulators as final updates
+                // under the old plan (they fly as Update tasks; the next
+                // fully-drained sweep performs the transition)
+                let pending_accs = self.engine.pending_accumulators();
+                if !pending_accs.is_empty() {
+                    let t = self.wall_now();
+                    for (w, s) in pending_accs {
+                        self.engine.dispatch_update_free(w, s, t, io!(self));
+                    }
+                    return SessionStep::Progressed;
+                }
+                let t0 = self.drain_from.take().expect("drain pending");
+                let now = self.wall_now();
+                self.replan(t0, now);
+                let resumed: Vec<(Batch, u64, u64)> = self.held.drain(..).collect();
+                for (batch, seq, due) in resumed {
+                    let t = self.wall_now();
+                    self.engine.on_arrive_free(batch, seq, due, t, io!(self));
+                }
+                return SessionStep::Progressed;
+            }
+        }
+        if progressed {
+            SessionStep::Progressed
+        } else if self.engine.flights == 0 && self.pending.is_empty() && self.held.is_empty() {
+            // a pending drain with nothing ahead also parks here: it will
+            // fire when the next batch is ingested (or clear at finish)
+            SessionStep::Idle
+        } else {
+            SessionStep::Starved
+        }
+    }
+
+    /// Block once on whatever the freerun loop is waiting for: the
+    /// completion channel (waking for the next scheduled arrival) when
+    /// work is in flight, or the next arrival's due time otherwise.
+    fn wait_freerun(&mut self) {
+        if self.engine.flights > 0 {
+            // sleep on the completion channel, but wake for the next
+            // scheduled arrival
+            let timeout = if !self.pending.is_empty() {
+                let due = self.arrived * self.td_us;
+                Duration::from_micros(due.saturating_sub(self.wall_now()).max(1))
+            } else {
+                Duration::from_millis(100)
+            };
+            if let Some(((w, s), out)) = self.executor.wait_any(timeout) {
+                let t = self.wall_now();
+                self.engine.on_done_free(w, s, out, t, io!(self));
+            }
+        } else if !self.pending.is_empty() {
+            let due = self.arrived * self.td_us;
+            self.wall_now(); // ensure the clock exists
+            if let Some(c) = self.wclock.as_ref() {
+                c.sleep_until(due);
+            }
+        }
+    }
+
+    /// Blocking freerun loop: sweep, then sleep on the completion channel
+    /// (waking for the next scheduled arrival) until everything ingested
+    /// is fully processed.
+    fn drain_freerun(&mut self, finishing: bool) {
+        loop {
+            match self.step_freerun(finishing) {
+                SessionStep::Progressed => continue,
+                SessionStep::Idle => break,
+                SessionStep::Starved => {
+                    if self.engine.flights == 0 && self.pending.is_empty() {
+                        break; // defensive: nothing to wait on
+                    }
+                    self.wait_freerun();
+                }
+            }
+        }
+    }
+}
+
+/// Build + run with an explicit executor and time-mode choice — the
+/// historical one-call surface, kept as a thin shim over [`Session`] so
+/// the pre-session test suites (`executor_equiv`, `budget_replan`,
+/// `freerun`, `sched_props`) pin that the session redesign is
+/// behavior-preserving. `Threaded` runs one session-owned OS thread per
+/// active (worker, stage) device; `Mode::Freerun` paces the run against
+/// the wall clock instead of the virtual event heap.
+#[allow(clippy::too_many_arguments)] // historical signature, deliberately frozen
+pub fn run_async_with(
+    cfg: AsyncCfg,
+    stream: &mut SyntheticStream,
+    backend: &dyn Backend,
+    plugin: &mut dyn OclPlugin,
+    ep: &EngineParams,
+    model: &ModelSpec,
+    kind: ExecutorKind,
+    mode: Mode,
+) -> RunResult {
+    let batch = stream.spec().batch;
+    let session = Session::builder(backend, model)
+        .config(cfg)
+        .plugin(plugin)
+        .engine_params(*ep)
+        .executor(kind)
+        .mode(mode)
+        .batch(batch)
+        .build()
+        .expect("run_async_with: invalid engine configuration");
+    session.run_stream(stream)
+}
+
+/// Convenience: build + run in one call on the simulation executor in
+/// lockstep (virtual-time) mode.
+pub fn run_async(
+    cfg: AsyncCfg,
+    stream: &mut SyntheticStream,
+    backend: &dyn Backend,
+    plugin: &mut dyn OclPlugin,
+    ep: &EngineParams,
+    model: &ModelSpec,
+) -> RunResult {
+    run_async_with(cfg, stream, backend, plugin, ep, model, ExecutorKind::Sim, Mode::Lockstep)
+}

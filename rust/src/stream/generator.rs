@@ -196,6 +196,24 @@ impl SyntheticStream {
     }
 }
 
+impl crate::stream::Stream for SyntheticStream {
+    fn next_batch(&mut self) -> Option<Batch> {
+        SyntheticStream::next_batch(self)
+    }
+
+    fn test_set(&self, per_class: usize) -> TestSet {
+        SyntheticStream::test_set(self, per_class)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        let cut = match self.stop {
+            Some(s) => s.saturating_sub(self.pos) as usize,
+            None => usize::MAX,
+        };
+        Some(self.remaining().min(cut))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -18,3 +18,29 @@ pub mod settings;
 
 pub use generator::{Batch, DriftKind, StreamSpec, SyntheticStream, TestSet};
 pub use settings::{arrival_interval_us, batch_arrival_us, paper_settings, Setting, WALL_TICK_US};
+
+/// Abstract microbatch source for the engines.
+///
+/// The engine layer consumes batches in arrival order and never looks at
+/// how they are produced: [`SyntheticStream`] is the built-in seeded
+/// generator, and a [`Session`](crate::pipeline::session::Session) caller
+/// can skip `Stream` entirely and push hand-made batches with
+/// [`Session::ingest`](crate::pipeline::session::Session::ingest).
+/// [`Session::run_stream`](crate::pipeline::session::Session::run_stream)
+/// bridges the two: it ingests any `Stream` and drives the session to
+/// completion. Feature dimension and class count must match the model the
+/// session was built for.
+pub trait Stream {
+    /// Next microbatch in arrival order, or `None` once exhausted.
+    fn next_batch(&mut self) -> Option<Batch>;
+
+    /// Held-out evaluation set (`per_class` samples per class) used for
+    /// the final test-accuracy measurement.
+    fn test_set(&self, per_class: usize) -> TestSet;
+
+    /// Batches remaining, when known. A capacity hint only — callers must
+    /// not rely on it for termination.
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}

@@ -1,0 +1,430 @@
+//! Session API: the push-based surface must be a *behavior-preserving*
+//! re-packaging of the historical run-to-completion entry point.
+//!
+//!   - lockstep `ingest`/`step`/`finish` (any drive style) reproduces
+//!     `run_async_with`'s `RunMetrics` exactly, on both executors, with
+//!     and without a dynamic budget schedule;
+//!   - `set_budget` mid-stream triggers the drain → re-plan → transition
+//!     protocol imperatively;
+//!   - dropping a session without `finish` joins its device threads;
+//!   - the builder rejects broken configurations with typed errors
+//!     instead of engine panics.
+
+use ferret::backend::native::NativeBackend;
+use ferret::budget::BudgetSchedule;
+use ferret::compensate::CompKind;
+use ferret::config::ModelSpec;
+use ferret::ocl::{OclKind, Vanilla};
+use ferret::pipeline::engine::{run_async_with, AsyncCfg};
+use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
+use ferret::pipeline::{EngineParams, RunResult, Session, SessionStep};
+use ferret::planner::{plan, Partition, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+
+fn model() -> ModelSpec {
+    ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
+}
+
+fn stream(n: usize, seed: u64) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "session".into(),
+        features: 16,
+        classes: 4,
+        batch: 8,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 3.0,
+        noise: 0.5,
+        seed,
+    })
+}
+
+/// A planned Ferret config at half the unconstrained footprint —
+/// exercises stashing, compensation, and multi-stage scheduling.
+fn planned_cfg(m: &ModelSpec) -> AsyncCfg {
+    let prof = Profile::analytic(m, 8);
+    let td = prof.default_td();
+    let unconstrained = plan(&prof, td, f64::INFINITY, 1e-4);
+    let out = plan(&prof, td, unconstrained.mem_bytes * 0.5, 1e-4);
+    AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher)
+}
+
+/// Every metric the harness consumes, plus final weights, plus the
+/// dynamic-budget observables — bit-identical.
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.metrics.oacc.value(), b.metrics.oacc.value(), "{what}: oacc");
+    assert_eq!(a.metrics.oacc.curve, b.metrics.oacc.curve, "{what}: oacc curve");
+    assert_eq!(a.metrics.losses, b.metrics.losses, "{what}: loss curve");
+    assert_eq!(a.metrics.trained, b.metrics.trained, "{what}: trained");
+    assert_eq!(a.metrics.dropped, b.metrics.dropped, "{what}: dropped");
+    assert_eq!(a.metrics.arrivals(), b.metrics.arrivals(), "{what}: arrivals");
+    assert_eq!(a.metrics.mem_bytes, b.metrics.mem_bytes, "{what}: mem");
+    assert_eq!(a.metrics.peak_live_bytes, b.metrics.peak_live_bytes, "{what}: live bytes");
+    assert_eq!(a.metrics.latencies, b.metrics.latencies, "{what}: latencies");
+    assert_eq!(a.metrics.staleness_hist, b.metrics.staleness_hist, "{what}: staleness");
+    assert_eq!(a.metrics.tacc, b.metrics.tacc, "{what}: tacc");
+    assert_eq!(a.metrics.adaptation_rate(), b.metrics.adaptation_rate(), "{what}: adaptation");
+    assert_eq!(a.metrics.replans, b.metrics.replans, "{what}: replans");
+    assert_eq!(a.metrics.drains, b.metrics.drains, "{what}: drains");
+    assert_eq!(a.metrics.plan_trace, b.metrics.plan_trace, "{what}: plan trace");
+    assert_eq!(a.metrics.ledger.trace, b.metrics.ledger.trace, "{what}: ledger trace");
+    assert_eq!(a.metrics.ledger.peak_total, b.metrics.ledger.peak_total, "{what}: ledger peak");
+    assert_eq!(a.metrics.ledger.last, b.metrics.ledger.last, "{what}: ledger end");
+    assert_eq!(a.params.len(), b.params.len(), "{what}: layer count");
+    for (i, (pa, pb)) in a.params.iter().zip(&b.params).enumerate() {
+        assert_eq!(pa.w, pb.w, "{what}: layer {i} weights");
+        assert_eq!(pa.b, pb.b, "{what}: layer {i} bias");
+    }
+}
+
+/// How a test drives the push-based session.
+#[derive(Clone, Copy)]
+enum Drive {
+    /// ingest one batch, step until starved, repeat — the live shape
+    StepPerBatch,
+    /// ingest the whole stream up front, then finish — the batch shape
+    IngestAll,
+}
+
+fn run_session(
+    cfg: AsyncCfg,
+    budget: Option<BudgetSchedule>,
+    n: usize,
+    kind: ExecutorKind,
+    drive: Drive,
+) -> RunResult {
+    let m = model();
+    let mut src = stream(n, 31);
+    let mut plugin = Vanilla;
+    let ep = EngineParams { lr: 0.2, ..Default::default() };
+    let mut builder = Session::builder(&NativeBackend, &m)
+        .config(cfg)
+        .plugin(&mut plugin)
+        .engine_params(ep)
+        .executor(kind)
+        .mode(Mode::Lockstep)
+        .batch(8)
+        .test_set(src.test_set(ep.tacc_per_class));
+    if let Some(b) = budget {
+        builder = builder.budget(b);
+    }
+    let mut session = builder.build().expect("valid config");
+    match drive {
+        Drive::StepPerBatch => {
+            while let Some(b) = src.next_batch() {
+                session.ingest(b).expect("well-formed batch");
+                while session.step() == SessionStep::Progressed {}
+            }
+        }
+        Drive::IngestAll => {
+            while let Some(b) = src.next_batch() {
+                session.ingest(b).expect("well-formed batch");
+            }
+        }
+    }
+    session.finish()
+}
+
+#[test]
+fn lockstep_session_is_metric_identical_to_run_async_with() {
+    let m = model();
+    let n = 80;
+    for kind in [ExecutorKind::Sim, ExecutorKind::Threaded] {
+        let ep = EngineParams { lr: 0.2, ..Default::default() };
+        let legacy = run_async_with(
+            planned_cfg(&m),
+            &mut stream(n, 31),
+            &NativeBackend,
+            &mut Vanilla,
+            &ep,
+            &m,
+            kind,
+            Mode::Lockstep,
+        );
+        assert!(legacy.metrics.trained > 0);
+        for drive in [Drive::StepPerBatch, Drive::IngestAll] {
+            let r = run_session(planned_cfg(&m), None, n, kind, drive);
+            assert_runs_identical(&legacy, &r, "planned ferret");
+        }
+    }
+}
+
+/// Same equivalence through a mid-stream budget halving: the session's
+/// drain → re-plan → transition (including `Executor::reconfigure` of the
+/// owned device threads) replays the pull loop exactly.
+#[test]
+fn session_replans_identically_under_a_budget_schedule() {
+    let m = model();
+    let n = 120;
+    let prof = Profile::analytic(&m, 8);
+    let td = prof.default_td();
+    let hi = plan(&prof, td, f64::INFINITY, 1e-4);
+    let sched = BudgetSchedule::step_at_batch(60, hi.mem_bytes * 0.5);
+    let mk = || AsyncCfg::ferret(hi.partition.clone(), hi.config.clone(), CompKind::IterFisher);
+    for kind in [ExecutorKind::Sim, ExecutorKind::Threaded] {
+        let ep = EngineParams { lr: 0.2, ..Default::default() };
+        let legacy = run_async_with(
+            mk().with_budget(sched.clone()),
+            &mut stream(n, 31),
+            &NativeBackend,
+            &mut Vanilla,
+            &ep,
+            &m,
+            kind,
+            Mode::Lockstep,
+        );
+        assert!(legacy.metrics.replans >= 1, "schedule step must fire");
+        for drive in [Drive::StepPerBatch, Drive::IngestAll] {
+            let r = run_session(mk(), Some(sched.clone()), n, kind, drive);
+            assert_runs_identical(&legacy, &r, "budget halving");
+        }
+    }
+}
+
+/// Plugin-stateful equivalence (ER replays from a seeded buffer) — the
+/// session must thread the plugin hooks through identically.
+#[test]
+fn session_matches_legacy_with_a_stateful_plugin() {
+    let m = model();
+    let n = 60;
+    let ep = EngineParams { lr: 0.2, ..Default::default() };
+    let mut legacy_plugin = OclKind::Er.build(23);
+    let legacy = run_async_with(
+        planned_cfg(&m),
+        &mut stream(n, 9),
+        &NativeBackend,
+        legacy_plugin.as_mut(),
+        &ep,
+        &m,
+        ExecutorKind::Sim,
+        Mode::Lockstep,
+    );
+    let mut src = stream(n, 9);
+    let mut plugin = OclKind::Er.build(23);
+    let mut session = Session::builder(&NativeBackend, &m)
+        .config(planned_cfg(&m))
+        .plugin(plugin.as_mut())
+        .engine_params(ep)
+        .batch(8)
+        .test_set(src.test_set(ep.tacc_per_class))
+        .build()
+        .expect("valid config");
+    while let Some(b) = src.next_batch() {
+        session.ingest(b).expect("well-formed batch");
+        session.drain();
+    }
+    let r = session.finish();
+    assert_runs_identical(&legacy, &r, "ER plugin");
+}
+
+/// Imperative `set_budget` mid-stream: same drain/re-plan/transition
+/// protocol as a schedule step, triggered by a method call.
+#[test]
+fn set_budget_mid_stream_drains_and_replans() {
+    let m = model();
+    let n = 160usize;
+    let prof = Profile::analytic(&m, 8);
+    let td = prof.default_td();
+    let hi = plan(&prof, td, f64::INFINITY, 1e-4);
+    assert!(hi.partition.num_stages() >= 2);
+    let budget = hi.mem_bytes * 0.5;
+    let cfg = AsyncCfg::ferret(hi.partition.clone(), hi.config.clone(), CompKind::NoComp);
+    let mut src = stream(n, 31);
+    let mut plugin = Vanilla;
+    let ep = EngineParams { lr: 0.2, ..Default::default() };
+    let mut session = Session::builder(&NativeBackend, &m)
+        .config(cfg)
+        .plugin(&mut plugin)
+        .engine_params(ep)
+        .batch(8)
+        .test_set(src.test_set(ep.tacc_per_class))
+        .build()
+        .expect("valid config");
+    for i in 0..n {
+        if i == n / 2 {
+            // invalid budgets are rejected with a typed error, no state change
+            assert!(session.set_budget(f64::NAN).is_err());
+            assert!(session.set_budget(-1.0).is_err());
+            session.set_budget(budget).expect("valid budget");
+            // the drain arms now; live metrics stay readable throughout
+            assert_eq!(session.metrics().replans, 0, "transition waits for the drain");
+        }
+        session.ingest(src.next_batch().expect("stream batch")).expect("well-formed batch");
+        session.drain();
+    }
+    let mid_trained = session.metrics().trained;
+    assert!(mid_trained > 0, "live metrics observable before finish");
+    let r = session.finish();
+    // zero batches lost across the imperative transition
+    assert_eq!(r.metrics.arrivals(), n as u64);
+    assert_eq!(r.metrics.oacc.count() as u64, n as u64, "one prediction per arrival");
+    assert!(r.metrics.replans >= 1, "set_budget must re-plan");
+    assert_eq!(r.metrics.drains.len() as u64, r.metrics.replans);
+    // switching to dynamic accounting turns the ledger trace on
+    assert!(!r.metrics.ledger.trace.is_empty(), "per-update ledger trace recorded");
+    let final_bytes = r.metrics.ledger.last.total() as f64;
+    assert!(
+        final_bytes <= budget,
+        "final ledger {final_bytes} B > imperative budget {budget} B ({:?})",
+        r.metrics.ledger.last
+    );
+}
+
+/// A session dropped without `finish` must join its device threads (the
+/// executor owns them; drop closes the task channels and joins). A hang
+/// here fails the suite by timeout; repeated drops also catch leaks that
+/// would deadlock a later spawn.
+#[test]
+fn dropping_a_threaded_session_joins_device_threads() {
+    let m = model();
+    for round in 0..3u64 {
+        let mut src = stream(40, round + 1);
+        let mut plugin = Vanilla;
+        let ep = EngineParams { lr: 0.2, ..Default::default() };
+        let mut session = Session::builder(&NativeBackend, &m)
+            .config(planned_cfg(&m))
+            .plugin(&mut plugin)
+            .engine_params(ep)
+            .executor(ExecutorKind::Threaded)
+            .batch(8)
+            .build()
+            .expect("valid config");
+        // leave work genuinely in flight: ingest several batches and stop
+        // stepping midway through the pipeline
+        for _ in 0..10 {
+            session.ingest(src.next_batch().expect("batch")).expect("well-formed batch");
+        }
+        for _ in 0..7 {
+            let _ = session.step();
+        }
+        assert!(session.metrics().arrivals() > 0, "mid-flight state reached");
+        drop(session); // must return promptly, device threads joined
+    }
+}
+
+fn err(b: ferret::util::error::Result<Session<'_>>, needle: &str) {
+    let e = b.err().expect("expected a config error").to_string();
+    assert!(e.contains(needle), "error `{e}` should mention `{needle}`");
+}
+
+#[test]
+fn builder_rejects_broken_configs_with_typed_errors() {
+    let m = model();
+    // batch rows are mandatory
+    err(Session::builder(&NativeBackend, &m).build(), "batch");
+    // negative learning rate (lr == 0 stays legal: frozen-weights runs)
+    err(
+        Session::builder(&NativeBackend, &m)
+            .batch(8)
+            .engine_params(EngineParams { lr: -0.5, ..Default::default() })
+            .build(),
+        "learning rate",
+    );
+    // partition that does not cover the model
+    let mut cfg = planned_cfg(&m);
+    cfg.partition = Partition::per_layer(2);
+    err(Session::builder(&NativeBackend, &m).batch(8).config(cfg).build(), "partition");
+    // empty hand-built partition: typed error, not a debug-build underflow
+    let mut cfg = planned_cfg(&m);
+    cfg.partition = Partition { bounds: vec![] };
+    err(Session::builder(&NativeBackend, &m).batch(8).config(cfg).build(), "partition");
+    // no workers at all
+    let mut cfg = planned_cfg(&m);
+    cfg.pipe.workers.clear();
+    err(Session::builder(&NativeBackend, &m).batch(8).config(cfg).build(), "workers");
+    // zero accumulation count (would divide by zero in the engine)
+    let mut cfg = planned_cfg(&m);
+    cfg.pipe.workers[0].accum[0] = 0;
+    err(Session::builder(&NativeBackend, &m).batch(8).config(cfg).build(), "accumulation");
+    // zero plugin cadence (would take `x % 0`)
+    let mut cfg = planned_cfg(&m);
+    cfg.plugin_cadence = 0;
+    err(Session::builder(&NativeBackend, &m).batch(8).config(cfg).build(), "cadence");
+}
+
+/// A misshapen hand-fed batch is rejected at `ingest` with a typed error
+/// (not queued), instead of panicking later inside backend math.
+#[test]
+fn ingest_rejects_misshapen_batches() {
+    use ferret::stream::Batch;
+    let m = model();
+    let mut session = Session::builder(&NativeBackend, &m)
+        .config(planned_cfg(&m))
+        .batch(8)
+        .build()
+        .expect("valid config");
+    // 1 row but only 7 of 16 features
+    let e = session.ingest(Batch { id: 0, x: vec![0.0; 7], y: vec![0] });
+    assert!(e.unwrap_err().to_string().contains("features"));
+    // more rows than the session's batch size
+    let e = session.ingest(Batch { id: 1, x: vec![0.0; 16 * 9], y: vec![0; 9] });
+    assert!(e.unwrap_err().to_string().contains("rows"));
+    // empty batch
+    assert!(session.ingest(Batch { id: 2, x: vec![], y: vec![] }).is_err());
+    assert_eq!(session.backlog(), 0, "rejected batches are not queued");
+    // a well-formed batch still flows end to end
+    session
+        .ingest(Batch { id: 3, x: vec![0.1; 16 * 8], y: vec![1; 8] })
+        .expect("well-formed batch");
+    session.drain();
+    let r = session.finish();
+    assert_eq!(r.metrics.arrivals(), 1);
+}
+
+/// The builder's auto-planned default config (no `.config()`) runs.
+#[test]
+fn default_config_auto_plans_and_learns() {
+    let m = model();
+    let r = Session::builder(&NativeBackend, &m)
+        .engine_params(EngineParams { lr: 0.2, ..Default::default() })
+        .batch(8)
+        .build()
+        .expect("auto-planned config")
+        .run_stream(&mut stream(80, 31));
+    assert_eq!(r.metrics.arrivals(), 80);
+    assert!(r.metrics.trained > 0);
+    assert!(r.metrics.oacc.value() > 30.0, "oacc {}", r.metrics.oacc.value());
+    assert!(r.metrics.tacc > 50.0, "tacc {}", r.metrics.tacc);
+}
+
+/// A freerun session driven by ingest + finish keeps the freerun
+/// structural guarantees (no lost or doubled jobs).
+#[test]
+fn freerun_session_loses_no_jobs() {
+    let m = model();
+    let n = 40u64;
+    // per-layer PipeDream: every (worker, stage) device is active, so the
+    // threaded session provably spawns real device threads
+    let prof = Profile::analytic(&m, 8);
+    let cfg = AsyncCfg::baseline(
+        ferret::pipeline::engine::AsyncSchedule::Pipedream,
+        Partition::per_layer(m.num_layers()),
+        &prof,
+        2000,
+    );
+    let mut src = stream(n as usize, 31);
+    let mut plugin = Vanilla;
+    // td 2000 ticks = 2000µs arrivals: far slower than the tiny model's
+    // per-stage compute, so the run stays fast and mostly drop-free
+    let ep = EngineParams { lr: 0.2, td: 2000, ..Default::default() };
+    let mut session = Session::builder(&NativeBackend, &m)
+        .config(cfg)
+        .plugin(&mut plugin)
+        .engine_params(ep)
+        .executor(ExecutorKind::Threaded)
+        .mode(Mode::Freerun)
+        .batch(8)
+        .test_set(src.test_set(ep.tacc_per_class))
+        .build()
+        .expect("valid config");
+    while let Some(b) = src.next_batch() {
+        session.ingest(b).expect("well-formed batch");
+    }
+    let r = session.finish();
+    assert_eq!(r.metrics.arrivals(), n);
+    assert_eq!(r.metrics.oacc.count() as u64, n, "one prediction per arrival");
+    assert_eq!(r.metrics.losses.len() as u64, n - r.metrics.dropped);
+    assert!(r.metrics.trained > 0);
+    assert!(r.metrics.exec_threads > 1, "session owns real device threads");
+}
