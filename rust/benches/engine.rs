@@ -1,9 +1,16 @@
 //! Engine throughput bench: virtual-batches/second of each schedule on
 //! the native backend (the end-to-end hot path minus PJRT), plus the
-//! sim-vs-threaded executor comparison on the async engines.
+//! sim-vs-threaded executor comparison on the async engines and a
+//! naive-vs-tiled kernel GFLOP/s section (the per-kernel view of the
+//! committed BENCH trajectory).
 //!
-//!     cargo bench --bench engine
+//!     cargo bench --bench engine            # full sweep
+//!     cargo bench --bench engine -- --smoke # CI: one model, short stream
+//!
+//! For the machine-readable trajectory point use
+//! `ferret_bench --exp perf` instead — it emits the BENCH_0006 JSON.
 
+use ferret::backend::kernels;
 use ferret::backend::native::NativeBackend;
 use ferret::baselines::{run_baseline_with_model, StreamPolicy};
 use ferret::compensate::CompKind;
@@ -32,12 +39,52 @@ fn mk_stream(model: &ferret::config::ModelSpec, batch: usize, n: usize) -> Synth
     })
 }
 
+/// GFLOP/s of `f` run `reps` times over a `flops`-FLOP kernel.
+fn gfs(flops: usize, reps: u32, mut f: impl FnMut()) -> f64 {
+    f(); // warm
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    flops as f64 * reps as f64 / t0.elapsed().as_secs_f64().max(1e-12) / 1e9
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let zoo = default_zoo().unwrap();
-    let n = 60;
+
+    // --- kernel section: naive vs tiled vs tiled×4 on each model's
+    // largest layer (dense operands; the sparse-skip path is off) ---
+    println!("kernel GFLOP/s (largest layer per model, batch {})", zoo.batch);
+    println!("{:<26} {:>10} {:>10} {:>10}", "kernel/shape", "naive", "tiled", "tiledx4");
+    let models: &[&str] =
+        if smoke { &["mnistnet10"] } else { &["mnistnet10", "convnet10", "resnet11"] };
+    for model_name in models {
+        let model = zoo.model(model_name).unwrap().clone();
+        let l = model.layers().into_iter().max_by_key(|l| l.param_count()).unwrap();
+        let (b, kin, kout) = (zoo.batch, l.in_dim, l.out_dim);
+        let flops = 2 * b * kin * kout;
+        let reps = if smoke { 2 } else { ((2e8 / flops as f64) as u32).clamp(3, 30) };
+        let x: Vec<f32> = (0..b * kin).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+        let w: Vec<f32> = (0..kin * kout).map(|i| (i % 7) as f32 * 0.05 - 0.15).collect();
+        let mut z = vec![0.0f32; b * kout];
+        let naive = gfs(flops, reps, || kernels::naive_matmul_acc(&mut z, &x, &w, b, kin, kout));
+        let tiled = gfs(flops, reps, || kernels::matmul_acc(&mut z, &x, &w, b, kin, kout, 1));
+        let mt = gfs(flops, reps, || kernels::matmul_acc(&mut z, &x, &w, b, kin, kout, 4));
+        println!(
+            "{:<26} {:>10.2} {:>10.2} {:>10.2}",
+            format!("fwd/{model_name} {b}x{kin}x{kout}"),
+            naive,
+            tiled,
+            mt
+        );
+    }
+    println!();
+
+    let n = if smoke { 12 } else { 60 };
     println!("engine throughput (native backend, {n} microbatches)");
     println!("{:<28} {:>12} {:>14}", "engine/model", "wall ms", "batches/s");
-    for model_name in ["mnistnet10", "convnet10", "resnet11"] {
+    for model_name in models {
         let model = zoo.model(model_name).unwrap().clone();
         let prof = Profile::analytic(&model, zoo.batch);
         let td = prof.default_td();

@@ -1,0 +1,458 @@
+//! Tiled / register-blocked matmul kernels with optional row-parallelism.
+//!
+//! This is the numeric hot path of [`super::native::NativeBackend`]. Three
+//! matmul flavors cover one dense layer's step (fwd `x@w`, bwd-input
+//! `g@wᵀ`, bwd-weight `xᵀ@g`), each in two forms:
+//!
+//!   - `naive_*` — the straight reference loops (the pre-tiling kernels,
+//!     kept as the ground truth for property tests and the kernel bench);
+//!   - the tiled entry points — cache-blocked over the reduction dim, with
+//!     the working c-rows kept hot across a block, and an optional
+//!     `std::thread::scope` fan-out that splits the *output rows* across
+//!     `threads` workers.
+//!
+//! # Determinism contract
+//!
+//! `matmul_acc` and `matmul_at_acc` accumulate every output element in
+//! ascending reduction (`kk`) order — exactly the order of the naive
+//! loops — and the parallel path partitions whole output rows, so their
+//! results are **bit-identical** to the naive kernels for every thread
+//! count. `matmul_bt_acc` breaks each dot product into four independent
+//! accumulators (the serial FP chain is latency-bound); its rounding
+//! differs from the naive kernel, but the order is still fixed per
+//! element, so it too is bit-identical *across thread counts*. Net:
+//! changing `FERRET_KERNEL_THREADS` never changes any numeric result, and
+//! lockstep runs stay deterministic. Planner sweeps default to 1 thread
+//! only to avoid oversubscription, not for reproducibility.
+//!
+//! The post-ReLU sparse-skip fast path (`av == 0.0 → skip`) of the
+//! forward/weight kernels is preserved in the tiled forms.
+
+/// Reduction-dimension block: `KB` rows of `b` (`KB×n` floats) stay hot in
+/// L1/L2 while the same block is replayed against the c-rows.
+const KB: usize = 32;
+
+/// Output-row register block for `matmul_acc`: this many c-rows share one
+/// pass over a `b` block.
+const RB: usize = 4;
+
+/// Below this many FLOPs a kernel runs single-threaded: scoped-thread
+/// spawn/join costs tens of µs, so only ms-scale matmuls amortize it.
+const PAR_MIN_FLOPS: usize = 1 << 19;
+
+/// Resolve the kernel-thread knob: a nonzero builder value wins, else the
+/// `FERRET_KERNEL_THREADS` environment variable, else 1 (serial — the
+/// deterministic planner-sweep default).
+pub fn resolve_threads(knob: usize) -> usize {
+    if knob != 0 {
+        return knob;
+    }
+    std::env::var("FERRET_KERNEL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
+/// Effective worker count for an output of `rows` rows and `flops` total
+/// FLOPs: capped by rows, forced serial under [`PAR_MIN_FLOPS`].
+fn effective_threads(threads: usize, rows: usize, flops: usize) -> usize {
+    let t = threads.max(1).min(rows.max(1));
+    if flops < PAR_MIN_FLOPS {
+        1
+    } else {
+        t
+    }
+}
+
+fn rows_per_chunk(rows: usize, t: usize) -> usize {
+    (rows + t - 1) / t
+}
+
+// ---------------------------------------------------------------------------
+// naive reference kernels (shape-guarded; ground truth for tests + bench)
+// ---------------------------------------------------------------------------
+
+/// c (m x n) += a (m x k) @ b (k x n), row-major. Reference loops.
+pub fn naive_matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // post-ReLU activations are sparse
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// c (m x n) += a (m x k) @ bᵀ where b is (n x k) row-major. Reference.
+pub fn naive_matmul_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += arow[kk] * brow[kk];
+            }
+            crow[j] += s;
+        }
+    }
+}
+
+/// c (m x n) += aᵀ @ b where a is (k x m), b is (k x n), row-major.
+/// Reference.
+pub fn naive_matmul_at_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tiled single-thread blocks
+// ---------------------------------------------------------------------------
+
+/// Blocked `c += a @ b` over `rows` rows of `c`/`a`. `RB` c-rows replay
+/// each `KB`-row block of `b` while it is cache-hot; per-element
+/// accumulation stays in ascending `kk` order (bit-identical to naive).
+fn matmul_acc_block(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, k: usize, n: usize) {
+    let mut ib = 0;
+    while ib < rows {
+        let ie = (ib + RB).min(rows);
+        let mut kb = 0;
+        while kb < k {
+            let ke = (kb + KB).min(k);
+            for i in ib..ie {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in kb..ke {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+            kb = ke;
+        }
+        ib = ie;
+    }
+}
+
+/// `c += a @ bᵀ` over `rows` rows: each dot product runs on four
+/// independent accumulators to break the serial FP add chain.
+fn matmul_bt_block(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, k: usize, n: usize) {
+    let k4 = k / 4 * 4;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut kk = 0;
+            while kk < k4 {
+                s0 += arow[kk] * brow[kk];
+                s1 += arow[kk + 1] * brow[kk + 1];
+                s2 += arow[kk + 2] * brow[kk + 2];
+                s3 += arow[kk + 3] * brow[kk + 3];
+                kk += 4;
+            }
+            let mut s = (s0 + s1) + (s2 + s3);
+            for kk in k4..k {
+                s += arow[kk] * brow[kk];
+            }
+            crow[j] += s;
+        }
+    }
+}
+
+/// `c += aᵀ @ b` for output rows `i0..i0+rows` of the full (m x n)
+/// product; `a` is the full (k x m) matrix. Loop-interchanged so each
+/// c-row stays hot across a `KB` block of the reduction dim; per-element
+/// order is ascending `kk` (bit-identical to naive).
+fn matmul_at_block(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    m: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut kb = 0;
+    while kb < k {
+        let ke = (kb + KB).min(k);
+        for r in 0..rows {
+            let crow = &mut c[r * n..(r + 1) * n];
+            for kk in kb..ke {
+                let av = a[kk * m + i0 + r];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        kb = ke;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public tiled entry points (optional row-parallel fan-out)
+// ---------------------------------------------------------------------------
+
+/// c (m x n) += a (m x k) @ b (k x n). Tiled; splits c-rows across up to
+/// `threads` scoped workers. Bit-identical to [`naive_matmul_acc`].
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let t = effective_threads(threads, m, 2 * m * k * n);
+    if t <= 1 {
+        matmul_acc_block(c, a, b, m, k, n);
+        return;
+    }
+    let per = rows_per_chunk(m, t);
+    std::thread::scope(|s| {
+        for (ci, ai) in c.chunks_mut(per * n).zip(a.chunks(per * k)) {
+            let rows = ci.len() / n;
+            s.spawn(move || matmul_acc_block(ci, ai, b, rows, k, n));
+        }
+    });
+}
+
+/// c (m x n) += a (m x k) @ bᵀ, b (n x k). Unrolled dot products; splits
+/// c-rows across up to `threads` scoped workers. Result is independent of
+/// the thread count (fixed per-element order) but rounds differently from
+/// [`naive_matmul_bt_acc`].
+pub fn matmul_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    let t = effective_threads(threads, m, 2 * m * k * n);
+    if t <= 1 {
+        matmul_bt_block(c, a, b, m, k, n);
+        return;
+    }
+    let per = rows_per_chunk(m, t);
+    std::thread::scope(|s| {
+        for (ci, ai) in c.chunks_mut(per * n).zip(a.chunks(per * k)) {
+            let rows = ci.len() / n;
+            s.spawn(move || matmul_bt_block(ci, ai, b, rows, k, n));
+        }
+    });
+}
+
+/// c (m x n) += aᵀ @ b, a (k x m), b (k x n). Tiled; splits c-rows across
+/// up to `threads` scoped workers. Bit-identical to
+/// [`naive_matmul_at_acc`].
+pub fn matmul_at_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let t = effective_threads(threads, m, 2 * m * k * n);
+    if t <= 1 {
+        matmul_at_block(c, a, b, 0, m, m, k, n);
+        return;
+    }
+    let per = rows_per_chunk(m, t);
+    std::thread::scope(|s| {
+        let mut i0 = 0;
+        for ci in c.chunks_mut(per * n) {
+            let rows = ci.len() / n;
+            s.spawn(move || matmul_at_block(ci, a, b, i0, m, rows, k, n));
+            i0 += rows;
+        }
+    });
+}
+
+/// Fused dense forward: `z = x @ w + bias`, optional ReLU — the bias init
+/// and the activation run inside each worker's row chunk, so the whole
+/// layer is one pass per chunk instead of three over `z`.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_fwd_into(
+    z: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    batch: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), batch * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(z.len(), batch * n);
+    let t = effective_threads(threads, batch, 2 * batch * k * n);
+    let fill = |zc: &mut [f32], xc: &[f32]| {
+        let rows = zc.len() / n;
+        for r in 0..rows {
+            zc[r * n..(r + 1) * n].copy_from_slice(bias);
+        }
+        matmul_acc_block(zc, xc, w, rows, k, n);
+        if relu {
+            zc.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+    };
+    if t <= 1 {
+        fill(z, x);
+        return;
+    }
+    let per = rows_per_chunk(batch, t);
+    let fill = &fill;
+    std::thread::scope(|s| {
+        for (zc, xc) in z.chunks_mut(per * n).zip(x.chunks(per * k)) {
+            s.spawn(move || fill(zc, xc));
+        }
+    });
+}
+
+/// Fused ReLU mask: `gz[i] = if z[i] <= 0 { 0 } else { g[i] }` in one pass
+/// straight into the (pooled) output buffer.
+pub fn relu_mask_into(gz: &mut [f32], g: &[f32], z: &[f32]) {
+    debug_assert_eq!(gz.len(), g.len());
+    debug_assert_eq!(gz.len(), z.len());
+    for ((o, &gv), &zv) in gz.iter_mut().zip(g).zip(z) {
+        *o = if zv <= 0.0 { 0.0 } else { gv };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{property, Rng};
+
+    fn randvec(rng: &mut Rng, n: usize, sparse: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if sparse && rng.uniform() < 0.5 {
+                    0.0
+                } else {
+                    rng.normal_f32(0.0, 1.0)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tiled_acc_and_at_are_bit_identical_to_naive() {
+        property("kern_exact", 20, |rng| {
+            let (m, k, n) = (1 + rng.below(33), 1 + rng.below(70), 1 + rng.below(40));
+            let sparse = rng.uniform() < 0.5;
+            let a = randvec(rng, m * k, sparse);
+            let b = randvec(rng, k * n, false);
+            let at = randvec(rng, k * m, sparse);
+            for threads in [1, 3] {
+                let mut c0 = randvec(rng, m * n, false);
+                let mut c1 = c0.clone();
+                naive_matmul_acc(&mut c0, &a, &b, m, k, n);
+                matmul_acc(&mut c1, &a, &b, m, k, n, threads);
+                assert_eq!(c0, c1, "acc m={m} k={k} n={n} t={threads}");
+
+                let mut d0 = randvec(rng, m * n, false);
+                let mut d1 = d0.clone();
+                naive_matmul_at_acc(&mut d0, &at, &b, m, k, n);
+                matmul_at_acc(&mut d1, &at, &b, m, k, n, threads);
+                assert_eq!(d0, d1, "at m={m} k={k} n={n} t={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn bt_matches_naive_within_tolerance_and_is_thread_invariant() {
+        property("kern_bt", 20, |rng| {
+            let (m, k, n) = (1 + rng.below(33), 1 + rng.below(70), 1 + rng.below(40));
+            let a = randvec(rng, m * k, false);
+            let b = randvec(rng, n * k, false);
+            let mut c0 = vec![0.0f32; m * n];
+            naive_matmul_bt_acc(&mut c0, &a, &b, m, k, n);
+            let mut c1 = vec![0.0f32; m * n];
+            matmul_bt_acc(&mut c1, &a, &b, m, k, n, 1);
+            let mut c3 = vec![0.0f32; m * n];
+            matmul_bt_acc(&mut c3, &a, &b, m, k, n, 3);
+            // unrolled accumulators round differently from the serial
+            // chain, but identically for every thread count
+            assert_eq!(c1, c3, "bt thread-variant m={m} k={k} n={n}");
+            for (x, y) in c0.iter().zip(&c1) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "bt {x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_fwd_matches_unfused() {
+        property("kern_fwd", 20, |rng| {
+            let (b, k, n) = (1 + rng.below(18), 1 + rng.below(30), 1 + rng.below(30));
+            let x = randvec(rng, b * k, rng.uniform() < 0.5);
+            let w = randvec(rng, k * n, false);
+            let bias = randvec(rng, n, false);
+            let relu = rng.uniform() < 0.5;
+            // reference: bias-init rows, naive matmul, then activation
+            let mut zr = vec![0.0f32; b * n];
+            for r in 0..b {
+                zr[r * n..(r + 1) * n].copy_from_slice(&bias);
+            }
+            naive_matmul_acc(&mut zr, &x, &w, b, k, n);
+            if relu {
+                zr.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            for threads in [1, 3] {
+                let mut z = vec![7.0f32; b * n]; // junk: must be fully overwritten
+                dense_fwd_into(&mut z, &x, &w, &bias, b, k, n, relu, threads);
+                assert_eq!(z, zr, "fwd b={b} k={k} n={n} relu={relu} t={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn relu_mask_zeroes_non_positive_slots() {
+        let z = [1.0, 0.0, -2.0, 0.5];
+        let g = [10.0, 20.0, 30.0, 40.0];
+        let mut gz = [9.0f32; 4];
+        relu_mask_into(&mut gz, &g, &z);
+        assert_eq!(gz, [10.0, 0.0, 0.0, 40.0]);
+    }
+
+    #[test]
+    fn resolve_threads_prefers_knob_then_env_default_one() {
+        assert_eq!(resolve_threads(3), 3);
+        // knob 0 + unset env -> 1 (the test env must not set the var)
+        if std::env::var("FERRET_KERNEL_THREADS").is_err() {
+            assert_eq!(resolve_threads(0), 1);
+        }
+    }
+}

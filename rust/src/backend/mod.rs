@@ -2,16 +2,32 @@
 //!
 //! `Backend` is the numeric contract of one pipeline-stage step. Two
 //! implementations:
-//!   - [`native::NativeBackend`] — pure-rust reference math. Used by unit
-//!     tests and by the large table sweeps where thousands of runs make
-//!     per-call PJRT dispatch the wrong tool.
+//!   - [`native::NativeBackend`] — pure-rust math on the tiled/parallel
+//!     kernels in [`kernels`]. Used by unit tests and by the large table
+//!     sweeps where thousands of runs make per-call PJRT dispatch the
+//!     wrong tool — and, since the hot-path rebuild, by the throughput
+//!     benches (`BENCH_0006.json`).
 //!   - [`xla::XlaBackend`] — loads the AOT HLO-text artifacts emitted by
 //!     `python/compile/aot.py` and executes them on the PJRT CPU client.
 //!     This is the production request path; integration tests assert it
 //!     matches `NativeBackend` to float tolerance.
+//!
+//! Two support layers sit underneath:
+//!   - [`kernels`] — register-blocked/tiled matmuls with an optional
+//!     scoped-thread row fan-out. Their determinism contract (bit-identical
+//!     results for every thread count) is what lets the engine expose a
+//!     kernel-thread knob without giving up lockstep reproducibility.
+//!   - [`pool`] — the shared [`BufferPool`] + [`Workspace`]. The `*_pooled`
+//!     trait methods take a `&Workspace` and draw scratch/output buffers
+//!     from its pool; their defaults fall back to the allocating methods,
+//!     so backends (e.g. XLA) adopt pooling incrementally.
 
+pub mod kernels;
 pub mod native;
+pub mod pool;
 pub mod xla;
+
+pub use pool::{BufferPool, PoolStats, Workspace};
 
 use crate::config::LayerShape;
 use crate::model::{GradBuf, LayerParams};
@@ -28,6 +44,12 @@ pub struct BwdOut {
 ///
 /// `Send + Sync` because the threaded pipeline executor shares one backend
 /// reference across every (worker, stage) device thread.
+///
+/// The `*_pooled` variants are the hot-path forms: identical numerics, but
+/// scratch and output buffers come from (and return to) the shared
+/// [`Workspace`] pool, and the kernel fan-out width follows
+/// `Workspace::threads`. Defaults delegate to the allocating methods so
+/// implementing them is optional.
 pub trait Backend: Send + Sync {
     /// y = act(x @ w + b); x: (batch, in_dim) row-major.
     fn dense_fwd(&self, shape: &LayerShape, p: &LayerParams, x: &[f32], batch: usize) -> Vec<f32>;
@@ -41,6 +63,35 @@ pub trait Backend: Send + Sync {
         g: &[f32],
         batch: usize,
     ) -> BwdOut;
+
+    /// Pooled [`Backend::dense_fwd`]: the output comes from `ws.pool` (the
+    /// caller owns it and should eventually `put` it back).
+    fn dense_fwd_pooled(
+        &self,
+        shape: &LayerShape,
+        p: &LayerParams,
+        x: &[f32],
+        batch: usize,
+        ws: &Workspace,
+    ) -> Vec<f32> {
+        let _ = ws;
+        self.dense_fwd(shape, p, x, batch)
+    }
+
+    /// Pooled [`Backend::dense_bwd`]: `gx`/`gw`/`gb` come from `ws.pool`;
+    /// internal scratch is returned to the pool before this call returns.
+    fn dense_bwd_pooled(
+        &self,
+        shape: &LayerShape,
+        p: &LayerParams,
+        x: &[f32],
+        g: &[f32],
+        batch: usize,
+        ws: &Workspace,
+    ) -> BwdOut {
+        let _ = ws;
+        self.dense_bwd(shape, p, x, g, batch)
+    }
 
     /// Softmax cross-entropy head: (dL/dlogits, loss). labels: (batch,).
     fn loss_grad_ce(&self, classes: usize, logits: &[f32], labels: &[i32]) -> (Vec<f32>, f32);
@@ -58,8 +109,21 @@ pub trait Backend: Send + Sync {
     /// One Iter-Fisher compensation step (Eq. 8): g + lam * g^2 * dtheta.
     fn compensate(&self, g: &GradBuf, d: &GradBuf, lam: f32) -> GradBuf;
 
+    /// In-place [`Backend::compensate`]: overwrites `g` with the
+    /// compensated gradient (no allocation on the update path).
+    fn compensate_inplace(&self, g: &mut GradBuf, d: &GradBuf, lam: f32) {
+        *g = self.compensate(g, d, lam);
+    }
+
     /// SGD step: p - lr * g.
     fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams;
+
+    /// Pooled [`Backend::sgd`]: the new parameter vectors come from
+    /// `ws.pool` (retired versions are recycled back by the engine).
+    fn sgd_pooled(&self, p: &LayerParams, g: &GradBuf, lr: f32, ws: &Workspace) -> LayerParams {
+        let _ = ws;
+        self.sgd(p, g, lr)
+    }
 
     /// An owned, thread-shareable handle to this backend. Device threads
     /// of the session-owned [`crate::pipeline::executor::ThreadedExecutor`]

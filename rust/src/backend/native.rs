@@ -1,88 +1,20 @@
 //! Pure-rust reference backend.
 //!
-//! Mirrors `python/compile/kernels/ref.py` op for op. The matmuls use a
-//! cache-friendly (i,k,j) loop order with the inner j-loop vectorizable by
-//! LLVM; good enough that the table sweeps are engine-bound, not math-bound.
+//! Mirrors `python/compile/kernels/ref.py` op for op, but the matmuls run
+//! on the tiled/register-blocked kernels in [`super::kernels`] (bias init
+//! and the ReLU mask are fused into the kernel passes) and every scratch
+//! or output buffer can come from a shared [`Workspace`] pool via the
+//! `*_pooled` entry points, so steady-state microbatches allocate nothing.
+//! The plain `Backend` methods remain allocation-per-call (each uses a
+//! private serial workspace) and stay bit-identical across kernel thread
+//! counts — see the determinism contract in [`super::kernels`].
 
-use super::{Backend, BwdOut};
+use super::{kernels, Backend, BwdOut, Workspace};
 use crate::config::{Act, LayerShape};
 use crate::model::{GradBuf, LayerParams};
 
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeBackend;
-
-/// c (m x n) += a (m x k) @ b (k x n), row-major.
-fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // post-ReLU activations are sparse
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// c (m x n) += a (m x k) @ b^T where b is (n x k) row-major.
-fn matmul_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for kk in 0..k {
-                s += arow[kk] * brow[kk];
-            }
-            crow[j] += s;
-        }
-    }
-}
-
-/// c (m x n) += a^T @ b where a is (k x m), b is (k x n), row-major.
-fn matmul_at_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-impl NativeBackend {
-    fn pre_activation(
-        &self,
-        shape: &LayerShape,
-        p: &LayerParams,
-        x: &[f32],
-        batch: usize,
-    ) -> Vec<f32> {
-        let (k, n) = (shape.in_dim, shape.out_dim);
-        debug_assert_eq!(x.len(), batch * k);
-        let mut z = vec![0.0f32; batch * n];
-        for i in 0..batch {
-            z[i * n..(i + 1) * n].copy_from_slice(&p.b);
-        }
-        matmul_acc(&mut z, x, &p.w, batch, k, n);
-        z
-    }
-}
 
 fn softmax_rows(classes: usize, logits: &[f32], batch: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; logits.len()];
@@ -107,10 +39,35 @@ impl Backend for NativeBackend {
     }
 
     fn dense_fwd(&self, shape: &LayerShape, p: &LayerParams, x: &[f32], batch: usize) -> Vec<f32> {
-        let mut z = self.pre_activation(shape, p, x, batch);
-        if shape.act == Act::Relu {
-            z.iter_mut().for_each(|v| *v = v.max(0.0));
-        }
+        let (k, n) = (shape.in_dim, shape.out_dim);
+        debug_assert_eq!(x.len(), batch * k);
+        let mut z = vec![0.0f32; batch * n];
+        kernels::dense_fwd_into(&mut z, x, &p.w, &p.b, batch, k, n, shape.act == Act::Relu, 1);
+        z
+    }
+
+    fn dense_fwd_pooled(
+        &self,
+        shape: &LayerShape,
+        p: &LayerParams,
+        x: &[f32],
+        batch: usize,
+        ws: &Workspace,
+    ) -> Vec<f32> {
+        let (k, n) = (shape.in_dim, shape.out_dim);
+        debug_assert_eq!(x.len(), batch * k);
+        let mut z = ws.pool.take(batch * n);
+        kernels::dense_fwd_into(
+            &mut z,
+            x,
+            &p.w,
+            &p.b,
+            batch,
+            k,
+            n,
+            shape.act == Act::Relu,
+            ws.threads,
+        );
         z
     }
 
@@ -122,28 +79,43 @@ impl Backend for NativeBackend {
         g: &[f32],
         batch: usize,
     ) -> BwdOut {
+        self.dense_bwd_pooled(shape, p, x, g, batch, &Workspace::serial())
+    }
+
+    fn dense_bwd_pooled(
+        &self,
+        shape: &LayerShape,
+        p: &LayerParams,
+        x: &[f32],
+        g: &[f32],
+        batch: usize,
+        ws: &Workspace,
+    ) -> BwdOut {
         let (k, n) = (shape.in_dim, shape.out_dim);
         debug_assert_eq!(g.len(), batch * n);
-        // Activation recomputation (T1): recompute z rather than stash it.
-        let mut gz = g.to_vec();
+        let pool = &ws.pool;
+        // Activation recomputation (T1): recompute z rather than stash it;
+        // the ReLU mask is fused into the copy into the pooled gz buffer.
+        let mut gz = pool.take(batch * n);
         if shape.act == Act::Relu {
-            let z = self.pre_activation(shape, p, x, batch);
-            for (gv, &zv) in gz.iter_mut().zip(&z) {
-                if zv <= 0.0 {
-                    *gv = 0.0;
-                }
-            }
+            let mut z = pool.take(batch * n);
+            kernels::dense_fwd_into(&mut z, x, &p.w, &p.b, batch, k, n, false, ws.threads);
+            kernels::relu_mask_into(&mut gz, g, &z);
+            pool.put(z);
+        } else {
+            gz.copy_from_slice(g);
         }
-        let mut gx = vec![0.0f32; batch * k];
-        matmul_bt_acc(&mut gx, &gz, &p.w, batch, n, k);
-        let mut gw = vec![0.0f32; k * n];
-        matmul_at_acc(&mut gw, x, &gz, k, batch, n);
-        let mut gb = vec![0.0f32; n];
+        let mut gx = pool.take_zeroed(batch * k);
+        kernels::matmul_bt_acc(&mut gx, &gz, &p.w, batch, n, k, ws.threads);
+        let mut gw = pool.take_zeroed(k * n);
+        kernels::matmul_at_acc(&mut gw, x, &gz, k, batch, n, ws.threads);
+        let mut gb = pool.take_zeroed(n);
         for i in 0..batch {
             for j in 0..n {
                 gb[j] += gz[i * n + j];
             }
         }
+        pool.put(gz);
         BwdOut { gx, grads: GradBuf { gw, gb } }
     }
 
@@ -201,17 +173,41 @@ impl Backend for NativeBackend {
         }
     }
 
+    fn compensate_inplace(&self, g: &mut GradBuf, d: &GradBuf, lam: f32) {
+        for (gv, &dv) in g.gw.iter_mut().zip(&d.gw) {
+            let g0 = *gv;
+            *gv = g0 + lam * g0 * g0 * dv;
+        }
+        for (gv, &dv) in g.gb.iter_mut().zip(&d.gb) {
+            let g0 = *gv;
+            *gv = g0 + lam * g0 * g0 * dv;
+        }
+    }
+
     fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams {
         LayerParams {
             w: p.w.iter().zip(&g.gw).map(|(&p, &g)| p - lr * g).collect(),
             b: p.b.iter().zip(&g.gb).map(|(&p, &g)| p - lr * g).collect(),
         }
     }
+
+    fn sgd_pooled(&self, p: &LayerParams, g: &GradBuf, lr: f32, ws: &Workspace) -> LayerParams {
+        let mut w = ws.pool.take(p.w.len());
+        for ((o, &pv), &gv) in w.iter_mut().zip(&p.w).zip(&g.gw) {
+            *o = pv - lr * gv;
+        }
+        let mut b = ws.pool.take(p.b.len());
+        for ((o, &pv), &gv) in b.iter_mut().zip(&p.b).zip(&g.gb) {
+            *o = pv - lr * gv;
+        }
+        LayerParams { w, b }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::pool::BufferPool;
     use crate::backend::{accuracy, backward_all, ce_loss, forward_all};
     use crate::util::{property, Rng};
 
@@ -282,6 +278,45 @@ mod tests {
         });
     }
 
+    /// Pooled entry points recycle buffers without changing any numerics.
+    #[test]
+    fn pooled_paths_match_unpooled_bitwise() {
+        property("pooled_eq", 10, |rng| {
+            let (b, k, n) = (1 + rng.below(6), 1 + rng.below(9), 1 + rng.below(9));
+            let act = if rng.uniform() < 0.5 { Act::Relu } else { Act::None };
+            let s = shape(k, n, act);
+            let p = LayerParams { w: randvec(rng, k * n), b: randvec(rng, n) };
+            let x = randvec(rng, b * k);
+            let g = randvec(rng, b * n);
+            let ws = Workspace::new(BufferPool::new(), 1);
+            let be = NativeBackend;
+            // run twice so the second pass consumes recycled (dirty) buffers
+            for _ in 0..2 {
+                let y0 = be.dense_fwd(&s, &p, &x, b);
+                let y1 = be.dense_fwd_pooled(&s, &p, &x, b, &ws);
+                assert_eq!(y0, y1);
+                let o0 = be.dense_bwd(&s, &p, &x, &g, b);
+                let o1 = be.dense_bwd_pooled(&s, &p, &x, &g, b, &ws);
+                assert_eq!(o0.gx, o1.gx);
+                assert_eq!(o0.grads.gw, o1.grads.gw);
+                assert_eq!(o0.grads.gb, o1.grads.gb);
+                let grads = GradBuf { gw: o0.grads.gw.clone(), gb: o0.grads.gb.clone() };
+                let p0 = be.sgd(&p, &grads, 0.1);
+                let p1 = be.sgd_pooled(&p, &grads, 0.1, &ws);
+                assert_eq!(p0.w, p1.w);
+                assert_eq!(p0.b, p1.b);
+                // recycle the outputs so pass two hits the shelves
+                ws.pool.put(y1);
+                ws.pool.put(o1.gx);
+                ws.pool.put(o1.grads.gw);
+                ws.pool.put(o1.grads.gb);
+                ws.pool.put(p1.w);
+                ws.pool.put(p1.b);
+            }
+            assert!(ws.pool.stats().takes > 0);
+        });
+    }
+
     #[test]
     fn ce_grad_is_softmax_minus_onehot() {
         let logits = vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0];
@@ -346,6 +381,11 @@ mod tests {
         assert!((c.gw[0] - (2.0 + 0.5 * 4.0 * 0.1)).abs() < 1e-6);
         assert!((c.gw[1] - (-1.0 + 0.5 * 1.0 * 0.2)).abs() < 1e-6);
         assert!((c.gb[0] - (0.5 + 0.5 * 0.25 * -0.4)).abs() < 1e-6);
+        // in-place form computes the same thing on the same buffer
+        let mut g2 = GradBuf { gw: g.gw.clone(), gb: g.gb.clone() };
+        NativeBackend.compensate_inplace(&mut g2, &d, 0.5);
+        assert_eq!(g2.gw, c.gw);
+        assert_eq!(g2.gb, c.gb);
         let p = LayerParams { w: vec![1.0, 1.0], b: vec![1.0] };
         let p2 = NativeBackend.sgd(&p, &g, 0.1);
         assert_eq!(p2.w, vec![0.8, 1.1]);

@@ -1,0 +1,253 @@
+//! Recycled `Vec<f32>` buffers for zero-allocation steady-state steps.
+//!
+//! Every microbatch used to allocate fresh vectors at each handoff:
+//! activations between stages, `gz`/`gx`/`gw` inside the backward pass,
+//! new parameter vectors at every SGD step. [`BufferPool`] is a shared
+//! free-list of `Vec<f32>` keyed by exact length (the engine's buffer
+//! sizes are a small, fixed set per plan), so once a run is warm, every
+//! `take` is a recycle and steady-state microbatches allocate nothing.
+//!
+//! The pool is **one shared store** for the whole session — the handle is
+//! a cheap [`Clone`] over an `Arc`, passed to the scheduler thread and
+//! every device thread alike. That is load-bearing: buffers migrate across
+//! threads (the scheduler copies a stage input, a device consumes and
+//! frees it), so per-thread pools would leak in one direction and miss
+//! forever in the other. Contention is negligible — a microbatch performs
+//! tens of pool ops against ms-scale matmuls.
+//!
+//! Pooled free lists are deliberately **not** counted in the measured
+//! memory ledger: they are recyclable scratch, not plan-attributable state
+//! (params/stash/activations/compensator), and each shelf is capped at
+//! [`SHELF_CAP`] buffers so the store stays bounded under streams that
+//! keep injecting fresh batch buffers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Max recycled buffers kept per size class; beyond this, `put` drops the
+/// buffer (frees it) instead of shelving it.
+pub const SHELF_CAP: usize = 32;
+
+/// Take/put counters, readable at any time through any pool handle.
+/// `misses` counts `take` calls that had to heap-allocate — the "steady
+/// state allocations per microbatch" number of the bench trajectory.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub takes: u64,
+    pub misses: u64,
+    pub puts: u64,
+    /// puts dropped because the size class was already at [`SHELF_CAP`]
+    pub dropped: u64,
+}
+
+impl PoolStats {
+    /// Counter-wise difference vs an earlier snapshot.
+    pub fn since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            takes: self.takes - earlier.takes,
+            misses: self.misses - earlier.misses,
+            puts: self.puts - earlier.puts,
+            dropped: self.dropped - earlier.dropped,
+        }
+    }
+}
+
+struct Inner {
+    shelves: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    takes: AtomicU64,
+    misses: AtomicU64,
+    puts: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Shared buffer store; `Clone` shares the same shelves and counters.
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<Inner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BufferPool").field("stats", &self.stats()).finish()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        BufferPool {
+            inner: Arc::new(Inner {
+                shelves: Mutex::new(HashMap::new()),
+                takes: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                puts: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (recycled bits or zeros) — the caller must fully overwrite it.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        self.inner.takes.fetch_add(1, Ordering::Relaxed);
+        if let Some(v) = self.inner.shelves.lock().unwrap().get_mut(&len).and_then(Vec::pop) {
+            debug_assert_eq!(v.len(), len);
+            return v;
+        }
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; len]
+    }
+
+    /// A buffer of exactly `len` zeros (accumulator init).
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        self.inner.takes.fetch_add(1, Ordering::Relaxed);
+        if let Some(mut v) = self.inner.shelves.lock().unwrap().get_mut(&len).and_then(Vec::pop) {
+            debug_assert_eq!(v.len(), len);
+            v.iter_mut().for_each(|x| *x = 0.0);
+            return v;
+        }
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; len]
+    }
+
+    /// Return a buffer for reuse. Empty vectors are ignored; full shelves
+    /// drop the buffer (the store stays bounded).
+    pub fn put(&self, v: Vec<f32>) {
+        if v.is_empty() {
+            return;
+        }
+        self.inner.puts.fetch_add(1, Ordering::Relaxed);
+        let mut shelves = self.inner.shelves.lock().unwrap();
+        let shelf = shelves.entry(v.len()).or_default();
+        if shelf.len() < SHELF_CAP {
+            shelf.push(v);
+        } else {
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            takes: self.inner.takes.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            puts: self.inner.puts.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// f32 slots currently shelved (introspection only; ledger-exempt).
+    pub fn free_f32s(&self) -> usize {
+        self.inner
+            .shelves
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(len, shelf)| len * shelf.len())
+            .sum()
+    }
+}
+
+/// Everything a kernel call site needs beyond its operands: the shared
+/// buffer store and the intra-stage worker count (1 = serial, the
+/// deterministic default; the tiled kernels are bit-identical across
+/// thread counts either way — see [`super::kernels`]).
+#[derive(Clone, Debug)]
+pub struct Workspace {
+    pub pool: BufferPool,
+    pub threads: usize,
+}
+
+impl Workspace {
+    pub fn new(pool: BufferPool, threads: usize) -> Self {
+        Workspace { pool, threads: threads.max(1) }
+    }
+
+    /// A private single-threaded workspace with its own (cold) pool — the
+    /// default for entry points that predate pooling.
+    pub fn serial() -> Self {
+        Workspace { pool: BufferPool::new(), threads: 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_miss_then_roundtrip_hit() {
+        let pool = BufferPool::new();
+        let a = pool.take(8);
+        assert_eq!(a.len(), 8);
+        let s = pool.stats();
+        assert_eq!((s.takes, s.misses), (1, 1));
+        let ptr = a.as_ptr() as usize;
+        pool.put(a);
+        let b = pool.take(8);
+        // same allocation came back; no new miss
+        assert_eq!(b.as_ptr() as usize, ptr);
+        let s = pool.stats();
+        assert_eq!((s.takes, s.misses, s.puts), (2, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_takes_never_alias() {
+        let pool = BufferPool::new();
+        let a = pool.take(16);
+        let b = pool.take(16);
+        assert_ne!(a.as_ptr(), b.as_ptr());
+        pool.put(a);
+        pool.put(b);
+        let c = pool.take(16);
+        let d = pool.take(16);
+        assert_ne!(c.as_ptr(), d.as_ptr());
+        assert_eq!(pool.stats().misses, 2); // both shelved buffers reused
+    }
+
+    #[test]
+    fn size_classes_are_exact_and_zeroed_take_is_clean() {
+        let pool = BufferPool::new();
+        let mut a = pool.take(4);
+        a.fill(3.5);
+        pool.put(a);
+        // different length -> fresh allocation, not a resized recycle
+        let b = pool.take(5);
+        assert_eq!(b.len(), 5);
+        assert_eq!(pool.stats().misses, 2);
+        // recycled buffer through take_zeroed comes back clean
+        let z = pool.take_zeroed(4);
+        assert_eq!(z, vec![0.0; 4]);
+        assert_eq!(pool.stats().misses, 2);
+        assert_eq!(pool.free_f32s(), 0);
+    }
+
+    #[test]
+    fn shelves_are_capped() {
+        let pool = BufferPool::new();
+        let bufs: Vec<_> = (0..SHELF_CAP + 3).map(|_| pool.take(2)).collect();
+        for b in bufs {
+            pool.put(b);
+        }
+        let s = pool.stats();
+        assert_eq!(s.dropped, 3);
+        assert_eq!(pool.free_f32s(), SHELF_CAP * 2);
+    }
+
+    #[test]
+    fn clones_share_the_store_across_threads() {
+        let pool = BufferPool::new();
+        let a = pool.take(32);
+        let remote = pool.clone();
+        std::thread::spawn(move || remote.put(a)).join().unwrap();
+        let _b = pool.take(32);
+        let s = pool.stats();
+        assert_eq!((s.takes, s.misses, s.puts), (2, 1, 1));
+        let since = pool.stats().since(&s);
+        assert_eq!(since, PoolStats::default());
+    }
+}

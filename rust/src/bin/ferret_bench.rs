@@ -1,10 +1,20 @@
 //! ferret-bench — regenerate the paper's tables and figures.
 //!
 //! Usage:
-//!   ferret_bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|budget_shift|all
+//!   ferret_bench --exp table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|budget_shift|perf|all
 //!                [--quick] [--batches N] [--seeds a,b,...] [--settings i,j,...]
 //!                [--executor sim|threaded] [--mode lockstep|freerun]
 //!                [--budget-schedule <bytes>@<at>[,...]]
+//!                [--kernel-threads K] [--bench-out PATH]
+//!
+//! `--exp perf` runs the performance trajectory sweep instead of a paper
+//! table: per-kernel GFLOP/s (naive vs tiled vs tiled×K), engine
+//! batches/sec per executor×mode, and steady-state buffer-pool
+//! allocations per microbatch. The JSON lands at `--bench-out` (default
+//! results/perf.json); the committed trajectory point at the repo root
+//! (BENCH_0006.json) is a full, non-quick run of the same sweep. `perf`
+//! is excluded from `--exp all` — it measures this machine, not the
+//! paper.
 //!
 //! `--exp budget_shift` emits the dynamic-memory table: the budget halves
 //! mid-stream and Ferret's live re-plan is compared against a
@@ -33,9 +43,10 @@ use ferret::pipeline::sched::Mode;
 fn usage() -> ! {
     eprintln!(
         "usage: ferret_bench --exp \
-         <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|budget_shift|all> \
+         <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|budget_shift|perf|all> \
          [--quick] [--batches N] [--seeds a,b] [--settings i,j] [--executor sim|threaded] \
-         [--mode lockstep|freerun] [--budget-schedule <bytes>@<at>[,...]]"
+         [--mode lockstep|freerun] [--budget-schedule <bytes>@<at>[,...]] \
+         [--kernel-threads K] [--bench-out PATH]"
     );
     std::process::exit(2)
 }
@@ -44,6 +55,8 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut exp = String::from("all");
     let mut cfg = BenchCfg::default();
+    let mut kernel_threads = 0usize;
+    let mut bench_out: Option<String> = None;
     // apply the --quick preset first so explicit --batches/--seeds/
     // --settings override it regardless of flag order
     if args.iter().any(|a| a == "--quick") {
@@ -108,10 +121,40 @@ fn main() {
                     }
                 };
             }
+            "--kernel-threads" => {
+                i += 1;
+                kernel_threads =
+                    args.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            }
+            "--bench-out" => {
+                i += 1;
+                bench_out = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
             "--quiet" => cfg.quiet = true,
             _ => usage(),
         }
         i += 1;
+    }
+
+    // the perf trajectory sweep is its own harness (no run matrix, no
+    // paper tables) and is excluded from `--exp all`: it measures this
+    // machine's kernels/engine, not the paper's evaluation
+    if exp == "perf" {
+        let quick = args.iter().any(|a| a == "--quick");
+        let t0 = std::time::Instant::now();
+        let report = ferret::harness::perf::run_perf(quick, kernel_threads);
+        println!("\n{}", report.to_markdown());
+        let path = bench_out.unwrap_or_else(|| {
+            let dir = ferret::config::repo_path("results");
+            let _ = std::fs::create_dir_all(&dir);
+            format!("{dir}/perf.json")
+        });
+        std::fs::write(&path, report.to_json()).expect("writing bench json");
+        eprintln!(
+            "[ferret-bench] perf sweep saved to {path} ({:.0}s)",
+            t0.elapsed().as_secs_f64()
+        );
+        return;
     }
 
     let t0 = std::time::Instant::now();

@@ -5,6 +5,7 @@
 //! Runs are cached inside a [`Bench`] so artifacts that share a run
 //! matrix (Table 1 / Table 7 / Fig. 4 / Fig. 7) execute it only once.
 
+pub mod perf;
 pub mod report;
 
 use std::collections::HashMap;

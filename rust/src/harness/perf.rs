@@ -1,0 +1,472 @@
+//! Performance trajectory experiment (`ferret_bench --exp perf`).
+//!
+//! Emits the numbers the committed bench trajectory tracks across PRs
+//! (`BENCH_*.json` at the repo root):
+//!
+//!   - **kernels** — GFLOP/s of each matmul flavor (fwd `x@w`, bwd-input
+//!     `g@wᵀ`, bwd-weight `xᵀ@g`) on the zoo's layer shapes, for the
+//!     naive reference loops, the tiled kernels at 1 thread, and the
+//!     tiled kernels at the requested thread count;
+//!   - **engine** — end-to-end batches/sec of the async engine per
+//!     executor×mode (sim/lockstep, threaded/lockstep, threaded/freerun)
+//!     and per kernel-thread setting;
+//!   - **steady_state** — buffer-pool allocations per microbatch after
+//!     warm-up (the zero-copy contract: ~0 once every size class has been
+//!     seen).
+//!
+//! The JSON schema is hand-rolled (no serde in this repo) and versioned
+//! by the `schema` field; CI regenerates a `--quick` report per commit
+//! and uploads it as an artifact, while the full report is regenerated
+//! manually and committed as `BENCH_<issue>.json`.
+
+use std::time::Instant;
+
+use crate::backend::kernels;
+use crate::backend::native::NativeBackend;
+use crate::compensate::CompKind;
+use crate::config::zoo::{default_zoo, LayerShape};
+use crate::ocl::OclKind;
+use crate::pipeline::engine::AsyncCfg;
+use crate::pipeline::executor::ExecutorKind;
+use crate::pipeline::sched::Mode;
+use crate::pipeline::{EngineParams, Session};
+use crate::planner::costmodel::decay_for_td;
+use crate::planner::{plan, Profile};
+use crate::stream::{DriftKind, StreamSpec, SyntheticStream};
+use crate::util::Rng;
+
+/// GFLOP/s of one matmul flavor on one layer shape, across kernel forms.
+#[derive(Debug, Clone)]
+pub struct KernelRecord {
+    /// "fwd" (`matmul_acc`), "bwd_dx" (`matmul_bt_acc`) or "bwd_dw"
+    /// (`matmul_at_acc`)
+    pub kernel: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub naive_gflops: f64,
+    pub tiled_gflops: f64,
+    /// tiled kernel at `threads` workers
+    pub tiled_mt_gflops: f64,
+    pub threads: usize,
+}
+
+/// End-to-end engine throughput for one executor×mode×threads cell.
+#[derive(Debug, Clone)]
+pub struct EngineRecord {
+    pub model: String,
+    pub executor: &'static str,
+    pub mode: &'static str,
+    pub kernel_threads: usize,
+    pub batches: usize,
+    pub wall_ms: f64,
+    pub batches_per_sec: f64,
+}
+
+/// Buffer-pool behavior after warm-up: `allocs_per_batch` ≈ 0 is the
+/// zero-copy steady state.
+#[derive(Debug, Clone)]
+pub struct SteadyRecord {
+    pub model: String,
+    pub warm_batches: usize,
+    pub measured_batches: usize,
+    pub takes_per_batch: f64,
+    pub allocs_per_batch: f64,
+}
+
+/// One full perf sweep, serializable as a BENCH_*.json trajectory point.
+#[derive(Debug, Clone, Default)]
+pub struct PerfReport {
+    pub kernels: Vec<KernelRecord>,
+    pub engine: Vec<EngineRecord>,
+    pub steady_state: Vec<SteadyRecord>,
+}
+
+fn fmt(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "0.0".into()
+    }
+}
+
+impl PerfReport {
+    /// The machine-readable trajectory point. Key order and field names
+    /// are part of the schema — committed BENCH files must diff cleanly
+    /// against regenerated ones.
+    pub fn to_json(&self) -> String {
+        let kernels: Vec<String> = self
+            .kernels
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"kernel\":\"{}\",\"m\":{},\"k\":{},\"n\":{},\
+                     \"naive_gflops\":{},\"tiled_gflops\":{},\
+                     \"tiled_mt_gflops\":{},\"threads\":{}}}",
+                    r.kernel,
+                    r.m,
+                    r.k,
+                    r.n,
+                    fmt(r.naive_gflops),
+                    fmt(r.tiled_gflops),
+                    fmt(r.tiled_mt_gflops),
+                    r.threads
+                )
+            })
+            .collect();
+        let engine: Vec<String> = self
+            .engine
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"model\":\"{}\",\"executor\":\"{}\",\"mode\":\"{}\",\
+                     \"kernel_threads\":{},\"batches\":{},\"wall_ms\":{},\
+                     \"batches_per_sec\":{}}}",
+                    r.model,
+                    r.executor,
+                    r.mode,
+                    r.kernel_threads,
+                    r.batches,
+                    fmt(r.wall_ms),
+                    fmt(r.batches_per_sec)
+                )
+            })
+            .collect();
+        let steady: Vec<String> = self
+            .steady_state
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"model\":\"{}\",\"warm_batches\":{},\
+                     \"measured_batches\":{},\"takes_per_batch\":{},\
+                     \"allocs_per_batch\":{}}}",
+                    r.model,
+                    r.warm_batches,
+                    r.measured_batches,
+                    fmt(r.takes_per_batch),
+                    fmt(r.allocs_per_batch)
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"bench\": \"BENCH_0006\",\n  \"schema\": 1,\n  \
+             \"kernels\": [\n{}\n  ],\n  \"engine\": [\n{}\n  ],\n  \
+             \"steady_state\": [\n{}\n  ]\n}}\n",
+            kernels.join(",\n"),
+            engine.join(",\n"),
+            steady.join(",\n")
+        )
+    }
+
+    /// Human-readable summary for stdout.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::from("### Perf trajectory (BENCH_0006)\n\n");
+        out.push_str("| kernel | m×k×n | naive GF/s | tiled GF/s | tiled×T GF/s | T |\n");
+        out.push_str("|---|---|---|---|---|---|\n");
+        for r in &self.kernels {
+            out.push_str(&format!(
+                "| {} | {}×{}×{} | {:.2} | {:.2} | {:.2} | {} |\n",
+                r.kernel, r.m, r.k, r.n, r.naive_gflops, r.tiled_gflops, r.tiled_mt_gflops, r.threads
+            ));
+        }
+        out.push_str("\n| engine | executor | mode | kthreads | batches/s |\n");
+        out.push_str("|---|---|---|---|---|\n");
+        for r in &self.engine {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {:.1} |\n",
+                r.model, r.executor, r.mode, r.kernel_threads, r.batches_per_sec
+            ));
+        }
+        out.push_str("\n| steady state | warm | measured | takes/batch | allocs/batch |\n");
+        out.push_str("|---|---|---|---|---|\n");
+        for r in &self.steady_state {
+            out.push_str(&format!(
+                "| {} | {} | {} | {:.1} | {:.2} |\n",
+                r.model, r.warm_batches, r.measured_batches, r.takes_per_batch, r.allocs_per_batch
+            ));
+        }
+        out
+    }
+}
+
+/// Median-of-reps wall seconds of `f` (one untimed warm-up call).
+fn time_reps(reps: u32, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut samples = Vec::with_capacity(reps as usize);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn gflops(flops: usize, secs: f64) -> f64 {
+    flops as f64 / secs.max(1e-12) / 1e9
+}
+
+/// Kernel sweep over one layer shape at batch `b`: all three matmul
+/// flavors, naive vs tiled vs tiled×threads. Operands are dense (no
+/// ReLU zeros) so the sparse-skip path does not flatter either side.
+fn kernel_records(shape: &LayerShape, b: usize, threads: usize, reps: u32) -> Vec<KernelRecord> {
+    let (kin, kout) = (shape.in_dim, shape.out_dim);
+    let mut rng = Rng::new(0x5EED_0006);
+    let x: Vec<f32> = (0..b * kin).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let w: Vec<f32> = (0..kin * kout).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+    let gz: Vec<f32> = (0..b * kout).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let flops = 2 * b * kin * kout;
+    let mut out = Vec::new();
+
+    // fwd: z (b × out) += x (b × in) @ w (in × out)
+    let mut z = vec![0.0f32; b * kout];
+    let naive = time_reps(reps, || kernels::naive_matmul_acc(&mut z, &x, &w, b, kin, kout));
+    let tiled = time_reps(reps, || kernels::matmul_acc(&mut z, &x, &w, b, kin, kout, 1));
+    let mt = time_reps(reps, || kernels::matmul_acc(&mut z, &x, &w, b, kin, kout, threads));
+    out.push(KernelRecord {
+        kernel: "fwd",
+        m: b,
+        k: kin,
+        n: kout,
+        naive_gflops: gflops(flops, naive),
+        tiled_gflops: gflops(flops, tiled),
+        tiled_mt_gflops: gflops(flops, mt),
+        threads,
+    });
+
+    // bwd-input: gx (b × in) += gz (b × out) @ wᵀ, w (in × out)
+    let mut gx = vec![0.0f32; b * kin];
+    let naive = time_reps(reps, || kernels::naive_matmul_bt_acc(&mut gx, &gz, &w, b, kout, kin));
+    let tiled = time_reps(reps, || kernels::matmul_bt_acc(&mut gx, &gz, &w, b, kout, kin, 1));
+    let mt = time_reps(reps, || kernels::matmul_bt_acc(&mut gx, &gz, &w, b, kout, kin, threads));
+    out.push(KernelRecord {
+        kernel: "bwd_dx",
+        m: b,
+        k: kout,
+        n: kin,
+        naive_gflops: gflops(flops, naive),
+        tiled_gflops: gflops(flops, tiled),
+        tiled_mt_gflops: gflops(flops, mt),
+        threads,
+    });
+
+    // bwd-weight: gw (in × out) += xᵀ @ gz, x (b × in)
+    let mut gw = vec![0.0f32; kin * kout];
+    let naive = time_reps(reps, || kernels::naive_matmul_at_acc(&mut gw, &x, &gz, kin, b, kout));
+    let tiled = time_reps(reps, || kernels::matmul_at_acc(&mut gw, &x, &gz, kin, b, kout, 1));
+    let mt = time_reps(reps, || kernels::matmul_at_acc(&mut gw, &x, &gz, kin, b, kout, threads));
+    out.push(KernelRecord {
+        kernel: "bwd_dw",
+        m: kin,
+        k: b,
+        n: kout,
+        naive_gflops: gflops(flops, naive),
+        tiled_gflops: gflops(flops, tiled),
+        tiled_mt_gflops: gflops(flops, mt),
+        threads,
+    });
+    out
+}
+
+fn mk_stream(model: &crate::config::ModelSpec, batch: usize, n: usize) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "perf".into(),
+        features: model.features(),
+        classes: model.classes(),
+        batch,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 4.0,
+        noise: 0.8,
+        seed: 1,
+    })
+}
+
+/// Run the full perf sweep. `quick` trims shapes/batches for CI smoke;
+/// `kernel_threads` = 0 resolves the usual knob chain (env, then 1) but
+/// floors at 2 so the multi-thread column is always a real comparison.
+pub fn run_perf(quick: bool, kernel_threads: usize) -> PerfReport {
+    let zoo = default_zoo().expect("zoo");
+    let threads = kernels::resolve_threads(kernel_threads).max(2);
+    let mut report = PerfReport::default();
+
+    // --- kernels: the largest layer of each model (the time sink) plus
+    // the smallest distinct shape (overhead-dominated regime) ---
+    let mut shapes: Vec<LayerShape> = zoo
+        .models
+        .values()
+        .filter_map(|m| m.layers().into_iter().max_by_key(|l| l.param_count()))
+        .collect();
+    shapes.sort();
+    shapes.dedup();
+    if let Some(small) = zoo.distinct_layer_shapes().into_iter().min_by_key(|l| l.param_count()) {
+        if !shapes.contains(&small) {
+            shapes.insert(0, small);
+        }
+    }
+    if quick {
+        shapes.truncate(2);
+    }
+    for shape in &shapes {
+        let flops = 2 * zoo.batch * shape.in_dim * shape.out_dim;
+        let reps = ((2e8 / flops.max(1) as f64) as u32).clamp(3, 40) / if quick { 3 } else { 1 };
+        report.kernels.extend(kernel_records(shape, zoo.batch, threads, reps.max(1)));
+    }
+
+    // --- engine: batches/sec per executor×mode on the unconstrained
+    // Ferret plan (the paper's hot path) ---
+    let models: &[&str] = if quick { &["mnistnet10"] } else { &["mnistnet10", "convnet10", "resnet11"] };
+    let n = if quick { 16 } else { 60 };
+    for model_name in models {
+        let model = zoo.model(model_name).expect("model").clone();
+        let prof = Profile::analytic(&model, zoo.batch);
+        let td = prof.default_td();
+        let out = plan(&prof, td, f64::INFINITY, decay_for_td(td));
+        let combos: [(ExecutorKind, Mode, usize); 4] = [
+            (ExecutorKind::Sim, Mode::Lockstep, 1),
+            (ExecutorKind::Sim, Mode::Lockstep, threads),
+            (ExecutorKind::Threaded, Mode::Lockstep, 1),
+            (ExecutorKind::Threaded, Mode::Freerun, 1),
+        ];
+        for (exec, mode, kthreads) in combos {
+            let cfg = AsyncCfg::ferret(out.partition.clone(), out.config.clone(), CompKind::IterFisher);
+            let ep = EngineParams { lr: 0.04, seed: 1, kernel_threads: kthreads, ..Default::default() };
+            let mut plugin = OclKind::Vanilla.build(1);
+            let mut stream = mk_stream(&model, zoo.batch, n);
+            let t0 = Instant::now();
+            let _ = Session::builder(&NativeBackend, &model)
+                .config(cfg)
+                .plugin(plugin.as_mut())
+                .engine_params(ep)
+                .executor(exec)
+                .mode(mode)
+                .batch(zoo.batch)
+                .build()
+                .expect("perf session")
+                .run_stream(&mut stream);
+            let dt = t0.elapsed().as_secs_f64();
+            report.engine.push(EngineRecord {
+                model: model_name.to_string(),
+                executor: exec.name(),
+                mode: mode.name(),
+                kernel_threads: kthreads,
+                batches: n,
+                wall_ms: dt * 1e3,
+                batches_per_sec: n as f64 / dt.max(1e-12),
+            });
+        }
+    }
+
+    // --- steady state: pool allocations per microbatch once warm (push
+    // API: warm W batches, snapshot, measure the next M) ---
+    let warm = if quick { 8 } else { 16 };
+    let measure = if quick { 8 } else { 32 };
+    for model_name in models {
+        let model = zoo.model(model_name).expect("model").clone();
+        let prof = Profile::analytic(&model, zoo.batch);
+        let td = prof.default_td();
+        let out = plan(&prof, td, f64::INFINITY, decay_for_td(td));
+        let cfg = AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher);
+        let ep = EngineParams { lr: 0.04, seed: 1, ..Default::default() };
+        let mut plugin = OclKind::Vanilla.build(1);
+        let mut stream = mk_stream(&model, zoo.batch, warm + measure);
+        let mut session = Session::builder(&NativeBackend, &model)
+            .config(cfg)
+            .plugin(plugin.as_mut())
+            .engine_params(ep)
+            .executor(ExecutorKind::Sim)
+            .mode(Mode::Lockstep)
+            .batch(zoo.batch)
+            .build()
+            .expect("perf session");
+        for _ in 0..warm {
+            let b = stream.next_batch().expect("warm batch");
+            session.ingest(b).expect("ingest");
+            session.drain();
+        }
+        let before = session.pool_stats();
+        for _ in 0..measure {
+            let b = stream.next_batch().expect("measure batch");
+            session.ingest(b).expect("ingest");
+            session.drain();
+        }
+        let delta = session.pool_stats().since(&before);
+        report.steady_state.push(SteadyRecord {
+            model: model_name.to_string(),
+            warm_batches: warm,
+            measured_batches: measure,
+            takes_per_batch: delta.takes as f64 / measure as f64,
+            allocs_per_batch: delta.misses as f64 / measure as f64,
+        });
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_schema_has_three_sections_and_stable_keys() {
+        let report = PerfReport {
+            kernels: vec![KernelRecord {
+                kernel: "fwd",
+                m: 8,
+                k: 4,
+                n: 2,
+                naive_gflops: 1.0,
+                tiled_gflops: 2.5,
+                tiled_mt_gflops: 4.0,
+                threads: 4,
+            }],
+            engine: vec![EngineRecord {
+                model: "mnistnet10".into(),
+                executor: "sim",
+                mode: "lockstep",
+                kernel_threads: 1,
+                batches: 16,
+                wall_ms: 10.0,
+                batches_per_sec: 1600.0,
+            }],
+            steady_state: vec![SteadyRecord {
+                model: "mnistnet10".into(),
+                warm_batches: 8,
+                measured_batches: 8,
+                takes_per_batch: 36.0,
+                allocs_per_batch: 0.0,
+            }],
+        };
+        let json = report.to_json();
+        for key in [
+            "\"bench\": \"BENCH_0006\"",
+            "\"schema\": 1",
+            "\"kernels\"",
+            "\"engine\"",
+            "\"steady_state\"",
+            "\"naive_gflops\":1.000",
+            "\"tiled_mt_gflops\":4.000",
+            "\"batches_per_sec\":1600.000",
+            "\"allocs_per_batch\":0.000",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let md = report.to_markdown();
+        assert!(md.contains("| fwd | 8×4×2 |"));
+    }
+
+    #[test]
+    fn quick_sweep_runs_and_is_plausible() {
+        let r = run_perf(true, 2);
+        assert!(!r.kernels.is_empty() && !r.engine.is_empty() && !r.steady_state.is_empty());
+        for k in &r.kernels {
+            assert!(k.naive_gflops > 0.0 && k.tiled_gflops > 0.0, "{k:?}");
+        }
+        for e in &r.engine {
+            assert!(e.batches_per_sec > 0.0, "{e:?}");
+        }
+        for s in &r.steady_state {
+            // warm steady state must at least not allocate on every take
+            assert!(s.allocs_per_batch < s.takes_per_batch, "{s:?}");
+        }
+    }
+}

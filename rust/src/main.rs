@@ -11,6 +11,7 @@
 //!         [--backend native|xla] [--executor sim|threaded]
 //!         [--mode lockstep|freerun]
 //!         [--budget-schedule <bytes>@<at>[,...]]
+//!         [--kernel-threads K] [--warmup-profile R]
 //!         Plan + run full Ferret on one of the paper's 20 settings and
 //!         report oacc/tacc/memory/adaptation rate. `--executor threaded`
 //!         runs one OS thread per (worker, stage) device (real
@@ -24,6 +25,14 @@
 //!         signal: e.g. `12mb@b60` halves the budget at batch 60 — the
 //!         engine drains, re-plans against measured stage times, migrates
 //!         the learned weights into the new partition, and resumes.
+//!
+//!         `--kernel-threads K` parallelizes the native stage kernels
+//!         K-way (bit-identical to serial; default 1, or the
+//!         FERRET_KERNEL_THREADS env var). `--warmup-profile R` seeds the
+//!         *initial* plan from a measured profile (R timed reps per layer)
+//!         instead of the analytic FLOPs model; default off — measured
+//!         profiles are wall-clock dependent, so deterministic runs keep
+//!         the analytic base.
 //!
 //!   settings
 //!         List the 20 paper settings with their indices.
@@ -227,7 +236,15 @@ fn cmd_run(opts: &Opts) {
         seed,
     ));
     let mut plugin = ocl.build(seed);
-    let ep = EngineParams { lr: 0.1, seed, ..Default::default() };
+    let kernel_threads = opts
+        .get("kernel-threads")
+        .map(|t| parse_or_exit::<usize>(t, "kernel-threads", "a thread count"))
+        .unwrap_or(0); // 0 = FERRET_KERNEL_THREADS env, default serial
+    let warmup_reps = opts
+        .get("warmup-profile")
+        .map(|r| parse_or_exit::<u32>(r, "warmup-profile", "a rep count"))
+        .unwrap_or(0); // 0 = analytic initial profile (deterministic)
+    let ep = EngineParams { lr: 0.1, seed, kernel_threads, ..Default::default() };
     let dynamic = budget_sched.is_dynamic();
     let cfg = AsyncCfg::ferret(out.partition, out.config, comp).with_budget(budget_sched);
     let t0 = std::time::Instant::now();
@@ -238,6 +255,7 @@ fn cmd_run(opts: &Opts) {
         .executor(executor)
         .mode(mode)
         .batch(zoo.batch)
+        .measured_profile(warmup_reps)
         .build()
     {
         Ok(s) => s,
@@ -272,6 +290,14 @@ fn cmd_run(opts: &Opts) {
         println!("staleness  : {}", r.metrics.staleness_summary());
     }
     println!("final loss : {:.4}", r.metrics.mean_recent_loss(16));
+    println!(
+        "buffer pool: {} takes, {} allocs, {} recycled ({:.1}% hit)",
+        r.metrics.pool.takes,
+        r.metrics.pool.misses,
+        r.metrics.pool.puts,
+        100.0 * (r.metrics.pool.takes.saturating_sub(r.metrics.pool.misses)) as f64
+            / (r.metrics.pool.takes.max(1)) as f64
+    );
     println!("wallclock  : {:.1}s", t0.elapsed().as_secs_f64());
 }
 

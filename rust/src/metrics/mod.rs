@@ -91,6 +91,9 @@ pub struct RunMetrics {
     pub drains: Vec<u64>,
     /// planner-predicted footprint after each re-plan: `(t, bytes)`
     pub plan_trace: Vec<(u64, f64)>,
+    /// final counters of the session's shared buffer pool (takes, misses,
+    /// puts, drops) — `misses` ≪ `takes` is the zero-copy steady state
+    pub pool: crate::backend::PoolStats,
 }
 
 /// Histogram cap: staleness beyond this lands in the overflow bucket.

@@ -37,6 +37,13 @@ impl LayerParams {
         self.w.len() + self.b.len()
     }
 
+    /// Tear a (uniquely owned) layer into its raw buffers — how retired
+    /// parameter versions travel back into the engine's
+    /// [`crate::backend::BufferPool`] once their `Arc` count hits one.
+    pub fn into_buffers(self) -> (Vec<f32>, Vec<f32>) {
+        (self.w, self.b)
+    }
+
     /// Elementwise delta `self - other` (for Iter-Fisher version steps).
     pub fn delta(&self, other: &LayerParams) -> GradBuf {
         debug_assert_eq!(self.w.len(), other.w.len());
@@ -130,6 +137,12 @@ impl LiveParams {
     /// Install freshly updated parameters for layer `l` (copy-on-write).
     pub fn set(&mut self, l: usize, p: LayerParams) {
         self.layers[l] = Arc::new(p);
+    }
+
+    /// Like [`LiveParams::set`], but hands back the retired snapshot so
+    /// the engine can recycle its buffers once no stash/flight aliases it.
+    pub fn replace(&mut self, l: usize, p: LayerParams) -> SharedParams {
+        std::mem::replace(&mut self.layers[l], Arc::new(p))
     }
 
     pub fn num_layers(&self) -> usize {

@@ -31,14 +31,19 @@ impl VersionStash {
     }
 
     /// Record a new version snapshot (monotonically increasing versions).
-    pub fn push(&mut self, version: u64, params: SharedParams) {
+    /// Returns the evicted snapshot, if the cap forced one out — callers
+    /// on the hot path recycle its buffers through the engine pool once
+    /// the `Arc` is unique (cap ≥ 2 means at most one eviction per push).
+    pub fn push(&mut self, version: u64, params: SharedParams) -> Option<SharedParams> {
         if let Some((last, _)) = self.entries.back() {
             assert!(version > *last, "versions must increase");
         }
         self.entries.push_back((version, params));
+        let mut evicted = None;
         while self.entries.len() > self.cap {
-            self.entries.pop_front();
+            evicted = self.entries.pop_front().map(|(_, p)| p);
         }
+        evicted
     }
 
     pub fn latest_version(&self) -> Option<u64> {
@@ -133,11 +138,21 @@ impl StashSet {
     }
 
     /// Record the new version of every layer in `layers` after a stage
-    /// update.
-    pub fn push_stage(&mut self, layers: &[usize], version: u64, live: &LiveParams) {
+    /// update. Returns the snapshots the caps evicted (at most one per
+    /// layer) so the caller can recycle their buffers.
+    pub fn push_stage(
+        &mut self,
+        layers: &[usize],
+        version: u64,
+        live: &LiveParams,
+    ) -> Vec<SharedParams> {
+        let mut evicted = Vec::new();
         for &l in layers {
-            self.stashes[l].push(version, live.layers[l].clone());
+            if let Some(p) = self.stashes[l].push(version, live.layers[l].clone()) {
+                evicted.push(p);
+            }
         }
+        evicted
     }
 
     pub fn delta_chain(&self, l: usize, from: u64, to: u64) -> Option<Vec<GradBuf>> {

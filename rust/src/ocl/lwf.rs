@@ -30,6 +30,12 @@ impl OclPlugin for LwfPlugin {
         "LwF"
     }
 
+    /// LwF's head distills toward a frozen teacher — it is NOT plain CE,
+    /// so the freerun engine must keep it on the scheduler thread.
+    fn ce_loss_head(&self) -> bool {
+        false
+    }
+
     fn loss_grad(
         &mut self,
         logits: &[f32],

@@ -94,6 +94,15 @@ pub trait OclPlugin: Send {
         ctx.backend.loss_grad_ce(ctx.classes, logits, labels)
     }
 
+    /// True when [`OclPlugin::loss_grad`] is exactly plain softmax CE. The
+    /// freerun engine uses this to offload the loss head onto the
+    /// last-stage device thread (the device computes CE without plugin
+    /// state). A plugin that overrides `loss_grad` MUST override this to
+    /// return false, or its head will be bypassed in freerun mode.
+    fn ce_loss_head(&self) -> bool {
+        true
+    }
+
     /// Per-layer gradient adjustment at update time (importance penalty).
     fn adjust_layer_grad(
         &mut self,

@@ -32,14 +32,16 @@
 
 use std::sync::Arc;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, Workspace};
 use crate::budget::{BudgetSchedule, LedgerSnapshot};
 use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::RunMetrics;
 use crate::model::{GradBuf, LiveParams, SharedParams, StashSet};
 use crate::ocl::{OclCtx, OclPlugin};
-use crate::pipeline::executor::{DeviceTask, Executor, StageCell, StageTask, UpdateTask};
+use crate::pipeline::executor::{
+    recycle_grad, recycle_params, DeviceTask, Executor, LossSpec, StageCell, StageTask, UpdateTask,
+};
 use crate::pipeline::sched::{predict_only, Flight, Job, SchedCore, StageMeta, WorkSel};
 use crate::pipeline::EngineParams;
 use crate::planner::costmodel::{plan_versions, PipeConfig};
@@ -179,6 +181,14 @@ pub struct AsyncEngine<'a> {
     /// an imperative `Session::set_budget` made the budget dynamic even
     /// though the configured schedule is static
     forced_dynamic: bool,
+    /// session-shared buffer pool + kernel thread count; scheduler-side
+    /// buffer copies and lockstep updates draw from (and recycle into) the
+    /// same pool the executors use
+    ws: Workspace,
+    /// freerun only: ship the plain-CE loss head with last-stage forward
+    /// tasks so it runs on the device thread (set by the session when the
+    /// plugin reports [`crate::ocl::OclPlugin::ce_loss_head`])
+    loss_offload: bool,
 }
 
 /// Accumulated measured forward/backward service times of one stage
@@ -273,7 +283,23 @@ impl<'a> AsyncEngine<'a> {
             cells: Vec::new(),
             flights: 0,
             forced_dynamic: false,
+            ws: Workspace::serial(),
+            loss_offload: false,
         }
+    }
+
+    /// Install the session-shared workspace (pool + kernel threads). The
+    /// session passes the same handle to the executor it builds, so device
+    /// threads and the scheduler recycle through one pool.
+    pub(crate) fn set_workspace(&mut self, ws: Workspace) {
+        self.ws = ws;
+    }
+
+    /// Enable shipping the CE loss head with last-stage forward tasks
+    /// (freerun only; requires a plain-CE plugin — see
+    /// [`crate::ocl::OclPlugin::ce_loss_head`]).
+    pub(crate) fn set_loss_offload(&mut self, on: bool) {
+        self.loss_offload = on;
     }
 
     /// The budget is dynamic: a time-varying schedule is configured, or an
@@ -310,7 +336,21 @@ impl<'a> AsyncEngine<'a> {
         gout: Option<Vec<f32>>,
     ) -> StageTask {
         let layers = self.sched.stages[s].layers.clone();
-        StageTask { shapes: layers.map(|l| self.shapes[l]).collect(), params, x, rows, gout }
+        StageTask {
+            shapes: layers.map(|l| self.shapes[l]).collect(),
+            params,
+            x,
+            rows,
+            gout,
+            loss: None,
+        }
+    }
+
+    /// Pool-backed copy of a slice (steady state: no allocation).
+    fn pooled_copy(&self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.ws.pool.take(src.len());
+        v.copy_from_slice(src);
+        v
     }
 
     /// Build the stage task for a forward on the live parameters.
@@ -328,6 +368,47 @@ impl<'a> AsyncEngine<'a> {
         self.stage_task(s, params, x, rows, Some(gout))
     }
 
+    /// Fold a backward's per-layer gradients into the slot accumulator,
+    /// recycling the incoming buffers when they only added into an
+    /// existing accumulator. Shared by the lockstep and freerun paths.
+    fn accumulate(&mut self, w: usize, s: usize, job: usize, grads: Vec<GradBuf>) {
+        let arrival = self.sched.jobs[job].arrival;
+        let fwd_ver = self.sched.jobs[job].fwd_version[s];
+        let slot = &mut self.sched.slots[w][s];
+        match &mut slot.acc {
+            None => slot.acc = Some(grads),
+            Some(a) => {
+                for (ag, g) in a.iter_mut().zip(&grads) {
+                    ag.add(g);
+                }
+                for g in grads {
+                    recycle_grad(&self.ws, g);
+                }
+            }
+        }
+        let slot = &mut self.sched.slots[w][s];
+        slot.acc_count += 1;
+        slot.acc_arrivals.push(arrival);
+        slot.acc_from_version = slot.acc_from_version.min(fwd_ver);
+    }
+
+    /// Retire a finished (or omitted) job and recycle every buffer it
+    /// still holds — its stream batch copy, unconsumed stage inputs, and
+    /// any parked gradient.
+    fn retire_job(&mut self, job: usize) {
+        let bx = std::mem::take(&mut self.sched.jobs[job].batch_x);
+        self.ws.pool.put(bx);
+        for i in 0..self.sched.num_stages() {
+            if let Some(x) = self.sched.jobs[job].stage_inputs[i].take() {
+                self.ws.pool.put(x);
+            }
+        }
+        if let Some(g) = self.sched.jobs[job].grad.take() {
+            self.ws.pool.put(g);
+        }
+        self.sched.retire(job);
+    }
+
     /// Try to start work on a (worker, stage) device at time `t`.
     fn kick(&mut self, w: usize, s: usize, t: u64, executor: &mut dyn Executor) {
         loop {
@@ -341,7 +422,7 @@ impl<'a> AsyncEngine<'a> {
                     if omit > 0 && self.sched.jobs[job].seq % (omit + 1) != 0 {
                         // T3: skip this backward (and the whole upstream
                         // chain); device still free — look for more work
-                        self.sched.retire(job);
+                        self.retire_job(job);
                         continue;
                     }
                     let rows = self.sched.jobs[job].y.len();
@@ -365,7 +446,10 @@ impl<'a> AsyncEngine<'a> {
                 }
                 WorkSel::Fwd(job) => {
                     let rows = self.sched.jobs[job].y.len();
-                    let x = self.sched.jobs[job].stage_inputs[s].clone().expect("stage input");
+                    // the stage keeps its input for the backward recompute,
+                    // so the forward gets a pooled copy, not a fresh clone
+                    let x = self
+                        .pooled_copy(self.sched.jobs[job].stage_inputs[s].as_ref().expect("stage input"));
                     self.sched.jobs[job].fwd_version[s] = self.sched.version[s];
                     executor.start((w, s), DeviceTask::Stage(self.fwd_task(s, x, rows)));
                     let end = t + self.sched.stages[s].tf.max(1);
@@ -416,12 +500,22 @@ impl<'a> AsyncEngine<'a> {
             };
             let (mut g, lr_scale) = self.comps[l].compensate(g, &cctx);
             io.plugin.adjust_layer_grad(l, &mut g, &self.params.layers[l], &io.ctx);
-            let updated = self.backend.sgd(&self.params.layers[l], &g, self.lr * lr_scale);
-            self.params.set(l, updated);
+            let updated = self.backend.sgd_pooled(&self.params.layers[l], &g, self.lr * lr_scale, &self.ws);
+            recycle_grad(&self.ws, g);
+            for d in chain {
+                recycle_grad(&self.ws, d);
+            }
+            if let Some(d) = jump {
+                recycle_grad(&self.ws, d);
+            }
+            let old = self.params.replace(l, updated);
+            recycle_params(&self.ws, old);
         }
         self.sched.version[s] += 1;
         let new_ver = self.sched.version[s];
-        self.stash.push_stage(&layers, new_ver, &self.params);
+        for evicted in self.stash.push_stage(&layers, new_ver, &self.params) {
+            recycle_params(&self.ws, evicted);
+        }
         let frac = self.sched.stages[s].params as f64 / self.total_params as f64;
         for a in arrivals {
             io.metrics.record_update(t.saturating_sub(a), self.decay_c, frac);
@@ -600,7 +694,7 @@ impl<'a> AsyncEngine<'a> {
         let batch = io.plugin.augment(batch, &self.params.layers, &io.ctx);
         let p = self.sched.num_stages();
         let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
-        stage_inputs[0] = Some(batch.x.clone());
+        stage_inputs[0] = Some(self.pooled_copy(&batch.x));
         let (_, w) = self.sched.admit(Job {
             arrival,
             seq,
@@ -638,13 +732,15 @@ impl<'a> AsyncEngine<'a> {
             } else {
                 // logits ready: prediction + loss head
                 let logits = result.out;
-                let (y, bx) =
-                    (self.sched.jobs[job].y.clone(), self.sched.jobs[job].batch_x.clone());
+                let y = self.sched.jobs[job].y.clone();
+                let bx = self.pooled_copy(&self.sched.jobs[job].batch_x);
                 io.metrics
                     .record_prediction(t, crate::backend::accuracy(io.ctx.classes, &logits, &y));
                 io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
                 let (gl, loss) = io.plugin.loss_grad(&logits, &y, &bx, &io.ctx);
                 io.metrics.record_loss(t, loss);
+                self.ws.pool.put(logits);
+                self.ws.pool.put(bx);
                 self.sched.jobs[job].grad = Some(gl);
                 self.sched.slots[w][s].bwd_q.push_back(job);
             }
@@ -652,20 +748,8 @@ impl<'a> AsyncEngine<'a> {
             // deliver the backward results to the accumulator
             let grads = result.grads.expect("bwd grads");
             let gx = result.out;
-            let slot = &mut self.sched.slots[w][s];
-            match &mut slot.acc {
-                None => slot.acc = Some(grads),
-                Some(a) => {
-                    for (ag, g) in a.iter_mut().zip(&grads) {
-                        ag.add(g);
-                    }
-                }
-            }
-            slot.acc_count += 1;
-            slot.acc_arrivals.push(self.sched.jobs[job].arrival);
-            slot.acc_from_version =
-                slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
-            if slot.acc_count >= self.cfg.pipe.workers[w].accum[s] {
+            self.accumulate(w, s, job, grads);
+            if self.sched.slots[w][s].acc_count >= self.cfg.pipe.workers[w].accum[s] {
                 self.apply_update(w, s, t, io);
             }
             if s > 0 {
@@ -673,7 +757,8 @@ impl<'a> AsyncEngine<'a> {
                 self.sched.slots[w][s - 1].bwd_q.push_back(job);
                 self.kick(w, s - 1, t, io.executor);
             } else {
-                self.sched.retire(job);
+                self.ws.pool.put(gx);
+                self.retire_job(job);
             }
         }
         self.kick(w, s, t, io.executor);
@@ -770,7 +855,7 @@ impl<'a> AsyncEngine<'a> {
                     if omit > 0 && self.sched.jobs[job].seq % (omit + 1) != 0 {
                         // T3: skip this backward (and the whole upstream
                         // chain); device still free — look for more work
-                        self.sched.retire(job);
+                        self.retire_job(job);
                         continue;
                     }
                     let rows = self.sched.jobs[job].y.len();
@@ -785,10 +870,19 @@ impl<'a> AsyncEngine<'a> {
                 }
                 WorkSel::Fwd(job) => {
                     let rows = self.sched.jobs[job].y.len();
-                    let x = self.sched.jobs[job].stage_inputs[s].clone().expect("stage input");
+                    let x = self
+                        .pooled_copy(self.sched.jobs[job].stage_inputs[s].as_ref().expect("stage input"));
                     let (params, ver) = self.cells[s].snapshot();
                     self.sched.jobs[job].fwd_version[s] = ver;
-                    let task = self.stage_task(s, params, x, rows, None);
+                    let mut task = self.stage_task(s, params, x, rows, None);
+                    if self.loss_offload && s + 1 == self.sched.num_stages() {
+                        // ship the CE loss head with the last-stage forward:
+                        // the device computes dL/dlogits + loss + accuracy
+                        task.loss = Some(LossSpec {
+                            classes: self.shapes.last().expect("layers").out_dim,
+                            labels: self.sched.jobs[job].y.clone(),
+                        });
+                    }
                     executor.start((w, s), DeviceTask::Stage(task));
                     self.sched.dispatch_flight(w, s, Flight::Fwd { job }, t);
                     self.flights += 1;
@@ -872,7 +966,7 @@ impl<'a> AsyncEngine<'a> {
         let batch = io.plugin.augment(batch, &params, &io.ctx);
         let p = self.sched.num_stages();
         let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
-        stage_inputs[0] = Some(batch.x.clone());
+        stage_inputs[0] = Some(self.pooled_copy(&batch.x));
         let (_, w) = self.sched.admit(Job {
             arrival,
             seq,
@@ -909,16 +1003,29 @@ impl<'a> AsyncEngine<'a> {
                     self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
                     self.sched.slots[w][s + 1].fwd_q.push_back(job);
                     self.kick_free(w, s + 1, t, io.executor);
-                } else {
-                    // logits ready: prediction + loss head
+                } else if let Some((gl, loss, acc)) = result.loss {
+                    // offloaded loss head: the device already computed
+                    // dL/dlogits + loss + accuracy (bitwise what the
+                    // scheduler-side CE path would produce)
                     let logits = result.out;
-                    let (y, bx) =
-                        (self.sched.jobs[job].y.clone(), self.sched.jobs[job].batch_x.clone());
+                    io.metrics.record_prediction(t, acc);
+                    io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                    io.metrics.record_loss(t, loss);
+                    self.ws.pool.put(logits);
+                    self.sched.jobs[job].grad = Some(gl);
+                    self.sched.slots[w][s].bwd_q.push_back(job);
+                } else {
+                    // logits ready: prediction + loss head on this thread
+                    let logits = result.out;
+                    let y = self.sched.jobs[job].y.clone();
+                    let bx = self.pooled_copy(&self.sched.jobs[job].batch_x);
                     io.metrics
                         .record_prediction(t, crate::backend::accuracy(io.ctx.classes, &logits, &y));
                     io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
                     let (gl, loss) = io.plugin.loss_grad(&logits, &y, &bx, &io.ctx);
                     io.metrics.record_loss(t, loss);
+                    self.ws.pool.put(logits);
+                    self.ws.pool.put(bx);
                     self.sched.jobs[job].grad = Some(gl);
                     self.sched.slots[w][s].bwd_q.push_back(job);
                 }
@@ -929,19 +1036,7 @@ impl<'a> AsyncEngine<'a> {
                 let result = out.into_stage();
                 let grads = result.grads.expect("bwd grads");
                 let gx = result.out;
-                let slot = &mut self.sched.slots[w][s];
-                match &mut slot.acc {
-                    None => slot.acc = Some(grads),
-                    Some(a) => {
-                        for (ag, g) in a.iter_mut().zip(&grads) {
-                            ag.add(g);
-                        }
-                    }
-                }
-                slot.acc_count += 1;
-                slot.acc_arrivals.push(self.sched.jobs[job].arrival);
-                slot.acc_from_version =
-                    slot.acc_from_version.min(self.sched.jobs[job].fwd_version[s]);
+                self.accumulate(w, s, job, grads);
                 if self.sched.slots[w][s].acc_count >= self.cfg.pipe.workers[w].accum[s] {
                     self.dispatch_update_free(w, s, t, io);
                 }
@@ -950,7 +1045,8 @@ impl<'a> AsyncEngine<'a> {
                     self.sched.slots[w][s - 1].bwd_q.push_back(job);
                     self.kick_free(w, s - 1, t, io.executor);
                 } else {
-                    self.sched.retire(job);
+                    self.ws.pool.put(gx);
+                    self.retire_job(job);
                 }
             }
             Flight::Update { arrivals } => {

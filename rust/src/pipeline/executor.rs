@@ -29,6 +29,25 @@
 //!   - `try_finish_any` / `wait_any` — non-blocking (resp. bounded-wait)
 //!     drain of *any* device's completion, in real completion order. The
 //!     freerun engine reacts to whichever device finishes first.
+//!
+//! # Buffers and kernel threads
+//!
+//! Every executor carries a [`Workspace`]: the session-wide shared
+//! [`crate::backend::BufferPool`] plus the intra-stage kernel thread
+//! count. Stage math runs through the backend's `*_pooled` entry points,
+//! consumed inputs and retired gradient buffers go back to the pool, and
+//! steady-state microbatches allocate nothing. Determinism is unaffected:
+//! the tiled kernels are bit-identical across kernel thread counts (see
+//! [`crate::backend::kernels`]), and pooling only recycles allocations —
+//! it never changes a value. The legacy constructors
+//! ([`SimExecutor::new`], [`ThreadedExecutor::spawn`]) use a private
+//! serial workspace.
+//!
+//! In freerun mode a forward [`StageTask`] may additionally carry a
+//! [`LossSpec`]: the last-stage device then computes the CE loss head
+//! (dL/dlogits, loss, accuracy) itself, keeping the scheduler thread's
+//! admit/drain critical section free of numeric work. The lockstep path
+//! never sets it, so lockstep metrics stay byte-identical.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -36,7 +55,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::backend::Backend;
+use crate::backend::{Backend, Workspace};
 use crate::compensate::{CompContext, Compensator};
 use crate::config::LayerShape;
 use crate::model::{GradBuf, SharedParams, VersionStash};
@@ -79,6 +98,16 @@ pub struct StageTask {
     pub rows: usize,
     /// upstream gradient — present iff this is a backward task
     pub gout: Option<Vec<f32>>,
+    /// offloaded CE loss head (freerun, last-stage forwards only): the
+    /// device computes dL/dlogits + loss + accuracy from its own forward
+    /// output instead of shipping logits back to the scheduler thread
+    pub loss: Option<LossSpec>,
+}
+
+/// The data a device needs to run the plain-CE loss head in place.
+pub struct LossSpec {
+    pub classes: usize,
+    pub labels: Vec<i32>,
 }
 
 /// Result of a [`StageTask`]: forward output activations (or logits), or
@@ -86,6 +115,9 @@ pub struct StageTask {
 pub struct StageOutput {
     pub out: Vec<f32>,
     pub grads: Option<Vec<GradBuf>>,
+    /// (dL/dlogits, loss, accuracy) — present iff the task carried a
+    /// [`LossSpec`] (offloaded freerun loss head)
+    pub loss: Option<(Vec<f32>, f32, f64)>,
 }
 
 /// Live state of one pipeline stage, shared between the scheduler thread
@@ -191,13 +223,16 @@ impl StageCell {
     /// Apply an averaged gradient that was computed against `from_version`:
     /// compensate toward the *current* live version (whatever it is by the
     /// time this runs — the observed staleness), SGD-step every stage
-    /// layer, bump the version, and stash the new snapshot.
+    /// layer, bump the version, and stash the new snapshot. New parameter
+    /// vectors come from `ws`; consumed gradients, delta scratch, and any
+    /// snapshot the stash cap evicts go back to it.
     pub fn apply_update(
         &self,
         backend: &dyn Backend,
         mut grads: Vec<GradBuf>,
         from_version: u64,
         lr: f32,
+        ws: &Workspace,
     ) -> UpdateOutcome {
         let mut guard = self.inner.lock().expect("stage cell");
         let inner = &mut *guard;
@@ -215,16 +250,41 @@ impl StageCell {
             };
             let cctx = CompContext { backend, tau, chain: &chain, jump: jump.as_ref(), lr };
             let (g, lr_scale) = inner.comps[i].compensate(g, &cctx);
-            let updated = backend.sgd(&inner.params[i], &g, lr * lr_scale);
+            let updated = backend.sgd_pooled(&inner.params[i], &g, lr * lr_scale, ws);
+            recycle_grad(ws, g);
+            for d in chain {
+                recycle_grad(ws, d);
+            }
+            if let Some(d) = jump {
+                recycle_grad(ws, d);
+            }
             inner.params[i] = Arc::new(updated);
         }
         inner.version += 1;
         let new_version = inner.version;
         for i in 0..inner.params.len() {
             let p = inner.params[i].clone();
-            inner.stash[i].push(new_version, p);
+            if let Some(evicted) = inner.stash[i].push(new_version, p) {
+                recycle_params(ws, evicted);
+            }
         }
         UpdateOutcome { new_version, staleness: tau }
+    }
+}
+
+/// Hand a consumed gradient's buffers back to the pool.
+pub fn recycle_grad(ws: &Workspace, g: GradBuf) {
+    ws.pool.put(g.gw);
+    ws.pool.put(g.gb);
+}
+
+/// Recycle a retired parameter snapshot if nothing else aliases it (the
+/// stash/flights may still hold clones — then the `Arc` simply drops).
+pub fn recycle_params(ws: &Workspace, p: SharedParams) {
+    if let Ok(lp) = Arc::try_unwrap(p) {
+        let (w, b) = lp.into_buffers();
+        ws.pool.put(w);
+        ws.pool.put(b);
     }
 }
 
@@ -278,15 +338,31 @@ impl DeviceOutput {
 /// Execute one stage task through a backend — the single numeric routine
 /// shared by every executor (and therefore bit-identical across them).
 /// Consumes the task so activation/gradient buffers move instead of copy.
+/// Runs against a private serial workspace; the executors use
+/// [`run_stage_in`] with the session-shared one.
 pub fn run_stage(backend: &dyn Backend, task: StageTask) -> StageOutput {
+    run_stage_in(backend, task, &Workspace::serial())
+}
+
+/// [`run_stage`] against an explicit workspace: stage math goes through
+/// the backend's pooled entry points, and every consumed buffer (the stage
+/// input, intermediate activations, the upstream gradient) is recycled, so
+/// a steady-state microbatch allocates nothing.
+pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> StageOutput {
     match task.gout {
         None => {
             // forward the stage's layer chain
             let mut h = task.x;
             for (shape, p) in task.shapes.iter().zip(&task.params) {
-                h = backend.dense_fwd(shape, p, &h, task.rows);
+                let next = backend.dense_fwd_pooled(shape, p, &h, task.rows, ws);
+                ws.pool.put(std::mem::replace(&mut h, next));
             }
-            StageOutput { out: h, grads: None }
+            let loss = task.loss.map(|spec| {
+                let (gl, l) = backend.loss_grad_ce(spec.classes, &h, &spec.labels);
+                let acc = crate::backend::accuracy(spec.classes, &h, &spec.labels);
+                (gl, l, acc)
+            });
+            StageOutput { out: h, grads: None, loss }
         }
         Some(gout) => {
             // recompute inner activations from the stage input (T1-style;
@@ -296,7 +372,8 @@ pub fn run_stage(backend: &dyn Backend, task: StageTask) -> StageOutput {
             let mut h = task.x;
             for i in 0..n {
                 if i + 1 < n {
-                    let next = backend.dense_fwd(&task.shapes[i], &task.params[i], &h, task.rows);
+                    let next =
+                        backend.dense_fwd_pooled(&task.shapes[i], &task.params[i], &h, task.rows, ws);
                     inputs.push(std::mem::replace(&mut h, next));
                 } else {
                     inputs.push(std::mem::take(&mut h));
@@ -305,25 +382,41 @@ pub fn run_stage(backend: &dyn Backend, task: StageTask) -> StageOutput {
             let mut grads: Vec<Option<GradBuf>> = (0..n).map(|_| None).collect();
             let mut g = gout;
             for i in (0..n).rev() {
-                let out =
-                    backend.dense_bwd(&task.shapes[i], &task.params[i], &inputs[i], &g, task.rows);
-                g = out.gx;
+                let out = backend.dense_bwd_pooled(
+                    &task.shapes[i],
+                    &task.params[i],
+                    &inputs[i],
+                    &g,
+                    task.rows,
+                    ws,
+                );
+                ws.pool.put(std::mem::replace(&mut g, out.gx));
                 grads[i] = Some(out.grads);
+            }
+            for x in inputs {
+                ws.pool.put(x);
             }
             StageOutput {
                 out: g,
                 grads: Some(grads.into_iter().map(Option::unwrap).collect()),
+                loss: None,
             }
         }
     }
 }
 
-/// Execute any device task — stage math or a stage-cell update.
+/// Execute any device task — stage math or a stage-cell update — against
+/// a private serial workspace (see [`run_device_task_in`]).
 pub fn run_device_task(backend: &dyn Backend, task: DeviceTask) -> DeviceOutput {
+    run_device_task_in(backend, task, &Workspace::serial())
+}
+
+/// Execute any device task against an explicit workspace.
+pub fn run_device_task_in(backend: &dyn Backend, task: DeviceTask, ws: &Workspace) -> DeviceOutput {
     match task {
-        DeviceTask::Stage(t) => DeviceOutput::Stage(run_stage(backend, t)),
+        DeviceTask::Stage(t) => DeviceOutput::Stage(run_stage_in(backend, t, ws)),
         DeviceTask::Update(t) => {
-            DeviceOutput::Update(t.cell.apply_update(backend, t.grads, t.from_version, t.lr))
+            DeviceOutput::Update(t.cell.apply_update(backend, t.grads, t.from_version, t.lr, ws))
         }
     }
 }
@@ -353,20 +446,27 @@ pub trait Executor {
 /// single-threaded simulation behavior.
 pub struct SimExecutor<'a> {
     backend: &'a dyn Backend,
+    ws: Workspace,
     /// parked results in completion (== dispatch) order; per-device FIFO
     /// is a consequence, so exact-tick double dispatch pairs correctly
     pending: VecDeque<((usize, usize), DeviceOutput)>,
 }
 
 impl<'a> SimExecutor<'a> {
+    /// Inline executor with a private serial workspace (planner sweeps).
     pub fn new(backend: &'a dyn Backend) -> Self {
-        SimExecutor { backend, pending: VecDeque::new() }
+        Self::with_workspace(backend, Workspace::serial())
+    }
+
+    /// Inline executor sharing the session workspace (pool + threads).
+    pub fn with_workspace(backend: &'a dyn Backend, ws: Workspace) -> Self {
+        SimExecutor { backend, ws, pending: VecDeque::new() }
     }
 }
 
 impl Executor for SimExecutor<'_> {
     fn start(&mut self, dev: (usize, usize), task: DeviceTask) {
-        let out = run_device_task(self.backend, task);
+        let out = run_device_task_in(self.backend, task, &self.ws);
         self.pending.push_back((dev, out));
     }
 
@@ -409,6 +509,7 @@ impl Executor for SimExecutor<'_> {
 /// no thread outlives the session that owns it.
 pub struct ThreadedExecutor {
     backend: Arc<dyn Backend>,
+    ws: Workspace,
     links: HashMap<(usize, usize), DeviceLink>,
     done_tx: Sender<((usize, usize), DeviceOutput)>,
     done_rx: Receiver<((usize, usize), DeviceOutput)>,
@@ -424,10 +525,22 @@ struct DeviceLink {
 }
 
 impl ThreadedExecutor {
+    /// Spawn device threads with a private serial workspace.
     pub fn spawn(backend: Arc<dyn Backend>, devices: &[(usize, usize)]) -> Self {
+        Self::spawn_with(backend, devices, Workspace::serial())
+    }
+
+    /// Spawn device threads sharing the session workspace: every device
+    /// clones the same pool handle, so buffers recycle across threads.
+    pub fn spawn_with(
+        backend: Arc<dyn Backend>,
+        devices: &[(usize, usize)],
+        ws: Workspace,
+    ) -> Self {
         let (done_tx, done_rx) = channel::<((usize, usize), DeviceOutput)>();
         let mut ex = ThreadedExecutor {
             backend,
+            ws,
             links: HashMap::new(),
             done_tx,
             done_rx,
@@ -443,9 +556,11 @@ impl ThreadedExecutor {
         let (task_tx, task_rx) = channel::<DeviceTask>();
         let out_tx = self.done_tx.clone();
         let backend = Arc::clone(&self.backend);
+        let ws = self.ws.clone();
         let thread = std::thread::spawn(move || {
             while let Ok(task) = task_rx.recv() {
-                if out_tx.send((dev, run_device_task(backend.as_ref(), task))).is_err() {
+                let out = run_device_task_in(backend.as_ref(), task, &ws);
+                if out_tx.send((dev, out)).is_err() {
                     break;
                 }
             }
@@ -559,6 +674,7 @@ mod tests {
             x: vec![1.0, -2.0, 0.5, 0.25],
             rows: 2,
             gout: bwd.then(|| vec![0.3, -0.1, 0.2, 0.4]),
+            loss: None,
         }
     }
 
@@ -725,8 +841,62 @@ mod tests {
         assert_eq!(cell.resolve(0)[0].w, vec![1.0, 2.0]);
         // a second update computed against version 0 observes staleness 1
         let g2 = GradBuf { gw: vec![0.0, 0.0], gb: vec![0.0] };
-        let o2 = cell.apply_update(&be, vec![g2], 0, 0.5);
+        let o2 = cell.apply_update(&be, vec![g2], 0, 0.5, &Workspace::serial());
         assert_eq!(o2.staleness, 1);
         assert_eq!(o2.new_version, 2);
+    }
+
+    /// The pooled stage path must be bit-identical to the legacy serial
+    /// one, and a steady stream of identical tasks must stop allocating
+    /// once the pool is warm.
+    #[test]
+    fn pooled_stage_path_is_bitwise_identical_and_stops_allocating() {
+        let be = NativeBackend;
+        let ws = Workspace::serial();
+        for bwd in [false, true] {
+            let a = run_stage(&be, task(bwd));
+            let b = run_stage_in(&be, task(bwd), &ws);
+            assert_eq!(a.out, b.out, "bwd={bwd}");
+            // recycle the outputs so later iterations reuse dirty buffers
+            ws.pool.put(b.out);
+            if let Some(gs) = b.grads {
+                for g in gs {
+                    recycle_grad(&ws, g);
+                }
+            }
+        }
+        // warm pool: repeated identical tasks must hit the pool every time
+        for bwd in [false, true] {
+            let before = ws.pool.stats();
+            let out = run_stage_in(&be, task(bwd), &ws);
+            let delta = ws.pool.stats().since(&before);
+            assert_eq!(delta.misses, 0, "steady state allocated (bwd={bwd})");
+            ws.pool.put(out.out);
+            if let Some(gs) = out.grads {
+                for g in gs {
+                    recycle_grad(&ws, g);
+                }
+            }
+        }
+    }
+
+    /// An offloaded CE loss head must reproduce exactly what the
+    /// scheduler-side path (forward, then loss_grad_ce + accuracy on the
+    /// logits) would have computed.
+    #[test]
+    fn offloaded_loss_head_matches_scheduler_side_computation() {
+        let be = NativeBackend;
+        let labels = vec![0, 1];
+        let plain = run_stage(&be, task(false));
+        let (g_ref, l_ref) = be.loss_grad_ce(2, &plain.out, &labels);
+        let acc_ref = crate::backend::accuracy(2, &plain.out, &labels);
+        let mut t = task(false);
+        t.loss = Some(LossSpec { classes: 2, labels });
+        let out = run_stage(&be, t);
+        assert_eq!(out.out, plain.out, "logits unchanged by the loss head");
+        let (gl, l, acc) = out.loss.expect("loss head ran");
+        assert_eq!(gl, g_ref);
+        assert_eq!(l, l_ref);
+        assert_eq!(acc, acc_ref);
     }
 }

@@ -105,6 +105,11 @@ pub struct EngineParams {
     /// per-layer version-stash capacity; 0 = derive from the worker/stage
     /// counts (deep-pipeline tests shrink it to force eviction fallbacks)
     pub stash_cap: usize,
+    /// intra-stage kernel worker threads; 0 = read `FERRET_KERNEL_THREADS`
+    /// (defaulting to 1 — serial, the planner-sweep default). The tiled
+    /// kernels are bit-identical across thread counts, so this knob trades
+    /// only wall-clock, never numerics (see [`crate::backend::kernels`]).
+    pub kernel_threads: usize,
 }
 
 impl Default for EngineParams {
@@ -116,6 +121,7 @@ impl Default for EngineParams {
             tacc_per_class: 8,
             seed: 42,
             stash_cap: 0,
+            kernel_threads: 0,
         }
     }
 }

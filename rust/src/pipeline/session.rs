@@ -57,7 +57,7 @@
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use crate::backend::Backend;
+use crate::backend::{kernels, Backend, BufferPool, PoolStats, Workspace};
 use crate::bail;
 use crate::budget::{BudgetSchedule, BudgetState};
 use crate::compensate::CompKind;
@@ -123,6 +123,8 @@ pub struct SessionBuilder<'a> {
     budget: Option<BudgetSchedule>,
     batch: usize,
     test: Option<TestSet>,
+    /// micro-benchmark reps for a measured initial profile (0 = analytic)
+    measured_reps: u32,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -188,14 +190,37 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Seed the *initial* plan from a measured profile
+    /// ([`Profile::measured`] — `reps` timed fwd/bwd reps per layer on this
+    /// session's backend) instead of the analytic FLOPs model. Default off
+    /// (`reps = 0`): measured initial profiles are wall-clock dependent, so
+    /// deterministic sweeps and the lockstep equivalence suites keep the
+    /// analytic base. Mid-stream re-plans already fold measured stage
+    /// times in either way.
+    pub fn measured_profile(mut self, reps: u32) -> Self {
+        self.measured_reps = reps;
+        self
+    }
+
     /// Validate and assemble the session. Returns a typed error (never
     /// panics) when the configuration cannot run: zero batch rows, a
     /// partition that does not cover the model, worker knob vectors of the
     /// wrong arity, zero accumulation counts, a zero plugin cadence, or a
     /// malformed budget schedule.
     pub fn build(self) -> Result<Session<'a>> {
-        let SessionBuilder { backend, model, cfg, plugin, executor, mode, ep, budget, batch, test } =
-            self;
+        let SessionBuilder {
+            backend,
+            model,
+            cfg,
+            plugin,
+            executor,
+            mode,
+            ep,
+            budget,
+            batch,
+            test,
+            measured_reps,
+        } = self;
         if batch == 0 {
             bail!("session: batch rows must be > 0 (set SessionBuilder::batch)");
         }
@@ -204,7 +229,11 @@ impl<'a> SessionBuilder<'a> {
         if !ep.lr.is_finite() || ep.lr < 0.0 {
             bail!("session: learning rate must be finite and >= 0 (got {})", ep.lr);
         }
-        let prof = Profile::analytic(model, batch);
+        let prof = if measured_reps > 0 {
+            Profile::measured(backend, model, batch, measured_reps)
+        } else {
+            Profile::analytic(model, batch)
+        };
         let td = if ep.td == 0 { prof.default_td() } else { ep.td };
         let decay = decay_for_td(td);
         let mut cfg = match cfg {
@@ -285,17 +314,29 @@ impl<'a> SessionBuilder<'a> {
         };
         if mode == Mode::Freerun {
             engine.build_cells();
+            // ship the plain-CE loss head with last-stage forwards so it
+            // runs on the device thread; plugins with a custom head
+            // (ce_loss_head() == false) keep it on the scheduler thread
+            engine.set_loss_offload(plugin.get().ce_loss_head());
         }
+        // one session-wide workspace: the scheduler, the executor's device
+        // threads, and the engine's update path all recycle through the
+        // same buffer pool, and stage kernels use the resolved thread count
+        let ws = Workspace::new(BufferPool::new(), kernels::resolve_threads(ep.kernel_threads));
+        engine.set_workspace(ws.clone());
         let executor: Box<dyn Executor + 'a> = match executor {
-            ExecutorKind::Sim => Box::new(SimExecutor::new(backend)),
-            ExecutorKind::Threaded => {
-                Box::new(ThreadedExecutor::spawn(backend.share(), &engine.devices()))
-            }
+            ExecutorKind::Sim => Box::new(SimExecutor::with_workspace(backend, ws.clone())),
+            ExecutorKind::Threaded => Box::new(ThreadedExecutor::spawn_with(
+                backend.share(),
+                &engine.devices(),
+                ws.clone(),
+            )),
         };
         let metrics = RunMetrics { exec_threads: executor.threads(), ..Default::default() };
         Ok(Session {
             backend,
             engine,
+            ws,
             executor,
             plugin,
             metrics,
@@ -329,6 +370,9 @@ impl<'a> SessionBuilder<'a> {
 pub struct Session<'a> {
     backend: &'a dyn Backend,
     engine: AsyncEngine<'a>,
+    /// session-wide buffer pool + kernel thread count (cloned into the
+    /// engine and the executor's device threads)
+    ws: Workspace,
     executor: Box<dyn Executor + 'a>,
     plugin: PluginSlot<'a>,
     metrics: RunMetrics,
@@ -399,6 +443,7 @@ impl<'a> Session<'a> {
             budget: None,
             batch: 0,
             test: None,
+            measured_reps: 0,
         }
     }
 
@@ -475,6 +520,14 @@ impl<'a> Session<'a> {
         self.pending.len() + self.held.len()
     }
 
+    /// Live counters of the session-wide buffer pool: takes, misses
+    /// (allocations), puts, and drops. `misses` flat-lining while `takes`
+    /// climbs is the zero-copy steady state; [`Session::finish`] copies
+    /// the final stats into [`RunMetrics::pool`].
+    pub fn pool_stats(&self) -> PoolStats {
+        self.ws.pool.stats()
+    }
+
     /// Imperatively change the memory budget: arms the drain → re-plan →
     /// transition protocol exactly as a `--budget-schedule` step would
     /// (in-flight microbatches finish under the old plan, learned weights
@@ -535,6 +588,7 @@ impl<'a> Session<'a> {
             self.metrics.tacc =
                 eval_tacc(self.backend, &self.shapes, &params, self.classes, test, self.batch);
         }
+        self.metrics.pool = self.ws.pool.stats();
         // moving the metrics out drops the executor, which joins every
         // device thread — nothing survives the session
         let Session { metrics, .. } = self;

@@ -1,0 +1,222 @@
+//! Property tests for the tiled/parallel kernel layer and the buffer
+//! pool, from outside the crate: the naive reference loops are the
+//! ground truth, the pool must never alias live buffers, and a warm
+//! session must stop allocating on the steady-state path.
+
+use ferret::backend::kernels;
+use ferret::backend::native::NativeBackend;
+use ferret::backend::{Backend, BufferPool, Workspace};
+use ferret::compensate::CompKind;
+use ferret::config::zoo::{default_zoo, Act, LayerShape};
+use ferret::model::params::LayerParams;
+use ferret::ocl::OclKind;
+use ferret::pipeline::engine::AsyncCfg;
+use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
+use ferret::pipeline::{EngineParams, Session};
+use ferret::planner::costmodel::decay_for_td;
+use ferret::planner::{plan, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+use ferret::util::{property, Rng};
+
+fn randvec(rng: &mut Rng, n: usize, sparse: bool) -> Vec<f32> {
+    (0..n)
+        .map(|_| if sparse && rng.uniform() < 0.5 { 0.0 } else { rng.normal_f32(0.0, 1.0) })
+        .collect()
+}
+
+#[test]
+fn tiled_kernels_match_naive_reference_for_every_thread_count() {
+    property("kprop_ref", 15, |rng| {
+        let (m, k, n) = (1 + rng.below(40), 1 + rng.below(80), 1 + rng.below(48));
+        let a = randvec(rng, m * k, rng.uniform() < 0.5);
+        let b = randvec(rng, k * n, false);
+        let at = randvec(rng, k * m, rng.uniform() < 0.5);
+        let bt = randvec(rng, n * k, false);
+        for threads in [1, 2, 5] {
+            // fwd and bwd-weight flavors: bit-identical to naive
+            let mut c0 = randvec(rng, m * n, false);
+            let mut c1 = c0.clone();
+            kernels::naive_matmul_acc(&mut c0, &a, &b, m, k, n);
+            kernels::matmul_acc(&mut c1, &a, &b, m, k, n, threads);
+            assert_eq!(c0, c1, "acc {m}x{k}x{n} t={threads}");
+
+            let mut d0 = randvec(rng, m * n, false);
+            let mut d1 = d0.clone();
+            kernels::naive_matmul_at_acc(&mut d0, &at, &b, m, k, n);
+            kernels::matmul_at_acc(&mut d1, &at, &b, m, k, n, threads);
+            assert_eq!(d0, d1, "at {m}x{k}x{n} t={threads}");
+        }
+        // bwd-input flavor: tolerance vs naive, exact across thread counts
+        let mut e0 = vec![0.0f32; m * n];
+        kernels::naive_matmul_bt_acc(&mut e0, &a, &bt, m, k, n);
+        let mut e1 = vec![0.0f32; m * n];
+        kernels::matmul_bt_acc(&mut e1, &a, &bt, m, k, n, 1);
+        let mut e5 = vec![0.0f32; m * n];
+        kernels::matmul_bt_acc(&mut e5, &a, &bt, m, k, n, 5);
+        assert_eq!(e1, e5, "bt thread-variant {m}x{k}x{n}");
+        for (x, y) in e0.iter().zip(&e1) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "bt {x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn backend_pooled_paths_match_unpooled_bitwise() {
+    property("kprop_pooled", 10, |rng| {
+        let shape = LayerShape {
+            in_dim: 1 + rng.below(24),
+            out_dim: 1 + rng.below(24),
+            act: if rng.uniform() < 0.5 { Act::Relu } else { Act::None },
+        };
+        let batch = 1 + rng.below(12);
+        let p = LayerParams::init(&shape, rng);
+        let x = randvec(rng, batch * shape.in_dim, false);
+        let g = randvec(rng, batch * shape.out_dim, false);
+        let be = NativeBackend;
+        let ws = Workspace::new(BufferPool::new(), 1 + rng.below(3));
+
+        let plain = be.dense_fwd(&shape, &p, &x, batch);
+        // run the pooled path twice so the second pass consumes recycled
+        // (dirty) buffers — contents must still be fully overwritten
+        for pass in 0..2 {
+            let z = be.dense_fwd_pooled(&shape, &p, &x, batch, &ws);
+            assert_eq!(plain, z, "fwd pass {pass}");
+            ws.pool.put(z);
+            let b0 = be.dense_bwd(&shape, &p, &x, &g, batch);
+            let b1 = be.dense_bwd_pooled(&shape, &p, &x, &g, batch, &ws);
+            assert_eq!(b0.gx, b1.gx, "gx pass {pass}");
+            assert_eq!(b0.grads.gw, b1.grads.gw, "gw pass {pass}");
+            assert_eq!(b0.grads.gb, b1.grads.gb, "gb pass {pass}");
+            ws.pool.put(b1.gx);
+            ws.pool.put(b1.grads.gw);
+            ws.pool.put(b1.grads.gb);
+        }
+    });
+}
+
+#[test]
+fn pool_never_hands_out_aliased_buffers() {
+    let pool = BufferPool::new();
+    let mut live: Vec<Vec<f32>> = (0..12).map(|_| pool.take(64)).collect();
+    let mut ptrs: Vec<*const f32> = live.iter().map(|v| v.as_ptr()).collect();
+    ptrs.sort();
+    ptrs.dedup();
+    assert_eq!(ptrs.len(), 12, "concurrently-live buffers must be distinct");
+    // recycle half, take again: still no aliasing among live buffers
+    for v in live.drain(..6) {
+        pool.put(v);
+    }
+    live.extend((0..6).map(|_| pool.take(64)));
+    let mut ptrs: Vec<*const f32> = live.iter().map(|v| v.as_ptr()).collect();
+    ptrs.sort();
+    ptrs.dedup();
+    assert_eq!(ptrs.len(), 12);
+    // and the re-takes were recycles, not allocations
+    assert_eq!(pool.stats().misses, 12);
+}
+
+fn mk_stream(model: &ferret::config::ModelSpec, batch: usize, n: usize) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "kprop".into(),
+        features: model.features(),
+        classes: model.classes(),
+        batch,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 4.0,
+        noise: 0.8,
+        seed: 7,
+    })
+}
+
+fn ferret_session_parts(
+    model: &ferret::config::ModelSpec,
+    batch: usize,
+) -> AsyncCfg {
+    let prof = Profile::analytic(model, batch);
+    let td = prof.default_td();
+    let out = plan(&prof, td, f64::INFINITY, decay_for_td(td));
+    AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher)
+}
+
+#[test]
+fn warm_session_stops_allocating_per_microbatch() {
+    let zoo = default_zoo().expect("zoo");
+    let model = zoo.model("mnistnet10").expect("model").clone();
+    let mut plugin = OclKind::Vanilla.build(7);
+    let (warm, measure) = (10, 10);
+    let mut stream = mk_stream(&model, zoo.batch, warm + measure);
+    let mut session = Session::builder(&NativeBackend, &model)
+        .config(ferret_session_parts(&model, zoo.batch))
+        .plugin(plugin.as_mut())
+        .engine_params(EngineParams { lr: 0.05, seed: 7, ..Default::default() })
+        .executor(ExecutorKind::Sim)
+        .mode(Mode::Lockstep)
+        .batch(zoo.batch)
+        .build()
+        .expect("session");
+    let cold = session.pool_stats();
+    for _ in 0..warm {
+        session.ingest(stream.next_batch().expect("batch")).expect("ingest");
+        session.drain();
+    }
+    let mid = session.pool_stats();
+    for _ in 0..measure {
+        session.ingest(stream.next_batch().expect("batch")).expect("ingest");
+        session.drain();
+    }
+    let end = session.pool_stats();
+
+    let first = mid.since(&cold);
+    let second = end.since(&mid);
+    assert!(second.takes > 0, "warm window must exercise the pool");
+    // warm-up pays the allocations; the measured window must not pay
+    // more, and must mostly recycle
+    assert!(
+        second.misses <= first.misses,
+        "allocations grew when warm: {first:?} then {second:?}"
+    );
+    assert!(
+        second.misses * 4 <= second.takes,
+        "steady state mostly allocates: {second:?}"
+    );
+}
+
+#[test]
+fn lockstep_sim_metrics_are_invariant_to_kernel_threads() {
+    let zoo = default_zoo().expect("zoo");
+    let model = zoo.model("mnistnet10").expect("model").clone();
+    let run = |kernel_threads: usize| {
+        let mut plugin = OclKind::Vanilla.build(3);
+        let mut stream = mk_stream(&model, zoo.batch, 24);
+        Session::builder(&NativeBackend, &model)
+            .config(ferret_session_parts(&model, zoo.batch))
+            .plugin(plugin.as_mut())
+            .engine_params(EngineParams {
+                lr: 0.05,
+                seed: 3,
+                kernel_threads,
+                ..Default::default()
+            })
+            .executor(ExecutorKind::Sim)
+            .mode(Mode::Lockstep)
+            .batch(zoo.batch)
+            .build()
+            .expect("session")
+            .run_stream(&mut stream)
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    // the kernel determinism contract: thread count never changes bits
+    assert_eq!(
+        serial.metrics.oacc.value(),
+        parallel.metrics.oacc.value(),
+        "online accuracy diverged across kernel thread counts"
+    );
+    assert_eq!(
+        serial.metrics.mean_recent_loss(16),
+        parallel.metrics.mean_recent_loss(16),
+        "loss trace diverged across kernel thread counts"
+    );
+}
