@@ -133,7 +133,8 @@ fn main() {
                     .batch(zoo.batch)
                     .build()
                     .expect("bench session")
-                    .run_stream(&mut s);
+                    .run_stream(&mut s)
+                    .expect("bench stream matches the model");
                 let dt = t0.elapsed().as_secs_f64();
                 println!(
                     "{:<28} {:>12.1} {:>14.1}   ({} threads)",
@@ -160,7 +161,8 @@ fn main() {
             .batch(zoo.batch)
             .build()
             .expect("bench session")
-            .run_stream(&mut s);
+            .run_stream(&mut s)
+                    .expect("bench stream matches the model");
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{:<28} {:>12.1} {:>14.1}   latency {} | staleness {}",

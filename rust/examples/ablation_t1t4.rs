@@ -42,7 +42,8 @@ fn run(
         .batch(batch)
         .build()
         .expect("valid session config")
-        .run_stream(&mut stream);
+        .run_stream(&mut stream)
+        .expect("stream matches the model");
     (r.metrics.adaptation_rate(), r.metrics.oacc.value(), r.metrics.mem_bytes)
 }
 

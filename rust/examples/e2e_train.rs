@@ -72,7 +72,8 @@ fn main() {
         .batch(zoo.batch)
         .build()
         .expect("valid session config")
-        .run_stream(&mut stream);
+        .run_stream(&mut stream)
+        .expect("stream matches the model");
     let wall = t0.elapsed().as_secs_f64();
 
     // loss / oacc curves, decimated

@@ -55,7 +55,8 @@ fn main() {
             .batch(zoo.batch)
             .build()
             .expect("valid session config")
-            .run_stream(&mut stream);
+            .run_stream(&mut stream)
+            .expect("stream matches the model");
         println!(
             "{:<22} {:>9.2} {:>8.2} {:>8.4} {:>8}",
             format!("Ferret@{:.1}MB", budget / 1e6),
@@ -82,7 +83,8 @@ fn main() {
         .batch(zoo.batch)
         .build()
         .expect("valid session config")
-        .run_stream(&mut stream);
+        .run_stream(&mut stream)
+        .expect("stream matches the model");
     println!(
         "{:<22} {:>9.2} {:>8.2} {:>8.4} {:>8}",
         "Pipedream (fixed)",

@@ -54,7 +54,8 @@ fn main() {
             .batch(zoo.batch)
             .build()
             .expect("valid session config")
-            .run_stream(&mut stream);
+            .run_stream(&mut stream)
+            .expect("stream matches the model");
         println!(
             "{:<8} {:>8.2} {:>8.2} {:>10.2}",
             kind.name(),

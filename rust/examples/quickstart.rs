@@ -63,7 +63,8 @@ fn main() {
         .batch(zoo.batch)
         .build()
         .expect("valid session config")
-        .run_stream(&mut stream);
+        .run_stream(&mut stream)
+        .expect("stream matches the model");
 
     println!("--- results ---");
     println!("online accuracy : {:.2}%", r.metrics.oacc.value());

@@ -90,11 +90,43 @@ fn parse_at(s: &str) -> Result<StepAt, String> {
     Ok(if kind == "u" { StepAt::Us(n) } else { StepAt::Batch(n) })
 }
 
+impl StepAt {
+    /// The `<at>` half of a schedule-spec entry: `b<N>` / `u<N>`.
+    pub fn spec_string(&self) -> String {
+        match self {
+            StepAt::Batch(b) => format!("b{b}"),
+            StepAt::Us(u) => format!("u{u}"),
+        }
+    }
+}
+
 impl BudgetSchedule {
     /// The static (non-varying) schedule: the budget the run was planned
     /// for stays in force for the whole stream.
     pub fn fixed() -> Self {
         BudgetSchedule::default()
+    }
+
+    /// Serialize back to the [`BudgetSchedule::parse`] format, so a trace
+    /// can carry the schedule's provenance as plain text:
+    /// `parse(s.spec_string())` reproduces `s` exactly. Byte counts are
+    /// written with the exact-unit `b` suffix (`f64` Display is
+    /// shortest-roundtrip, so fractional plan-derived budgets survive);
+    /// an unconstrained window is `inf`. Empty (static) schedules
+    /// serialize to `""` — callers treat that as "no schedule".
+    pub fn spec_string(&self) -> String {
+        self.steps
+            .iter()
+            .map(|s| {
+                let bytes = if s.bytes.is_infinite() {
+                    "inf".to_string()
+                } else {
+                    format!("{}b", s.bytes)
+                };
+                format!("{bytes}@{}", s.at.spec_string())
+            })
+            .collect::<Vec<_>>()
+            .join(",")
     }
 
     /// True when the schedule carries any step — the engine then meters
@@ -384,6 +416,20 @@ mod tests {
         assert!(BudgetSchedule::parse("8mb@u90,2mb@u20").is_err(), "same for wall time");
         assert!(!BudgetSchedule::fixed().is_dynamic());
         assert!(BudgetSchedule::step_at_batch(8, 1e6).is_dynamic());
+    }
+
+    #[test]
+    fn spec_string_round_trips_through_parse() {
+        for spec in ["24mb@0,12mb@b80,1gb@u5000,800kb@b90,64b@b99", "inf@b20", "3@b10"] {
+            let s = BudgetSchedule::parse(spec).unwrap();
+            let rt = BudgetSchedule::parse(&s.spec_string()).unwrap();
+            assert_eq!(s, rt, "spec {spec:?} -> {:?}", s.spec_string());
+        }
+        // fractional plan-derived budgets survive the text round trip
+        let s = BudgetSchedule::step_at_batch(60, 1234567.89);
+        let rt = BudgetSchedule::parse(&s.spec_string()).unwrap();
+        assert_eq!(s, rt);
+        assert_eq!(BudgetSchedule::fixed().spec_string(), "");
     }
 
     #[test]

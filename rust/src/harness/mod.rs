@@ -223,6 +223,7 @@ impl Bench {
             .build()
             .expect("engine session")
             .run_stream(stream)
+            .expect("harness stream matches the model")
     }
 
     /// Run one explicitly-configured engine outside the cached `run()`

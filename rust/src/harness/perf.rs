@@ -343,7 +343,8 @@ pub fn run_perf(quick: bool, kernel_threads: usize) -> PerfReport {
                 .batch(zoo.batch)
                 .build()
                 .expect("perf session")
-                .run_stream(&mut stream);
+                .run_stream(&mut stream)
+                .expect("perf stream matches the model");
             let dt = t0.elapsed().as_secs_f64();
             report.engine.push(EngineRecord {
                 model: model_name.to_string(),

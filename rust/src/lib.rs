@@ -19,4 +19,5 @@ pub mod pipeline;
 pub mod planner;
 pub mod runtime;
 pub mod stream;
+pub mod trace;
 pub mod util;

@@ -34,6 +34,23 @@
 //!         profiles are wall-clock dependent, so deterministic runs keep
 //!         the analytic base.
 //!
+//!         `--record-trace PATH` records the run as a `ferret-trace/1`
+//!         JSON-lines artifact (stream identity + every planner decision;
+//!         see `ferret::trace`) that `ferret replay` can re-drive.
+//!
+//!   replay <trace> [--config-override k=v[,k=v...]] [--out PATH] [--gate]
+//!         Re-drive a recorded trace through a lockstep session: the exact
+//!         stream is rebuilt from the trace's seeded spec and verified
+//!         batch-by-batch against the recorded content hashes. With no
+//!         overrides a trace recorded under the determinism contract
+//!         replays bit-for-bit; `--config-override` varies the planner/
+//!         compensation/plugin/kernel configuration (keys: comp, ocl,
+//!         executor, kernel-threads, lr, stash-cap, plugin-cadence,
+//!         budget-schedule, seed). Emits a machine-readable diff (plan
+//!         churn, windowed oacc delta, latency-percentile deltas,
+//!         replan-count delta) to stdout or `--out`; `--gate` exits 1
+//!         when the diff is not bit-for-bit.
+//!
 //!   settings
 //!         List the 20 paper settings with their indices.
 
@@ -48,9 +65,10 @@ use ferret::pipeline::sched::Mode;
 use ferret::pipeline::{EngineParams, Session};
 use ferret::planner::{plan, Profile};
 use ferret::stream::{paper_settings, SyntheticStream};
+use ferret::trace::{replay_trace, GateThresholds, Trace};
 
 fn usage() -> ! {
-    eprintln!("usage: ferret <plan|run|settings> [options]   (see --help in source docs)");
+    eprintln!("usage: ferret <plan|run|replay|settings> [options]   (see --help in source docs)");
     std::process::exit(2)
 }
 
@@ -248,23 +266,32 @@ fn cmd_run(opts: &Opts) {
     let dynamic = budget_sched.is_dynamic();
     let cfg = AsyncCfg::ferret(out.partition, out.config, comp).with_budget(budget_sched);
     let t0 = std::time::Instant::now();
-    let session = match Session::builder(backend.as_ref(), &model)
+    let mut builder = Session::builder(backend.as_ref(), &model)
         .config(cfg)
         .plugin(plugin.as_mut())
         .engine_params(ep)
         .executor(executor)
         .mode(mode)
         .batch(zoo.batch)
-        .measured_profile(warmup_reps)
-        .build()
-    {
+        .measured_profile(warmup_reps);
+    if let Some(path) = opts.get("record-trace") {
+        builder = builder.record_trace(path);
+        eprintln!("[ferret] recording trace to {path}");
+    }
+    let session = match builder.build() {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: invalid engine configuration: {e}");
             std::process::exit(2);
         }
     };
-    let r = session.run_stream(&mut stream);
+    let r = match session.run_stream(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     println!("setting    : {}", setting.label);
     println!("ocl/comp   : {} / {}", ocl.name(), comp.name());
     println!("executor   : {} ({} worker threads)", executor.name(), r.metrics.exec_threads);
@@ -301,12 +328,99 @@ fn cmd_run(opts: &Opts) {
     println!("wallclock  : {:.1}s", t0.elapsed().as_secs_f64());
 }
 
+fn cmd_replay(args: &[String]) {
+    let path = match args.first() {
+        Some(p) if !p.starts_with("--") => p.as_str(),
+        _ => {
+            eprintln!(
+                "usage: ferret replay <trace> [--config-override k=v[,k=v...]] [--out PATH] \
+                 [--gate]"
+            );
+            std::process::exit(2);
+        }
+    };
+    // --gate is a boolean flag: pull it out before Opts::parse, which
+    // requires a value after every flag
+    let mut gate = false;
+    let rest: Vec<String> = args[1..]
+        .iter()
+        .filter(|a| {
+            if a.as_str() == "--gate" {
+                gate = true;
+                false
+            } else {
+                true
+            }
+        })
+        .cloned()
+        .collect();
+    let opts = Opts::parse(&rest);
+    let overrides: Vec<(String, String)> = match opts.get("config-override") {
+        Some(s) => s
+            .split(',')
+            .filter(|e| !e.trim().is_empty())
+            .map(|e| match e.split_once('=') {
+                Some((k, v)) => (k.trim().to_string(), v.trim().to_string()),
+                None => {
+                    eprintln!("error: --config-override entries must be key=value, got '{e}'");
+                    std::process::exit(2);
+                }
+            })
+            .collect(),
+        None => Vec::new(),
+    };
+    let recorded = match Trace::read(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let outcome = match replay_trace(&recorded, &overrides) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let d = &outcome.diff;
+    eprintln!(
+        "[replay] {} recorded / {} replayed batches | oacc {:.2} -> {:.2} | replans {} -> {} | \
+         plan churn {}",
+        d.batches_a, d.batches_b, d.oacc_a, d.oacc_b, d.replans_a, d.replans_b, d.plan_churn
+    );
+    let json = d.to_json();
+    match opts.get("out") {
+        Some(p) => {
+            if let Err(e) = std::fs::write(p, format!("{json}\n")) {
+                eprintln!("error: writing {p}: {e}");
+                std::process::exit(2);
+            }
+            eprintln!("[replay] diff written to {p}");
+        }
+        None => println!("{json}"),
+    }
+    if gate {
+        let violations = d.violations(&GateThresholds::default());
+        if violations.is_empty() {
+            eprintln!("[replay] gate: PASS (bit-for-bit)");
+        } else {
+            eprintln!("[replay] gate: FAIL");
+            for v in &violations {
+                eprintln!("  - {v}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("settings") => cmd_settings(),
         Some("plan") => cmd_plan(&Opts::parse(&args[1..])),
         Some("run") => cmd_run(&Opts::parse(&args[1..])),
+        Some("replay") => cmd_replay(&args[1..]),
         _ => usage(),
     }
 }

@@ -99,6 +99,34 @@ pub struct RunMetrics {
 /// Histogram cap: staleness beyond this lands in the overflow bucket.
 pub const STALENESS_BUCKETS: usize = 32;
 
+/// Largest per-window mean difference between two accuracy curves.
+///
+/// Each curve is split into `windows` equal index ranges over its *own*
+/// length (curves from a recorded run and its replay can differ in point
+/// count when one drops more batches); window means are compared pairwise
+/// and the max absolute difference returned. An empty curve contributes a
+/// 0 mean per window; both empty → 0. Used by trace replay to detect
+/// localized accuracy regressions a final-value comparison would average
+/// away.
+pub fn curve_windowed_max_delta(a: &[(u64, f64)], b: &[(u64, f64)], windows: usize) -> f64 {
+    let windows = windows.max(1);
+    let mean_of = |c: &[(u64, f64)], w: usize| -> f64 {
+        if c.is_empty() {
+            return 0.0;
+        }
+        let lo = c.len() * w / windows;
+        let hi = (c.len() * (w + 1) / windows).max(lo + 1).min(c.len());
+        if lo >= c.len() {
+            return c[c.len() - 1].1;
+        }
+        let slice = &c[lo..hi];
+        slice.iter().map(|(_, v)| v).sum::<f64>() / slice.len() as f64
+    };
+    (0..windows)
+        .map(|w| (mean_of(a, w) - mean_of(b, w)).abs())
+        .fold(0.0, f64::max)
+}
+
 /// Nearest-rank percentile over an already-sorted sample slice (`p` in
 /// 0..=100); 0 when empty. Single definition shared by every caller.
 fn percentile_of_sorted(sorted: &[u64], p: f64) -> u64 {
@@ -264,6 +292,24 @@ pub fn eval_tacc<P: std::borrow::Borrow<LayerParams>>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn windowed_curve_delta_localizes_regressions() {
+        let a: Vec<(u64, f64)> = (0..64).map(|i| (i, 50.0)).collect();
+        assert_eq!(curve_windowed_max_delta(&a, &a, 16), 0.0, "identical curves");
+        // a dip in one window only: final values agree, windowed delta sees it
+        let mut b = a.clone();
+        for p in b[16..20].iter_mut() {
+            p.1 = 30.0;
+        }
+        let d = curve_windowed_max_delta(&a, &b, 16);
+        assert!((d - 20.0).abs() < 1e-9, "window mean catches the dip, got {d}");
+        // different lengths are compared window-by-window, not point-by-point
+        let c: Vec<(u64, f64)> = (0..101).map(|i| (i, 50.0)).collect();
+        assert!(curve_windowed_max_delta(&a, &c, 16).abs() < 1e-9);
+        assert_eq!(curve_windowed_max_delta(&[], &[], 16), 0.0);
+        assert!((curve_windowed_max_delta(&a, &[], 16) - 50.0).abs() < 1e-9);
+    }
 
     #[test]
     fn agm_baseline_is_zero() {

@@ -599,9 +599,18 @@ impl<'a> AsyncEngine<'a> {
     /// the refresh is exact; in freerun it folds real device-thread
     /// service times (µs) into the next plan.
     pub(crate) fn refreshed_profile(&self, base: &Profile) -> Profile {
-        let tf: Vec<Option<f64>> = self.meas.iter().map(|o| o.mean_tf()).collect();
-        let tb: Vec<Option<f64>> = self.meas.iter().map(|o| o.mean_tb()).collect();
+        let (tf, tb) = self.measured_stage_means();
         base.rescale_stages(&self.cfg.partition, &tf, &tb)
+    }
+
+    /// Per-stage measured mean forward/backward times (µs) for the
+    /// current phase — the `StageObs` seed every re-plan starts from.
+    /// `None` where a stage has no samples yet. Read this *before*
+    /// [`AsyncEngine::transition`], which resets the observations.
+    pub(crate) fn measured_stage_means(&self) -> (Vec<Option<f64>>, Vec<Option<f64>>) {
+        let tf = self.meas.iter().map(|o| o.mean_tf()).collect();
+        let tb = self.meas.iter().map(|o| o.mean_tb()).collect();
+        (tf, tb)
     }
 
     /// Execute a plan transition after a full drain (no job in flight, no
@@ -695,16 +704,19 @@ impl<'a> AsyncEngine<'a> {
         let p = self.sched.num_stages();
         let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
         stage_inputs[0] = Some(self.pooled_copy(&batch.x));
-        let (_, w) = self.sched.admit(Job {
-            arrival,
-            seq,
-            y: batch.y,
-            batch_x: batch.x,
-            stage_inputs,
-            fwd_version: vec![0; p],
-            grad: None,
-            done: false,
-        });
+        let (_, w) = self
+            .sched
+            .admit(Job {
+                arrival,
+                seq,
+                y: batch.y,
+                batch_x: batch.x,
+                stage_inputs,
+                fwd_version: vec![0; p],
+                grad: None,
+                done: false,
+            })
+            .expect("sched::admit: over_capacity() above guarantees an active worker");
         self.kick(w, 0, now, io.executor);
     }
 
@@ -967,16 +979,19 @@ impl<'a> AsyncEngine<'a> {
         let p = self.sched.num_stages();
         let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
         stage_inputs[0] = Some(self.pooled_copy(&batch.x));
-        let (_, w) = self.sched.admit(Job {
-            arrival,
-            seq,
-            y: batch.y,
-            batch_x: batch.x,
-            stage_inputs,
-            fwd_version: vec![0; p],
-            grad: None,
-            done: false,
-        });
+        let (_, w) = self
+            .sched
+            .admit(Job {
+                arrival,
+                seq,
+                y: batch.y,
+                batch_x: batch.x,
+                stage_inputs,
+                fwd_version: vec![0; p],
+                grad: None,
+                done: false,
+            })
+            .expect("sched::admit: over_capacity() above guarantees an active worker");
         self.kick_free(w, 0, now, io.executor);
     }
 

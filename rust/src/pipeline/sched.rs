@@ -28,9 +28,11 @@ use std::collections::{BinaryHeap, VecDeque};
 use std::time::{Duration, Instant};
 
 use crate::backend::{accuracy, forward_all, Backend};
+use crate::bail;
 use crate::config::LayerShape;
 use crate::metrics::RunMetrics;
 use crate::model::{GradBuf, LayerParams};
+use crate::util::error::Result;
 
 /// How an async engine advances time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -283,19 +285,32 @@ impl SchedCore {
     }
 
     /// Microbatch `seq` goes to active worker `seq mod N_active`.
-    pub fn route(&self, seq: u64) -> usize {
-        self.active_workers[(seq as usize) % self.active_workers.len()]
+    ///
+    /// Errors when no worker is active — a degenerate plan (every worker
+    /// delayed out of the schedule, or a mid-`reconfigure` window) used
+    /// to panic here with a modulo-by-zero; callers that have already
+    /// checked [`SchedCore::over_capacity`] (which is true whenever
+    /// `active_workers` is empty) may safely `expect` the result.
+    pub fn route(&self, seq: u64) -> Result<usize> {
+        if self.active_workers.is_empty() {
+            bail!(
+                "sched: cannot route microbatch {seq}: the current plan \
+                 has no active workers (degenerate plan or mid-transition)"
+            );
+        }
+        Ok(self.active_workers[(seq as usize) % self.active_workers.len()])
     }
 
     /// Admit a job: queue its first forward on its routed worker. Returns
-    /// (job id, worker).
-    pub fn admit(&mut self, job: Job) -> (usize, usize) {
-        let w = self.route(job.seq);
+    /// (job id, worker); errors when the plan has no active worker to
+    /// route to (see [`SchedCore::route`]).
+    pub fn admit(&mut self, job: Job) -> Result<(usize, usize)> {
+        let w = self.route(job.seq)?;
         self.jobs.push(job);
         self.inflight += 1;
         let id = self.jobs.len() - 1;
         self.slots[w][0].fwd_q.push_back(id);
-        (id, w)
+        Ok((id, w))
     }
 
     /// 1F1B: pick the next queued work for device (w, s) at time `t` —
@@ -420,9 +435,23 @@ mod tests {
     fn routing_round_robins_over_active_workers() {
         let mut c = core(3, 2);
         c.active_workers = vec![0, 2]; // worker 1 removed (T4)
-        assert_eq!(c.route(0), 0);
-        assert_eq!(c.route(1), 2);
-        assert_eq!(c.route(2), 0);
+        assert_eq!(c.route(0).unwrap(), 0);
+        assert_eq!(c.route(1).unwrap(), 2);
+        assert_eq!(c.route(2).unwrap(), 0);
+    }
+
+    #[test]
+    fn routing_with_no_active_workers_is_a_typed_error() {
+        let mut c = core(3, 2);
+        c.active_workers.clear(); // degenerate plan: every worker delayed out
+        let e = c.route(7).expect_err("empty active_workers must not panic");
+        assert!(e.to_string().contains("no active workers"), "{e}");
+        let e = c.admit(job(7)).expect_err("admit routes, so it fails too");
+        assert!(e.to_string().contains("no active workers"), "{e}");
+        assert_eq!(c.inflight, 0, "failed admit leaves no half-admitted job");
+        assert!(c.jobs.is_empty());
+        // over_capacity is the guard engines check before admitting
+        assert!(c.over_capacity());
     }
 
     #[test]
@@ -446,7 +475,7 @@ mod tests {
         assert!(!c.over_capacity());
         let cap = c.inflight_cap;
         for i in 0..cap as u64 {
-            c.admit(job(i));
+            c.admit(job(i)).unwrap();
         }
         assert!(c.over_capacity());
         c.retire(0);

@@ -71,6 +71,7 @@ use crate::pipeline::{EngineParams, RunResult};
 use crate::planner::costmodel::{decay_for_td, mem_footprint};
 use crate::planner::{plan, Profile};
 use crate::stream::{arrival_interval_us, Batch, Stream, SyntheticStream, TestSet};
+use crate::trace::{batch_hash, BatchRec, FinishRec, Header, ReplanRec, TraceWriter, WorkerRec};
 use crate::util::error::Result;
 
 /// The OCL plugin a session runs with: borrowed from the caller (the
@@ -125,6 +126,10 @@ pub struct SessionBuilder<'a> {
     test: Option<TestSet>,
     /// micro-benchmark reps for a measured initial profile (0 = analytic)
     measured_reps: u32,
+    /// trace artifact destination ([`SessionBuilder::record_trace`])
+    trace_path: Option<String>,
+    /// pre-built trace sink; takes precedence over `trace_path`
+    trace_writer: Option<TraceWriter>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -202,6 +207,23 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Record this session's run as a `ferret-trace/1` JSON-lines artifact
+    /// at `path` (see the [`crate::trace`] module docs for the schema and
+    /// the determinism contract): stream identity (per-batch content
+    /// hashes, arrival stamps) plus every planner decision. The file is
+    /// created at build time; parent directories are created as needed.
+    pub fn record_trace(mut self, path: &str) -> Self {
+        self.trace_path = Some(path.to_string());
+        self
+    }
+
+    /// Record into a caller-supplied sink instead of a file — e.g.
+    /// [`TraceWriter::in_memory`] for replay drivers and tests.
+    pub fn record_trace_writer(mut self, writer: TraceWriter) -> Self {
+        self.trace_writer = Some(writer);
+        self
+    }
+
     /// Validate and assemble the session. Returns a typed error (never
     /// panics) when the configuration cannot run: zero batch rows, a
     /// partition that does not cover the model, worker knob vectors of the
@@ -220,6 +242,8 @@ impl<'a> SessionBuilder<'a> {
             batch,
             test,
             measured_reps,
+            trace_path,
+            trace_writer,
         } = self;
         if batch == 0 {
             bail!("session: batch rows must be > 0 (set SessionBuilder::batch)");
@@ -322,8 +346,64 @@ impl<'a> SessionBuilder<'a> {
         // one session-wide workspace: the scheduler, the executor's device
         // threads, and the engine's update path all recycle through the
         // same buffer pool, and stage kernels use the resolved thread count
-        let ws = Workspace::new(BufferPool::new(), kernels::resolve_threads(ep.kernel_threads));
+        let kthreads = kernels::resolve_threads(ep.kernel_threads);
+        let ws = Workspace::new(BufferPool::new(), kthreads);
         engine.set_workspace(ws.clone());
+
+        // trace header: written at build time so even an aborted run leaves
+        // a parseable (if truncated) artifact. Records the *resolved* td
+        // and kernel-thread count, and the plan the engine will actually
+        // start under — whether caller-supplied or auto-planned.
+        let mut tracer = match (trace_writer, trace_path) {
+            (Some(w), _) => Some(w),
+            (None, Some(p)) => Some(TraceWriter::to_path(&p)?),
+            (None, None) => None,
+        };
+        if let Some(tr) = tracer.as_mut() {
+            let c = &engine.cfg;
+            tr.header(&Header {
+                schema: crate::trace::SCHEMA.into(),
+                model: model.name.clone(),
+                dims: model.dims.clone(),
+                batch,
+                features,
+                classes,
+                mode: mode.name().into(),
+                executor: executor.name().into(),
+                lr: ep.lr,
+                decay_c: ep.decay_c,
+                td,
+                tacc_per_class: ep.tacc_per_class,
+                seed: ep.seed,
+                stash_cap: ep.stash_cap,
+                kernel_threads: kthreads,
+                schedule: c.schedule.name().into(),
+                partition: c.partition.bounds.clone(),
+                workers: c
+                    .pipe
+                    .workers
+                    .iter()
+                    .map(|w| WorkerRec {
+                        delay: w.delay,
+                        recompute: w.recompute,
+                        accum: w.accum.clone(),
+                        omit: w.omit.clone(),
+                    })
+                    .collect(),
+                comp: c.comp_kind.name().into(),
+                comp_params: [
+                    c.comp_params.lam0,
+                    c.comp_params.eta_lam,
+                    c.comp_params.alpha,
+                    c.comp_params.nu,
+                ],
+                plugin: plugin.get().name().into(),
+                plugin_cadence: c.plugin_cadence,
+                budget: c.budget.spec_string(),
+                plan_id: crate::planner::plan_content_id(&c.partition, &c.pipe, 0),
+                measured_reps,
+            });
+        }
         let executor: Box<dyn Executor + 'a> = match executor {
             ExecutorKind::Sim => Box::new(SimExecutor::with_workspace(backend, ws.clone())),
             ExecutorKind::Threaded => Box::new(ThreadedExecutor::spawn_with(
@@ -359,6 +439,7 @@ impl<'a> SessionBuilder<'a> {
             held: VecDeque::new(),
             drain_from: None,
             test,
+            tracer,
         })
     }
 }
@@ -407,6 +488,8 @@ pub struct Session<'a> {
     /// wall/virtual stamp when the current drain began (None = no drain)
     drain_from: Option<u64>,
     test: Option<TestSet>,
+    /// trace artifact sink; None when the session is not being recorded
+    tracer: Option<TraceWriter>,
 }
 
 /// Assemble the per-step [`EngineIo`] bundle from the session's disjoint
@@ -444,6 +527,8 @@ impl<'a> Session<'a> {
             batch: 0,
             test: None,
             measured_reps: 0,
+            trace_path: None,
+            trace_writer: None,
         }
     }
 
@@ -589,6 +674,22 @@ impl<'a> Session<'a> {
                 eval_tacc(self.backend, &self.shapes, &params, self.classes, test, self.batch);
         }
         self.metrics.pool = self.ws.pool.stats();
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.finish(&FinishRec {
+                oacc: self.metrics.oacc.value(),
+                tacc: self.metrics.tacc,
+                arrivals: self.metrics.arrivals(),
+                trained: self.metrics.trained,
+                dropped: self.metrics.dropped,
+                replans: self.metrics.replans,
+                mem_bytes: self.metrics.mem_bytes,
+                peak_ledger: self.metrics.ledger.peak_total,
+                p50: self.metrics.latency_percentile(50.0),
+                p95: self.metrics.latency_percentile(95.0),
+                p99: self.metrics.latency_percentile(99.0),
+                oacc_curve: self.metrics.oacc.curve.clone(),
+            });
+        }
         // moving the metrics out drops the executor, which joins every
         // device thread — nothing survives the session
         let Session { metrics, .. } = self;
@@ -602,20 +703,30 @@ impl<'a> Session<'a> {
     /// modes, exactly like the historical pull loops — the stream is never
     /// materialized in memory, so arbitrarily long streams run in O(1)
     /// batch buffering.
-    pub fn run_stream(mut self, stream: &mut dyn Stream) -> RunResult {
+    ///
+    /// A stream yielding a batch that does not match the session's model
+    /// (wrong feature dimension, zero or too many rows) is a typed error,
+    /// not a panic: the partial run is abandoned, and dropping the session
+    /// joins its device threads on the way out.
+    pub fn run_stream(mut self, stream: &mut dyn Stream) -> Result<RunResult> {
         if self.test.is_none() {
             self.test = Some(stream.test_set(self.ep.tacc_per_class));
+        }
+        if let Some(tr) = self.tracer.as_mut() {
+            if let Some(spec) = stream.provenance() {
+                tr.stream(&spec);
+            }
         }
         match self.mode {
             Mode::Lockstep => {
                 while let Some(b) = stream.next_batch() {
-                    self.ingest(b).expect("stream batch matches the session's model");
+                    self.ingest(b)?;
                     self.drain();
                 }
             }
             Mode::Freerun => {
                 while let Some(b) = stream.next_batch() {
-                    self.ingest(b).expect("stream batch matches the session's model");
+                    self.ingest(b)?;
                     // admit (or hold) the queued batch before generating
                     // the next one: at most a single-batch lookahead is
                     // ever buffered, and completions are serviced while
@@ -628,7 +739,7 @@ impl<'a> Session<'a> {
                 }
             }
         }
-        self.finish()
+        Ok(self.finish())
     }
 
     // -----------------------------------------------------------------
@@ -681,7 +792,19 @@ impl<'a> Session<'a> {
         // advance the budget cursor even mid-drain so the pending re-plan
         // sees the newest budget in force
         let stepped = self.budget.step_due(seq, 0);
-        if self.drain_from.is_some() || stepped {
+        let held = self.drain_from.is_some() || stepped;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.batch(&BatchRec {
+                seq,
+                id: batch.id,
+                rows: batch.y.len(),
+                hash: batch_hash(&batch),
+                arrival: te,
+                admitted: t,
+                held,
+            });
+        }
+        if held {
             // budget boundary (or mid-drain arrival): hold the batch, stop
             // admitting, and let the in-flight microbatches finish under
             // the old plan — nothing is dropped by the transition
@@ -741,6 +864,26 @@ impl<'a> Session<'a> {
     fn replan(&mut self, t0: u64, now: u64) {
         let refreshed = self.engine.refreshed_profile(&self.prof);
         let out = plan(&refreshed, self.td, self.budget.current(), self.decay);
+        if let Some(tr) = self.tracer.as_mut() {
+            // read the measured stage means BEFORE the transition: it
+            // resets the engine's observation windows for the new plan
+            let (tf, tb) = self.engine.measured_stage_means();
+            tr.replan(&ReplanRec {
+                t: now,
+                t0,
+                drain: now.saturating_sub(t0),
+                budget: self.budget.current(),
+                tf,
+                tb,
+                plan_id: out.plan_id(),
+                partition: out.partition.bounds.clone(),
+                active_workers: out.config.active_workers(),
+                mem_bytes: out.mem_bytes,
+                rate: out.rate,
+                feasible: out.feasible,
+                tc: out.tc,
+            });
+        }
         self.engine.transition(&out, &refreshed, &mut *self.executor);
         self.metrics.record_replan(now, now.saturating_sub(t0), out.mem_bytes);
         self.metrics.exec_threads = self.metrics.exec_threads.max(self.executor.threads());
@@ -775,7 +918,19 @@ impl<'a> Session<'a> {
             // re-plan sees the newest budget in force
             let now = self.wall_now();
             let stepped = self.budget.step_due(seq, now);
-            if self.drain_from.is_some() || stepped {
+            let held = self.drain_from.is_some() || stepped;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.batch(&BatchRec {
+                    seq,
+                    id: batch.id,
+                    rows: batch.y.len(),
+                    hash: batch_hash(&batch),
+                    arrival: due,
+                    admitted: now,
+                    held,
+                });
+            }
+            if held {
                 if self.drain_from.is_none() {
                     self.drain_from = Some(now);
                 }
@@ -921,7 +1076,8 @@ pub fn run_async_with(
         .batch(batch)
         .build()
         .expect("run_async_with: invalid engine configuration");
-    session.run_stream(stream)
+    // a SyntheticStream always matches the model it was specced against
+    session.run_stream(stream).expect("run_async_with: stream batches match the model")
 }
 
 /// Convenience: build + run in one call on the simulation executor in

@@ -16,6 +16,6 @@ pub mod profile;
 pub mod search;
 
 pub use costmodel::{mem_footprint, adaptation_rate, PipeConfig, WorkerCfg};
-pub use plan::{plan, PlanOutcome};
+pub use plan::{plan, plan_content_id, PlanOutcome};
 pub use profile::{Partition, Profile};
 pub use search::{search, SearchOutcome};

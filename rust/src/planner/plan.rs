@@ -9,6 +9,7 @@
 use super::costmodel::PipeConfig;
 use super::profile::{Partition, Profile};
 use super::search::{search, SearchOutcome};
+use crate::util::Fnv;
 
 /// Result of Alg. 3: the chosen partition + configuration.
 #[derive(Debug, Clone)]
@@ -20,6 +21,43 @@ pub struct PlanOutcome {
     pub feasible: bool,
     /// the winning stage time bound
     pub tc: u64,
+}
+
+impl PlanOutcome {
+    /// Content hash of the plan the engine will actually execute (see
+    /// [`plan_content_id`]).
+    pub fn plan_id(&self) -> u64 {
+        plan_content_id(&self.partition, &self.config, self.tc)
+    }
+}
+
+/// Stable content identity of a (partition, configuration) pair: equal
+/// plans hash equal across runs, processes, and platforms, so trace
+/// replay can detect plan churn by comparing ids alone. Hashes exactly
+/// the fields the engine executes — stage bounds, per-worker
+/// delay/recompute/accum/omit, and the winning stage bound `tc` — not
+/// the scores (`rate`/`mem_bytes`), which are derived.
+pub fn plan_content_id(partition: &Partition, config: &PipeConfig, tc: u64) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(partition.bounds.len() as u64);
+    for &b in &partition.bounds {
+        h.write_u64(b as u64);
+    }
+    h.write_u64(config.workers.len() as u64);
+    for w in &config.workers {
+        h.write_i64(w.delay);
+        h.write(&[w.recompute as u8]);
+        h.write_u64(w.accum.len() as u64);
+        for &a in &w.accum {
+            h.write_u64(a);
+        }
+        h.write_u64(w.omit.len() as u64);
+        for &o in &w.omit {
+            h.write_u64(o);
+        }
+    }
+    h.write_u64(tc);
+    h.finish()
 }
 
 /// Greedy consecutive grouping under a per-stage time bound.
@@ -163,6 +201,18 @@ mod tests {
                 assert!(half.mem_bytes <= max.mem_bytes * 0.5 + 1e-9);
             }
         });
+    }
+
+    #[test]
+    fn plan_id_is_content_determined() {
+        let p = prof();
+        let a = plan(&p, p.default_td(), f64::INFINITY, 1e-4);
+        let b = plan(&p, p.default_td(), f64::INFINITY, 1e-4);
+        assert_eq!(a.plan_id(), b.plan_id(), "same inputs, same id");
+        let half = plan(&p, p.default_td(), a.mem_bytes * 0.25, 1e-4);
+        if half.partition.bounds != a.partition.bounds || half.config != a.config {
+            assert_ne!(half.plan_id(), a.plan_id(), "different plan, different id");
+        }
     }
 
     #[test]

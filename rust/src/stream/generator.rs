@@ -26,8 +26,38 @@ pub enum DriftKind {
     Temporal { dwell: usize },
 }
 
+impl DriftKind {
+    /// Compact text form carried by trace artifacts:
+    /// `stationary`, `class_incremental:<tasks>`, `covariate:<cycles>`,
+    /// `temporal:<dwell>`. Round-trips through [`DriftKind::parse`].
+    pub fn spec_str(&self) -> String {
+        match self {
+            DriftKind::Stationary => "stationary".into(),
+            DriftKind::ClassIncremental { tasks } => format!("class_incremental:{tasks}"),
+            DriftKind::Covariate { cycles } => format!("covariate:{cycles}"),
+            DriftKind::Temporal { dwell } => format!("temporal:{dwell}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        match (kind, arg) {
+            ("stationary", None) => Some(DriftKind::Stationary),
+            ("class_incremental", Some(a)) => {
+                a.parse().ok().map(|tasks| DriftKind::ClassIncremental { tasks })
+            }
+            ("covariate", Some(a)) => a.parse().ok().map(|cycles| DriftKind::Covariate { cycles }),
+            ("temporal", Some(a)) => a.parse().ok().map(|dwell| DriftKind::Temporal { dwell }),
+            _ => None,
+        }
+    }
+}
+
 /// Static description of a stream.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StreamSpec {
     pub name: String,
     pub features: usize,
@@ -212,6 +242,10 @@ impl crate::stream::Stream for SyntheticStream {
         };
         Some(self.remaining().min(cut))
     }
+
+    fn provenance(&self) -> Option<StreamSpec> {
+        Some(self.spec.clone())
+    }
 }
 
 #[cfg(test)]
@@ -315,6 +349,20 @@ mod tests {
         for chunk in labels.chunks(5) {
             assert!(chunk.iter().all(|&y| y == chunk[0]), "{chunk:?}");
         }
+    }
+
+    #[test]
+    fn drift_kind_spec_round_trips() {
+        for k in [
+            DriftKind::Stationary,
+            DriftKind::ClassIncremental { tasks: 5 },
+            DriftKind::Covariate { cycles: 1.5 },
+            DriftKind::Temporal { dwell: 7 },
+        ] {
+            assert_eq!(DriftKind::parse(&k.spec_str()), Some(k), "{}", k.spec_str());
+        }
+        assert_eq!(DriftKind::parse("warp"), None);
+        assert_eq!(DriftKind::parse("temporal"), None, "missing arg");
     }
 
     #[test]

@@ -14,9 +14,11 @@
 //! the framework comparison is preserved.
 
 pub mod generator;
+pub mod replay;
 pub mod settings;
 
 pub use generator::{Batch, DriftKind, StreamSpec, SyntheticStream, TestSet};
+pub use replay::ReplayStream;
 pub use settings::{arrival_interval_us, batch_arrival_us, paper_settings, Setting, WALL_TICK_US};
 
 /// Abstract microbatch source for the engines.
@@ -41,6 +43,14 @@ pub trait Stream {
     /// Batches remaining, when known. A capacity hint only — callers must
     /// not rely on it for termination.
     fn len_hint(&self) -> Option<usize> {
+        None
+    }
+
+    /// The seeded spec this stream can be re-materialized from, when it
+    /// has one. Trace recording stores it so replay can rebuild the exact
+    /// stream; hand-fed or external streams return `None` (their traces
+    /// carry batch hashes but cannot be replayed from spec alone).
+    fn provenance(&self) -> Option<StreamSpec> {
         None
     }
 }

@@ -1,0 +1,164 @@
+//! Replay stream: re-materializes a recorded run's exact batch sequence.
+//!
+//! A trace artifact stores the stream's [`StreamSpec`] (seed included)
+//! plus an FNV-1a content hash per recorded batch. Because
+//! [`SyntheticStream`] is fully seeded, rebuilding it from the spec
+//! reproduces the batches bit-for-bit — the hashes are not the data, they
+//! are the *check* that the rebuilt stream really is the recorded one
+//! (a changed generator, spec drift, or a hand-fed stream all surface as
+//! a hash mismatch instead of a silently different replay).
+
+use super::generator::{Batch, StreamSpec, SyntheticStream, TestSet};
+use super::Stream;
+use crate::trace::batch_hash;
+
+/// First point where the rebuilt stream diverged from the recording.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplayMismatch {
+    /// replay position (0-based batch index within the trace)
+    pub index: u64,
+    /// hash the trace recorded at this position
+    pub expected: u64,
+    /// hash of the batch the rebuilt stream produced; `None` when the
+    /// rebuilt stream ended before reaching this position
+    pub got: Option<u64>,
+}
+
+/// A [`Stream`] that re-drives a recorded run: a seeded
+/// [`SyntheticStream`] rebuilt from the trace's spec, verified batch by
+/// batch against the trace's content hashes. Ends at the recorded length.
+/// On the first mismatch the stream ends early and
+/// [`ReplayStream::mismatch`] reports where — callers check it after the
+/// run and refuse the replay's results.
+pub struct ReplayStream {
+    inner: SyntheticStream,
+    expected: Vec<u64>,
+    pos: u64,
+    mismatch: Option<ReplayMismatch>,
+}
+
+impl ReplayStream {
+    /// Rebuild the stream a trace recorded: `spec` and one content hash
+    /// per recorded batch, in arrival order.
+    pub fn new(spec: StreamSpec, expected: Vec<u64>) -> Self {
+        ReplayStream { inner: SyntheticStream::new(spec), expected, pos: 0, mismatch: None }
+    }
+
+    /// Where the rebuilt stream first diverged from the recording, if it
+    /// did. `None` after a clean (so far) replay.
+    pub fn mismatch(&self) -> Option<ReplayMismatch> {
+        self.mismatch
+    }
+
+    /// Batches recorded in the trace (the replay's length).
+    pub fn recorded_len(&self) -> usize {
+        self.expected.len()
+    }
+}
+
+impl Stream for ReplayStream {
+    fn next_batch(&mut self) -> Option<Batch> {
+        if self.mismatch.is_some() || self.pos >= self.expected.len() as u64 {
+            return None;
+        }
+        let want = self.expected[self.pos as usize];
+        match self.inner.next_batch() {
+            Some(b) => {
+                let got = batch_hash(&b);
+                if got != want {
+                    self.mismatch =
+                        Some(ReplayMismatch { index: self.pos, expected: want, got: Some(got) });
+                    return None;
+                }
+                self.pos += 1;
+                Some(b)
+            }
+            None => {
+                self.mismatch = Some(ReplayMismatch { index: self.pos, expected: want, got: None });
+                None
+            }
+        }
+    }
+
+    fn test_set(&self, per_class: usize) -> TestSet {
+        self.inner.test_set(per_class)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some((self.expected.len() as u64).saturating_sub(self.pos) as usize)
+    }
+
+    fn provenance(&self) -> Option<StreamSpec> {
+        Some(self.inner.spec().clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::DriftKind;
+
+    fn spec() -> StreamSpec {
+        StreamSpec {
+            name: "replay-test".into(),
+            features: 8,
+            classes: 3,
+            batch: 4,
+            num_batches: 10,
+            kind: DriftKind::Stationary,
+            margin: 3.0,
+            noise: 0.5,
+            seed: 11,
+        }
+    }
+
+    fn recorded_hashes(n: usize) -> Vec<u64> {
+        let mut s = SyntheticStream::new(spec());
+        (0..n).map(|_| batch_hash(&s.next_batch().unwrap())).collect()
+    }
+
+    #[test]
+    fn replay_reproduces_the_recorded_prefix() {
+        let hashes = recorded_hashes(6);
+        let mut original = SyntheticStream::new(spec());
+        let mut replay = ReplayStream::new(spec(), hashes);
+        assert_eq!(replay.len_hint(), Some(6));
+        let mut n = 0;
+        while let Some(b) = Stream::next_batch(&mut replay) {
+            let o = original.next_batch().unwrap();
+            assert_eq!(b.x, o.x);
+            assert_eq!(b.y, o.y);
+            n += 1;
+        }
+        assert_eq!(n, 6, "ends at the recorded length, not the spec's");
+        assert_eq!(replay.mismatch(), None);
+    }
+
+    #[test]
+    fn hash_mismatch_ends_the_stream_and_is_reported() {
+        let mut hashes = recorded_hashes(6);
+        hashes[3] ^= 1; // corrupt one recorded hash
+        let mut replay = ReplayStream::new(spec(), hashes);
+        let mut n = 0;
+        while Stream::next_batch(&mut replay).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 3, "stops at the diverging batch");
+        let m = replay.mismatch().expect("mismatch recorded");
+        assert_eq!(m.index, 3);
+        assert!(m.got.is_some());
+        assert_ne!(Some(m.expected), m.got);
+    }
+
+    #[test]
+    fn short_rebuilt_stream_is_a_mismatch() {
+        // trace claims more batches than the spec can produce
+        let mut hashes = recorded_hashes(10);
+        hashes.push(0xDEAD);
+        let mut replay = ReplayStream::new(spec(), hashes);
+        while Stream::next_batch(&mut replay).is_some() {}
+        let m = replay.mismatch().expect("short stream recorded as mismatch");
+        assert_eq!(m.index, 10);
+        assert_eq!(m.got, None);
+    }
+}

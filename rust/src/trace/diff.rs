@@ -1,0 +1,281 @@
+//! Machine-readable diff between a recorded trace and its replay.
+
+use super::{FinishRec, Trace};
+use crate::metrics::curve_windowed_max_delta;
+
+/// Accuracy curves are compared over this many equal windows: fine enough
+/// to localize a mid-run dip, coarse enough that per-batch noise averages
+/// out within a window.
+pub const OACC_WINDOWS: usize = 16;
+
+/// Gate thresholds for `ferret replay --gate`. The default is the strict
+/// bit-for-bit contract: every threshold zero, so any deviation at all is
+/// a violation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GateThresholds {
+    /// max allowed |final oacc delta| (percentage points)
+    pub oacc: f64,
+    /// max allowed per-window oacc mean delta (percentage points)
+    pub oacc_window: f64,
+    /// max allowed |final tacc delta| (percentage points)
+    pub tacc: f64,
+    /// max allowed latency percentile delta (ticks), applied to p50/p95/p99
+    pub latency: u64,
+    /// max allowed replan-count delta
+    pub replans: u64,
+    /// max allowed plan churn (number of differing plan ids)
+    pub plan_churn: u64,
+}
+
+impl Default for GateThresholds {
+    fn default() -> Self {
+        GateThresholds { oacc: 0.0, oacc_window: 0.0, tacc: 0.0, latency: 0, replans: 0, plan_churn: 0 }
+    }
+}
+
+/// Structured comparison of two traces (recorded vs replayed). All deltas
+/// are `replayed - recorded` for signed fields, absolute for magnitudes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayDiff {
+    /// both traces saw the same batch sequence (count and content hashes)
+    pub stream_ok: bool,
+    pub batches_a: usize,
+    pub batches_b: usize,
+    pub oacc_a: f64,
+    pub oacc_b: f64,
+    /// signed final-oacc delta (b - a)
+    pub oacc_delta: f64,
+    /// max per-window |oacc mean delta| over [`OACC_WINDOWS`] windows
+    pub oacc_window_max_delta: f64,
+    /// signed final-tacc delta (b - a)
+    pub tacc_delta: f64,
+    /// absolute latency percentile deltas
+    pub p50_delta: u64,
+    pub p95_delta: u64,
+    pub p99_delta: u64,
+    pub replans_a: u64,
+    pub replans_b: u64,
+    /// absolute replan-count delta
+    pub replan_delta: u64,
+    /// differing plan ids: initial plans compared, then replans pairwise,
+    /// plus any length mismatch
+    pub plan_churn: u64,
+    /// signed trained-count delta (b - a)
+    pub trained_delta: i64,
+    /// signed dropped-count delta (b - a)
+    pub dropped_delta: i64,
+    /// signed measured-footprint delta in bytes (b - a)
+    pub mem_delta: f64,
+}
+
+fn finish_or_zero(t: &Trace) -> FinishRec {
+    t.finish.clone().unwrap_or(FinishRec {
+        oacc: 0.0,
+        tacc: 0.0,
+        arrivals: 0,
+        trained: 0,
+        dropped: 0,
+        replans: 0,
+        mem_bytes: 0.0,
+        peak_ledger: 0,
+        p50: 0,
+        p95: 0,
+        p99: 0,
+        oacc_curve: Vec::new(),
+    })
+}
+
+impl ReplayDiff {
+    /// Compare recorded trace `a` against replayed trace `b`.
+    pub fn compute(a: &Trace, b: &Trace) -> ReplayDiff {
+        let (ba, bb) = (a.batches(), b.batches());
+        let stream_ok = ba.len() == bb.len()
+            && ba.iter().zip(&bb).all(|(x, y)| x.hash == y.hash && x.seq == y.seq);
+
+        let fa = finish_or_zero(a);
+        let fb = finish_or_zero(b);
+
+        let (ra, rb) = (a.replans(), b.replans());
+        let mut plan_churn = if a.header.plan_id != b.header.plan_id { 1u64 } else { 0 };
+        plan_churn += ra
+            .iter()
+            .zip(&rb)
+            .filter(|(x, y)| x.plan_id != y.plan_id)
+            .count() as u64;
+        plan_churn += ra.len().abs_diff(rb.len()) as u64;
+
+        ReplayDiff {
+            stream_ok,
+            batches_a: ba.len(),
+            batches_b: bb.len(),
+            oacc_a: fa.oacc,
+            oacc_b: fb.oacc,
+            oacc_delta: fb.oacc - fa.oacc,
+            oacc_window_max_delta: curve_windowed_max_delta(
+                &fa.oacc_curve,
+                &fb.oacc_curve,
+                OACC_WINDOWS,
+            ),
+            tacc_delta: fb.tacc - fa.tacc,
+            p50_delta: fa.p50.abs_diff(fb.p50),
+            p95_delta: fa.p95.abs_diff(fb.p95),
+            p99_delta: fa.p99.abs_diff(fb.p99),
+            replans_a: fa.replans,
+            replans_b: fb.replans,
+            replan_delta: fa.replans.abs_diff(fb.replans),
+            plan_churn,
+            trained_delta: fb.trained as i64 - fa.trained as i64,
+            dropped_delta: fb.dropped as i64 - fa.dropped as i64,
+            mem_delta: fb.mem_bytes - fa.mem_bytes,
+        }
+    }
+
+    /// True when the replay was bit-for-bit: same stream, same plans, same
+    /// metrics.
+    pub fn is_zero(&self) -> bool {
+        self.stream_ok
+            && self.batches_a == self.batches_b
+            && self.oacc_delta == 0.0
+            && self.oacc_window_max_delta == 0.0
+            && self.tacc_delta == 0.0
+            && self.p50_delta == 0
+            && self.p95_delta == 0
+            && self.p99_delta == 0
+            && self.replan_delta == 0
+            && self.plan_churn == 0
+            && self.trained_delta == 0
+            && self.dropped_delta == 0
+            && self.mem_delta == 0.0
+    }
+
+    /// Threshold violations, one human-readable line each; empty when the
+    /// diff passes the gate.
+    pub fn violations(&self, g: &GateThresholds) -> Vec<String> {
+        let mut v = Vec::new();
+        if !self.stream_ok {
+            v.push(format!(
+                "stream mismatch: recorded {} batches, replayed {}",
+                self.batches_a, self.batches_b
+            ));
+        }
+        if self.oacc_delta.abs() > g.oacc {
+            v.push(format!(
+                "oacc delta {:+.4}pp exceeds {:.4}pp ({:.4} -> {:.4})",
+                self.oacc_delta, g.oacc, self.oacc_a, self.oacc_b
+            ));
+        }
+        if self.oacc_window_max_delta > g.oacc_window {
+            v.push(format!(
+                "windowed oacc delta {:.4}pp exceeds {:.4}pp",
+                self.oacc_window_max_delta, g.oacc_window
+            ));
+        }
+        if self.tacc_delta.abs() > g.tacc {
+            v.push(format!("tacc delta {:+.4}pp exceeds {:.4}pp", self.tacc_delta, g.tacc));
+        }
+        for (name, d) in [("p50", self.p50_delta), ("p95", self.p95_delta), ("p99", self.p99_delta)]
+        {
+            if d > g.latency {
+                v.push(format!("{name} latency delta {d} exceeds {}", g.latency));
+            }
+        }
+        if self.replan_delta > g.replans {
+            v.push(format!(
+                "replan count delta {} exceeds {} ({} -> {})",
+                self.replan_delta, g.replans, self.replans_a, self.replans_b
+            ));
+        }
+        if self.plan_churn > g.plan_churn {
+            v.push(format!("plan churn {} exceeds {}", self.plan_churn, g.plan_churn));
+        }
+        v
+    }
+
+    /// One-object JSON rendering for `--out` / CI artifacts.
+    pub fn to_json(&self) -> String {
+        use super::json::fmt_f64;
+        format!(
+            "{{\"stream_ok\":{},\"batches_a\":{},\"batches_b\":{},\"oacc_a\":{},\"oacc_b\":{},\
+             \"oacc_delta\":{},\"oacc_window_max_delta\":{},\"tacc_delta\":{},\
+             \"p50_delta\":{},\"p95_delta\":{},\"p99_delta\":{},\
+             \"replans_a\":{},\"replans_b\":{},\"replan_delta\":{},\"plan_churn\":{},\
+             \"trained_delta\":{},\"dropped_delta\":{},\"mem_delta\":{},\"bit_for_bit\":{}}}",
+            self.stream_ok,
+            self.batches_a,
+            self.batches_b,
+            fmt_f64(self.oacc_a),
+            fmt_f64(self.oacc_b),
+            fmt_f64(self.oacc_delta),
+            fmt_f64(self.oacc_window_max_delta),
+            fmt_f64(self.tacc_delta),
+            self.p50_delta,
+            self.p95_delta,
+            self.p99_delta,
+            self.replans_a,
+            self.replans_b,
+            self.replan_delta,
+            self.plan_churn,
+            self.trained_delta,
+            self.dropped_delta,
+            fmt_f64(self.mem_delta),
+            self.is_zero(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests_support::tiny_trace;
+    use super::*;
+
+    #[test]
+    fn identical_traces_diff_to_zero() {
+        let t = tiny_trace();
+        let d = ReplayDiff::compute(&t, &t);
+        assert!(d.is_zero(), "{d:?}");
+        assert!(d.violations(&GateThresholds::default()).is_empty());
+        assert!(d.to_json().contains("\"bit_for_bit\":true"));
+    }
+
+    #[test]
+    fn perturbations_show_up_and_trip_the_gate() {
+        let a = tiny_trace();
+        let mut b = tiny_trace();
+        if let Some(f) = b.finish.as_mut() {
+            f.oacc += 1.5;
+            f.p95 += 40;
+            f.replans += 1;
+        }
+        b.header.plan_id ^= 1;
+        let d = ReplayDiff::compute(&a, &b);
+        assert!(!d.is_zero());
+        assert!((d.oacc_delta - 1.5).abs() < 1e-12);
+        assert_eq!(d.p95_delta, 40);
+        assert_eq!(d.replan_delta, 1);
+        assert_eq!(d.plan_churn, 1);
+        let strict = d.violations(&GateThresholds::default());
+        assert!(strict.len() >= 4, "every perturbation reported: {strict:?}");
+        // loose thresholds absorb the same deltas
+        let loose = GateThresholds {
+            oacc: 2.0,
+            oacc_window: 100.0,
+            tacc: 1.0,
+            latency: 100,
+            replans: 1,
+            plan_churn: 1,
+        };
+        assert!(d.violations(&loose).is_empty());
+    }
+
+    #[test]
+    fn stream_divergence_is_always_a_violation() {
+        let a = tiny_trace();
+        let mut b = tiny_trace();
+        if let Some(super::super::Event::Batch(br)) = b.events.first_mut() {
+            br.hash ^= 1;
+        }
+        let d = ReplayDiff::compute(&a, &b);
+        assert!(!d.stream_ok);
+        assert!(!d.violations(&GateThresholds::default()).is_empty());
+    }
+}

@@ -1,0 +1,272 @@
+//! Replay driver: re-drive a recorded trace through a lockstep session —
+//! under the recorded configuration or a variant — and diff the outcomes.
+
+use crate::backend::native::NativeBackend;
+use crate::bail;
+use crate::budget::BudgetSchedule;
+use crate::compensate::{CompKind, CompParams};
+use crate::config::ModelSpec;
+use crate::ocl::OclKind;
+use crate::pipeline::engine::{AsyncCfg, AsyncSchedule};
+use crate::pipeline::executor::ExecutorKind;
+use crate::pipeline::sched::Mode;
+use crate::pipeline::{EngineParams, Session};
+use crate::planner::costmodel::{PipeConfig, WorkerCfg};
+use crate::planner::Partition;
+use crate::stream::ReplayStream;
+use crate::util::error::Result;
+
+use super::{Event, ReplayDiff, Trace, TraceWriter};
+
+/// Result of [`replay_trace`]: the trace the replay itself produced, plus
+/// its diff against the recording.
+pub struct ReplayOutcome {
+    /// trace recorded by the replay session (in memory)
+    pub replayed: Trace,
+    /// structured comparison: recorded vs replayed
+    pub diff: ReplayDiff,
+}
+
+fn comp_kind_named(name: &str) -> Option<CompKind> {
+    // accept both the display names the trace records and the CLI's
+    // short forms, so overrides read naturally either way
+    let short = match name {
+        "none" => Some(CompKind::NoComp),
+        "step" => Some(CompKind::StepAware),
+        "gap" => Some(CompKind::GapAware),
+        "fisher" => Some(CompKind::Fisher),
+        "iter" => Some(CompKind::IterFisher),
+        _ => None,
+    };
+    short.or_else(|| CompKind::all().into_iter().find(|k| k.name() == name))
+}
+
+fn ocl_kind_named(name: &str) -> Option<OclKind> {
+    let short = match name {
+        "vanilla" => Some(OclKind::Vanilla),
+        "er" => Some(OclKind::Er),
+        "mir" => Some(OclKind::Mir),
+        "lwf" => Some(OclKind::Lwf),
+        "mas" => Some(OclKind::Mas),
+        _ => None,
+    };
+    short.or_else(|| OclKind::all().into_iter().find(|k| k.name() == name))
+}
+
+fn schedule_named(name: &str) -> Option<AsyncSchedule> {
+    match name {
+        "Pipedream" => Some(AsyncSchedule::Pipedream),
+        "Pipedream2BW" => Some(AsyncSchedule::Pipedream2BW),
+        "Ferret" => Some(AsyncSchedule::Ferret),
+        _ => None,
+    }
+}
+
+/// Re-drive `recorded` through a fresh lockstep session and diff the two
+/// runs. `overrides` are `(key, value)` config variations applied on top
+/// of the recorded configuration — supported keys: `comp`, `ocl`,
+/// `executor`, `kernel-threads`, `lr`, `stash-cap`, `plugin-cadence`,
+/// `budget-schedule`, `seed`. With no overrides, a trace recorded under
+/// the determinism contract (see the module docs) replays bit-for-bit:
+/// `diff.is_zero()`.
+///
+/// The stream is rebuilt from the trace's [`StreamSpec`] and verified
+/// batch-by-batch against the recorded content hashes; any divergence is
+/// a hard error, not a diff entry (the replay would be comparing
+/// different data, so every downstream number would be meaningless).
+/// Replay always runs `Mode::Lockstep` on the native backend with the
+/// analytic profile — the terms of the determinism contract.
+pub fn replay_trace(recorded: &Trace, overrides: &[(String, String)]) -> Result<ReplayOutcome> {
+    let h = &recorded.header;
+    let Some(spec) = recorded.stream.clone() else {
+        bail!(
+            "trace has no stream provenance (hand-fed stream?): the batch hashes alone \
+             cannot rebuild the data, so this trace is not replayable"
+        );
+    };
+    if h.measured_reps > 0 {
+        eprintln!(
+            "[replay] warning: trace was recorded with a measured initial profile \
+             (--warmup-profile {}); replay uses the analytic profile and plans may diverge",
+            h.measured_reps
+        );
+    }
+    if h.mode != "lockstep" {
+        eprintln!(
+            "[replay] warning: trace was recorded in {} mode; replay runs lockstep and \
+             wall-clock-dependent metrics will differ",
+            h.mode
+        );
+    }
+
+    let Some(schedule) = schedule_named(&h.schedule) else {
+        bail!("trace: unknown schedule '{}'", h.schedule);
+    };
+    let mut comp = match comp_kind_named(&h.comp) {
+        Some(k) => k,
+        None => bail!("trace: unknown compensation kind '{}'", h.comp),
+    };
+    let mut ocl = match ocl_kind_named(&h.plugin) {
+        Some(k) => k,
+        None => bail!("trace: unknown plugin '{}'", h.plugin),
+    };
+    let mut executor = match ExecutorKind::parse(&h.executor) {
+        Some(k) => k,
+        None => bail!("trace: unknown executor '{}'", h.executor),
+    };
+    let mut budget = if h.budget.is_empty() {
+        BudgetSchedule::fixed()
+    } else {
+        match BudgetSchedule::parse(&h.budget) {
+            Ok(b) => b,
+            Err(e) => bail!("trace: bad budget schedule '{}': {e}", h.budget),
+        }
+    };
+    let mut ep = EngineParams {
+        lr: h.lr,
+        decay_c: h.decay_c,
+        td: h.td,
+        tacc_per_class: h.tacc_per_class,
+        seed: h.seed,
+        stash_cap: h.stash_cap,
+        kernel_threads: h.kernel_threads,
+    };
+    let mut plugin_cadence = h.plugin_cadence;
+
+    for (k, v) in overrides {
+        match k.as_str() {
+            "comp" => {
+                comp = match comp_kind_named(v) {
+                    Some(c) => c,
+                    None => bail!("override comp={v}: unknown compensation kind"),
+                }
+            }
+            "ocl" => {
+                ocl = match ocl_kind_named(v) {
+                    Some(o) => o,
+                    None => bail!("override ocl={v}: unknown plugin kind"),
+                }
+            }
+            "executor" => {
+                executor = match ExecutorKind::parse(v) {
+                    Some(e) => e,
+                    None => bail!("override executor={v}: expected sim|threaded"),
+                }
+            }
+            "kernel-threads" => {
+                ep.kernel_threads = match v.parse() {
+                    Ok(n) => n,
+                    Err(_) => bail!("override kernel-threads={v}: expected a thread count"),
+                }
+            }
+            "lr" => {
+                ep.lr = match v.parse() {
+                    Ok(l) => l,
+                    Err(_) => bail!("override lr={v}: expected a learning rate"),
+                }
+            }
+            "stash-cap" => {
+                ep.stash_cap = match v.parse() {
+                    Ok(s) => s,
+                    Err(_) => bail!("override stash-cap={v}: expected a capacity"),
+                }
+            }
+            "plugin-cadence" => {
+                plugin_cadence = match v.parse() {
+                    Ok(c) if c > 0 => c,
+                    _ => bail!("override plugin-cadence={v}: expected a cadence >= 1"),
+                }
+            }
+            "budget-schedule" => {
+                budget = match BudgetSchedule::parse(v) {
+                    Ok(b) => b,
+                    Err(e) => bail!("override budget-schedule={v}: {e}"),
+                }
+            }
+            "seed" => {
+                ep.seed = match v.parse() {
+                    Ok(s) => s,
+                    Err(_) => bail!("override seed={v}: expected an integer seed"),
+                }
+            }
+            other => bail!(
+                "unknown override '{other}' (supported: comp, ocl, executor, kernel-threads, \
+                 lr, stash-cap, plugin-cadence, budget-schedule, seed)"
+            ),
+        }
+    }
+
+    let model = ModelSpec { name: h.model.clone(), dims: h.dims.clone() };
+    let cfg = AsyncCfg {
+        schedule,
+        partition: Partition { bounds: h.partition.clone() },
+        pipe: PipeConfig {
+            workers: h
+                .workers
+                .iter()
+                .map(|w| WorkerCfg {
+                    delay: w.delay,
+                    recompute: w.recompute,
+                    accum: w.accum.clone(),
+                    omit: w.omit.clone(),
+                })
+                .collect(),
+        },
+        comp_kind: comp,
+        comp_params: CompParams {
+            lam0: h.comp_params[0],
+            eta_lam: h.comp_params[1],
+            alpha: h.comp_params[2],
+            nu: h.comp_params[3],
+        },
+        plugin_cadence,
+        budget,
+    };
+
+    let expected: Vec<u64> = recorded
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Batch(b) => Some(b.hash),
+            Event::Replan(_) => None,
+        })
+        .collect();
+    let mut stream = ReplayStream::new(spec, expected);
+
+    let backend = NativeBackend;
+    let (writer, lines) = TraceWriter::in_memory();
+    let session = Session::builder(&backend, &model)
+        .config(cfg)
+        .owned_plugin(ocl.build(ep.seed))
+        .engine_params(ep)
+        .executor(executor)
+        .mode(Mode::Lockstep)
+        .batch(h.batch)
+        .record_trace_writer(writer)
+        .build()?;
+    let _ = session.run_stream(&mut stream)?;
+
+    if let Some(m) = stream.mismatch() {
+        match m.got {
+            Some(got) => bail!(
+                "replay stream diverged at batch {}: recorded hash {:016x}, rebuilt stream \
+                 produced {:016x} (generator or spec drift — the trace is not replayable \
+                 against this build)",
+                m.index,
+                m.expected,
+                got
+            ),
+            None => bail!(
+                "replay stream ended early at batch {} of {} recorded (spec drift — the \
+                 trace is not replayable against this build)",
+                m.index,
+                stream.recorded_len()
+            ),
+        }
+    }
+
+    let text = lines.lock().expect("trace sink lock").join("\n");
+    let replayed = Trace::parse(&text)?;
+    let diff = ReplayDiff::compute(recorded, &replayed);
+    Ok(ReplayOutcome { replayed, diff })
+}

@@ -1,0 +1,987 @@
+//! Run tracing: record a session's stream identity and planner decisions,
+//! replay them later under variant configurations (ISSUE: PR 7 tentpole).
+//!
+//! # Artifact format — `ferret-trace/1`
+//!
+//! A trace is a JSON-lines file: one self-describing JSON object per line,
+//! discriminated by its `"rec"` field, in the order the run produced them:
+//!
+//! | `rec`    | cardinality | contents |
+//! |----------|-------------|----------|
+//! | `header` | first line  | schema tag, model spec, engine params, the full initial plan (schedule, partition, worker configs, compensation, plugin, budget schedule) and its content-hashed `plan_id` |
+//! | `stream` | ≤1          | the seeded [`StreamSpec`] the stream can be re-materialized from (absent for hand-fed streams) |
+//! | `batch`  | per batch   | sequence number, batch id, row count, FNV-1a content `hash`, `arrival` / `admitted` stamps, whether the batch was `held` by a drain |
+//! | `replan` | per replan  | drain window (`t0`..`t`), budget in force, the measured per-stage `tf`/`tb` means that seeded the planner, and the chosen plan: `plan_id`, partition bounds, active workers, predicted `mem_bytes` / `rate`, feasibility, winning `tc` |
+//! | `finish` | last line   | run outcome: final oacc/tacc, counts, latency percentiles, the full oacc curve |
+//!
+//! Serialization rules (so artifacts are stable and exactly re-parseable):
+//! u64 values that may exceed 2^53 are strings — seeds in decimal, content
+//! hashes and `plan_id` as 16-digit lowercase hex; floats use Rust's
+//! shortest-roundtrip `Display`; non-finite floats (an `inf` budget) are
+//! the strings `"inf"` / `"-inf"` / `"nan"`. Future schema revisions bump
+//! [`SCHEMA`]; readers reject tags they do not know.
+//!
+//! # Record / replay wiring
+//!
+//! Recording: `Session::builder(..).record_trace(path)` (or
+//! `record_trace_writer` for an in-memory sink) attaches a [`TraceWriter`];
+//! the session writes the header at build time, the stream line when
+//! `run_stream` starts, batch/replan lines as the run progresses, and the
+//! finish line from `finish()`. The CLI exposes this as
+//! `ferret run --record-trace PATH`.
+//!
+//! Replay: `ferret replay <trace> [--config-override k=v,..] [--gate]`
+//! parses the artifact ([`Trace::read`]), rebuilds the exact stream as a
+//! [`ReplayStream`](crate::stream::ReplayStream) (hash-verified batch by
+//! batch), re-drives a lockstep session under the recorded — or overridden
+//! — configuration while recording a second trace in memory, and emits a
+//! machine-readable [`ReplayDiff`] (plan churn, per-window oacc delta,
+//! latency-percentile deltas, replan-count delta). `--gate` exits nonzero
+//! when the diff exceeds thresholds.
+//!
+//! # Determinism contract
+//!
+//! Replay is bit-for-bit (all diff fields zero) when ALL of the following
+//! held for the recorded run, and no overrides are given:
+//!
+//! - **Lockstep mode.** Virtual time makes arrival interleaving, drains,
+//!   and budget steps exact; lockstep is also executor-equivalent, so a
+//!   trace recorded under `--executor sim` replays bit-for-bit under
+//!   `--executor threaded` and vice versa. Freerun runs can be recorded,
+//!   but their wall-clock arrivals are not reproducible — replay always
+//!   drives lockstep.
+//! - **Seeded stream.** The stream reported a [`StreamSpec`] provenance
+//!   (every `SyntheticStream` does). Hand-fed streams record batch hashes
+//!   but cannot be rebuilt from the trace.
+//! - **Analytic profile.** `measured_reps = 0` (the default). Measured
+//!   profiling samples wall time; replay forces the analytic profile and
+//!   will diverge from a measured-profile recording's plans. The header
+//!   records `measured_reps` so the replayer can warn.
+//! - **Native backend.** The trace does not capture backend identity;
+//!   replay always uses the native backend, so a run recorded on an
+//!   accelerated backend replays its *plans* faithfully only insofar as
+//!   the backends agree numerically.
+//! - **Stream-driven budget changes only.** Budget steps from the
+//!   `--budget-schedule` in the header replay exactly; imperative
+//!   `Session::set_budget` calls between pushes are not recorded.
+
+pub mod diff;
+pub mod driver;
+pub mod json;
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::bail;
+use crate::stream::{Batch, DriftKind, StreamSpec};
+use crate::util::error::Result;
+use crate::util::Fnv;
+
+pub use diff::{GateThresholds, ReplayDiff};
+pub use driver::{replay_trace, ReplayOutcome};
+pub use json::Json;
+
+/// Artifact schema tag. Bump on any incompatible record change.
+pub const SCHEMA: &str = "ferret-trace/1";
+
+/// FNV-1a content hash of one microbatch: id, row count, every feature
+/// (by f32 bit pattern) and label. Stable across runs and platforms, so
+/// it doubles as the replay-time identity check for rebuilt streams.
+pub fn batch_hash(b: &Batch) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(b.id);
+    h.write_u64(b.y.len() as u64);
+    for &v in &b.x {
+        h.write_f32(v);
+    }
+    for &y in &b.y {
+        h.write_i32(y);
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------- records
+
+/// One pipeline worker's configuration, as recorded in the header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerRec {
+    pub delay: i64,
+    pub recompute: bool,
+    pub accum: Vec<u64>,
+    pub omit: Vec<u64>,
+}
+
+/// `rec:"header"` — everything needed to rebuild the recorded session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Header {
+    pub schema: String,
+    pub model: String,
+    pub dims: Vec<usize>,
+    pub batch: usize,
+    pub features: usize,
+    pub classes: usize,
+    pub mode: String,
+    pub executor: String,
+    pub lr: f32,
+    pub decay_c: f64,
+    /// resolved inter-arrival time (ticks), not the possibly-0 requested one
+    pub td: u64,
+    pub tacc_per_class: usize,
+    pub seed: u64,
+    pub stash_cap: usize,
+    /// resolved kernel thread count
+    pub kernel_threads: usize,
+    pub schedule: String,
+    pub partition: Vec<usize>,
+    pub workers: Vec<WorkerRec>,
+    pub comp: String,
+    pub comp_params: [f32; 4],
+    pub plugin: String,
+    pub plugin_cadence: u64,
+    /// budget schedule spec string (`""` = fixed/unbounded)
+    pub budget: String,
+    /// content hash of the initial plan
+    pub plan_id: u64,
+    pub measured_reps: u32,
+}
+
+/// `rec:"batch"` — one arriving microbatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchRec {
+    pub seq: u64,
+    pub id: u64,
+    pub rows: usize,
+    pub hash: u64,
+    /// stream arrival stamp (virtual ticks in lockstep, µs in freerun)
+    pub arrival: u64,
+    /// engine time at admission (or at hold, for held batches)
+    pub admitted: u64,
+    /// true when a drain/budget-step parked the batch instead of admitting
+    pub held: bool,
+}
+
+/// `rec:"replan"` — one planner decision at a drain boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanRec {
+    /// time the replan executed
+    pub t: u64,
+    /// time the drain began
+    pub t0: u64,
+    /// drain duration (`t - t0`)
+    pub drain: u64,
+    /// budget in force when the planner ran
+    pub budget: f64,
+    /// measured per-stage forward means seeding the refreshed profile
+    pub tf: Vec<Option<f64>>,
+    /// measured per-stage backward means
+    pub tb: Vec<Option<f64>>,
+    /// content hash of the chosen plan
+    pub plan_id: u64,
+    pub partition: Vec<usize>,
+    pub active_workers: usize,
+    /// planner-predicted footprint of the chosen plan
+    pub mem_bytes: f64,
+    /// planner-predicted adaptation rate
+    pub rate: f64,
+    pub feasible: bool,
+    /// winning stage time bound
+    pub tc: u64,
+}
+
+/// `rec:"finish"` — run outcome summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FinishRec {
+    pub oacc: f64,
+    pub tacc: f64,
+    pub arrivals: u64,
+    pub trained: u64,
+    pub dropped: u64,
+    pub replans: u64,
+    pub mem_bytes: f64,
+    pub peak_ledger: usize,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub oacc_curve: Vec<(u64, f64)>,
+}
+
+/// A batch or replan event, in recorded order (interleaving preserved so
+/// [`Trace::to_lines`] reproduces the artifact exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Batch(BatchRec),
+    Replan(ReplanRec),
+}
+
+/// A fully parsed trace artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub header: Header,
+    pub stream: Option<StreamSpec>,
+    pub events: Vec<Event>,
+    pub finish: Option<FinishRec>,
+}
+
+// ----------------------------------------------------------- line writers
+
+/// Append `,"key":value` (keys are plain identifiers; never escaped).
+fn kv(s: &mut String, key: &str, val: &str) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":");
+    s.push_str(val);
+}
+
+fn fmt_arr<T: std::fmt::Display>(v: &[T]) -> String {
+    let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn fmt_opt_arr(v: &[Option<f64>]) -> String {
+    let items: Vec<String> = v
+        .iter()
+        .map(|x| match x {
+            Some(n) => json::fmt_f64(*n),
+            None => "null".into(),
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+/// u64 that may exceed 2^53: decimal string.
+fn fmt_u64s(v: u64) -> String {
+    format!("\"{v}\"")
+}
+
+/// content hash / plan id: 16-digit lowercase hex string.
+fn fmt_hex(v: u64) -> String {
+    format!("\"{v:016x}\"")
+}
+
+impl WorkerRec {
+    fn to_json(&self) -> String {
+        let mut s = String::from("{\"delay\":");
+        s.push_str(&self.delay.to_string());
+        kv(&mut s, "recompute", if self.recompute { "true" } else { "false" });
+        kv(&mut s, "accum", &fmt_arr(&self.accum));
+        kv(&mut s, "omit", &fmt_arr(&self.omit));
+        s.push('}');
+        s
+    }
+}
+
+impl Header {
+    pub fn to_line(&self) -> String {
+        let mut s = String::from("{\"rec\":\"header\"");
+        kv(&mut s, "schema", &json::escape(&self.schema));
+        kv(&mut s, "model", &json::escape(&self.model));
+        kv(&mut s, "dims", &fmt_arr(&self.dims));
+        kv(&mut s, "batch", &self.batch.to_string());
+        kv(&mut s, "features", &self.features.to_string());
+        kv(&mut s, "classes", &self.classes.to_string());
+        kv(&mut s, "mode", &json::escape(&self.mode));
+        kv(&mut s, "executor", &json::escape(&self.executor));
+        kv(&mut s, "lr", &format!("{}", self.lr));
+        kv(&mut s, "decay_c", &json::fmt_f64(self.decay_c));
+        kv(&mut s, "td", &self.td.to_string());
+        kv(&mut s, "tacc_per_class", &self.tacc_per_class.to_string());
+        kv(&mut s, "seed", &fmt_u64s(self.seed));
+        kv(&mut s, "stash_cap", &self.stash_cap.to_string());
+        kv(&mut s, "kernel_threads", &self.kernel_threads.to_string());
+        kv(&mut s, "schedule", &json::escape(&self.schedule));
+        kv(&mut s, "partition", &fmt_arr(&self.partition));
+        let workers: Vec<String> = self.workers.iter().map(|w| w.to_json()).collect();
+        kv(&mut s, "workers", &format!("[{}]", workers.join(",")));
+        kv(&mut s, "comp", &json::escape(&self.comp));
+        kv(&mut s, "comp_params", &fmt_arr(&self.comp_params));
+        kv(&mut s, "plugin", &json::escape(&self.plugin));
+        kv(&mut s, "plugin_cadence", &self.plugin_cadence.to_string());
+        kv(&mut s, "budget", &json::escape(&self.budget));
+        kv(&mut s, "plan_id", &fmt_hex(self.plan_id));
+        kv(&mut s, "measured_reps", &self.measured_reps.to_string());
+        s.push('}');
+        s
+    }
+
+    fn parse(j: &Json) -> Result<Header> {
+        let schema = str_of(j, "schema")?;
+        if schema != SCHEMA {
+            bail!("trace: unknown schema '{schema}' (this reader understands '{SCHEMA}')");
+        }
+        let workers_j = arr_of(j, "workers")?;
+        let mut workers = Vec::with_capacity(workers_j.len());
+        for w in workers_j {
+            workers.push(WorkerRec {
+                delay: i64_of(w, "delay")?,
+                recompute: bool_of(w, "recompute")?,
+                accum: u64_arr_of(w, "accum")?,
+                omit: u64_arr_of(w, "omit")?,
+            });
+        }
+        let cp = f64_arr_of(j, "comp_params")?;
+        if cp.len() != 4 {
+            bail!("trace: comp_params must have 4 entries, got {}", cp.len());
+        }
+        Ok(Header {
+            schema,
+            model: str_of(j, "model")?,
+            dims: usize_arr_of(j, "dims")?,
+            batch: usize_of(j, "batch")?,
+            features: usize_of(j, "features")?,
+            classes: usize_of(j, "classes")?,
+            mode: str_of(j, "mode")?,
+            executor: str_of(j, "executor")?,
+            lr: f64_of(j, "lr")? as f32,
+            decay_c: f64_of(j, "decay_c")?,
+            td: u64_of(j, "td")?,
+            tacc_per_class: usize_of(j, "tacc_per_class")?,
+            seed: u64s_of(j, "seed")?,
+            stash_cap: usize_of(j, "stash_cap")?,
+            kernel_threads: usize_of(j, "kernel_threads")?,
+            schedule: str_of(j, "schedule")?,
+            partition: usize_arr_of(j, "partition")?,
+            workers,
+            comp: str_of(j, "comp")?,
+            comp_params: [cp[0] as f32, cp[1] as f32, cp[2] as f32, cp[3] as f32],
+            plugin: str_of(j, "plugin")?,
+            plugin_cadence: u64_of(j, "plugin_cadence")?,
+            budget: str_of(j, "budget")?,
+            plan_id: hex_of(j, "plan_id")?,
+            measured_reps: u64_of(j, "measured_reps")? as u32,
+        })
+    }
+}
+
+fn stream_to_line(spec: &StreamSpec) -> String {
+    let mut s = String::from("{\"rec\":\"stream\"");
+    kv(&mut s, "name", &json::escape(&spec.name));
+    kv(&mut s, "features", &spec.features.to_string());
+    kv(&mut s, "classes", &spec.classes.to_string());
+    kv(&mut s, "batch", &spec.batch.to_string());
+    kv(&mut s, "num_batches", &spec.num_batches.to_string());
+    kv(&mut s, "kind", &json::escape(&spec.kind.spec_str()));
+    kv(&mut s, "margin", &format!("{}", spec.margin));
+    kv(&mut s, "noise", &format!("{}", spec.noise));
+    kv(&mut s, "seed", &fmt_u64s(spec.seed));
+    s.push('}');
+    s
+}
+
+fn stream_parse(j: &Json) -> Result<StreamSpec> {
+    let kind_s = str_of(j, "kind")?;
+    let Some(kind) = DriftKind::parse(&kind_s) else {
+        bail!("trace: unknown stream kind '{kind_s}'");
+    };
+    Ok(StreamSpec {
+        name: str_of(j, "name")?,
+        features: usize_of(j, "features")?,
+        classes: usize_of(j, "classes")?,
+        batch: usize_of(j, "batch")?,
+        num_batches: usize_of(j, "num_batches")?,
+        kind,
+        margin: f64_of(j, "margin")? as f32,
+        noise: f64_of(j, "noise")? as f32,
+        seed: u64s_of(j, "seed")?,
+    })
+}
+
+impl BatchRec {
+    pub fn to_line(&self) -> String {
+        let mut s = String::from("{\"rec\":\"batch\"");
+        kv(&mut s, "seq", &self.seq.to_string());
+        kv(&mut s, "id", &self.id.to_string());
+        kv(&mut s, "rows", &self.rows.to_string());
+        kv(&mut s, "hash", &fmt_hex(self.hash));
+        kv(&mut s, "arrival", &self.arrival.to_string());
+        kv(&mut s, "admitted", &self.admitted.to_string());
+        kv(&mut s, "held", if self.held { "true" } else { "false" });
+        s.push('}');
+        s
+    }
+
+    fn parse(j: &Json) -> Result<BatchRec> {
+        Ok(BatchRec {
+            seq: u64_of(j, "seq")?,
+            id: u64_of(j, "id")?,
+            rows: usize_of(j, "rows")?,
+            hash: hex_of(j, "hash")?,
+            arrival: u64_of(j, "arrival")?,
+            admitted: u64_of(j, "admitted")?,
+            held: bool_of(j, "held")?,
+        })
+    }
+}
+
+impl ReplanRec {
+    pub fn to_line(&self) -> String {
+        let mut s = String::from("{\"rec\":\"replan\"");
+        kv(&mut s, "t", &self.t.to_string());
+        kv(&mut s, "t0", &self.t0.to_string());
+        kv(&mut s, "drain", &self.drain.to_string());
+        kv(&mut s, "budget", &json::fmt_f64(self.budget));
+        kv(&mut s, "tf", &fmt_opt_arr(&self.tf));
+        kv(&mut s, "tb", &fmt_opt_arr(&self.tb));
+        kv(&mut s, "plan_id", &fmt_hex(self.plan_id));
+        kv(&mut s, "partition", &fmt_arr(&self.partition));
+        kv(&mut s, "active_workers", &self.active_workers.to_string());
+        kv(&mut s, "mem_bytes", &json::fmt_f64(self.mem_bytes));
+        kv(&mut s, "rate", &json::fmt_f64(self.rate));
+        kv(&mut s, "feasible", if self.feasible { "true" } else { "false" });
+        kv(&mut s, "tc", &self.tc.to_string());
+        s.push('}');
+        s
+    }
+
+    fn parse(j: &Json) -> Result<ReplanRec> {
+        Ok(ReplanRec {
+            t: u64_of(j, "t")?,
+            t0: u64_of(j, "t0")?,
+            drain: u64_of(j, "drain")?,
+            budget: f64_of(j, "budget")?,
+            tf: opt_f64_arr_of(j, "tf")?,
+            tb: opt_f64_arr_of(j, "tb")?,
+            plan_id: hex_of(j, "plan_id")?,
+            partition: usize_arr_of(j, "partition")?,
+            active_workers: usize_of(j, "active_workers")?,
+            mem_bytes: f64_of(j, "mem_bytes")?,
+            rate: f64_of(j, "rate")?,
+            feasible: bool_of(j, "feasible")?,
+            tc: u64_of(j, "tc")?,
+        })
+    }
+}
+
+impl FinishRec {
+    pub fn to_line(&self) -> String {
+        let mut s = String::from("{\"rec\":\"finish\"");
+        kv(&mut s, "oacc", &json::fmt_f64(self.oacc));
+        kv(&mut s, "tacc", &json::fmt_f64(self.tacc));
+        kv(&mut s, "arrivals", &self.arrivals.to_string());
+        kv(&mut s, "trained", &self.trained.to_string());
+        kv(&mut s, "dropped", &self.dropped.to_string());
+        kv(&mut s, "replans", &self.replans.to_string());
+        kv(&mut s, "mem_bytes", &json::fmt_f64(self.mem_bytes));
+        kv(&mut s, "peak_ledger", &self.peak_ledger.to_string());
+        kv(&mut s, "p50", &self.p50.to_string());
+        kv(&mut s, "p95", &self.p95.to_string());
+        kv(&mut s, "p99", &self.p99.to_string());
+        let pts: Vec<String> = self
+            .oacc_curve
+            .iter()
+            .map(|(t, v)| format!("[{},{}]", t, json::fmt_f64(*v)))
+            .collect();
+        kv(&mut s, "oacc_curve", &format!("[{}]", pts.join(",")));
+        s.push('}');
+        s
+    }
+
+    fn parse(j: &Json) -> Result<FinishRec> {
+        Ok(FinishRec {
+            oacc: f64_of(j, "oacc")?,
+            tacc: f64_of(j, "tacc")?,
+            arrivals: u64_of(j, "arrivals")?,
+            trained: u64_of(j, "trained")?,
+            dropped: u64_of(j, "dropped")?,
+            replans: u64_of(j, "replans")?,
+            mem_bytes: f64_of(j, "mem_bytes")?,
+            peak_ledger: usize_of(j, "peak_ledger")?,
+            p50: u64_of(j, "p50")?,
+            p95: u64_of(j, "p95")?,
+            p99: u64_of(j, "p99")?,
+            oacc_curve: curve_of(j, "oacc_curve")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------- field helpers
+
+fn get<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    match j.get(k) {
+        Some(v) => Ok(v),
+        None => bail!("trace: missing field '{k}'"),
+    }
+}
+
+fn str_of(j: &Json, k: &str) -> Result<String> {
+    match get(j, k)?.as_str() {
+        Some(s) => Ok(s.to_string()),
+        None => bail!("trace: field '{k}' is not a string"),
+    }
+}
+
+fn f64_of(j: &Json, k: &str) -> Result<f64> {
+    match json::num_of(get(j, k)?) {
+        Some(v) => Ok(v),
+        None => bail!("trace: field '{k}' is not a number"),
+    }
+}
+
+fn bool_of(j: &Json, k: &str) -> Result<bool> {
+    match get(j, k)?.as_bool() {
+        Some(b) => Ok(b),
+        None => bail!("trace: field '{k}' is not a bool"),
+    }
+}
+
+fn int_check(v: f64, k: &str) -> Result<f64> {
+    if v < 0.0 || v.fract() != 0.0 || v > 9.007199254740992e15 {
+        bail!("trace: field '{k}' is not an unsigned integer");
+    }
+    Ok(v)
+}
+
+fn u64_of(j: &Json, k: &str) -> Result<u64> {
+    Ok(int_check(f64_of(j, k)?, k)? as u64)
+}
+
+fn usize_of(j: &Json, k: &str) -> Result<usize> {
+    Ok(u64_of(j, k)? as usize)
+}
+
+fn i64_of(j: &Json, k: &str) -> Result<i64> {
+    let v = f64_of(j, k)?;
+    if v.fract() != 0.0 || v.abs() > 9.007199254740992e15 {
+        bail!("trace: field '{k}' is not an integer");
+    }
+    Ok(v as i64)
+}
+
+/// u64 written as a decimal string (may exceed 2^53); plain numbers are
+/// accepted too for hand-written traces.
+fn u64s_of(j: &Json, k: &str) -> Result<u64> {
+    match get(j, k)? {
+        Json::Str(s) => match s.parse::<u64>() {
+            Ok(v) => Ok(v),
+            Err(_) => bail!("trace: field '{k}' is not a decimal u64 string"),
+        },
+        other => match other.as_f64() {
+            Some(v) => Ok(int_check(v, k)? as u64),
+            None => bail!("trace: field '{k}' is not a u64"),
+        },
+    }
+}
+
+/// 16-digit lowercase hex string (content hashes, plan ids).
+fn hex_of(j: &Json, k: &str) -> Result<u64> {
+    let s = str_of(j, k)?;
+    match u64::from_str_radix(&s, 16) {
+        Ok(v) => Ok(v),
+        Err(_) => bail!("trace: field '{k}' is not a hex u64 string"),
+    }
+}
+
+fn arr_of<'a>(j: &'a Json, k: &str) -> Result<&'a [Json]> {
+    match get(j, k)?.as_arr() {
+        Some(a) => Ok(a),
+        None => bail!("trace: field '{k}' is not an array"),
+    }
+}
+
+fn f64_arr_of(j: &Json, k: &str) -> Result<Vec<f64>> {
+    arr_of(j, k)?
+        .iter()
+        .map(|v| match json::num_of(v) {
+            Some(n) => Ok(n),
+            None => bail!("trace: field '{k}' has a non-numeric entry"),
+        })
+        .collect()
+}
+
+fn u64_arr_of(j: &Json, k: &str) -> Result<Vec<u64>> {
+    f64_arr_of(j, k)?
+        .into_iter()
+        .map(|v| Ok(int_check(v, k)? as u64))
+        .collect()
+}
+
+fn usize_arr_of(j: &Json, k: &str) -> Result<Vec<usize>> {
+    Ok(u64_arr_of(j, k)?.into_iter().map(|v| v as usize).collect())
+}
+
+fn opt_f64_arr_of(j: &Json, k: &str) -> Result<Vec<Option<f64>>> {
+    arr_of(j, k)?
+        .iter()
+        .map(|v| match v {
+            Json::Null => Ok(None),
+            other => match json::num_of(other) {
+                Some(n) => Ok(Some(n)),
+                None => bail!("trace: field '{k}' has a non-numeric entry"),
+            },
+        })
+        .collect()
+}
+
+fn curve_of(j: &Json, k: &str) -> Result<Vec<(u64, f64)>> {
+    arr_of(j, k)?
+        .iter()
+        .map(|pt| {
+            let Some(pair) = pt.as_arr() else {
+                bail!("trace: field '{k}' entries must be [t,v] pairs");
+            };
+            if pair.len() != 2 {
+                bail!("trace: field '{k}' entries must be [t,v] pairs");
+            }
+            let t = match pair[0].as_f64() {
+                Some(v) => int_check(v, k)? as u64,
+                None => bail!("trace: field '{k}' has a non-numeric t"),
+            };
+            let v = match json::num_of(&pair[1]) {
+                Some(v) => v,
+                None => bail!("trace: field '{k}' has a non-numeric value"),
+            };
+            Ok((t, v))
+        })
+        .collect()
+}
+
+// ----------------------------------------------------------------- writer
+
+enum Sink {
+    File(std::io::BufWriter<fs::File>),
+    Mem(Arc<Mutex<Vec<String>>>),
+}
+
+/// Streaming JSON-lines sink for trace records. Mid-run writes are
+/// best-effort (an I/O error never aborts the run); `finish` flushes.
+pub struct TraceWriter {
+    sink: Sink,
+}
+
+impl TraceWriter {
+    /// Write to a file, creating parent directories as needed.
+    pub fn to_path(path: &str) -> Result<TraceWriter> {
+        if let Some(dir) = Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        let f = fs::File::create(path)?;
+        Ok(TraceWriter { sink: Sink::File(std::io::BufWriter::new(f)) })
+    }
+
+    /// Collect lines in memory; the returned handle reads them back after
+    /// the session (which owns the writer) finishes.
+    pub fn in_memory() -> (TraceWriter, Arc<Mutex<Vec<String>>>) {
+        let store = Arc::new(Mutex::new(Vec::new()));
+        (TraceWriter { sink: Sink::Mem(store.clone()) }, store)
+    }
+
+    fn line(&mut self, l: String) {
+        match &mut self.sink {
+            Sink::File(w) => {
+                let _ = writeln!(w, "{l}");
+            }
+            Sink::Mem(v) => v.lock().expect("trace sink lock").push(l),
+        }
+    }
+
+    pub(crate) fn header(&mut self, h: &Header) {
+        self.line(h.to_line());
+    }
+
+    pub(crate) fn stream(&mut self, spec: &StreamSpec) {
+        self.line(stream_to_line(spec));
+    }
+
+    pub(crate) fn batch(&mut self, b: &BatchRec) {
+        self.line(b.to_line());
+    }
+
+    pub(crate) fn replan(&mut self, r: &ReplanRec) {
+        self.line(r.to_line());
+    }
+
+    pub(crate) fn finish(&mut self, f: &FinishRec) {
+        self.line(f.to_line());
+        if let Sink::File(w) = &mut self.sink {
+            let _ = w.flush();
+        }
+    }
+}
+
+// ----------------------------------------------------------------- reader
+
+impl Trace {
+    /// Parse a JSON-lines trace artifact. The header must come first;
+    /// record order is otherwise preserved in [`Trace::events`].
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut header: Option<Header> = None;
+        let mut stream = None;
+        let mut events = Vec::new();
+        let mut finish = None;
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let n = i + 1;
+            let j = match json::parse(line) {
+                Ok(j) => j,
+                Err(e) => bail!("trace line {n}: {e}"),
+            };
+            let rec = match str_of(&j, "rec") {
+                Ok(r) => r,
+                Err(e) => bail!("trace line {n}: {e}"),
+            };
+            let res: Result<()> = (|| {
+                match rec.as_str() {
+                    "header" => {
+                        if header.is_some() {
+                            bail!("trace: duplicate header");
+                        }
+                        header = Some(Header::parse(&j)?);
+                    }
+                    "stream" => {
+                        if stream.is_some() {
+                            bail!("trace: duplicate stream record");
+                        }
+                        stream = Some(stream_parse(&j)?);
+                    }
+                    "batch" => events.push(Event::Batch(BatchRec::parse(&j)?)),
+                    "replan" => events.push(Event::Replan(ReplanRec::parse(&j)?)),
+                    "finish" => {
+                        if finish.is_some() {
+                            bail!("trace: duplicate finish record");
+                        }
+                        finish = Some(FinishRec::parse(&j)?);
+                    }
+                    other => bail!("trace: unknown record type '{other}'"),
+                }
+                if header.is_none() {
+                    bail!("trace: first record must be the header");
+                }
+                Ok(())
+            })();
+            if let Err(e) = res {
+                bail!("trace line {n}: {e}");
+            }
+        }
+        let Some(header) = header else { bail!("trace: empty artifact (no header)") };
+        Ok(Trace { header, stream, events, finish })
+    }
+
+    /// Read and parse an artifact from disk.
+    pub fn read(path: &str) -> Result<Trace> {
+        let text = fs::read_to_string(path)?;
+        Trace::parse(&text)
+    }
+
+    /// Re-serialize: line-for-line identical to the artifact this trace
+    /// was parsed from (canonical field order, preserved event order).
+    pub fn to_lines(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.events.len() + 3);
+        out.push(self.header.to_line());
+        if let Some(spec) = &self.stream {
+            out.push(stream_to_line(spec));
+        }
+        for ev in &self.events {
+            out.push(match ev {
+                Event::Batch(b) => b.to_line(),
+                Event::Replan(r) => r.to_line(),
+            });
+        }
+        if let Some(f) = &self.finish {
+            out.push(f.to_line());
+        }
+        out
+    }
+
+    /// Batch records in arrival order.
+    pub fn batches(&self) -> Vec<&BatchRec> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Batch(b) => Some(b),
+                Event::Replan(_) => None,
+            })
+            .collect()
+    }
+
+    /// Replan records in decision order.
+    pub fn replans(&self) -> Vec<&ReplanRec> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Replan(r) => Some(r),
+                Event::Batch(_) => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::*;
+
+    /// A small hand-built trace exercising every record type, string-coded
+    /// u64s past 2^53, leading-zero hex ids, and an infinite budget —
+    /// shared by the mod/diff round-trip tests.
+    pub fn tiny_trace() -> Trace {
+        sample_trace()
+    }
+
+    pub fn sample_header() -> Header {
+        Header {
+            schema: SCHEMA.into(),
+            model: "mlp-4".into(),
+            dims: vec![16, 32, 32, 4],
+            batch: 8,
+            features: 16,
+            classes: 4,
+            mode: "lockstep".into(),
+            executor: "sim".into(),
+            lr: 0.1,
+            decay_c: 0.0005,
+            td: 40,
+            tacc_per_class: 8,
+            seed: u64::MAX - 7, // exceeds 2^53: exercises the string path
+            stash_cap: 0,
+            kernel_threads: 1,
+            schedule: "Ferret".into(),
+            partition: vec![0, 2, 4],
+            workers: vec![
+                WorkerRec { delay: 0, recompute: false, accum: vec![1, 1], omit: vec![0, 0] },
+                WorkerRec { delay: -1, recompute: true, accum: vec![2], omit: vec![1] },
+            ],
+            comp: "Iter-Fisher".into(),
+            comp_params: [0.2, 0.001, 0.9, 2e-6],
+            plugin: "Vanilla".into(),
+            plugin_cadence: 8,
+            budget: "4194304b@b0,inf@b60".into(),
+            plan_id: 0x00ab_cdef_0123_4567, // leading zeros: exercises {:016x}
+            measured_reps: 0,
+        }
+    }
+
+    pub fn sample_trace() -> Trace {
+        let spec = StreamSpec {
+            name: "s0".into(),
+            features: 16,
+            classes: 4,
+            batch: 8,
+            num_batches: 40,
+            kind: DriftKind::ClassIncremental { tasks: 5 },
+            margin: 3.0,
+            noise: 0.5,
+            seed: 1 << 60,
+        };
+        Trace {
+            header: sample_header(),
+            stream: Some(spec),
+            events: vec![
+                Event::Batch(BatchRec {
+                    seq: 0,
+                    id: 0,
+                    rows: 8,
+                    hash: 0xdead_beef_cafe_f00d,
+                    arrival: 40,
+                    admitted: 40,
+                    held: false,
+                }),
+                Event::Replan(ReplanRec {
+                    t: 95,
+                    t0: 80,
+                    drain: 15,
+                    budget: f64::INFINITY,
+                    tf: vec![Some(40.0), None],
+                    tb: vec![Some(81.5), None],
+                    plan_id: 0x1111_2222_3333_4444,
+                    partition: vec![0, 4],
+                    active_workers: 1,
+                    mem_bytes: 123456.0,
+                    rate: 0.0125,
+                    feasible: true,
+                    tc: 120,
+                }),
+                Event::Batch(BatchRec {
+                    seq: 1,
+                    id: 1,
+                    rows: 8,
+                    hash: 0x0000_0000_0000_0001,
+                    arrival: 80,
+                    admitted: 80,
+                    held: true,
+                }),
+            ],
+            finish: Some(FinishRec {
+                oacc: 62.5,
+                tacc: 71.875,
+                arrivals: 40,
+                trained: 38,
+                dropped: 2,
+                replans: 1,
+                mem_bytes: 98304.0,
+                peak_ledger: 131072,
+                p50: 120,
+                p95: 480,
+                p99: 520,
+                oacc_curve: vec![(40, 0.0), (80, 50.0), (1600, 62.5)],
+            }),
+        }
+    }
+
+    #[test]
+    fn trace_round_trips_through_parse() {
+        let t = sample_trace();
+        let lines = t.to_lines();
+        let text = lines.join("\n");
+        let parsed = Trace::parse(&text).unwrap();
+        assert_eq!(parsed, t);
+        // byte-exact re-serialization, interleaving preserved
+        assert_eq!(parsed.to_lines(), lines);
+        assert_eq!(parsed.batches().len(), 2);
+        assert_eq!(parsed.replans().len(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_artifacts() {
+        assert!(Trace::parse("").is_err(), "no header");
+        let t = sample_trace();
+        let lines = t.to_lines();
+        // batch before header
+        let swapped = format!("{}\n{}", lines[2], lines[0]);
+        assert!(Trace::parse(&swapped).is_err());
+        // unknown schema
+        let bad = lines[0].replace("ferret-trace/1", "ferret-trace/99");
+        assert!(Trace::parse(&bad).is_err());
+        // duplicate header
+        let dup = format!("{}\n{}", lines[0], lines[0]);
+        assert!(Trace::parse(&dup).is_err());
+    }
+
+    #[test]
+    fn batch_hash_covers_id_shape_and_content() {
+        let b = Batch { id: 3, x: vec![1.0, 2.0, 3.0, 4.0], y: vec![0, 1] };
+        let h = batch_hash(&b);
+        assert_eq!(h, batch_hash(&b.clone()), "deterministic");
+        let mut id = b.clone();
+        id.id = 4;
+        assert_ne!(batch_hash(&id), h, "id is hashed");
+        let mut x = b.clone();
+        x.x[2] = 3.5;
+        assert_ne!(batch_hash(&x), h, "features are hashed");
+        let mut y = b.clone();
+        y.y[1] = 0;
+        assert_ne!(batch_hash(&y), h, "labels are hashed");
+    }
+
+    #[test]
+    fn writer_in_memory_collects_lines() {
+        let (mut w, store) = TraceWriter::in_memory();
+        let t = sample_trace();
+        w.header(&t.header);
+        w.stream(t.stream.as_ref().unwrap());
+        for ev in &t.events {
+            match ev {
+                Event::Batch(b) => w.batch(b),
+                Event::Replan(r) => w.replan(r),
+            }
+        }
+        w.finish(t.finish.as_ref().unwrap());
+        drop(w);
+        let lines = store.lock().unwrap().clone();
+        assert_eq!(lines, t.to_lines());
+    }
+}

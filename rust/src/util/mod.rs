@@ -8,6 +8,58 @@ pub mod rng;
 pub use math::{argmax, cdiv, dot, gcd, lcm, lcm_all, mean, norm2, pearson, std_dev};
 pub use rng::Rng;
 
+/// Incremental FNV-1a 64-bit hasher. Used for content identities that
+/// must be stable across runs, processes, and platforms (batch hashes
+/// and plan ids in trace artifacts) — `std`'s `DefaultHasher` makes no
+/// such guarantee, so it cannot appear in a serialized trace.
+#[derive(Debug, Clone)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    pub fn new() -> Self {
+        Fnv(Self::OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Hashes the bit pattern, so -0.0 and 0.0 (or two NaNs with
+    /// different payloads) hash differently — bit-for-bit identity is
+    /// exactly what trace replay checks.
+    pub fn write_f32(&mut self, v: f32) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn write_i32(&mut self, v: i32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Minimal property-test harness (proptest is not vendored): runs `f` over
 /// `n` seeded cases, reporting the failing seed on panic so cases can be
 /// replayed with `case(seed)`.
@@ -38,6 +90,22 @@ mod tests {
         });
         count += counter.get();
         assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 vectors: "" and "a".
+        assert_eq!(Fnv::new().finish(), 0xcbf29ce484222325);
+        let mut h = Fnv::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        // Field-wise writes are order-sensitive.
+        let (mut a, mut b) = (Fnv::new(), Fnv::new());
+        a.write_u64(1);
+        a.write_u64(2);
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
     }
 
     #[test]

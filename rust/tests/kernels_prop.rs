@@ -205,6 +205,7 @@ fn lockstep_sim_metrics_are_invariant_to_kernel_threads() {
             .build()
             .expect("session")
             .run_stream(&mut stream)
+            .expect("stream matches the model")
     };
     let serial = run(1);
     let parallel = run(4);

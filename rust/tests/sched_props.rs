@@ -116,7 +116,7 @@ fn run_random(seed: u64) {
                     continue;
                 }
                 let expect_w = active[(seq as usize) % active.len()];
-                let (id, w) = core.admit(mk_job(seq, t, n_stages));
+                let (id, w) = core.admit(mk_job(seq, t, n_stages)).expect("active workers");
                 assert_eq!(w, expect_w, "round-robin routing over active workers");
                 assert_eq!(id, retired.len(), "job ids are dense");
                 retired.push(0);

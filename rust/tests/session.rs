@@ -381,7 +381,8 @@ fn default_config_auto_plans_and_learns() {
         .batch(8)
         .build()
         .expect("auto-planned config")
-        .run_stream(&mut stream(80, 31));
+        .run_stream(&mut stream(80, 31))
+        .expect("stream matches the model");
     assert_eq!(r.metrics.arrivals(), 80);
     assert!(r.metrics.trained > 0);
     assert!(r.metrics.oacc.value() > 30.0, "oacc {}", r.metrics.oacc.value());
@@ -427,4 +428,46 @@ fn freerun_session_loses_no_jobs() {
     assert_eq!(r.metrics.losses.len() as u64, n - r.metrics.dropped);
     assert!(r.metrics.trained > 0);
     assert!(r.metrics.exec_threads > 1, "session owns real device threads");
+}
+
+/// `run_stream` surfaces a misshapen batch from the stream as a typed
+/// error to the caller — regression for the `.expect()` that used to
+/// take the whole process down — and drops the session cleanly (device
+/// threads joined) on the error path of both executors.
+#[test]
+fn run_stream_surfaces_bad_shape_streams_as_errors() {
+    use ferret::stream::{Batch, Stream, TestSet};
+
+    /// Two well-formed batches, then one whose data does not match its
+    /// row count.
+    struct BadStream {
+        emitted: usize,
+        inner: SyntheticStream,
+    }
+    impl Stream for BadStream {
+        fn next_batch(&mut self) -> Option<Batch> {
+            self.emitted += 1;
+            match self.emitted {
+                1 | 2 => self.inner.next_batch(),
+                3 => Some(Batch { id: 99, x: vec![0.0; 5], y: vec![0; 8] }),
+                _ => None,
+            }
+        }
+        fn test_set(&self, per_class: usize) -> TestSet {
+            self.inner.test_set(per_class)
+        }
+    }
+
+    let m = model();
+    for kind in [ExecutorKind::Sim, ExecutorKind::Threaded] {
+        let mut bad = BadStream { emitted: 0, inner: stream(8, 31) };
+        let session = Session::builder(&NativeBackend, &m)
+            .config(planned_cfg(&m))
+            .executor(kind)
+            .batch(8)
+            .build()
+            .expect("valid config");
+        let e = session.run_stream(&mut bad).unwrap_err().to_string();
+        assert!(e.contains("features"), "{kind:?}: typed shape error, got: {e}");
+    }
 }

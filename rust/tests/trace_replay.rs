@@ -1,0 +1,182 @@
+//! Trace record → replay: the determinism contract, end to end.
+//!
+//!   - a lockstep run recorded on either executor replays bit-for-bit
+//!     (every diff field zero), including through a `--budget-schedule`
+//!     re-plan — and an executor override still replays bit-for-bit
+//!     (lockstep executor equivalence, now pinned through the artifact);
+//!   - a perturbed configuration produces a structurally nonzero diff
+//!     that trips the strict gate;
+//!   - the artifact round-trips serialization line-for-line.
+
+use ferret::backend::native::NativeBackend;
+use ferret::budget::BudgetSchedule;
+use ferret::compensate::CompKind;
+use ferret::config::ModelSpec;
+use ferret::ocl::Vanilla;
+use ferret::pipeline::engine::AsyncCfg;
+use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
+use ferret::pipeline::{EngineParams, RunResult, Session};
+use ferret::planner::{plan, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+use ferret::trace::{replay_trace, Event, GateThresholds, Trace, TraceWriter};
+
+fn model() -> ModelSpec {
+    ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
+}
+
+fn stream(n: usize, seed: u64) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "trace-replay".into(),
+        features: 16,
+        classes: 4,
+        batch: 8,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 3.0,
+        noise: 0.5,
+        seed,
+    })
+}
+
+/// A memory-constrained Ferret plan (stashing + compensation in play).
+fn planned_cfg(m: &ModelSpec) -> AsyncCfg {
+    let prof = Profile::analytic(m, 8);
+    let td = prof.default_td();
+    let unconstrained = plan(&prof, td, f64::INFINITY, 1e-4);
+    let out = plan(&prof, td, unconstrained.mem_bytes * 0.5, 1e-4);
+    AsyncCfg::ferret(out.partition, out.config, CompKind::IterFisher)
+}
+
+/// Record a run into an in-memory trace; returns the parsed trace and the
+/// run's own result.
+fn record_run(
+    n: usize,
+    budget: Option<BudgetSchedule>,
+    kind: ExecutorKind,
+) -> (Trace, RunResult) {
+    let m = model();
+    let mut src = stream(n, 31);
+    let (writer, lines) = TraceWriter::in_memory();
+    let mut builder = Session::builder(&NativeBackend, &m)
+        .config(planned_cfg(&m))
+        .owned_plugin(Box::new(Vanilla))
+        .engine_params(EngineParams { lr: 0.2, ..Default::default() })
+        .executor(kind)
+        .mode(Mode::Lockstep)
+        .batch(8)
+        .record_trace_writer(writer);
+    if let Some(b) = budget {
+        builder = builder.budget(b);
+    }
+    let r = builder
+        .build()
+        .expect("session")
+        .run_stream(&mut src)
+        .expect("stream matches the model");
+    let text = lines.lock().unwrap().join("\n");
+    (Trace::parse(&text).expect("recorded trace parses"), r)
+}
+
+/// Half the model's unconstrained planner footprint — a budget step that
+/// genuinely forces a tighter plan.
+fn half_footprint() -> f64 {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let td = prof.default_td();
+    plan(&prof, td, f64::INFINITY, 1e-4).mem_bytes * 0.5
+}
+
+#[test]
+fn recorded_run_replays_bit_for_bit_on_both_executors() {
+    for kind in [ExecutorKind::Sim, ExecutorKind::Threaded] {
+        let (recorded, r) = record_run(24, None, kind);
+        assert_eq!(recorded.batches().len(), 24, "{kind:?}: every arrival recorded");
+        assert!(recorded.stream.is_some(), "{kind:?}: provenance recorded");
+        let fin = recorded.finish.as_ref().expect("finish record");
+        assert_eq!(fin.oacc, r.metrics.oacc.value(), "{kind:?}: finish mirrors metrics");
+        assert_eq!(fin.trained, r.metrics.trained);
+
+        let outcome = replay_trace(&recorded, &[]).expect("replay runs");
+        assert!(
+            outcome.diff.is_zero(),
+            "{kind:?}: replay must be bit-for-bit, got {:?}",
+            outcome.diff
+        );
+        assert_eq!(outcome.replayed.finish, recorded.finish, "{kind:?}: identical outcome");
+        assert!(outcome.diff.violations(&GateThresholds::default()).is_empty());
+    }
+}
+
+#[test]
+fn executor_override_preserves_bit_for_bit_replay() {
+    // recorded under sim; replayed under threaded — lockstep executor
+    // equivalence, pinned through the trace artifact
+    let (recorded, _) = record_run(20, None, ExecutorKind::Sim);
+    let overrides = vec![("executor".to_string(), "threaded".to_string())];
+    let outcome = replay_trace(&recorded, &overrides).expect("replay runs");
+    assert!(outcome.diff.is_zero(), "executor variance must not leak: {:?}", outcome.diff);
+    assert_eq!(outcome.replayed.header.executor, "threaded");
+}
+
+#[test]
+fn replay_reproduces_a_budget_schedule_replan_exactly() {
+    let sched = BudgetSchedule::step_at_batch(12, half_footprint());
+    let (recorded, r) = record_run(24, Some(sched), ExecutorKind::Sim);
+    assert!(r.metrics.replans >= 1, "the schedule step must have re-planned");
+    let replans = recorded.replans();
+    assert_eq!(replans.len() as u64, r.metrics.replans, "every replan recorded");
+    assert!(
+        recorded.batches().iter().any(|b| b.held),
+        "the batch at the budget boundary is recorded as held"
+    );
+
+    let outcome = replay_trace(&recorded, &[]).expect("replay runs");
+    assert!(outcome.diff.is_zero(), "replan must replay exactly: {:?}", outcome.diff);
+    // the planner decisions themselves are reproduced, not just the
+    // end-of-run metrics
+    let replayed_replans = outcome.replayed.replans();
+    assert_eq!(replayed_replans.len(), replans.len());
+    for (a, b) in replans.iter().zip(&replayed_replans) {
+        assert_eq!(a.plan_id, b.plan_id, "same plan chosen at the same point");
+        assert_eq!(a.partition, b.partition);
+        assert_eq!(a.t, b.t, "transition lands at the same tick");
+        assert_eq!(a.tf, b.tf, "same measured means seeded the planner");
+    }
+}
+
+#[test]
+fn perturbed_config_produces_a_nonzero_diff_and_trips_the_gate() {
+    let (recorded, _) = record_run(24, None, ExecutorKind::Sim);
+    assert_eq!(recorded.replans().len(), 0, "baseline: no replans recorded");
+    // inject a mid-stream budget squeeze the recording never had: the
+    // replay must re-plan at batch 12, which the diff reports as both a
+    // replan-count delta and plan churn
+    let overrides =
+        vec![("budget-schedule".to_string(), format!("{}b@b12", half_footprint()))];
+    let outcome = replay_trace(&recorded, &overrides).expect("replay runs");
+    let d = &outcome.diff;
+    assert!(!d.is_zero(), "a perturbed config must not diff to zero");
+    assert!(d.replan_delta >= 1, "injected budget step re-plans: {d:?}");
+    assert!(d.plan_churn >= 1, "extra plan shows up as churn: {d:?}");
+    let violations = d.violations(&GateThresholds::default());
+    assert!(!violations.is_empty(), "strict gate must trip");
+}
+
+#[test]
+fn recorded_artifact_round_trips_serialization() {
+    let sched = BudgetSchedule::step_at_batch(12, half_footprint());
+    let (recorded, _) = record_run(24, Some(sched), ExecutorKind::Sim);
+    let lines = recorded.to_lines();
+    let reparsed = Trace::parse(&lines.join("\n")).expect("round-trip parse");
+    assert_eq!(reparsed, recorded);
+    assert_eq!(reparsed.to_lines(), lines, "line-for-line stable");
+    // events preserve the batch/replan interleaving (a replan sits between
+    // batch records, not appended at the end)
+    let first_replan = recorded
+        .events
+        .iter()
+        .position(|e| matches!(e, Event::Replan(_)))
+        .expect("has a replan");
+    assert!(first_replan < recorded.events.len() - 1, "replan recorded in stream order");
+}
