@@ -1,4 +1,4 @@
-//! Tiled / register-blocked matmul kernels with optional row-parallelism.
+//! Tiled / lane-blocked matmul kernels with optional row-parallelism.
 //!
 //! This is the numeric hot path of [`super::native::NativeBackend`]. Three
 //! matmul flavors cover one dense layer's step (fwd `x@w`, bwd-input
@@ -6,27 +6,41 @@
 //!
 //!   - `naive_*` — the straight reference loops (the pre-tiling kernels,
 //!     kept as the ground truth for property tests and the kernel bench);
-//!   - the tiled entry points — cache-blocked over the reduction dim, with
-//!     the working c-rows kept hot across a block, and an optional
-//!     `std::thread::scope` fan-out that splits the *output rows* across
-//!     `threads` workers.
+//!   - the tiled entry points — cache-blocked over the reduction dim with
+//!     fixed-size `[f32; LANES]` register tiles in the innermost loops
+//!     (stable-Rust autovectorization: LLVM maps the lane arrays onto
+//!     SIMD registers), plus an optional `std::thread::scope` fan-out
+//!     that splits the *output rows* across `threads` workers.
 //!
-//! # Determinism contract
+//! # Determinism contract (lane-blocked accumulation)
 //!
 //! `matmul_acc` and `matmul_at_acc` accumulate every output element in
 //! ascending reduction (`kk`) order — exactly the order of the naive
-//! loops — and the parallel path partitions whole output rows, so their
-//! results are **bit-identical** to the naive kernels for every thread
-//! count. `matmul_bt_acc` breaks each dot product into four independent
-//! accumulators (the serial FP chain is latency-bound); its rounding
-//! differs from the naive kernel, but the order is still fixed per
-//! element, so it too is bit-identical *across thread counts*. Net:
-//! changing `FERRET_KERNEL_THREADS` never changes any numeric result, and
-//! lockstep runs stay deterministic. Planner sweeps default to 1 thread
-//! only to avoid oversubscription, not for reproducibility.
+//! loops. Lane blocking only tiles the *column* (`j`) dimension: each
+//! output element belongs to exactly one lane of one column tile, and
+//! within that tile the `kk` loop runs ascending over each cache block,
+//! with cache blocks visited ascending, so the floating-point additions
+//! hitting any single element are the naive kernel's additions in the
+//! naive kernel's order. Column tiles narrow to 8-wide and then to a
+//! scalar tail with the same per-element order, and the parallel path
+//! partitions whole output rows, so results are **bit-identical** to the
+//! naive kernels for every thread count, tile width, and shape.
+//!
+//! `matmul_bt_acc` is the exemption: each dot product accumulates on
+//! [`DOT_LANES`] independent lanes folded by a fixed pairwise tree (the
+//! serial FP chain is latency-bound). Its rounding differs from the
+//! naive kernel (tolerance-checked in tests), but the lane schedule is a
+//! pure function of `k`, so it too is bit-identical *across thread
+//! counts*. Net: changing `FERRET_KERNEL_THREADS` never changes any
+//! numeric result, and lockstep runs stay deterministic. Planner sweeps
+//! default to 1 thread only to avoid oversubscription, not for
+//! reproducibility.
 //!
 //! The post-ReLU sparse-skip fast path (`av == 0.0 → skip`) of the
-//! forward/weight kernels is preserved in the tiled forms.
+//! forward/weight kernels is preserved per `kk` step inside the lane
+//! tiles — it both keeps the zero-operand semantics of the naive loops
+//! (`0 * inf` is never materialized) and skips whole 64-wide tile
+//! updates on sparse activations.
 
 /// Reduction-dimension block: `KB` rows of `b` (`KB×n` floats) stay hot in
 /// L1/L2 while the same block is replayed against the c-rows.
@@ -35,6 +49,18 @@ const KB: usize = 32;
 /// Output-row register block for `matmul_acc`: this many c-rows share one
 /// pass over a `b` block.
 const RB: usize = 4;
+
+/// SIMD lane width the column tiles are built from. 8 × f32 = one AVX2
+/// register; NEON/SSE targets split each tile into two/four registers.
+const LANES: usize = 8;
+
+/// Widest column tile: 8 lane groups = 64 columns. Eight independent
+/// 8-wide FMA chains per row are enough to hide FMA latency on two
+/// issue ports.
+const NWIDE: usize = 8;
+
+/// Dot-product lanes for the `bt` flavor: four independent 8-wide chains.
+const DOT_LANES: usize = 32;
 
 /// Below this many FLOPs a kernel runs single-threaded: scoped-thread
 /// spawn/join costs tens of µs, so only ms-scale matmuls amortize it.
@@ -135,12 +161,108 @@ pub fn naive_matmul_at_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usi
 }
 
 // ---------------------------------------------------------------------------
-// tiled single-thread blocks
+// lane-blocked single-thread building blocks
 // ---------------------------------------------------------------------------
 
+/// One register tile of `NW × LANES` columns of one c-row, accumulated
+/// over the `kb..ke` slice of the reduction dim. The a-element for step
+/// `kk` is `a[aoff + kk * astep]` — `astep == 1` walks a row of `a`
+/// (`matmul_acc`), `astep == m` walks a column (`matmul_at_acc`). The
+/// accumulators live in `NW` fixed `[f32; LANES]` arrays that LLVM keeps
+/// in SIMD registers; per element the adds run in ascending `kk` order,
+/// so the tile is bit-identical to the naive loops.
+#[inline(always)]
+fn acc_tile<const NW: usize>(
+    crow: &mut [f32],
+    a: &[f32],
+    aoff: usize,
+    astep: usize,
+    b: &[f32],
+    kb: usize,
+    ke: usize,
+    n: usize,
+    j0: usize,
+) {
+    let mut acc = [[0.0f32; LANES]; NW];
+    for (g, accg) in acc.iter_mut().enumerate() {
+        let c0 = j0 + g * LANES;
+        accg.copy_from_slice(&crow[c0..c0 + LANES]);
+    }
+    for kk in kb..ke {
+        let av = a[aoff + kk * astep];
+        if av == 0.0 {
+            continue; // post-ReLU sparsity; also keeps 0·inf out
+        }
+        let brow = &b[kk * n + j0..kk * n + j0 + NW * LANES];
+        for (g, accg) in acc.iter_mut().enumerate() {
+            let bseg = &brow[g * LANES..(g + 1) * LANES];
+            for l in 0..LANES {
+                accg[l] += av * bseg[l];
+            }
+        }
+    }
+    for (g, accg) in acc.iter().enumerate() {
+        let c0 = j0 + g * LANES;
+        crow[c0..c0 + LANES].copy_from_slice(accg);
+    }
+}
+
+/// Scalar column tail `j0..n` of one c-row (same per-element order).
+#[inline(always)]
+fn acc_tail(
+    crow: &mut [f32],
+    a: &[f32],
+    aoff: usize,
+    astep: usize,
+    b: &[f32],
+    kb: usize,
+    ke: usize,
+    n: usize,
+    j0: usize,
+) {
+    for kk in kb..ke {
+        let av = a[aoff + kk * astep];
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &b[kk * n..(kk + 1) * n];
+        for j in j0..n {
+            crow[j] += av * brow[j];
+        }
+    }
+}
+
+/// One c-row over one `kb..ke` cache block: widest tiles first, then
+/// 8-wide tiles, then the scalar tail.
+#[inline(always)]
+fn acc_row(
+    crow: &mut [f32],
+    a: &[f32],
+    aoff: usize,
+    astep: usize,
+    b: &[f32],
+    kb: usize,
+    ke: usize,
+    n: usize,
+) {
+    let mut j0 = 0;
+    while j0 + NWIDE * LANES <= n {
+        acc_tile::<NWIDE>(crow, a, aoff, astep, b, kb, ke, n, j0);
+        j0 += NWIDE * LANES;
+    }
+    while j0 + LANES <= n {
+        acc_tile::<1>(crow, a, aoff, astep, b, kb, ke, n, j0);
+        j0 += LANES;
+    }
+    if j0 < n {
+        acc_tail(crow, a, aoff, astep, b, kb, ke, n, j0);
+    }
+}
+
 /// Blocked `c += a @ b` over `rows` rows of `c`/`a`. `RB` c-rows replay
-/// each `KB`-row block of `b` while it is cache-hot; per-element
-/// accumulation stays in ascending `kk` order (bit-identical to naive).
+/// each `KB`-row block of `b` while it is cache-hot; within a row the
+/// columns run as lane tiles ([`acc_row`]); per-element accumulation
+/// stays in ascending `kk` order (bit-identical to naive).
 fn matmul_acc_block(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, k: usize, n: usize) {
     let mut ib = 0;
     while ib < rows {
@@ -149,18 +271,7 @@ fn matmul_acc_block(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, k: usize, 
         while kb < k {
             let ke = (kb + KB).min(k);
             for i in ib..ie {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for kk in kb..ke {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        crow[j] += av * brow[j];
-                    }
-                }
+                acc_row(&mut c[i * n..(i + 1) * n], a, i * k, 1, b, kb, ke, n);
             }
             kb = ke;
         }
@@ -168,26 +279,36 @@ fn matmul_acc_block(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, k: usize, 
     }
 }
 
-/// `c += a @ bᵀ` over `rows` rows: each dot product runs on four
-/// independent accumulators to break the serial FP add chain.
+/// `c += a @ bᵀ` over `rows` rows: each dot product accumulates on
+/// [`DOT_LANES`] independent lanes (four 8-wide FMA chains) folded by a
+/// fixed pairwise tree, plus an ascending scalar tail. The schedule is a
+/// pure function of `k` — thread-invariant, but rounds differently from
+/// the naive serial chain.
 fn matmul_bt_block(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, k: usize, n: usize) {
-    let k4 = k / 4 * 4;
+    let kv = k / DOT_LANES * DOT_LANES;
     for i in 0..rows {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for j in 0..n {
             let brow = &b[j * k..(j + 1) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut lanes = [0.0f32; DOT_LANES];
             let mut kk = 0;
-            while kk < k4 {
-                s0 += arow[kk] * brow[kk];
-                s1 += arow[kk + 1] * brow[kk + 1];
-                s2 += arow[kk + 2] * brow[kk + 2];
-                s3 += arow[kk + 3] * brow[kk + 3];
-                kk += 4;
+            while kk < kv {
+                for l in 0..DOT_LANES {
+                    lanes[l] += arow[kk + l] * brow[kk + l];
+                }
+                kk += DOT_LANES;
             }
-            let mut s = (s0 + s1) + (s2 + s3);
-            for kk in k4..k {
+            // fixed pairwise tree: 32 → 16 → 8 → 4 → 2 → 1
+            let mut width = DOT_LANES;
+            while width > 1 {
+                width /= 2;
+                for l in 0..width {
+                    lanes[l] += lanes[l + width];
+                }
+            }
+            let mut s = lanes[0];
+            for kk in kv..k {
                 s += arow[kk] * brow[kk];
             }
             crow[j] += s;
@@ -197,8 +318,9 @@ fn matmul_bt_block(c: &mut [f32], a: &[f32], b: &[f32], rows: usize, k: usize, n
 
 /// `c += aᵀ @ b` for output rows `i0..i0+rows` of the full (m x n)
 /// product; `a` is the full (k x m) matrix. Loop-interchanged so each
-/// c-row stays hot across a `KB` block of the reduction dim; per-element
-/// order is ascending `kk` (bit-identical to naive).
+/// c-row stays hot across a `KB` block of the reduction dim; columns run
+/// as lane tiles with the a-element strided down a column of `a`;
+/// per-element order is ascending `kk` (bit-identical to naive).
 fn matmul_at_block(
     c: &mut [f32],
     a: &[f32],
@@ -213,17 +335,7 @@ fn matmul_at_block(
     while kb < k {
         let ke = (kb + KB).min(k);
         for r in 0..rows {
-            let crow = &mut c[r * n..(r + 1) * n];
-            for kk in kb..ke {
-                let av = a[kk * m + i0 + r];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
-            }
+            acc_row(&mut c[r * n..(r + 1) * n], a, i0 + r, m, b, kb, ke, n);
         }
         kb = ke;
     }
@@ -233,8 +345,8 @@ fn matmul_at_block(
 // public tiled entry points (optional row-parallel fan-out)
 // ---------------------------------------------------------------------------
 
-/// c (m x n) += a (m x k) @ b (k x n). Tiled; splits c-rows across up to
-/// `threads` scoped workers. Bit-identical to [`naive_matmul_acc`].
+/// c (m x n) += a (m x k) @ b (k x n). Lane-tiled; splits c-rows across
+/// up to `threads` scoped workers. Bit-identical to [`naive_matmul_acc`].
 pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -253,10 +365,10 @@ pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: us
     });
 }
 
-/// c (m x n) += a (m x k) @ bᵀ, b (n x k). Unrolled dot products; splits
-/// c-rows across up to `threads` scoped workers. Result is independent of
-/// the thread count (fixed per-element order) but rounds differently from
-/// [`naive_matmul_bt_acc`].
+/// c (m x n) += a (m x k) @ bᵀ, b (n x k). Lane-parallel dot products;
+/// splits c-rows across up to `threads` scoped workers. Result is
+/// independent of the thread count (fixed per-element order) but rounds
+/// differently from [`naive_matmul_bt_acc`].
 pub fn matmul_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -275,8 +387,8 @@ pub fn matmul_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
     });
 }
 
-/// c (m x n) += aᵀ @ b, a (k x m), b (k x n). Tiled; splits c-rows across
-/// up to `threads` scoped workers. Bit-identical to
+/// c (m x n) += aᵀ @ b, a (k x m), b (k x n). Lane-tiled; splits c-rows
+/// across up to `threads` scoped workers. Bit-identical to
 /// [`naive_matmul_at_acc`].
 pub fn matmul_at_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) {
     debug_assert_eq!(a.len(), k * m);
@@ -325,7 +437,7 @@ pub fn dense_fwd_into(
         }
         matmul_acc_block(zc, xc, w, rows, k, n);
         if relu {
-            zc.iter_mut().for_each(|v| *v = v.max(0.0));
+            relu_inplace(zc);
         }
     };
     if t <= 1 {
@@ -341,13 +453,128 @@ pub fn dense_fwd_into(
     });
 }
 
+/// In-place ReLU in [`LANES`]-wide blocks plus a scalar tail.
+#[inline(always)]
+fn relu_inplace(z: &mut [f32]) {
+    let mut it = z.chunks_exact_mut(LANES);
+    for block in &mut it {
+        for v in block {
+            *v = v.max(0.0);
+        }
+    }
+    for v in it.into_remainder() {
+        *v = v.max(0.0);
+    }
+}
+
 /// Fused ReLU mask: `gz[i] = if z[i] <= 0 { 0 } else { g[i] }` in one pass
-/// straight into the (pooled) output buffer.
+/// straight into the (pooled) output buffer; [`LANES`]-wide blocks so the
+/// select lowers to a SIMD blend.
 pub fn relu_mask_into(gz: &mut [f32], g: &[f32], z: &[f32]) {
     debug_assert_eq!(gz.len(), g.len());
     debug_assert_eq!(gz.len(), z.len());
-    for ((o, &gv), &zv) in gz.iter_mut().zip(g).zip(z) {
+    let blocks = gz.len() / LANES * LANES;
+    let (gzb, gzt) = gz.split_at_mut(blocks);
+    for ((ob, gb), zb) in gzb
+        .chunks_exact_mut(LANES)
+        .zip(g[..blocks].chunks_exact(LANES))
+        .zip(z[..blocks].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            ob[l] = if zb[l] <= 0.0 { 0.0 } else { gb[l] };
+        }
+    }
+    for ((o, &gv), &zv) in gzt.iter_mut().zip(&g[blocks..]).zip(&z[blocks..]) {
         *o = if zv <= 0.0 { 0.0 } else { gv };
+    }
+}
+
+/// Elementwise SGD step into a (pooled, possibly dirty) output buffer:
+/// `out[i] = p[i] - lr * g[i]` in [`LANES`]-wide blocks. Pure map — the
+/// blocking never changes bits, it only guarantees the vector lowering.
+pub fn sgd_into(out: &mut [f32], p: &[f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(out.len(), p.len());
+    debug_assert_eq!(out.len(), g.len());
+    let blocks = out.len() / LANES * LANES;
+    let (ob, ot) = out.split_at_mut(blocks);
+    for ((o, pb), gb) in ob
+        .chunks_exact_mut(LANES)
+        .zip(p[..blocks].chunks_exact(LANES))
+        .zip(g[..blocks].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            o[l] = pb[l] - lr * gb[l];
+        }
+    }
+    for ((o, &pv), &gv) in ot.iter_mut().zip(&p[blocks..]).zip(&g[blocks..]) {
+        *o = pv - lr * gv;
+    }
+}
+
+/// Fisher compensation map into `out`: `out[i] = g[i] + lam·g[i]²·d[i]`
+/// ([`crate::compensate`] Eq. 9 inner step), [`LANES`]-wide blocks.
+pub fn compensate_into(out: &mut [f32], g: &[f32], d: &[f32], lam: f32) {
+    debug_assert_eq!(out.len(), g.len());
+    debug_assert_eq!(out.len(), d.len());
+    let blocks = out.len() / LANES * LANES;
+    let (ob, ot) = out.split_at_mut(blocks);
+    for ((o, gb), db) in ob
+        .chunks_exact_mut(LANES)
+        .zip(g[..blocks].chunks_exact(LANES))
+        .zip(d[..blocks].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            o[l] = gb[l] + lam * gb[l] * gb[l] * db[l];
+        }
+    }
+    for ((o, &gv), &dv) in ot.iter_mut().zip(&g[blocks..]).zip(&d[blocks..]) {
+        *o = gv + lam * gv * gv * dv;
+    }
+}
+
+/// In-place Fisher compensation: `g[i] += lam·g[i]²·d[i]`, [`LANES`]-wide
+/// blocks, no allocation (the freerun update hot path).
+pub fn compensate_slice_inplace(g: &mut [f32], d: &[f32], lam: f32) {
+    debug_assert_eq!(g.len(), d.len());
+    let blocks = g.len() / LANES * LANES;
+    let (gb, gt) = g.split_at_mut(blocks);
+    for (gseg, dseg) in gb.chunks_exact_mut(LANES).zip(d[..blocks].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let g0 = gseg[l];
+            gseg[l] = g0 + lam * g0 * g0 * dseg[l];
+        }
+    }
+    for (gv, &dv) in gt.iter_mut().zip(&d[blocks..]) {
+        let g0 = *gv;
+        *gv = g0 + lam * g0 * g0 * dv;
+    }
+}
+
+/// Column reduction `gb[j] += Σ_i gz[i·n + j]` (bias gradient). Lane
+/// tiles hold 8 column sums in registers across all rows; per element
+/// the row order is ascending `i` — bit-identical to the scalar loop.
+pub fn col_sum_acc(gb: &mut [f32], gz: &[f32], rows: usize, n: usize) {
+    debug_assert_eq!(gb.len(), n);
+    debug_assert_eq!(gz.len(), rows * n);
+    let blocks = n / LANES * LANES;
+    let mut j0 = 0;
+    while j0 < blocks {
+        let mut acc: [f32; LANES] = gb[j0..j0 + LANES].try_into().expect("lane block");
+        for i in 0..rows {
+            let row = &gz[i * n + j0..i * n + j0 + LANES];
+            for l in 0..LANES {
+                acc[l] += row[l];
+            }
+        }
+        gb[j0..j0 + LANES].copy_from_slice(&acc);
+        j0 += LANES;
+    }
+    for j in blocks..n {
+        let mut s = gb[j];
+        for i in 0..rows {
+            s += gz[i * n + j];
+        }
+        gb[j] = s;
     }
 }
 
@@ -393,6 +620,32 @@ mod tests {
     }
 
     #[test]
+    fn lane_tiles_are_bit_identical_across_every_tile_boundary() {
+        // deterministic sweep across the tile-width boundaries: scalar
+        // tail only (n < 8), one 8-wide tile, the 64-wide tile edge, and
+        // k straddling the KB cache block
+        let mut rng = Rng::new(0xD06_F00D);
+        for n in [1, 7, 8, 9, 63, 64, 65, 72] {
+            for k in [1, 7, 31, 32, 33, 40] {
+                let m = 5;
+                let a = randvec(&mut rng, m * k, true);
+                let b = randvec(&mut rng, k * n, false);
+                let at = randvec(&mut rng, k * m, true);
+                let mut c0 = randvec(&mut rng, m * n, false);
+                let mut c1 = c0.clone();
+                naive_matmul_acc(&mut c0, &a, &b, m, k, n);
+                matmul_acc(&mut c1, &a, &b, m, k, n, 1);
+                assert_eq!(c0, c1, "acc k={k} n={n}");
+                let mut d0 = randvec(&mut rng, m * n, false);
+                let mut d1 = d0.clone();
+                naive_matmul_at_acc(&mut d0, &at, &b, m, k, n);
+                matmul_at_acc(&mut d1, &at, &b, m, k, n, 1);
+                assert_eq!(d0, d1, "at k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn bt_matches_naive_within_tolerance_and_is_thread_invariant() {
         property("kern_bt", 20, |rng| {
             let (m, k, n) = (1 + rng.below(33), 1 + rng.below(70), 1 + rng.below(40));
@@ -404,8 +657,8 @@ mod tests {
             matmul_bt_acc(&mut c1, &a, &b, m, k, n, 1);
             let mut c3 = vec![0.0f32; m * n];
             matmul_bt_acc(&mut c3, &a, &b, m, k, n, 3);
-            // unrolled accumulators round differently from the serial
-            // chain, but identically for every thread count
+            // lane accumulators round differently from the serial chain,
+            // but identically for every thread count
             assert_eq!(c1, c3, "bt thread-variant m={m} k={k} n={n}");
             for (x, y) in c0.iter().zip(&c1) {
                 assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "bt {x} vs {y}");
@@ -445,6 +698,55 @@ mod tests {
         let mut gz = [9.0f32; 4];
         relu_mask_into(&mut gz, &g, &z);
         assert_eq!(gz, [10.0, 0.0, 0.0, 40.0]);
+        // across the lane boundary too
+        let n = LANES + 3;
+        let z: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let g: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let mut gz = vec![9.0f32; n];
+        relu_mask_into(&mut gz, &g, &z);
+        for i in 0..n {
+            assert_eq!(gz[i], if i % 2 == 0 { g[i] } else { 0.0 }, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn elementwise_maps_match_scalar_reference_across_lane_boundaries() {
+        let mut rng = Rng::new(77);
+        for len in [1, 7, 8, 9, 24, 65] {
+            let p = randvec(&mut rng, len, false);
+            let g = randvec(&mut rng, len, false);
+            let d = randvec(&mut rng, len, false);
+            let mut out = vec![9.0f32; len];
+            sgd_into(&mut out, &p, &g, 0.05);
+            let want: Vec<f32> = p.iter().zip(&g).map(|(&pv, &gv)| pv - 0.05 * gv).collect();
+            assert_eq!(out, want, "sgd len={len}");
+            let mut out = vec![9.0f32; len];
+            compensate_into(&mut out, &g, &d, 0.2);
+            let want: Vec<f32> =
+                g.iter().zip(&d).map(|(&gv, &dv)| gv + 0.2 * gv * gv * dv).collect();
+            assert_eq!(out, want, "compensate len={len}");
+            let mut gi = g.clone();
+            compensate_slice_inplace(&mut gi, &d, 0.2);
+            assert_eq!(gi, want, "compensate_inplace len={len}");
+        }
+    }
+
+    #[test]
+    fn col_sum_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(78);
+        for (rows, n) in [(1, 1), (3, 7), (4, 8), (5, 13), (16, 65)] {
+            let gz = randvec(&mut rng, rows * n, false);
+            let init = randvec(&mut rng, n, false);
+            let mut want = init.clone();
+            for i in 0..rows {
+                for j in 0..n {
+                    want[j] += gz[i * n + j];
+                }
+            }
+            let mut got = init.clone();
+            col_sum_acc(&mut got, &gz, rows, n);
+            assert_eq!(got, want, "rows={rows} n={n}");
+        }
     }
 
     #[test]

@@ -110,11 +110,7 @@ impl Backend for NativeBackend {
         let mut gw = pool.take_zeroed(k * n);
         kernels::matmul_at_acc(&mut gw, x, &gz, k, batch, n, ws.threads);
         let mut gb = pool.take_zeroed(n);
-        for i in 0..batch {
-            for j in 0..n {
-                gb[j] += gz[i * n + j];
-            }
-        }
+        kernels::col_sum_acc(&mut gb, &gz, batch, n);
         pool.put(gz);
         BwdOut { gx, grads: GradBuf { gw, gb } }
     }
@@ -167,39 +163,31 @@ impl Backend for NativeBackend {
     }
 
     fn compensate(&self, g: &GradBuf, d: &GradBuf, lam: f32) -> GradBuf {
-        GradBuf {
-            gw: g.gw.iter().zip(&d.gw).map(|(&g, &d)| g + lam * g * g * d).collect(),
-            gb: g.gb.iter().zip(&d.gb).map(|(&g, &d)| g + lam * g * g * d).collect(),
-        }
+        let mut gw = vec![0.0f32; g.gw.len()];
+        kernels::compensate_into(&mut gw, &g.gw, &d.gw, lam);
+        let mut gb = vec![0.0f32; g.gb.len()];
+        kernels::compensate_into(&mut gb, &g.gb, &d.gb, lam);
+        GradBuf { gw, gb }
     }
 
     fn compensate_inplace(&self, g: &mut GradBuf, d: &GradBuf, lam: f32) {
-        for (gv, &dv) in g.gw.iter_mut().zip(&d.gw) {
-            let g0 = *gv;
-            *gv = g0 + lam * g0 * g0 * dv;
-        }
-        for (gv, &dv) in g.gb.iter_mut().zip(&d.gb) {
-            let g0 = *gv;
-            *gv = g0 + lam * g0 * g0 * dv;
-        }
+        kernels::compensate_slice_inplace(&mut g.gw, &d.gw, lam);
+        kernels::compensate_slice_inplace(&mut g.gb, &d.gb, lam);
     }
 
     fn sgd(&self, p: &LayerParams, g: &GradBuf, lr: f32) -> LayerParams {
-        LayerParams {
-            w: p.w.iter().zip(&g.gw).map(|(&p, &g)| p - lr * g).collect(),
-            b: p.b.iter().zip(&g.gb).map(|(&p, &g)| p - lr * g).collect(),
-        }
+        let mut w = vec![0.0f32; p.w.len()];
+        kernels::sgd_into(&mut w, &p.w, &g.gw, lr);
+        let mut b = vec![0.0f32; p.b.len()];
+        kernels::sgd_into(&mut b, &p.b, &g.gb, lr);
+        LayerParams { w, b }
     }
 
     fn sgd_pooled(&self, p: &LayerParams, g: &GradBuf, lr: f32, ws: &Workspace) -> LayerParams {
         let mut w = ws.pool.take(p.w.len());
-        for ((o, &pv), &gv) in w.iter_mut().zip(&p.w).zip(&g.gw) {
-            *o = pv - lr * gv;
-        }
+        kernels::sgd_into(&mut w, &p.w, &g.gw, lr);
         let mut b = ws.pool.take(p.b.len());
-        for ((o, &pv), &gv) in b.iter_mut().zip(&p.b).zip(&g.gb) {
-            *o = pv - lr * gv;
-        }
+        kernels::sgd_into(&mut b, &p.b, &g.gb, lr);
         LayerParams { w, b }
     }
 }

@@ -6,15 +6,23 @@
 //!                [--executor sim|threaded] [--mode lockstep|freerun]
 //!                [--budget-schedule <bytes>@<at>[,...]]
 //!                [--kernel-threads K] [--bench-out PATH]
+//!                [--compare BASE.json] [--max-regress X]
 //!
 //! `--exp perf` runs the performance trajectory sweep instead of a paper
 //! table: per-kernel GFLOP/s (naive vs tiled vs tiled×K), engine
 //! batches/sec per executor×mode, and steady-state buffer-pool
 //! allocations per microbatch. The JSON lands at `--bench-out` (default
 //! results/perf.json); the committed trajectory point at the repo root
-//! (BENCH_0006.json) is a full, non-quick run of the same sweep. `perf`
+//! (BENCH_0008.json) is a full, non-quick run of the same sweep. `perf`
 //! is excluded from `--exp all` — it measures this machine, not the
 //! paper.
+//!
+//! `--compare BASE.json` additionally diffs the fresh sweep against a
+//! committed BENCH file: per-kernel `tiled_mt_gflops` and per-model
+//! `batches_per_sec` ratios. With `--max-regress X` (a fraction, e.g.
+//! 0.5) the process exits 1 when any matched row runs slower than
+//! `(1 - X) ×` baseline — the CI perf smoke uses a loose threshold to
+//! catch order-of-magnitude cliffs without flaking on machine noise.
 //!
 //! `--exp budget_shift` emits the dynamic-memory table: the budget halves
 //! mid-stream and Ferret's live re-plan is compared against a
@@ -46,7 +54,7 @@ fn usage() -> ! {
          <table1|table2|table3|table4|table7|table8|fig4|fig6|fig7|budget_shift|perf|all> \
          [--quick] [--batches N] [--seeds a,b] [--settings i,j] [--executor sim|threaded] \
          [--mode lockstep|freerun] [--budget-schedule <bytes>@<at>[,...]] \
-         [--kernel-threads K] [--bench-out PATH]"
+         [--kernel-threads K] [--bench-out PATH] [--compare BASE.json] [--max-regress X]"
     );
     std::process::exit(2)
 }
@@ -57,6 +65,8 @@ fn main() {
     let mut cfg = BenchCfg::default();
     let mut kernel_threads = 0usize;
     let mut bench_out: Option<String> = None;
+    let mut compare: Option<String> = None;
+    let mut max_regress: Option<f64> = None;
     // apply the --quick preset first so explicit --batches/--seeds/
     // --settings override it regardless of flag order
     if args.iter().any(|a| a == "--quick") {
@@ -130,6 +140,15 @@ fn main() {
                 i += 1;
                 bench_out = Some(args.get(i).unwrap_or_else(|| usage()).clone());
             }
+            "--compare" => {
+                i += 1;
+                compare = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
+            "--max-regress" => {
+                i += 1;
+                max_regress =
+                    Some(args.get(i).and_then(|s| s.parse().ok()).unwrap_or_else(|| usage()));
+            }
             "--quiet" => cfg.quiet = true,
             _ => usage(),
         }
@@ -154,6 +173,44 @@ fn main() {
             "[ferret-bench] perf sweep saved to {path} ({:.0}s)",
             t0.elapsed().as_secs_f64()
         );
+        if let Some(base_path) = compare {
+            let base = match std::fs::read_to_string(&base_path) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: --compare {base_path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let cmp = match report.compare(&base) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("error: --compare {base_path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            println!("\n{}", cmp.to_markdown());
+            let worst = cmp.worst_regress();
+            if let Some(limit) = max_regress {
+                if worst > limit {
+                    eprintln!(
+                        "[ferret-bench] FAIL: worst regression {:.1}% exceeds \
+                         --max-regress {:.1}% vs {}",
+                        worst * 100.0,
+                        limit * 100.0,
+                        cmp.baseline_name
+                    );
+                    std::process::exit(1);
+                }
+                eprintln!(
+                    "[ferret-bench] perf gate ok: worst regression {:.1}% within {:.1}%",
+                    worst * 100.0,
+                    limit * 100.0
+                );
+            }
+        } else if max_regress.is_some() {
+            eprintln!("error: --max-regress requires --compare BASE.json");
+            std::process::exit(2);
+        }
         return;
     }
 

@@ -183,6 +183,55 @@ struct IterFisher {
     v_a: Option<GradBuf>,
 }
 
+/// f64 lanes for the λ-tuning reduction: four independent chains folded
+/// by a fixed pairwise tree (the scalar chain is latency-bound on long
+/// parameter vectors). Deterministic — the schedule depends only on the
+/// slice length.
+const LAM_LANES: usize = 4;
+
+/// One slice's contribution to the λ gradient statistics:
+/// `(Σ v_a·(Δv_r − λ·v_a), Σ v_a²)` with `Δv_r = (1-α)(g − v_r)`.
+fn lam_stats(v_r: &[f32], g: &[f32], v_a: &[f32], a: f32, lam: f32) -> (f64, f64) {
+    let mut dots = [0.0f64; LAM_LANES];
+    let mut norms = [0.0f64; LAM_LANES];
+    let blocks = v_r.len() / LAM_LANES * LAM_LANES;
+    let mut i = 0;
+    while i < blocks {
+        for l in 0..LAM_LANES {
+            let va = v_a[i + l] as f64;
+            let dvr = ((1.0 - a) * (g[i + l] - v_r[i + l])) as f64;
+            dots[l] += va * (dvr - lam as f64 * va);
+            norms[l] += va * va;
+        }
+        i += LAM_LANES;
+    }
+    for i in blocks..v_r.len() {
+        let va = v_a[i] as f64;
+        let dvr = ((1.0 - a) * (g[i] - v_r[i])) as f64;
+        dots[0] += va * (dvr - lam as f64 * va);
+        norms[0] += va * va;
+    }
+    (
+        (dots[0] + dots[1]) + (dots[2] + dots[3]),
+        (norms[0] + norms[1]) + (norms[2] + norms[3]),
+    )
+}
+
+/// EMA step `e = α·e + (1-α)·obs` (Eq. 11); pure map, autovectorizes.
+fn ema_in(ema: &mut [f32], obs: &[f32], a: f32) {
+    for (e, &o) in ema.iter_mut().zip(obs) {
+        *e = a * *e + (1.0 - a) * o;
+    }
+}
+
+/// EMA step over the fused observation `g⊙g⊙Δθ` — computed in-loop so no
+/// observation buffer is ever materialized.
+fn ema_in_ggd(ema: &mut [f32], g: &[f32], d: &[f32], a: f32) {
+    for ((e, &gv), &dv) in ema.iter_mut().zip(g).zip(d) {
+        *e = a * *e + (1.0 - a) * (gv * gv * dv);
+    }
+}
+
 impl IterFisher {
     fn new(params: CompParams) -> Self {
         IterFisher { params, lam: params.lam0, v_r: None, v_a: None }
@@ -205,53 +254,19 @@ impl IterFisher {
         let v_a = self.v_a.as_mut().unwrap();
         // Δv_r = (1-α)(g − v_r); ∇_λ ||Δv_r − λ v_a||² = −2 v_aᵀ(Δv_r − λ v_a)
         // (+ 2νλ from the ℓ2 term of Eq. 10)
-        let mut dot = 0.0f64;
-        let mut va_norm2 = 0.0f64;
-        let iter = v_r
-            .gw
-            .iter()
-            .zip(&grad.gw)
-            .zip(v_a.gw.iter())
-            .map(|((r, g), va)| (*r, *g, *va))
-            .chain(
-                v_r.gb
-                    .iter()
-                    .zip(&grad.gb)
-                    .zip(v_a.gb.iter())
-                    .map(|((r, g), va)| (*r, *g, *va)),
-            );
-        for (r, g, va) in iter {
-            let dvr = (1.0 - a) * (g - r);
-            dot += va as f64 * (dvr - self.lam * va) as f64;
-            va_norm2 += va as f64 * va as f64;
-        }
+        let (dw, nw) = lam_stats(&v_r.gw, &grad.gw, &v_a.gw, a, self.lam);
+        let (db, nb) = lam_stats(&v_r.gb, &grad.gb, &v_a.gb, a, self.lam);
+        let (dot, va_norm2) = (dw + db, nw + nb);
         let grad_lam = -2.0 * dot + 2.0 * self.params.nu as f64 * self.lam as f64;
         // normalized step keeps tuning stable across parameter scales
         let step = self.params.eta_lam as f64 * grad_lam / (1.0 + va_norm2);
         self.lam = (self.lam as f64 - step).clamp(0.0, 2.0) as f32;
-        // EMA updates (Eq. 11)
-        let upd = |ema: &mut Vec<f32>, obs: &[f32]| {
-            for (e, &o) in ema.iter_mut().zip(obs) {
-                *e = a * *e + (1.0 - a) * o;
-            }
-        };
-        upd(&mut v_r.gw, &grad.gw);
-        upd(&mut v_r.gb, &grad.gb);
-        // v_a observes g⊙g⊙Δθ for the first version step
-        let obs_w: Vec<f32> = grad
-            .gw
-            .iter()
-            .zip(&first_delta.gw)
-            .map(|(&g, &d)| g * g * d)
-            .collect();
-        let obs_b: Vec<f32> = grad
-            .gb
-            .iter()
-            .zip(&first_delta.gb)
-            .map(|(&g, &d)| g * g * d)
-            .collect();
-        upd(&mut v_a.gw, &obs_w);
-        upd(&mut v_a.gb, &obs_b);
+        // EMA updates (Eq. 11); v_a observes g⊙g⊙Δθ for the first
+        // version step, fused so nothing is allocated per update
+        ema_in(&mut v_r.gw, &grad.gw, a);
+        ema_in(&mut v_r.gb, &grad.gb, a);
+        ema_in_ggd(&mut v_a.gw, &grad.gw, &first_delta.gw, a);
+        ema_in_ggd(&mut v_a.gb, &grad.gb, &first_delta.gb, a);
     }
 }
 

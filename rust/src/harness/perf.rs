@@ -18,6 +18,11 @@
 //! by the `schema` field; CI regenerates a `--quick` report per commit
 //! and uploads it as an artifact, while the full report is regenerated
 //! manually and committed as `BENCH_<issue>.json`.
+//!
+//! `--compare BASE.json` diffs a fresh sweep against a committed BENCH
+//! file ([`PerfReport::compare`]): per-kernel `tiled_mt_gflops` and
+//! per-model `batches_per_sec` ratios, with `--max-regress` turning the
+//! worst fractional slowdown into a nonzero exit for CI.
 
 use std::time::Instant;
 
@@ -149,7 +154,7 @@ impl PerfReport {
             })
             .collect();
         format!(
-            "{{\n  \"bench\": \"BENCH_0006\",\n  \"schema\": 1,\n  \
+            "{{\n  \"bench\": \"BENCH_0008\",\n  \"schema\": 1,\n  \
              \"kernels\": [\n{}\n  ],\n  \"engine\": [\n{}\n  ],\n  \
              \"steady_state\": [\n{}\n  ]\n}}\n",
             kernels.join(",\n"),
@@ -160,7 +165,7 @@ impl PerfReport {
 
     /// Human-readable summary for stdout.
     pub fn to_markdown(&self) -> String {
-        let mut out = String::from("### Perf trajectory (BENCH_0006)\n\n");
+        let mut out = String::from("### Perf trajectory (BENCH_0008)\n\n");
         out.push_str("| kernel | m×k×n | naive GF/s | tiled GF/s | tiled×T GF/s | T |\n");
         out.push_str("|---|---|---|---|---|---|\n");
         for r in &self.kernels {
@@ -186,6 +191,148 @@ impl PerfReport {
             ));
         }
         out
+    }
+}
+
+/// One matched row of a baseline comparison: the same logical measurement
+/// in both reports, with the throughput ratio current/baseline.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    /// human-readable row identity, e.g. `fwd 16×3072×256` or
+    /// `mnistnet10 threaded/freerun k1`
+    pub key: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// `current / baseline` — > 1.0 is a speedup, < 1.0 a regression
+    pub ratio: f64,
+}
+
+/// Result of [`PerfReport::compare`]: per-kernel and per-model throughput
+/// deltas against a committed baseline BENCH file.
+#[derive(Debug, Clone, Default)]
+pub struct CompareReport {
+    /// name the baseline file declares in its `bench` field
+    pub baseline_name: String,
+    /// `tiled_mt_gflops` deltas keyed by (kernel, m, k, n)
+    pub kernels: Vec<CompareRow>,
+    /// `batches_per_sec` deltas keyed by (model, executor, mode, threads)
+    pub engine: Vec<CompareRow>,
+    /// baseline rows with no counterpart in the current report (shape or
+    /// combo drift across PRs) — reported, never silently dropped
+    pub unmatched: usize,
+}
+
+impl CompareReport {
+    /// Worst fractional regression across all matched rows: 0.0 when
+    /// nothing got slower, 0.25 when the worst row runs at 75% of
+    /// baseline. The `--max-regress` gate thresholds this.
+    pub fn worst_regress(&self) -> f64 {
+        self.kernels
+            .iter()
+            .chain(self.engine.iter())
+            .map(|r| 1.0 - r.ratio)
+            .fold(0.0, f64::max)
+    }
+
+    /// Human-readable delta table for stdout.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### Perf delta vs {}\n\n", self.baseline_name);
+        out.push_str("| row | baseline | current | ratio |\n|---|---|---|---|\n");
+        for r in self.kernels.iter().chain(self.engine.iter()) {
+            out.push_str(&format!(
+                "| {} | {:.2} | {:.2} | {:.2}× |\n",
+                r.key, r.baseline, r.current, r.ratio
+            ));
+        }
+        if self.unmatched > 0 {
+            out.push_str(&format!(
+                "\n{} baseline row(s) had no counterpart in this run\n",
+                self.unmatched
+            ));
+        }
+        out.push_str(&format!("\nworst regression: {:.1}%\n", self.worst_regress() * 100.0));
+        out
+    }
+}
+
+fn field_f64(obj: &crate::trace::Json, key: &str) -> Option<f64> {
+    obj.get(key).and_then(|v| v.as_f64())
+}
+
+fn field_str<'j>(obj: &'j crate::trace::Json, key: &str) -> Option<&'j str> {
+    obj.get(key).and_then(|v| v.as_str())
+}
+
+impl PerfReport {
+    /// Diff this report against a committed baseline BENCH file (the JSON
+    /// text of [`PerfReport::to_json`] from an earlier PR). Rows are
+    /// matched by identity — kernels by (kernel, m, k, n), engine rows by
+    /// (model, executor, mode, kernel_threads) — and compared on their
+    /// multi-thread throughput columns. Baseline rows missing from the
+    /// current report are counted in `unmatched`, not dropped silently;
+    /// steady-state rows are not compared (allocs/batch is a contract
+    /// pinned by tests, not a throughput).
+    pub fn compare(&self, baseline_json: &str) -> crate::util::error::Result<CompareReport> {
+        let base = crate::trace::json::parse(baseline_json)?;
+        let mut report = CompareReport {
+            baseline_name: field_str(&base, "bench").unwrap_or("baseline").to_string(),
+            ..CompareReport::default()
+        };
+
+        let empty: &[crate::trace::Json] = &[];
+        let base_kernels = base.get("kernels").and_then(|v| v.as_arr()).unwrap_or(empty);
+        for row in base_kernels {
+            let (Some(kernel), Some(m), Some(k), Some(n), Some(gf)) = (
+                field_str(row, "kernel"),
+                field_f64(row, "m"),
+                field_f64(row, "k"),
+                field_f64(row, "n"),
+                field_f64(row, "tiled_mt_gflops"),
+            ) else {
+                crate::bail!("bench baseline: malformed kernel row");
+            };
+            let cur = self.kernels.iter().find(|r| {
+                r.kernel == kernel && r.m as f64 == m && r.k as f64 == k && r.n as f64 == n
+            });
+            match cur {
+                Some(r) if gf > 0.0 => report.kernels.push(CompareRow {
+                    key: format!("{kernel} {m}×{k}×{n}"),
+                    baseline: gf,
+                    current: r.tiled_mt_gflops,
+                    ratio: r.tiled_mt_gflops / gf,
+                }),
+                _ => report.unmatched += 1,
+            }
+        }
+
+        let base_engine = base.get("engine").and_then(|v| v.as_arr()).unwrap_or(empty);
+        for row in base_engine {
+            let (Some(model), Some(exec), Some(mode), Some(kt), Some(bps)) = (
+                field_str(row, "model"),
+                field_str(row, "executor"),
+                field_str(row, "mode"),
+                field_f64(row, "kernel_threads"),
+                field_f64(row, "batches_per_sec"),
+            ) else {
+                crate::bail!("bench baseline: malformed engine row");
+            };
+            let cur = self.engine.iter().find(|r| {
+                r.model == model
+                    && r.executor == exec
+                    && r.mode == mode
+                    && r.kernel_threads as f64 == kt
+            });
+            match cur {
+                Some(r) if bps > 0.0 => report.engine.push(CompareRow {
+                    key: format!("{model} {exec}/{mode} k{kt}"),
+                    baseline: bps,
+                    current: r.batches_per_sec,
+                    ratio: r.batches_per_sec / bps,
+                }),
+                _ => report.unmatched += 1,
+            }
+        }
+        Ok(report)
     }
 }
 
@@ -439,7 +586,7 @@ mod tests {
         };
         let json = report.to_json();
         for key in [
-            "\"bench\": \"BENCH_0006\"",
+            "\"bench\": \"BENCH_0008\"",
             "\"schema\": 1",
             "\"kernels\"",
             "\"engine\"",
@@ -453,6 +600,67 @@ mod tests {
         }
         let md = report.to_markdown();
         assert!(md.contains("| fwd | 8×4×2 |"));
+    }
+
+    #[test]
+    fn compare_matches_rows_and_finds_the_worst_regression() {
+        let current = PerfReport {
+            kernels: vec![KernelRecord {
+                kernel: "fwd",
+                m: 8,
+                k: 4,
+                n: 2,
+                naive_gflops: 1.0,
+                tiled_gflops: 2.5,
+                tiled_mt_gflops: 8.0,
+                threads: 4,
+            }],
+            engine: vec![EngineRecord {
+                model: "mnistnet10".into(),
+                executor: "sim",
+                mode: "lockstep",
+                kernel_threads: 1,
+                batches: 16,
+                wall_ms: 10.0,
+                batches_per_sec: 750.0,
+            }],
+            steady_state: vec![],
+        };
+        // baseline: same kernel row at 4 GF/s (current is 2× faster), the
+        // same engine row at 1000 b/s (current regressed 25%), plus one
+        // engine row this run does not produce
+        let mut baseline = current.clone();
+        baseline.kernels[0].tiled_mt_gflops = 4.0;
+        baseline.engine[0].batches_per_sec = 1000.0;
+        baseline.engine.push(EngineRecord {
+            model: "ghostnet".into(),
+            executor: "sim",
+            mode: "lockstep",
+            kernel_threads: 1,
+            batches: 16,
+            wall_ms: 1.0,
+            batches_per_sec: 1.0,
+        });
+        let cmp = current.compare(&baseline.to_json()).expect("baseline parses");
+        assert_eq!(cmp.baseline_name, "BENCH_0008");
+        assert_eq!(cmp.kernels.len(), 1);
+        assert_eq!(cmp.engine.len(), 1);
+        assert_eq!(cmp.unmatched, 1, "ghostnet row has no counterpart");
+        assert!((cmp.kernels[0].ratio - 2.0).abs() < 1e-9);
+        assert!((cmp.engine[0].ratio - 0.75).abs() < 1e-9);
+        assert!((cmp.worst_regress() - 0.25).abs() < 1e-9);
+        let md = cmp.to_markdown();
+        assert!(md.contains("fwd 8×4×2"), "{md}");
+        assert!(md.contains("worst regression: 25.0%"), "{md}");
+        // a report diffed against itself has zero regression
+        assert!(current.compare(&current.to_json()).unwrap().worst_regress() <= 0.0);
+    }
+
+    #[test]
+    fn compare_rejects_malformed_baselines() {
+        let r = PerfReport::default();
+        assert!(r.compare("not json").is_err());
+        assert!(r.compare("{\"kernels\":[{\"kernel\":\"fwd\"}]}").is_err(), "missing fields");
     }
 
     #[test]

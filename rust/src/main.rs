@@ -11,7 +11,7 @@
 //!         [--backend native|xla] [--executor sim|threaded]
 //!         [--mode lockstep|freerun]
 //!         [--budget-schedule <bytes>@<at>[,...]]
-//!         [--kernel-threads K] [--warmup-profile R]
+//!         [--kernel-threads K] [--warmup-profile R] [--pin-devices on]
 //!         Plan + run full Ferret on one of the paper's 20 settings and
 //!         report oacc/tacc/memory/adaptation rate. `--executor threaded`
 //!         runs one OS thread per (worker, stage) device (real
@@ -33,6 +33,12 @@
 //!         instead of the analytic FLOPs model; default off — measured
 //!         profiles are wall-clock dependent, so deterministic runs keep
 //!         the analytic base.
+//!
+//!         `--pin-devices on` pins each threaded-executor device thread
+//!         to a CPU from the process's allowed set, round-robin in spawn
+//!         order (Linux `sched_setaffinity`; a no-op elsewhere). A
+//!         placement hint only — it never affects numerics, and replayed
+//!         traces always run unpinned.
 //!
 //!         `--record-trace PATH` records the run as a `ferret-trace/1`
 //!         JSON-lines artifact (stream identity + every planner decision;
@@ -262,7 +268,18 @@ fn cmd_run(opts: &Opts) {
         .get("warmup-profile")
         .map(|r| parse_or_exit::<u32>(r, "warmup-profile", "a rep count"))
         .unwrap_or(0); // 0 = analytic initial profile (deterministic)
-    let ep = EngineParams { lr: 0.1, seed, kernel_threads, ..Default::default() };
+    let pin_devices = opts
+        .get("pin-devices")
+        .map(|v| match v {
+            "1" | "true" | "on" => true,
+            "0" | "false" | "off" => false,
+            _ => {
+                eprintln!("error: --pin-devices expects on|off, got '{v}'");
+                std::process::exit(2)
+            }
+        })
+        .unwrap_or(false);
+    let ep = EngineParams { lr: 0.1, seed, kernel_threads, pin_devices, ..Default::default() };
     let dynamic = budget_sched.is_dynamic();
     let cfg = AsyncCfg::ferret(out.partition, out.config, comp).with_budget(budget_sched);
     let t0 = std::time::Instant::now();

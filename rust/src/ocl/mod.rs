@@ -17,6 +17,8 @@ pub use lwf::LwfPlugin;
 pub use mas::MasPlugin;
 pub use mir::MirPlugin;
 
+use std::sync::{Arc, Mutex, MutexGuard};
+
 use crate::backend::Backend;
 use crate::config::LayerShape;
 use crate::model::{GradBuf, LayerParams, SharedParams};
@@ -120,6 +122,26 @@ pub trait OclPlugin: Send {
     /// Extra memory the plugin holds (buffers, teachers, importances).
     fn memory_bytes(&self) -> usize {
         0
+    }
+}
+
+/// A plugin shared between the scheduler thread and device threads: the
+/// freerun engine moves an owned plugin into a cell so the stage-0 device
+/// thread can run the `augment` hook itself (replay mixing / interference
+/// scoring off the scheduler's critical path). Hooks are `&mut self`, so
+/// the cell serializes them behind one lock; the scheduler takes the lock
+/// per engine step, a device takes it for the duration of one `augment`.
+#[derive(Clone)]
+pub struct PluginCell(Arc<Mutex<Box<dyn OclPlugin>>>);
+
+impl PluginCell {
+    pub fn new(plugin: Box<dyn OclPlugin>) -> Self {
+        PluginCell(Arc::new(Mutex::new(plugin)))
+    }
+
+    /// Exclusive access to the plugin (blocks on contention).
+    pub fn lock(&self) -> MutexGuard<'_, Box<dyn OclPlugin>> {
+        self.0.lock().expect("ocl plugin cell")
     }
 }
 

@@ -38,9 +38,10 @@ use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::RunMetrics;
 use crate::model::{GradBuf, LiveParams, SharedParams, StashSet};
-use crate::ocl::{OclCtx, OclPlugin};
+use crate::ocl::{OclCtx, OclPlugin, PluginCell};
 use crate::pipeline::executor::{
-    recycle_grad, recycle_params, DeviceTask, Executor, LossSpec, StageCell, StageTask, UpdateTask,
+    recycle_grad, recycle_params, AugmentSpec, DeviceTask, Executor, LossSpec, StageCell,
+    StageTask, UpdateTask,
 };
 use crate::pipeline::sched::{predict_only, Flight, Job, SchedCore, StageMeta, WorkSel};
 use crate::pipeline::EngineParams;
@@ -189,6 +190,11 @@ pub struct AsyncEngine<'a> {
     /// tasks so it runs on the device thread (set by the session when the
     /// plugin reports [`crate::ocl::OclPlugin::ce_loss_head`])
     loss_offload: bool,
+    /// freerun + threaded only: shared handle to the session's plugin;
+    /// when set, stage-0 forwards carry an [`AugmentSpec`] and the plugin's
+    /// `augment` hook runs on the owning device thread instead of the
+    /// scheduler's admit path
+    augment_cell: Option<PluginCell>,
 }
 
 /// Accumulated measured forward/backward service times of one stage
@@ -285,6 +291,7 @@ impl<'a> AsyncEngine<'a> {
             forced_dynamic: false,
             ws: Workspace::serial(),
             loss_offload: false,
+            augment_cell: None,
         }
     }
 
@@ -300,6 +307,14 @@ impl<'a> AsyncEngine<'a> {
     /// [`crate::ocl::OclPlugin::ce_loss_head`]).
     pub(crate) fn set_loss_offload(&mut self, on: bool) {
         self.loss_offload = on;
+    }
+
+    /// Install the shared plugin cell that moves the `augment` hook onto
+    /// the stage-0 device thread (freerun + threaded executor only; the
+    /// session decides — an inline executor would deadlock on the cell's
+    /// non-reentrant lock).
+    pub(crate) fn set_augment_cell(&mut self, cell: PluginCell) {
+        self.augment_cell = Some(cell);
     }
 
     /// The budget is dynamic: a time-varying schedule is configured, or an
@@ -343,6 +358,7 @@ impl<'a> AsyncEngine<'a> {
             rows,
             gout,
             loss: None,
+            augment: None,
         }
     }
 
@@ -709,8 +725,10 @@ impl<'a> AsyncEngine<'a> {
             .admit(Job {
                 arrival,
                 seq,
+                batch_id: batch.id,
                 y: batch.y,
                 batch_x: batch.x,
+                augment_pending: false,
                 stage_inputs,
                 fwd_version: vec![0; p],
                 grad: None,
@@ -855,7 +873,7 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Try to start stage work on device (w, s) at wall time `t`.
-    fn kick_free(&mut self, w: usize, s: usize, t: u64, executor: &mut dyn Executor) {
+    fn kick_free(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) {
         loop {
             let sel = match self.sched.select_work(w, s, t) {
                 None => return,
@@ -875,27 +893,53 @@ impl<'a> AsyncEngine<'a> {
                     let x = self.sched.jobs[job].stage_inputs[s].take().expect("stage input");
                     let gout = self.sched.jobs[job].grad.take().expect("upstream grad");
                     let task = self.stage_task(s, self.cells[s].resolve(ver), x, rows, Some(gout));
-                    executor.start((w, s), DeviceTask::Stage(task));
+                    io.executor.start((w, s), DeviceTask::Stage(task));
                     self.sched.dispatch_flight(w, s, Flight::Bwd { job }, t);
                     self.flights += 1;
                     return;
                 }
                 WorkSel::Fwd(job) => {
                     let rows = self.sched.jobs[job].y.len();
-                    let x = self
-                        .pooled_copy(self.sched.jobs[job].stage_inputs[s].as_ref().expect("stage input"));
+                    // offloaded augment: the stage-0 forward takes the raw
+                    // batch rows zero-copy; the device runs the plugin hook
+                    // and ships the augmented copies back with its
+                    // completion (augment preserves row count)
+                    let pending = s == 0 && self.sched.jobs[job].augment_pending;
+                    let x = if pending {
+                        std::mem::take(&mut self.sched.jobs[job].batch_x)
+                    } else {
+                        self.pooled_copy(
+                            self.sched.jobs[job].stage_inputs[s].as_ref().expect("stage input"),
+                        )
+                    };
                     let (params, ver) = self.cells[s].snapshot();
                     self.sched.jobs[job].fwd_version[s] = ver;
                     let mut task = self.stage_task(s, params, x, rows, None);
+                    if pending {
+                        // snapshot at dispatch, not admission: MIR's
+                        // interference scoring sees the freshest model
+                        task.augment = Some(AugmentSpec {
+                            plugin: self.augment_cell.clone().expect("augment cell"),
+                            params: self.free_params(),
+                            shapes: self.shapes.clone(),
+                            labels: self.sched.jobs[job].y.clone(),
+                            batch_id: self.sched.jobs[job].batch_id,
+                            classes: io.ctx.classes,
+                            batch: io.ctx.batch,
+                            features: io.ctx.features,
+                        });
+                    }
                     if self.loss_offload && s + 1 == self.sched.num_stages() {
                         // ship the CE loss head with the last-stage forward:
-                        // the device computes dL/dlogits + loss + accuracy
+                        // the device computes dL/dlogits + loss + accuracy.
+                        // With a same-task augment (p == 1) the device
+                        // substitutes the augmented labels itself.
                         task.loss = Some(LossSpec {
                             classes: self.shapes.last().expect("layers").out_dim,
                             labels: self.sched.jobs[job].y.clone(),
                         });
                     }
-                    executor.start((w, s), DeviceTask::Stage(task));
+                    io.executor.start((w, s), DeviceTask::Stage(task));
                     self.sched.dispatch_flight(w, s, Flight::Fwd { job }, t);
                     self.flights += 1;
                     return;
@@ -974,25 +1018,36 @@ impl<'a> AsyncEngine<'a> {
             );
             return;
         }
-        let params = self.free_params();
-        let batch = io.plugin.augment(batch, &params, &io.ctx);
+        let offload = self.augment_cell.is_some();
+        let batch = if offload {
+            // augment runs on the stage-0 device thread at dispatch; the
+            // job carries the raw rows until the completion patches it
+            batch
+        } else {
+            let params = self.free_params();
+            io.plugin.augment(batch, &params, &io.ctx)
+        };
         let p = self.sched.num_stages();
         let mut stage_inputs: Vec<Option<Vec<f32>>> = vec![None; p];
-        stage_inputs[0] = Some(self.pooled_copy(&batch.x));
+        if !offload {
+            stage_inputs[0] = Some(self.pooled_copy(&batch.x));
+        }
         let (_, w) = self
             .sched
             .admit(Job {
                 arrival,
                 seq,
+                batch_id: batch.id,
                 y: batch.y,
                 batch_x: batch.x,
+                augment_pending: offload,
                 stage_inputs,
                 fwd_version: vec![0; p],
                 grad: None,
                 done: false,
             })
             .expect("sched::admit: over_capacity() above guarantees an active worker");
-        self.kick_free(w, 0, now, io.executor);
+        self.kick_free(w, 0, now, io);
     }
 
     /// One device completion at wall time `t`, paired FIFO with its
@@ -1014,10 +1069,23 @@ impl<'a> AsyncEngine<'a> {
                 self.meas[s].tf_sum += t.saturating_sub(dispatched);
                 self.meas[s].tf_n += 1;
                 let result = out.into_stage();
+                if let Some(aug) = result.augmented {
+                    // adopt the device-augmented batch as the job's
+                    // identity: rows/labels (replay mixing may have
+                    // replaced both) and the stage-0 backward input.
+                    // `batch_x` was take()'n empty at dispatch — the
+                    // recycle below is a no-op unless a future path
+                    // leaves rows behind.
+                    let j = &mut self.sched.jobs[job];
+                    self.ws.pool.put(std::mem::replace(&mut j.batch_x, aug.x));
+                    j.y = aug.y;
+                    j.stage_inputs[0] = Some(aug.x_input);
+                    j.augment_pending = false;
+                }
                 if s + 1 < p {
                     self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
                     self.sched.slots[w][s + 1].fwd_q.push_back(job);
-                    self.kick_free(w, s + 1, t, io.executor);
+                    self.kick_free(w, s + 1, t, io);
                 } else if let Some((gl, loss, acc)) = result.loss {
                     // offloaded loss head: the device already computed
                     // dL/dlogits + loss + accuracy (bitwise what the
@@ -1058,7 +1126,7 @@ impl<'a> AsyncEngine<'a> {
                 if s > 0 {
                     self.sched.jobs[job].grad = Some(gx);
                     self.sched.slots[w][s - 1].bwd_q.push_back(job);
-                    self.kick_free(w, s - 1, t, io.executor);
+                    self.kick_free(w, s - 1, t, io);
                 } else {
                     self.ws.pool.put(gx);
                     self.retire_job(job);
@@ -1083,7 +1151,7 @@ impl<'a> AsyncEngine<'a> {
                 }
             }
         }
-        self.kick_free(w, s, t, io.executor);
+        self.kick_free(w, s, t, io);
     }
 }
 

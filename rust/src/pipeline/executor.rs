@@ -48,6 +48,22 @@
 //! (dL/dlogits, loss, accuracy) itself, keeping the scheduler thread's
 //! admit/drain critical section free of numeric work. The lockstep path
 //! never sets it, so lockstep metrics stay byte-identical.
+//!
+//! Symmetrically, a stage-0 forward may carry an [`AugmentSpec`]: the
+//! device locks the session's shared [`PluginCell`], runs the plugin's
+//! `augment` hook (replay mixing, interference scoring) on the raw batch
+//! rows, and returns the augmented copies ([`AugmentedBatch`]) with its
+//! completion for the scheduler to adopt as the job's identity. With both
+//! offloads active the freerun scheduler loop does no per-microbatch
+//! numeric work at all.
+//!
+//! # Device-thread affinity
+//!
+//! [`ThreadedExecutor::spawn_pinned`] optionally pins each device thread
+//! to a CPU from the process's allowed set, round-robin in spawn order
+//! (`EngineParams.pin_devices` / `--pin-devices`). Pinning is a Linux
+//! `sched_setaffinity` call (see [`crate::util::affinity`]), a no-op
+//! elsewhere, and never affects numerics — only cache locality.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -59,6 +75,8 @@ use crate::backend::{Backend, Workspace};
 use crate::compensate::{CompContext, Compensator};
 use crate::config::LayerShape;
 use crate::model::{GradBuf, SharedParams, VersionStash};
+use crate::ocl::{OclCtx, PluginCell};
+use crate::stream::Batch;
 
 /// Which executor to run an async engine with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,12 +120,46 @@ pub struct StageTask {
     /// device computes dL/dlogits + loss + accuracy from its own forward
     /// output instead of shipping logits back to the scheduler thread
     pub loss: Option<LossSpec>,
+    /// offloaded plugin `augment` hook (freerun, stage-0 forwards only):
+    /// `x` holds the *raw* batch rows; the device augments them before
+    /// running the layer chain and ships the augmented copies back
+    pub augment: Option<AugmentSpec>,
 }
 
 /// The data a device needs to run the plain-CE loss head in place.
 pub struct LossSpec {
     pub classes: usize,
     pub labels: Vec<i32>,
+}
+
+/// Everything a stage-0 device needs to run the plugin's `augment` hook
+/// in place of the scheduler thread, snapshotted at dispatch. The hook
+/// must preserve the batch's row count (every in-tree plugin does:
+/// replay mixing replaces rows, it never adds or removes them).
+pub struct AugmentSpec {
+    /// shared handle to the session's plugin
+    pub plugin: PluginCell,
+    /// full-model live snapshot at dispatch (interference scoring)
+    pub params: Vec<SharedParams>,
+    /// full-model layer shapes (the plugin ctx spans the whole model)
+    pub shapes: Vec<LayerShape>,
+    /// the arriving batch's labels (pre-augment)
+    pub labels: Vec<i32>,
+    pub batch_id: u64,
+    pub classes: usize,
+    /// session microbatch row capacity ([`OclCtx::batch`])
+    pub batch: usize,
+    pub features: usize,
+}
+
+/// The augmented batch a device hands back from an offloaded
+/// [`AugmentSpec`]: pooled copies the scheduler adopts as the job's batch
+/// identity (`x`, `y` — replay mixing may have replaced rows and labels)
+/// and as its stage-0 backward input (`x_input`).
+pub struct AugmentedBatch {
+    pub x: Vec<f32>,
+    pub x_input: Vec<f32>,
+    pub y: Vec<i32>,
 }
 
 /// Result of a [`StageTask`]: forward output activations (or logits), or
@@ -118,6 +170,8 @@ pub struct StageOutput {
     /// (dL/dlogits, loss, accuracy) — present iff the task carried a
     /// [`LossSpec`] (offloaded freerun loss head)
     pub loss: Option<(Vec<f32>, f32, f64)>,
+    /// present iff the task carried an [`AugmentSpec`]
+    pub augmented: Option<AugmentedBatch>,
 }
 
 /// Live state of one pipeline stage, shared between the scheduler thread
@@ -351,18 +405,42 @@ pub fn run_stage(backend: &dyn Backend, task: StageTask) -> StageOutput {
 pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> StageOutput {
     match task.gout {
         None => {
-            // forward the stage's layer chain
             let mut h = task.x;
+            let augmented = task.augment.map(|spec| {
+                // offloaded augment hook: lock the shared plugin, run it
+                // on the raw rows, and keep pooled copies of the result
+                // for the scheduler to adopt (batch identity + stage-0
+                // backward input). The lock spans only the hook itself.
+                let ctx = OclCtx {
+                    backend,
+                    shapes: &spec.shapes,
+                    classes: spec.classes,
+                    batch: spec.batch,
+                    features: spec.features,
+                };
+                let raw = Batch { id: spec.batch_id, x: std::mem::take(&mut h), y: spec.labels };
+                let batch = spec.plugin.lock().augment(raw, &spec.params, &ctx);
+                h = batch.x;
+                let mut x = ws.pool.take(h.len());
+                x.copy_from_slice(&h);
+                let mut x_input = ws.pool.take(h.len());
+                x_input.copy_from_slice(&h);
+                AugmentedBatch { x, x_input, y: batch.y }
+            });
+            // forward the stage's layer chain
             for (shape, p) in task.shapes.iter().zip(&task.params) {
                 let next = backend.dense_fwd_pooled(shape, p, &h, task.rows, ws);
                 ws.pool.put(std::mem::replace(&mut h, next));
             }
             let loss = task.loss.map(|spec| {
-                let (gl, l) = backend.loss_grad_ce(spec.classes, &h, &spec.labels);
-                let acc = crate::backend::accuracy(spec.classes, &h, &spec.labels);
+                // an offloaded augment may have replaced labels (replay
+                // mixing) — the loss head must see the augmented ones
+                let labels = augmented.as_ref().map_or(&spec.labels[..], |a| &a.y[..]);
+                let (gl, l) = backend.loss_grad_ce(spec.classes, &h, labels);
+                let acc = crate::backend::accuracy(spec.classes, &h, labels);
                 (gl, l, acc)
             });
-            StageOutput { out: h, grads: None, loss }
+            StageOutput { out: h, grads: None, loss, augmented }
         }
         Some(gout) => {
             // recompute inner activations from the stage input (T1-style;
@@ -400,6 +478,7 @@ pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> S
                 out: g,
                 grads: Some(grads.into_iter().map(Option::unwrap).collect()),
                 loss: None,
+                augmented: None,
             }
         }
     }
@@ -515,6 +594,12 @@ pub struct ThreadedExecutor {
     done_rx: Receiver<((usize, usize), DeviceOutput)>,
     /// completions drained while waiting for a specific device in `finish`
     parked: VecDeque<((usize, usize), DeviceOutput)>,
+    /// pin each device thread to a CPU from the allowed set (Linux only)
+    pin: bool,
+    /// device threads spawned so far — the round-robin pin slot counter
+    /// (deterministic: devices spawn in `devices()` order, and respawns
+    /// during `reconfigure` keep counting)
+    spawned: usize,
 }
 
 /// One device thread: its task channel plus the handle joined at retire
@@ -537,6 +622,19 @@ impl ThreadedExecutor {
         devices: &[(usize, usize)],
         ws: Workspace,
     ) -> Self {
+        Self::spawn_pinned(backend, devices, ws, false)
+    }
+
+    /// [`ThreadedExecutor::spawn_with`] with optional CPU affinity: when
+    /// `pin` is set, each device thread pins itself to one CPU from the
+    /// process's allowed set, round-robin in spawn order. Linux only
+    /// (no-op elsewhere); numerics are unaffected either way.
+    pub fn spawn_pinned(
+        backend: Arc<dyn Backend>,
+        devices: &[(usize, usize)],
+        ws: Workspace,
+        pin: bool,
+    ) -> Self {
         let (done_tx, done_rx) = channel::<((usize, usize), DeviceOutput)>();
         let mut ex = ThreadedExecutor {
             backend,
@@ -545,6 +643,8 @@ impl ThreadedExecutor {
             done_tx,
             done_rx,
             parked: VecDeque::new(),
+            pin,
+            spawned: 0,
         };
         for &dev in devices {
             ex.spawn_device(dev);
@@ -557,7 +657,14 @@ impl ThreadedExecutor {
         let out_tx = self.done_tx.clone();
         let backend = Arc::clone(&self.backend);
         let ws = self.ws.clone();
+        let pin_slot = self.pin.then_some(self.spawned);
+        self.spawned += 1;
         let thread = std::thread::spawn(move || {
+            if let Some(slot) = pin_slot {
+                // best-effort: a restricted cpuset or non-Linux host just
+                // leaves the thread unpinned
+                crate::util::affinity::pin_current_thread(slot);
+            }
             while let Ok(task) = task_rx.recv() {
                 let out = run_device_task_in(backend.as_ref(), task, &ws);
                 if out_tx.send((dev, out)).is_err() {
@@ -675,6 +782,7 @@ mod tests {
             rows: 2,
             gout: bwd.then(|| vec![0.3, -0.1, 0.2, 0.4]),
             loss: None,
+            augment: None,
         }
     }
 
@@ -878,6 +986,113 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Probe plugin for the augment-offload tests: records which thread
+    /// ran the hook, shifts every input value by +1, and reverses the
+    /// labels (so label adoption is observable too).
+    struct AugmentProbe {
+        threads: Arc<Mutex<Vec<std::thread::ThreadId>>>,
+    }
+
+    impl crate::ocl::OclPlugin for AugmentProbe {
+        fn name(&self) -> &'static str {
+            "augment-probe"
+        }
+
+        fn augment(
+            &mut self,
+            mut batch: Batch,
+            _params: &[SharedParams],
+            _ctx: &OclCtx,
+        ) -> Batch {
+            self.threads.lock().expect("probe log").push(std::thread::current().id());
+            for v in &mut batch.x {
+                *v += 1.0;
+            }
+            batch.y.reverse();
+            batch
+        }
+    }
+
+    fn augment_spec(cell: PluginCell, labels: Vec<i32>) -> AugmentSpec {
+        AugmentSpec {
+            plugin: cell,
+            params: Vec::new(),
+            shapes: vec![
+                LayerShape { in_dim: 2, out_dim: 3, act: Act::Relu },
+                LayerShape { in_dim: 3, out_dim: 2, act: Act::None },
+            ],
+            labels,
+            batch_id: 7,
+            classes: 2,
+            batch: 2,
+            features: 2,
+        }
+    }
+
+    /// An offloaded augment hook runs on the *device* thread, the forward
+    /// consumes the augmented rows, and the completion carries pooled
+    /// copies of the augmented batch (x, x_input, reversed labels).
+    #[test]
+    fn offloaded_augment_runs_on_the_device_thread() {
+        let be = NativeBackend;
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let cell = PluginCell::new(Box::new(AugmentProbe { threads: log.clone() }));
+        // reference: forward of (x + 1) through the same params
+        let mut shifted = task(false);
+        for v in &mut shifted.x {
+            *v += 1.0;
+        }
+        let reference = run_stage(&be, shifted);
+        let mut t = task(false);
+        let raw_x = t.x.clone();
+        t.augment = Some(augment_spec(cell.clone(), vec![0, 1]));
+        t.loss = Some(LossSpec { classes: 2, labels: vec![0, 1] });
+        let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0)]);
+        th.start((0, 0), DeviceTask::Stage(t));
+        let out = th.finish((0, 0)).into_stage();
+        drop(th);
+        let ran_on = log.lock().expect("probe log").clone();
+        assert_eq!(ran_on.len(), 1, "augment ran exactly once");
+        assert_ne!(ran_on[0], std::thread::current().id(), "augment left the scheduler thread");
+        assert_eq!(out.out, reference.out, "forward consumed the augmented rows");
+        let aug = out.augmented.expect("augmented batch returned");
+        let want: Vec<f32> = raw_x.iter().map(|v| v + 1.0).collect();
+        assert_eq!(aug.x, want);
+        assert_eq!(aug.x_input, want);
+        assert_eq!(aug.y, vec![1, 0], "labels reversed by the hook");
+        // the offloaded loss head saw the *augmented* labels
+        let (g_ref, l_ref) = be.loss_grad_ce(2, &reference.out, &[1, 0]);
+        let acc_ref = crate::backend::accuracy(2, &reference.out, &[1, 0]);
+        let (gl, l, acc) = out.loss.expect("loss head ran");
+        assert_eq!(gl, g_ref);
+        assert_eq!(l, l_ref);
+        assert_eq!(acc, acc_ref);
+    }
+
+    /// Pinned executors produce identical results — affinity is a pure
+    /// placement hint and must never leak into numerics.
+    #[test]
+    fn pinned_executor_matches_unpinned_results() {
+        let be = NativeBackend;
+        let reference = run_stage(&be, task(true));
+        let mut th = ThreadedExecutor::spawn_pinned(
+            be.share(),
+            &[(0, 0), (0, 1)],
+            Workspace::serial(),
+            true,
+        );
+        th.start((0, 0), stage(true));
+        th.start((0, 1), stage(true));
+        for dev in [(0, 0), (0, 1)] {
+            let out = th.finish(dev).into_stage();
+            assert_eq!(out.out, reference.out);
+        }
+        // reconfigure keeps counting pin slots without panicking
+        th.reconfigure(&[(0, 0), (2, 0)]);
+        th.start((2, 0), stage(false));
+        assert!(th.finish((2, 0)).into_stage().grads.is_none());
     }
 
     /// An offloaded CE loss head must reproduce exactly what the

@@ -110,6 +110,11 @@ pub struct EngineParams {
     /// kernels are bit-identical across thread counts, so this knob trades
     /// only wall-clock, never numerics (see [`crate::backend::kernels`]).
     pub kernel_threads: usize,
+    /// pin each threaded-executor device thread to a CPU from the
+    /// process's allowed set, round-robin in spawn order (`--pin-devices`;
+    /// Linux `sched_setaffinity`, no-op elsewhere). A placement hint only
+    /// — never affects numerics (see [`crate::util::affinity`]).
+    pub pin_devices: bool,
 }
 
 impl Default for EngineParams {
@@ -122,6 +127,7 @@ impl Default for EngineParams {
             seed: 42,
             stash_cap: 0,
             kernel_threads: 0,
+            pin_devices: false,
         }
     }
 }

@@ -168,9 +168,16 @@ impl EventQueue {
 pub struct Job {
     pub arrival: u64,
     pub seq: u64,
+    /// source batch id (preserved when the augment hook is offloaded and
+    /// the device rebuilds the [`crate::stream::Batch`] itself)
+    pub batch_id: u64,
     pub y: Vec<i32>,
     /// original input rows (LwF teacher forward)
     pub batch_x: Vec<f32>,
+    /// freerun augment offload: the stage-0 forward carries the raw rows
+    /// plus an `AugmentSpec`; until its completion patches this job, `y` /
+    /// `batch_x` / `stage_inputs[0]` hold pre-augment values
+    pub augment_pending: bool,
     /// per-stage input activations (filled as the forward advances)
     pub stage_inputs: Vec<Option<Vec<f32>>>,
     /// stage version each forward used (weight stashing)
@@ -406,8 +413,10 @@ mod tests {
         Job {
             arrival: seq * 10,
             seq,
+            batch_id: seq,
             y: vec![0, 1],
             batch_x: vec![0.0; 4],
+            augment_pending: false,
             stage_inputs: vec![Some(vec![0.0; 4]), None],
             fwd_version: vec![0; 2],
             grad: None,

@@ -55,6 +55,7 @@
 //! call that opened it.
 
 use std::collections::VecDeque;
+use std::sync::MutexGuard;
 use std::time::Duration;
 
 use crate::backend::{kernels, Backend, BufferPool, PoolStats, Workspace};
@@ -63,7 +64,7 @@ use crate::budget::{BudgetSchedule, BudgetState};
 use crate::compensate::CompKind;
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::{eval_tacc, RunMetrics};
-use crate::ocl::{OclCtx, OclPlugin, Vanilla};
+use crate::ocl::{OclCtx, OclPlugin, PluginCell, Vanilla};
 use crate::pipeline::engine::{AsyncCfg, AsyncEngine, EngineIo};
 use crate::pipeline::executor::{Executor, ExecutorKind, SimExecutor, ThreadedExecutor};
 use crate::pipeline::sched::{Clock, Ev, Mode, VirtualClock, WallClock};
@@ -76,24 +77,51 @@ use crate::util::error::Result;
 
 /// The OCL plugin a session runs with: borrowed from the caller (the
 /// common case — plugins are stateful and callers often inspect them
-/// afterwards) or owned (the builder's default no-op `Vanilla`).
+/// afterwards), owned (the builder's default no-op `Vanilla`), or shared
+/// behind a [`PluginCell`] when the freerun augment offload is active —
+/// the stage-0 device thread then runs the `augment` hook through the same
+/// cell the scheduler steps through.
 enum PluginSlot<'a> {
     Owned(Box<dyn OclPlugin>),
     Borrowed(&'a mut dyn OclPlugin),
+    Shared(PluginCell),
+}
+
+/// Exclusive access to the session's plugin for the duration of one engine
+/// step: a plain reborrow for owned/borrowed slots, a mutex guard for a
+/// shared cell. Taken *after* any blocking executor wait, and only by
+/// statements that hand it straight to [`EngineIo`] — a device thread
+/// holding the cell for an `augment` call therefore never waits on the
+/// scheduler, and vice versa.
+enum PluginGuard<'g> {
+    Direct(&'g mut dyn OclPlugin),
+    Locked(MutexGuard<'g, Box<dyn OclPlugin>>),
+}
+
+impl PluginGuard<'_> {
+    fn as_mut(&mut self) -> &mut dyn OclPlugin {
+        match self {
+            PluginGuard::Direct(p) => &mut **p,
+            PluginGuard::Locked(g) => &mut ***g,
+        }
+    }
 }
 
 impl PluginSlot<'_> {
-    fn as_mut(&mut self) -> &mut dyn OclPlugin {
+    fn guard(&mut self) -> PluginGuard<'_> {
         match self {
-            PluginSlot::Owned(p) => p.as_mut(),
-            PluginSlot::Borrowed(p) => &mut **p,
+            PluginSlot::Owned(p) => PluginGuard::Direct(p.as_mut()),
+            PluginSlot::Borrowed(p) => PluginGuard::Direct(&mut **p),
+            PluginSlot::Shared(c) => PluginGuard::Locked(c.lock()),
         }
     }
 
-    fn get(&self) -> &dyn OclPlugin {
+    /// Run `f` against the plugin (locking a shared cell for the call).
+    fn with<R>(&self, f: impl FnOnce(&dyn OclPlugin) -> R) -> R {
         match self {
-            PluginSlot::Owned(p) => p.as_ref(),
-            PluginSlot::Borrowed(p) => &**p,
+            PluginSlot::Owned(p) => f(p.as_ref()),
+            PluginSlot::Borrowed(p) => f(&**p),
+            PluginSlot::Shared(c) => f(c.lock().as_ref()),
         }
     }
 }
@@ -245,6 +273,7 @@ impl<'a> SessionBuilder<'a> {
             trace_path,
             trace_writer,
         } = self;
+        let mut plugin = plugin;
         if batch == 0 {
             bail!("session: batch rows must be > 0 (set SessionBuilder::batch)");
         }
@@ -341,7 +370,24 @@ impl<'a> SessionBuilder<'a> {
             // ship the plain-CE loss head with last-stage forwards so it
             // runs on the device thread; plugins with a custom head
             // (ce_loss_head() == false) keep it on the scheduler thread
-            engine.set_loss_offload(plugin.get().ce_loss_head());
+            engine.set_loss_offload(plugin.with(|p| p.ce_loss_head()));
+            // move an owned plugin behind a shared cell so the stage-0
+            // device thread runs the `augment` hook itself (replay mixing
+            // off the scheduler's critical path). Threaded only: the
+            // inline executor would re-enter the cell's lock from the
+            // scheduler thread and deadlock. A borrowed plugin cannot be
+            // shared with 'static device threads and keeps the
+            // scheduler-side hook.
+            if executor == ExecutorKind::Threaded {
+                plugin = match plugin {
+                    PluginSlot::Owned(p) => {
+                        let cell = PluginCell::new(p);
+                        engine.set_augment_cell(cell.clone());
+                        PluginSlot::Shared(cell)
+                    }
+                    other => other,
+                };
+            }
         }
         // one session-wide workspace: the scheduler, the executor's device
         // threads, and the engine's update path all recycle through the
@@ -397,7 +443,7 @@ impl<'a> SessionBuilder<'a> {
                     c.comp_params.alpha,
                     c.comp_params.nu,
                 ],
-                plugin: plugin.get().name().into(),
+                plugin: plugin.with(|p| p.name()).into(),
                 plugin_cadence: c.plugin_cadence,
                 budget: c.budget.spec_string(),
                 plan_id: crate::planner::plan_content_id(&c.partition, &c.pipe, 0),
@@ -406,10 +452,11 @@ impl<'a> SessionBuilder<'a> {
         }
         let executor: Box<dyn Executor + 'a> = match executor {
             ExecutorKind::Sim => Box::new(SimExecutor::with_workspace(backend, ws.clone())),
-            ExecutorKind::Threaded => Box::new(ThreadedExecutor::spawn_with(
+            ExecutorKind::Threaded => Box::new(ThreadedExecutor::spawn_pinned(
                 backend.share(),
                 &engine.devices(),
                 ws.clone(),
+                ep.pin_devices,
             )),
         };
         let metrics = RunMetrics { exec_threads: executor.threads(), ..Default::default() };
@@ -494,11 +541,13 @@ pub struct Session<'a> {
 
 /// Assemble the per-step [`EngineIo`] bundle from the session's disjoint
 /// fields (a macro so the field borrows stay visible to the borrow
-/// checker at every call site).
+/// checker at every call site). Takes a [`PluginGuard`] bound by a `let`
+/// at the call site — match arms are temporary scopes, so a guard created
+/// inside the macro expansion could not outlive the engine call.
 macro_rules! io {
-    ($s:expr) => {
+    ($s:expr, $pg:expr) => {
         &mut EngineIo {
-            plugin: $s.plugin.as_mut(),
+            plugin: $pg.as_mut(),
             ctx: OclCtx {
                 backend: $s.backend,
                 shapes: &$s.shapes,
@@ -666,7 +715,7 @@ impl<'a> Session<'a> {
         // analytic memory (Eq. 4) + plugin + compensator state
         self.metrics.mem_bytes =
             mem_footprint(&self.engine.cfg.partition, &self.prof, &self.engine.cfg.pipe)
-                + self.plugin.get().memory_bytes() as f64
+                + self.plugin.with(|p| p.memory_bytes()) as f64
                 + self.engine.comp_state_bytes() as f64;
         let params = self.engine.final_params();
         if let Some(test) = &self.test {
@@ -768,7 +817,9 @@ impl<'a> Session<'a> {
         match ev {
             Ev::Arrive => self.lockstep_arrive(te, t),
             Ev::Done { worker: w, stage: s, job, bwd } => {
-                self.engine.on_done_lockstep(w, s, job, bwd, t, io!(self));
+                let mut pg = self.plugin.guard();
+                self.engine.on_done_lockstep(w, s, job, bwd, t, io!(self, pg));
+                drop(pg);
                 if self.engine.dynamic_budget() {
                     let snap = self.engine.ledger_snapshot();
                     self.metrics.ledger.observe(snap);
@@ -819,7 +870,8 @@ impl<'a> Session<'a> {
         // speculative: finish() discards it if no further batch arrives
         self.engine.sched.events.push(self.arrived * self.td, Ev::Arrive);
         self.arrive_scheduled = true;
-        self.engine.admit_lockstep(batch, seq, te, t, io!(self));
+        let mut pg = self.plugin.guard();
+        self.engine.admit_lockstep(batch, seq, te, t, io!(self, pg));
     }
 
     /// The phase's event heap is empty: idle, or a completed drain whose
@@ -840,11 +892,13 @@ impl<'a> Session<'a> {
         // old plan — the drained backwards' gradients are applied, not
         // discarded, even when `accum > 1` left a remainder
         for (w, s) in self.engine.pending_accumulators() {
-            self.engine.apply_update(w, s, now, io!(self));
+            let mut pg = self.plugin.guard();
+            self.engine.apply_update(w, s, now, io!(self, pg));
         }
         self.replan(t0, now);
         if let Some((batch, seq, at)) = self.held.pop_front() {
-            self.engine.admit_lockstep(batch, seq, at, now, io!(self));
+            let mut pg = self.plugin.guard();
+            self.engine.admit_lockstep(batch, seq, at, now, io!(self, pg));
         }
         // lockstep can hold at most one batch per drain: holding suppresses
         // every further Arrive until the post-transition resume below
@@ -937,14 +991,19 @@ impl<'a> Session<'a> {
                 self.held.push_back((batch, seq, due));
             } else {
                 let t = self.wall_now();
-                self.engine.on_arrive_free(batch, seq, due, t, io!(self));
+                let mut pg = self.plugin.guard();
+                self.engine.on_arrive_free(batch, seq, due, t, io!(self, pg));
             }
             progressed = true;
         }
-        // react to whichever device finished first
+        // react to whichever device finished first. The plugin guard is
+        // taken after the non-blocking poll, so a device running an
+        // offloaded augment only ever contends with the engine step
+        // itself, never with a scheduler-side wait.
         while let Some(((w, s), out)) = self.executor.try_finish_any() {
             let t = self.wall_now();
-            self.engine.on_done_free(w, s, out, t, io!(self));
+            let mut pg = self.plugin.guard();
+            self.engine.on_done_free(w, s, out, t, io!(self, pg));
             progressed = true;
         }
         if self.engine.dynamic_budget() {
@@ -977,7 +1036,8 @@ impl<'a> Session<'a> {
                 if !pending_accs.is_empty() {
                     let t = self.wall_now();
                     for (w, s) in pending_accs {
-                        self.engine.dispatch_update_free(w, s, t, io!(self));
+                        let mut pg = self.plugin.guard();
+                        self.engine.dispatch_update_free(w, s, t, io!(self, pg));
                     }
                     return SessionStep::Progressed;
                 }
@@ -987,7 +1047,8 @@ impl<'a> Session<'a> {
                 let resumed: Vec<(Batch, u64, u64)> = self.held.drain(..).collect();
                 for (batch, seq, due) in resumed {
                     let t = self.wall_now();
-                    self.engine.on_arrive_free(batch, seq, due, t, io!(self));
+                    let mut pg = self.plugin.guard();
+                    self.engine.on_arrive_free(batch, seq, due, t, io!(self, pg));
                 }
                 return SessionStep::Progressed;
             }
@@ -1018,7 +1079,8 @@ impl<'a> Session<'a> {
             };
             if let Some(((w, s), out)) = self.executor.wait_any(timeout) {
                 let t = self.wall_now();
-                self.engine.on_done_free(w, s, out, t, io!(self));
+                let mut pg = self.plugin.guard();
+                self.engine.on_done_free(w, s, out, t, io!(self, pg));
             }
         } else if !self.pending.is_empty() {
             let due = self.arrived * self.td_us;

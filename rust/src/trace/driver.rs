@@ -130,6 +130,9 @@ pub fn replay_trace(recorded: &Trace, overrides: &[(String, String)]) -> Result<
         seed: h.seed,
         stash_cap: h.stash_cap,
         kernel_threads: h.kernel_threads,
+        // perf placement knob, not part of the numerics contract — replay
+        // always runs unpinned (the header deliberately omits it)
+        pin_devices: false,
     };
     let mut plugin_cadence = h.plugin_cadence;
 

@@ -1,6 +1,7 @@
 //! Dependency-free utilities: deterministic RNG, math helpers, and a tiny
 //! property-testing harness used by unit tests across the crate.
 
+pub mod affinity;
 pub mod error;
 pub mod math;
 pub mod rng;

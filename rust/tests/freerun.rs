@@ -8,16 +8,19 @@
 //! the tiny model's compute so runs stay fast and drop-free-ish on any
 //! CI box.
 
+use std::sync::{Arc, Mutex};
+
 use ferret::backend::native::NativeBackend;
 use ferret::compensate::CompKind;
 use ferret::config::ModelSpec;
-use ferret::ocl::Vanilla;
+use ferret::model::SharedParams;
+use ferret::ocl::{OclCtx, OclPlugin, Vanilla};
 use ferret::pipeline::engine::{run_async_with, AsyncCfg, AsyncSchedule};
 use ferret::pipeline::executor::ExecutorKind;
 use ferret::pipeline::sched::Mode;
-use ferret::pipeline::{EngineParams, RunResult};
+use ferret::pipeline::{EngineParams, RunResult, Session};
 use ferret::planner::{plan, Partition, Profile};
-use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+use ferret::stream::{Batch, DriftKind, StreamSpec, SyntheticStream};
 
 fn model() -> ModelSpec {
     ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
@@ -96,6 +99,62 @@ fn freerun_runs_on_the_sim_executor_too() {
     assert_eq!(r.metrics.oacc.count() as u64, n as u64);
     assert!(r.metrics.trained > 0);
     assert_eq!(r.metrics.exec_threads, 1);
+}
+
+/// Records which thread ran the `augment` hook; numerically a passthrough.
+struct AugmentThreadProbe {
+    seen: Arc<Mutex<Vec<std::thread::ThreadId>>>,
+}
+
+impl OclPlugin for AugmentThreadProbe {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn augment(
+        &mut self,
+        batch: Batch,
+        _params: &[SharedParams],
+        _ctx: &OclCtx,
+    ) -> Batch {
+        self.seen.lock().expect("probe lock").push(std::thread::current().id());
+        batch
+    }
+}
+
+#[test]
+fn freerun_augment_runs_on_a_device_thread_not_the_scheduler() {
+    // An owned plugin + threaded freerun is the offload configuration: the
+    // session converts the plugin into a shared cell and stage-0 device
+    // threads run `augment` at dispatch. The scheduler thread (this test
+    // thread) must never execute the hook.
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, 2000);
+    let ep = EngineParams { lr: 0.2, td: 2000, ..Default::default() };
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let n = 40;
+    let session = Session::builder(&NativeBackend, &m)
+        .config(cfg)
+        .owned_plugin(Box::new(AugmentThreadProbe { seen: Arc::clone(&seen) }))
+        .engine_params(ep)
+        .executor(ExecutorKind::Threaded)
+        .mode(Mode::Freerun)
+        .batch(8)
+        .build()
+        .expect("session builds");
+    let r = session.run_stream(&mut stream(n, 11)).expect("stream runs");
+    assert_eq!(r.metrics.oacc.count() as u64, n as u64, "no lost jobs under offload");
+    assert!(r.metrics.trained > 0, "updates landed");
+    let seen = seen.lock().expect("probe lock");
+    // dropped batches are predicted only — they never reach the hook
+    assert_eq!(seen.len() as u64, n as u64 - r.metrics.dropped, "one augment per admission");
+    assert!(!seen.is_empty(), "augment hook ran");
+    let scheduler = std::thread::current().id();
+    for &tid in seen.iter() {
+        assert_ne!(tid, scheduler, "augment ran on the scheduler thread");
+    }
 }
 
 #[test]

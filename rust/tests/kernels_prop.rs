@@ -61,6 +61,78 @@ fn tiled_kernels_match_naive_reference_for_every_thread_count() {
     });
 }
 
+/// The lane-blocked kernels must stay bit-identical to the naive loops on
+/// every awkward shape: `n`/`k` off the 8-wide lane grid, `n < 8` (pure
+/// scalar-tail columns), single rows, exact block boundaries, and fully
+/// zero A rows (the sparse-skip path end to end) — at thread counts 1/2/5,
+/// accumulating into dirty recycled pool buffers.
+#[test]
+fn simd_lanes_match_naive_bitwise_on_awkward_shapes() {
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),    // everything scalar
+        (2, 3, 5),    // under one lane block on every axis
+        (4, 7, 7),    // n < 8: no vector body at all
+        (3, 9, 8),    // k past a block, n exactly one block
+        (5, 16, 9),   // n one past a block
+        (16, 33, 63), // off-grid everywhere, tails on every path
+        (8, 64, 65),  // 64-wide fast path plus a scalar column
+        (7, 100, 72), // 72 = 9 lanes: wide-tile boundary
+    ];
+    let mut rng = Rng::new(0xA11C);
+    let pool = BufferPool::new();
+    // seed the pool with poisoned buffers so every take below is a dirty
+    // recycle, not a fresh zeroed allocation
+    for &(m, _, n) in SHAPES {
+        pool.put(vec![f32::NAN; m * n]);
+    }
+    for &(m, k, n) in SHAPES {
+        let a = randvec(&mut rng, m * k, true); // exact zeros: sparse skip
+        let b = randvec(&mut rng, k * n, false);
+        let at = randvec(&mut rng, k * m, true);
+        let zeros = vec![0.0f32; m * k];
+        let init = randvec(&mut rng, m * n, false);
+        for threads in [1usize, 2, 5] {
+            let mut c0 = init.clone();
+            kernels::naive_matmul_acc(&mut c0, &a, &b, m, k, n);
+            let mut c1 = pool.take(m * n);
+            c1.copy_from_slice(&init);
+            kernels::matmul_acc(&mut c1, &a, &b, m, k, n, threads);
+            assert_eq!(c0, c1, "acc {m}x{k}x{n} t={threads}");
+            pool.put(c1);
+
+            let mut d0 = init.clone();
+            kernels::naive_matmul_at_acc(&mut d0, &at, &b, m, k, n);
+            let mut d1 = pool.take(m * n);
+            d1.copy_from_slice(&init);
+            kernels::matmul_at_acc(&mut d1, &at, &b, m, k, n, threads);
+            assert_eq!(d0, d1, "at {m}x{k}x{n} t={threads}");
+            pool.put(d1);
+
+            // an all-zero A must leave the accumulator untouched on both
+            // paths (the skip never sees a lane boundary)
+            let mut z0 = init.clone();
+            kernels::naive_matmul_acc(&mut z0, &zeros, &b, m, k, n);
+            let mut z1 = init.clone();
+            kernels::matmul_acc(&mut z1, &zeros, &b, m, k, n, threads);
+            assert_eq!(z0, z1, "zero-A {m}x{k}x{n} t={threads}");
+            assert_eq!(z1, init, "zero-A must not perturb the accumulator");
+        }
+        // elementwise maps: same lane blocking, same tails, into a dirty
+        // recycled buffer
+        let g = randvec(&mut rng, m * n, true);
+        let d = randvec(&mut rng, m * n, false);
+        let mut out = pool.take(m * n);
+        kernels::sgd_into(&mut out, &init, &g, 0.37);
+        let want: Vec<f32> = init.iter().zip(&g).map(|(p, gv)| p - 0.37 * gv).collect();
+        assert_eq!(out, want, "sgd {m}x{n}");
+        kernels::compensate_into(&mut out, &g, &d, 0.21);
+        let want: Vec<f32> =
+            g.iter().zip(&d).map(|(gv, dv)| gv + 0.21 * gv * gv * dv).collect();
+        assert_eq!(out, want, "compensate {m}x{n}");
+        pool.put(out);
+    }
+}
+
 #[test]
 fn backend_pooled_paths_match_unpooled_bitwise() {
     property("kprop_pooled", 10, |rng| {
