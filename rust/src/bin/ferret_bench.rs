@@ -276,6 +276,12 @@ fn main() {
             "[ferret-bench] observed staleness histogram: {}",
             bench.observability.staleness_summary()
         );
+        eprintln!(
+            "[ferret-bench] fleet utilization: {:.1}% busy, {:.1}% bubble \
+             (aggregated over every async run)",
+            100.0 * bench.observability.utilization(),
+            100.0 * bench.observability.bubble_frac()
+        );
     }
     let wall = t0.elapsed().as_secs_f64();
     eprintln!(

@@ -657,7 +657,13 @@ impl Bench {
     pub fn budget_shift(&mut self, schedule: Option<&BudgetSchedule>) -> Table {
         let mut table = Table::new(
             "Budget shift — mid-stream halving: live re-plan vs static-min vs restart",
-            vec!["oacc".into(), "mem_mb".into(), "replans".into()],
+            vec![
+                "oacc".into(),
+                "mem_mb".into(),
+                "replans".into(),
+                "util".into(),
+                "bubble".into(),
+            ],
         );
         let seeds = self.cfg.seeds.clone();
         let n = self.cfg.num_batches;
@@ -689,10 +695,12 @@ impl Bench {
                 .unwrap_or(hi_plan.mem_bytes * 0.5);
             let lo_plan = plan(&prof, td, lo_budget, decay);
 
-            let mut rows: Vec<(String, Vec<f64>, Vec<f64>, Vec<f64>)> = vec![
-                ("dynamic".into(), vec![], vec![], vec![]),
-                ("static-min".into(), vec![], vec![], vec![]),
-                ("restart".into(), vec![], vec![], vec![]),
+            // per-method samples: (label, oacc, mem_mb, replans, util, bubble)
+            type Samples = (String, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>);
+            let mut rows: Vec<Samples> = vec![
+                ("dynamic".into(), vec![], vec![], vec![], vec![], vec![]),
+                ("static-min".into(), vec![], vec![], vec![], vec![], vec![]),
+                ("restart".into(), vec![], vec![], vec![], vec![], vec![]),
             ];
             for &seed in &seeds {
                 // dynamic: live re-plan at the schedule step
@@ -708,6 +716,8 @@ impl Bench {
                 // spent its pre-shift half at the unconstrained plan
                 rows[0].2.push(hi_plan.mem_bytes.max(m.mem_bytes) / 1e6);
                 rows[0].3.push(m.replans as f64);
+                rows[0].4.push(m.utilization());
+                rows[0].5.push(m.bubble_frac());
 
                 // static-min: the post-shift budget for the whole stream
                 let cfg = AsyncCfg::ferret(
@@ -719,6 +729,8 @@ impl Bench {
                 rows[1].1.push(m.oacc.value());
                 rows[1].2.push(m.mem_bytes / 1e6);
                 rows[1].3.push(0.0);
+                rows[1].4.push(m.utilization());
+                rows[1].5.push(m.bubble_frac());
 
                 // restart: first half unconstrained, then fresh weights at
                 // the halved budget on the tail of the same stream
@@ -753,14 +765,25 @@ impl Bench {
                 // restart also ran its first half at the unconstrained plan
                 rows[2].2.push(a.mem_bytes.max(b.mem_bytes) / 1e6);
                 rows[2].3.push(0.0);
+                // pool busy/device time across both halves before dividing
+                let device = a.device_us + b.device_us;
+                let util = if device == 0 {
+                    0.0
+                } else {
+                    (a.busy_us + b.busy_us) as f64 / device as f64
+                };
+                rows[2].4.push(util);
+                rows[2].5.push(if device == 0 { 0.0 } else { (1.0 - util).max(0.0) });
             }
-            for (name, oaccs, mems, replans) in rows {
+            for (name, oaccs, mems, replans, utils, bubbles) in rows {
                 table.push_row(
                     format!("{}/{}", setting.label, name),
                     vec![
                         Some(Cell::from_samples(&oaccs)),
                         Some(Cell::from_samples(&mems)),
                         Some(Cell::from_samples(&replans)),
+                        Some(Cell::from_samples(&utils)),
+                        Some(Cell::from_samples(&bubbles)),
                     ],
                 );
             }
@@ -827,8 +850,13 @@ mod tests {
         let mut b = Bench::new(BenchCfg::quick());
         let t = b.budget_shift(None);
         assert_eq!(t.rows.len(), 6, "2 settings x 3 responses");
-        assert_eq!(t.columns, vec!["oacc", "mem_mb", "replans"]);
+        assert_eq!(
+            t.columns,
+            vec!["oacc", "mem_mb", "replans", "util", "bubble"]
+        );
         let replans = t.col("replans");
+        let util = t.col("util");
+        let bubble = t.col("bubble");
         for (label, cells) in &t.rows {
             let r = cells[replans].unwrap().mean;
             if label.ends_with("/dynamic") {
@@ -836,6 +864,12 @@ mod tests {
             } else {
                 assert_eq!(r, 0.0, "{label}: static baselines never re-plan");
             }
+            let u = cells[util].unwrap().mean;
+            let bf = cells[bubble].unwrap().mean;
+            assert!((0.0..=1.0).contains(&u), "{label}: util {u} out of range");
+            assert!((0.0..=1.0).contains(&bf), "{label}: bubble {bf} out of range");
+            assert!(u > 0.0, "{label}: lockstep run must accrue busy time");
+            assert!((u + bf - 1.0).abs() < 1e-9, "{label}: util+bubble != 1");
         }
     }
 

@@ -14,6 +14,7 @@ pub mod config;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod ocl;
 pub mod pipeline;
 pub mod planner;

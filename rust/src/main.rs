@@ -12,6 +12,8 @@
 //!         [--mode lockstep|freerun]
 //!         [--budget-schedule <bytes>@<at>[,...]]
 //!         [--kernel-threads K] [--warmup-profile R] [--pin-devices on]
+//!         [--record-trace PATH] [--span-trace PATH]
+//!         [--metrics-out PATH] [--metrics-interval N]
 //!         Plan + run full Ferret on one of the paper's 20 settings and
 //!         report oacc/tacc/memory/adaptation rate. `--executor threaded`
 //!         runs one OS thread per (worker, stage) device (real
@@ -43,6 +45,20 @@
 //!         `--record-trace PATH` records the run as a `ferret-trace/1`
 //!         JSON-lines artifact (stream identity + every planner decision;
 //!         see `ferret::trace`) that `ferret replay` can re-drive.
+//!
+//!         `--span-trace PATH` enables the span recorder and exports the
+//!         per-device Fwd/Bwd/Update/Augment/Drain/Replan timeline as
+//!         Chrome trace-event JSON — open it at <https://ui.perfetto.dev>
+//!         (see `ferret::obs` and `docs/observability.md`). Lockstep
+//!         span traces are deterministic: bit-for-bit identical across
+//!         executors and kernel-thread counts.
+//!
+//!         `--metrics-out PATH` streams pipeline snapshots (oacc-so-far,
+//!         ledger bytes, pool stats, per-device utilization/bubble,
+//!         latency percentiles over a sliding window) as JSON lines, one
+//!         record every `--metrics-interval N` arrivals (default 10)
+//!         plus a final record at finish; the first line is a
+//!         `ferret-obs/1` schema header.
 //!
 //!   replay <trace> [--config-override k=v[,k=v...]] [--out PATH] [--gate]
 //!         Re-drive a recorded trace through a lockstep session: the exact
@@ -295,6 +311,22 @@ fn cmd_run(opts: &Opts) {
         builder = builder.record_trace(path);
         eprintln!("[ferret] recording trace to {path}");
     }
+    let span_trace = opts.get("span-trace").map(str::to_string);
+    if let Some(path) = &span_trace {
+        builder = builder.span_trace(path);
+        eprintln!("[ferret] recording span trace to {path}");
+    }
+    if let Some(path) = opts.get("metrics-out") {
+        let interval = opts
+            .get("metrics-interval")
+            .map(|n| parse_or_exit::<u64>(n, "metrics-interval", "an arrival count"))
+            .unwrap_or(10);
+        builder = builder.metrics_out(path, interval);
+        eprintln!("[ferret] streaming snapshots to {path} every {} arrivals", interval.max(1));
+    } else if opts.get("metrics-interval").is_some() {
+        eprintln!("error: --metrics-interval requires --metrics-out PATH");
+        std::process::exit(2);
+    }
     let session = match builder.build() {
         Ok(s) => s,
         Err(e) => {
@@ -329,6 +361,11 @@ fn cmd_run(opts: &Opts) {
         );
     }
     println!("trained    : {} updates, dropped {}", r.metrics.trained, r.metrics.dropped);
+    println!(
+        "pipeline   : {:.1}% device utilization, {:.1}% bubble",
+        100.0 * r.metrics.utilization(),
+        100.0 * r.metrics.bubble_frac()
+    );
     if mode == Mode::Freerun {
         println!("latency µs : {}", r.metrics.latency_summary());
         println!("staleness  : {}", r.metrics.staleness_summary());

@@ -61,8 +61,10 @@ pub struct RunMetrics {
     /// mean training loss curve
     pub losses: Vec<(u64, f32)>,
     /// measured adaptation-rate numerator: sum of e^{-c r} * value_frac
-    adaptation_num: f64,
-    adaptation_batches: u64,
+    /// (pub(crate): `RunMetrics` is built with struct-update syntax in
+    /// `pipeline::session`, which needs every field visible there)
+    pub(crate) adaptation_num: f64,
+    pub(crate) adaptation_batches: u64,
     pub trained: u64,
     pub dropped: u64,
     /// analytic memory footprint in bytes (set by the engine from its
@@ -76,8 +78,16 @@ pub struct RunMetrics {
     /// 0 = engine predates executors / not applicable)
     pub exec_threads: usize,
     /// per-batch arrival→prediction latency samples for trained batches
-    /// (virtual ticks in lockstep mode, real microseconds in freerun)
+    /// (virtual ticks in lockstep mode, real microseconds in freerun);
+    /// bounded at [`OBS_SAMPLE_CAP`] by deterministic decimation
     pub latencies: Vec<u64>,
+    /// decimation stride/pending for `latencies` (0 stride reads as 1, so
+    /// `derive(Default)` starts at the dense sampling rate)
+    pub(crate) lat_stride: u64,
+    pub(crate) lat_pending: u64,
+    /// decimation stride/pending for `drains`
+    pub(crate) drain_stride: u64,
+    pub(crate) drain_pending: u64,
     /// observed-staleness histogram: `staleness_hist[τ]` = updates applied
     /// τ versions stale; the last bucket aggregates τ ≥ STALENESS_BUCKETS
     pub staleness_hist: Vec<u64>,
@@ -87,8 +97,18 @@ pub struct RunMetrics {
     /// number of mid-stream plan transitions executed
     pub replans: u64,
     /// drain latency of each plan transition (virtual ticks in lockstep,
-    /// real microseconds in freerun)
+    /// real microseconds in freerun); bounded like `latencies`
     pub drains: Vec<u64>,
+    /// accumulated device busy time in ticks: every forward/backward/
+    /// update/augment pass, summed over all devices. Always on (plain
+    /// adds — independent of the opt-in span recorder); in lockstep it
+    /// sums the replayed analytic costs, so it is deterministic and
+    /// executor-independent like every other lockstep metric.
+    pub busy_us: u64,
+    /// integrated device-time in ticks: Σ over plan phases of
+    /// (active devices × phase duration). `busy_us / device_us` is the
+    /// fleet utilization; `1 − utilization` the pipeline bubble fraction.
+    pub device_us: u64,
     /// planner-predicted footprint after each re-plan: `(t, bytes)`
     pub plan_trace: Vec<(u64, f64)>,
     /// final counters of the session's shared buffer pool (takes, misses,
@@ -98,6 +118,23 @@ pub struct RunMetrics {
 
 /// Histogram cap: staleness beyond this lands in the overflow bucket.
 pub const STALENESS_BUCKETS: usize = 32;
+
+/// Upper bound on the per-run latency/drain sample vectors: reaching it
+/// drops every other sample and doubles the sampling stride (the same
+/// downsample-not-truncate policy as [`crate::budget::TRACE_CAP`]), so a
+/// long-lived session cannot grow the metrics sink without limit.
+/// Deterministic: the same sample sequence always keeps the same points.
+pub const OBS_SAMPLE_CAP: usize = 4096;
+
+/// Drop every other element (odd positions kept, so the newest element
+/// of a just-filled vector always survives).
+fn decimate<T>(v: &mut Vec<T>) {
+    let mut i = 0usize;
+    v.retain(|_| {
+        i += 1;
+        i % 2 == 0
+    });
+}
 
 /// Largest per-window mean difference between two accuracy curves.
 ///
@@ -135,6 +172,17 @@ fn percentile_of_sorted(sorted: &[u64], p: f64) -> u64 {
     }
     let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
     sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Nearest-rank percentile over an unsorted sample window (`p` in
+/// 0..=100). Total for every input: an empty window is 0, a single
+/// sample is that sample, and out-of-range `p` clamps to the extremes —
+/// no panic, no division by zero. Used for the obs sliding-window
+/// percentiles and anywhere a one-off window needs summarizing.
+pub fn percentile_u64(samples: &[u64], p: f64) -> u64 {
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    percentile_of_sorted(&v, p)
 }
 
 impl RunMetrics {
@@ -175,17 +223,73 @@ impl RunMetrics {
         self.peak_live_bytes = self.peak_live_bytes.max(bytes);
     }
 
-    /// Record one batch's arrival→prediction latency.
+    /// Record one batch's arrival→prediction latency. Past
+    /// [`OBS_SAMPLE_CAP`] samples the vector is decimated — every other
+    /// sample dropped, sampling stride doubled — so unbounded sessions
+    /// keep a bounded, run-spanning sample set (percentiles become
+    /// estimates over the retained sample, exact until the cap).
     pub fn record_latency(&mut self, latency: u64) {
+        self.lat_pending += 1;
+        if self.lat_pending < self.lat_stride.max(1) {
+            return;
+        }
+        self.lat_pending = 0;
         self.latencies.push(latency);
+        if self.latencies.len() >= OBS_SAMPLE_CAP {
+            decimate(&mut self.latencies);
+            self.lat_stride = self.lat_stride.max(1) * 2;
+        }
     }
 
     /// Record one executed plan transition: when it landed, how long the
     /// in-flight drain took, and the footprint the new plan predicts.
+    /// `drains` is bounded the same way as `latencies`.
     pub fn record_replan(&mut self, t: u64, drain: u64, planned_bytes: f64) {
         self.replans += 1;
-        self.drains.push(drain);
         self.plan_trace.push((t, planned_bytes));
+        self.drain_pending += 1;
+        if self.drain_pending < self.drain_stride.max(1) {
+            return;
+        }
+        self.drain_pending = 0;
+        self.drains.push(drain);
+        if self.drains.len() >= OBS_SAMPLE_CAP {
+            decimate(&mut self.drains);
+            self.drain_stride = self.drain_stride.max(1) * 2;
+        }
+    }
+
+    /// Add device busy time (one pass's duration, in ticks).
+    pub fn note_busy(&mut self, dur: u64) {
+        self.busy_us += dur;
+    }
+
+    /// Integrate `devices` active devices over a `dur`-tick phase into
+    /// the device-time denominator (called at plan-transition boundaries
+    /// and at finish, when the active device set is known).
+    pub fn integrate_device_time(&mut self, devices: usize, dur: u64) {
+        self.device_us += devices as u64 * dur;
+    }
+
+    /// Fleet utilization: busy device time over integrated device time
+    /// (0 when nothing was integrated yet).
+    pub fn utilization(&self) -> f64 {
+        if self.device_us == 0 {
+            0.0
+        } else {
+            self.busy_us as f64 / self.device_us as f64
+        }
+    }
+
+    /// Pipeline bubble fraction: the idle share of integrated device
+    /// time, `1 − utilization`, clamped at 0 (freerun service times are
+    /// measured, so rounding can nudge busy past the integral).
+    pub fn bubble_frac(&self) -> f64 {
+        if self.device_us == 0 {
+            0.0
+        } else {
+            (1.0 - self.utilization()).max(0.0)
+        }
     }
 
     /// Record the staleness an update was applied at.
@@ -242,16 +346,22 @@ impl RunMetrics {
         self.adaptation_batches
     }
 
-    /// Fold another run's latency samples and staleness histogram into
-    /// this sink (harness-level aggregation across a run matrix).
+    /// Fold another run's latency samples, staleness histogram, and
+    /// busy/device-time integrals into this sink (harness-level
+    /// aggregation across a run matrix). Latencies go through
+    /// [`RunMetrics::record_latency`], so the aggregate stays bounded.
     pub fn absorb_observability(&mut self, other: &RunMetrics) {
-        self.latencies.extend_from_slice(&other.latencies);
+        for &l in &other.latencies {
+            self.record_latency(l);
+        }
         if self.staleness_hist.len() < other.staleness_hist.len() {
             self.staleness_hist.resize(other.staleness_hist.len(), 0);
         }
         for (i, n) in other.staleness_hist.iter().enumerate() {
             self.staleness_hist[i] += n;
         }
+        self.busy_us += other.busy_us;
+        self.device_us += other.device_us;
     }
 
     pub fn mean_recent_loss(&self, k: usize) -> f32 {
@@ -389,6 +499,80 @@ mod tests {
         assert_eq!(agg.staleness_hist[3], 2);
         assert_eq!(agg.latencies.len(), 10);
         assert!(agg.staleness_summary().contains("τ=0:2"));
+    }
+
+    #[test]
+    fn percentile_edge_cases_are_total() {
+        // empty window: no panic, no division by zero, just 0
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_u64(&[], p), 0);
+        }
+        // single sample: every percentile is that sample
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_u64(&[7], p), 7);
+        }
+        // out-of-range p clamps to the extremes instead of indexing oob
+        assert_eq!(percentile_u64(&[1, 2, 3], -5.0), 1);
+        assert_eq!(percentile_u64(&[1, 2, 3], 250.0), 3);
+        // unsorted input is handled (the helper sorts a copy)
+        assert_eq!(percentile_u64(&[30, 10, 20], 50.0), 20);
+        // RunMetrics paths stay safe on empty/single too
+        let mut m = RunMetrics::default();
+        assert_eq!(m.latency_percentile(99.0), 0);
+        assert!(m.latency_summary().contains("n=0"));
+        m.record_latency(5);
+        assert_eq!(m.latency_percentile(50.0), 5);
+        assert_eq!(m.latency_percentile(100.0), 5);
+    }
+
+    #[test]
+    fn latency_and_drain_samples_are_bounded_and_deterministic() {
+        let run = |n: u64| {
+            let mut m = RunMetrics::default();
+            for i in 0..n {
+                m.record_latency(i);
+                m.record_replan(i, i, 0.0);
+            }
+            m
+        };
+        let n = 10 * OBS_SAMPLE_CAP as u64;
+        let m = run(n);
+        assert!(m.latencies.len() <= OBS_SAMPLE_CAP, "{}", m.latencies.len());
+        assert!(m.latencies.len() > OBS_SAMPLE_CAP / 4, "decimation keeps coverage");
+        assert!(m.drains.len() <= OBS_SAMPLE_CAP);
+        // downsampled, not truncated: samples still span the run
+        assert!(m.latencies[0] < 64, "head stays early: {}", m.latencies[0]);
+        assert!(*m.latencies.last().unwrap() > n / 2, "tail stays recent");
+        // exact counters are unaffected by sample decimation
+        assert_eq!(m.replans, n);
+        assert_eq!(m.plan_trace.len(), n as usize);
+        // deterministic: the same sequence keeps the same samples
+        assert_eq!(m.latencies, run(n).latencies);
+        assert_eq!(m.drains, run(n).drains);
+        // below the cap nothing is dropped
+        let small = run(100);
+        assert_eq!(small.latencies.len(), 100);
+        assert_eq!(small.drains.len(), 100);
+    }
+
+    #[test]
+    fn utilization_and_bubble_fraction() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.utilization(), 0.0, "no device time integrated yet");
+        assert_eq!(m.bubble_frac(), 0.0);
+        m.note_busy(30);
+        m.note_busy(30);
+        m.integrate_device_time(2, 40); // 2 devices over 40 ticks
+        assert!((m.utilization() - 0.75).abs() < 1e-12);
+        assert!((m.bubble_frac() - 0.25).abs() < 1e-12);
+        // measured busy nudged past the integral clamps at 0 bubble
+        m.note_busy(100);
+        assert_eq!(m.bubble_frac(), 0.0);
+        // aggregation folds the integrals
+        let mut agg = RunMetrics::default();
+        agg.absorb_observability(&m);
+        assert_eq!(agg.busy_us, 160);
+        assert_eq!(agg.device_us, 80);
     }
 
     #[test]

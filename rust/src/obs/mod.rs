@@ -1,0 +1,644 @@
+//! obs — live pipeline observability.
+//!
+//! Ferret's claims are about *where time goes*: fine-grained pipeline
+//! parallelism hiding latency, bounded staleness, cheap plan transitions.
+//! [`crate::metrics::RunMetrics`] only reports end-of-run aggregates;
+//! this module makes the pipeline inspectable while it runs:
+//!
+//!   - [`Recorder`] — a per-device **span recorder**. Every device pass
+//!     (forward, backward, parameter update, offloaded augment) and every
+//!     engine-level stall (drain, re-plan) is a [`Span`] with start/end
+//!     stamps taken from the run's [`Clock`](crate::pipeline::Clock): in
+//!     lockstep the stamps are virtual ticks, so span traces are
+//!     bit-deterministic and executor-independent like everything else;
+//!     in freerun they are real microseconds. Recording is opt-in — the
+//!     disabled recorder is a one-arm enum match on the hot path, pinned
+//!     by the `--exp perf --compare` CI gate.
+//!   - Pipeline **accounting**, computed incrementally at record time
+//!     (never by re-scanning the rings): per-device busy time and span
+//!     counts, bubble fraction, drain/re-plan stall attribution, a live
+//!     staleness gauge, and latency percentiles over a sliding window.
+//!     Exposed as a [`Snapshot`] via
+//!     [`Session::obs_snapshot()`](crate::pipeline::Session::obs_snapshot).
+//!   - A **snapshot streamer** ([`SnapshotWriter`]): `ferret run
+//!     --metrics-out PATH --metrics-interval N` appends one JSON-lines
+//!     [`Snapshot`] record every N stream arrivals (a deterministic
+//!     cadence — lockstep streams replay identically).
+//!   - **Perfetto/Chrome trace-event export**
+//!     ([`write_chrome_trace`]): `ferret run --span-trace out.json`
+//!     writes the recorded spans as Chrome trace-event JSON — open it in
+//!     `ui.perfetto.dev` and read the 1F1B schedule off the timeline.
+//!
+//! Span rings are bounded ([`SPAN_CAP`] per device, oldest dropped), so
+//! a long-lived session cannot grow the recorder without limit; the
+//! accounting is folded in before a span can be evicted and stays exact
+//! regardless. See `docs/observability.md` for the snapshot schema and
+//! the Perfetto how-to.
+
+use std::collections::VecDeque;
+use std::io::Write;
+
+use crate::bail;
+use crate::metrics::percentile_u64;
+use crate::trace::json::fmt_f64;
+use crate::util::error::Result;
+
+/// Max spans retained per device ring; recording past it drops the
+/// oldest span (the accounting has already absorbed it, so busy/stall
+/// totals stay exact).
+pub const SPAN_CAP: usize = 4096;
+
+/// Sliding-window size for the live latency percentiles.
+pub const WINDOW_CAP: usize = 256;
+
+/// JSON-lines schema tag of the snapshot stream (`--metrics-out`).
+pub const SNAPSHOT_SCHEMA: &str = "ferret-obs/1";
+
+/// Pseudo-device for engine-scope spans (drain / re-plan): they belong
+/// to the transition protocol, not to any (worker, stage) device.
+pub const ENGINE_DEVICE: (usize, usize) = (usize::MAX, 0);
+
+/// What a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// forward pass of one microbatch on one stage
+    Fwd,
+    /// backward pass
+    Bwd,
+    /// parameter update (T2-accumulated)
+    Update,
+    /// offloaded augment hook (freerun, carved out of the stage-0 Fwd)
+    Augment,
+    /// plan transition: in-flight work draining under the old plan
+    Drain,
+    /// plan transition: re-plan + weight migration + reconfigure
+    Replan,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Fwd => "Fwd",
+            SpanKind::Bwd => "Bwd",
+            SpanKind::Update => "Update",
+            SpanKind::Augment => "Augment",
+            SpanKind::Drain => "Drain",
+            SpanKind::Replan => "Replan",
+        }
+    }
+
+    fn idx(&self) -> usize {
+        match self {
+            SpanKind::Fwd => 0,
+            SpanKind::Bwd => 1,
+            SpanKind::Update => 2,
+            SpanKind::Augment => 3,
+            SpanKind::Drain => 4,
+            SpanKind::Replan => 5,
+        }
+    }
+
+    /// Device-scope spans contribute to per-device busy time;
+    /// engine-scope spans (drain/re-plan) are stall attribution instead.
+    fn is_device_work(&self) -> bool {
+        !matches!(self, SpanKind::Drain | SpanKind::Replan)
+    }
+}
+
+/// One recorded interval. Stamps are clock ticks: virtual ticks in
+/// lockstep (deterministic), microseconds since run start in freerun.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// (worker, stage); [`ENGINE_DEVICE`] for drain/re-plan
+    pub device: (usize, usize),
+    pub kind: SpanKind,
+    /// microbatch seq for Fwd/Bwd/Augment, contributing-arrival count
+    /// for Update, re-plan ordinal for Drain/Replan
+    pub mb: u64,
+    pub start_us: u64,
+    pub end_us: u64,
+    /// stage parameter version: the version the pass read (Fwd/Bwd) or
+    /// produced (Update); 0 where versioning does not apply
+    pub version: u64,
+}
+
+/// Ring + incrementally-maintained totals for one device.
+#[derive(Debug, Clone)]
+struct DeviceTrack {
+    device: (usize, usize),
+    spans: VecDeque<Span>,
+    evicted: u64,
+    busy_us: u64,
+    counts: [u64; 6],
+    last_end_us: u64,
+}
+
+impl DeviceTrack {
+    fn new(device: (usize, usize)) -> Self {
+        DeviceTrack {
+            device,
+            spans: VecDeque::new(),
+            evicted: 0,
+            busy_us: 0,
+            counts: [0; 6],
+            last_end_us: 0,
+        }
+    }
+
+    fn push(&mut self, span: Span) {
+        self.counts[span.kind.idx()] += 1;
+        let dur = span.end_us.saturating_sub(span.start_us);
+        if span.kind.is_device_work() {
+            self.busy_us += dur;
+        }
+        self.last_end_us = self.last_end_us.max(span.end_us);
+        if self.spans.len() >= SPAN_CAP {
+            self.spans.pop_front();
+            self.evicted += 1;
+        }
+        self.spans.push_back(span);
+    }
+}
+
+/// Recorder state behind [`Recorder::On`]. Tracks are kept sorted by
+/// device key so every derived view iterates in a canonical order no
+/// matter which device recorded first.
+#[derive(Debug, Clone, Default)]
+pub struct RecorderState {
+    tracks: Vec<DeviceTrack>,
+    stall_us: [u64; 2], // [drain, replan]
+    stalls: [u64; 2],
+    staleness_last: u64,
+    staleness_max: u64,
+    window: VecDeque<u64>,
+}
+
+impl RecorderState {
+    fn track_mut(&mut self, device: (usize, usize)) -> &mut DeviceTrack {
+        let at = match self.tracks.binary_search_by_key(&device, |t| t.device) {
+            Ok(i) => i,
+            Err(i) => {
+                self.tracks.insert(i, DeviceTrack::new(device));
+                i
+            }
+        };
+        &mut self.tracks[at]
+    }
+}
+
+/// The span recorder. `Off` is the default and costs one enum match per
+/// would-be span; `On` records into per-device rings and folds the
+/// accounting incrementally.
+#[derive(Debug, Clone, Default)]
+pub enum Recorder {
+    #[default]
+    Off,
+    On(Box<RecorderState>),
+}
+
+impl Recorder {
+    /// An enabled recorder with empty rings.
+    pub fn on() -> Self {
+        Recorder::On(Box::default())
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, Recorder::On(_))
+    }
+
+    /// Record one span. No-op when disabled.
+    #[inline]
+    pub fn record(
+        &mut self,
+        device: (usize, usize),
+        kind: SpanKind,
+        mb: u64,
+        start_us: u64,
+        end_us: u64,
+        version: u64,
+    ) {
+        let Recorder::On(st) = self else { return };
+        let end_us = end_us.max(start_us);
+        if let SpanKind::Drain | SpanKind::Replan = kind {
+            let i = (kind.idx() - SpanKind::Drain.idx()).min(1);
+            st.stall_us[i] += end_us - start_us;
+            st.stalls[i] += 1;
+        }
+        st.track_mut(device).push(Span { device, kind, mb, start_us, end_us, version });
+    }
+
+    /// Update the live staleness gauge (called at each parameter update
+    /// with the observed version gap τ). No-op when disabled.
+    #[inline]
+    pub fn gauge_staleness(&mut self, tau: u64) {
+        if let Recorder::On(st) = self {
+            st.staleness_last = tau;
+            st.staleness_max = st.staleness_max.max(tau);
+        }
+    }
+
+    /// Feed one observed per-batch latency into the sliding window.
+    /// No-op when disabled.
+    #[inline]
+    pub fn note_latency(&mut self, us: u64) {
+        if let Recorder::On(st) = self {
+            if st.window.len() >= WINDOW_CAP {
+                st.window.pop_front();
+            }
+            st.window.push_back(us);
+        }
+    }
+
+    /// All recorded spans in canonical order: devices by (worker, stage)
+    /// key — engine-scope spans last — each ring oldest-first.
+    pub fn spans(&self) -> Vec<Span> {
+        match self {
+            Recorder::Off => Vec::new(),
+            Recorder::On(st) => {
+                st.tracks.iter().flat_map(|t| t.spans.iter().copied()).collect()
+            }
+        }
+    }
+
+    /// Spans evicted from full rings (accounting still covers them).
+    pub fn evicted(&self) -> u64 {
+        match self {
+            Recorder::Off => 0,
+            Recorder::On(st) => st.tracks.iter().map(|t| t.evicted).sum(),
+        }
+    }
+
+    /// The recorder-side half of a [`Snapshot`] at time `now_us`:
+    /// per-device busy/utilization, bubble fraction, stall attribution,
+    /// staleness gauge, and windowed latency percentiles. The session
+    /// fills in the metrics-side fields (oacc, ledger, pool, counters).
+    pub fn snapshot(&self, now_us: u64) -> Snapshot {
+        let mut snap = Snapshot { t_us: now_us, ..Snapshot::default() };
+        let Recorder::On(st) = self else { return snap };
+        let elapsed = now_us.max(1);
+        for tr in &st.tracks {
+            if tr.device == ENGINE_DEVICE {
+                continue;
+            }
+            snap.busy_us += tr.busy_us;
+            snap.devices.push(DeviceSnap {
+                worker: tr.device.0,
+                stage: tr.device.1,
+                busy_us: tr.busy_us,
+                spans: tr.counts.iter().sum::<u64>(),
+                util: tr.busy_us as f64 / elapsed as f64,
+            });
+        }
+        if !snap.devices.is_empty() {
+            let cap = snap.devices.len() as u64 * elapsed;
+            snap.bubble_frac = 1.0 - (snap.busy_us.min(cap) as f64 / cap as f64);
+        }
+        snap.drain_us = st.stall_us[0];
+        snap.drains = st.stalls[0];
+        snap.replan_us = st.stall_us[1];
+        snap.replans = st.stalls[1];
+        snap.staleness_last = st.staleness_last;
+        snap.staleness_max = st.staleness_max;
+        snap.window_n = st.window.len();
+        let w: Vec<u64> = st.window.iter().copied().collect();
+        snap.p50_us = percentile_u64(&w, 50.0);
+        snap.p95_us = percentile_u64(&w, 95.0);
+        snap.p99_us = percentile_u64(&w, 99.0);
+        snap
+    }
+}
+
+/// Per-device slice of a [`Snapshot`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceSnap {
+    pub worker: usize,
+    pub stage: usize,
+    pub busy_us: u64,
+    pub spans: u64,
+    /// busy fraction of the run so far (approximate for devices created
+    /// by a mid-run plan transition — they are charged from t=0)
+    pub util: f64,
+}
+
+/// One streamed observability record (`--metrics-out` JSON lines; also
+/// what `Session::obs_snapshot()` returns live).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    /// clock now: virtual ticks (lockstep) or µs since start (freerun)
+    pub t_us: u64,
+    // -- metrics-side (filled by the session) --
+    pub oacc: f64,
+    pub ledger_bytes: u64,
+    pub pool_takes: u64,
+    pub pool_misses: u64,
+    pub pool_puts: u64,
+    pub arrivals: u64,
+    pub trained: u64,
+    pub dropped: u64,
+    // -- recorder-side --
+    pub busy_us: u64,
+    pub bubble_frac: f64,
+    pub drain_us: u64,
+    pub drains: u64,
+    pub replan_us: u64,
+    pub replans: u64,
+    pub staleness_last: u64,
+    pub staleness_max: u64,
+    pub window_n: usize,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub devices: Vec<DeviceSnap>,
+}
+
+impl Snapshot {
+    /// One JSON line (no trailing newline), fields in canonical order.
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(256);
+        s.push_str(&format!("{{\"t_us\":{}", self.t_us));
+        s.push_str(&format!(",\"oacc\":{}", fmt_f64(self.oacc)));
+        s.push_str(&format!(",\"ledger_bytes\":{}", self.ledger_bytes));
+        s.push_str(&format!(
+            ",\"pool\":{{\"takes\":{},\"misses\":{},\"puts\":{}}}",
+            self.pool_takes, self.pool_misses, self.pool_puts
+        ));
+        s.push_str(&format!(
+            ",\"arrivals\":{},\"trained\":{},\"dropped\":{}",
+            self.arrivals, self.trained, self.dropped
+        ));
+        s.push_str(&format!(
+            ",\"busy_us\":{},\"bubble_frac\":{}",
+            self.busy_us,
+            fmt_f64(self.bubble_frac)
+        ));
+        s.push_str(&format!(
+            ",\"drains\":{},\"drain_us\":{},\"replans\":{},\"replan_us\":{}",
+            self.drains, self.drain_us, self.replans, self.replan_us
+        ));
+        s.push_str(&format!(
+            ",\"staleness_last\":{},\"staleness_max\":{}",
+            self.staleness_last, self.staleness_max
+        ));
+        s.push_str(&format!(
+            ",\"lat_window\":{{\"n\":{},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{}}}",
+            self.window_n, self.p50_us, self.p95_us, self.p99_us
+        ));
+        s.push_str(",\"devices\":[");
+        for (i, d) in self.devices.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"worker\":{},\"stage\":{},\"busy_us\":{},\"spans\":{},\"util\":{}}}",
+                d.worker,
+                d.stage,
+                d.busy_us,
+                d.spans,
+                fmt_f64(d.util)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Appends JSON-lines [`Snapshot`] records to a file (`--metrics-out`).
+/// The first line is a header carrying the schema tag and the cadence.
+pub struct SnapshotWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    path: String,
+}
+
+impl SnapshotWriter {
+    /// Create/truncate `path` and write the stream header.
+    pub fn create(path: &str, interval_arrivals: u64) -> Result<Self> {
+        let f = match std::fs::File::create(path) {
+            Ok(f) => f,
+            Err(e) => bail!("obs: cannot create metrics stream {path}: {e}"),
+        };
+        let mut w = SnapshotWriter { out: std::io::BufWriter::new(f), path: path.to_string() };
+        let hdr = format!(
+            "{{\"schema\":\"{SNAPSHOT_SCHEMA}\",\"interval_arrivals\":{interval_arrivals}}}"
+        );
+        w.line(&hdr)?;
+        Ok(w)
+    }
+
+    fn line(&mut self, s: &str) -> Result<()> {
+        if let Err(e) = writeln!(self.out, "{s}").and_then(|_| self.out.flush()) {
+            bail!("obs: writing metrics stream {}: {e}", self.path);
+        }
+        Ok(())
+    }
+
+    /// Append one snapshot record (flushed — the stream is for tailing).
+    pub fn write(&mut self, snap: &Snapshot) -> Result<()> {
+        self.line(&snap.to_json_line())
+    }
+}
+
+/// Perfetto export maps engine-scope spans (drain/re-plan) to this pid
+/// so they get their own track instead of colliding with a worker.
+const CHROME_ENGINE_PID: u64 = 99;
+
+/// Write spans as Chrome trace-event JSON (complete `"ph":"X"` events;
+/// `ts`/`dur` in microseconds, `pid` = worker, `tid` = stage). The file
+/// opens directly in `ui.perfetto.dev` or `chrome://tracing`.
+pub fn write_chrome_trace(path: &str, spans: &[Span]) -> Result<()> {
+    let f = match std::fs::File::create(path) {
+        Ok(f) => f,
+        Err(e) => bail!("obs: cannot create span trace {path}: {e}"),
+    };
+    let mut out = std::io::BufWriter::new(f);
+    let mut sorted: Vec<&Span> = spans.iter().collect();
+    sorted.sort_by_key(|s| (s.start_us, s.device, s.kind.idx(), s.mb));
+    let mut write = |s: String| -> Result<()> {
+        if let Err(e) = out.write_all(s.as_bytes()) {
+            bail!("obs: writing span trace {path}: {e}");
+        }
+        Ok(())
+    };
+    write("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[".into())?;
+    // name the engine track so the drain/re-plan lane reads at a glance
+    write(format!(
+        "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{CHROME_ENGINE_PID},\
+         \"args\":{{\"name\":\"engine (plan transitions)\"}}}}"
+    ))?;
+    for s in sorted {
+        let (pid, tid) = if s.device == ENGINE_DEVICE {
+            (CHROME_ENGINE_PID, 0)
+        } else {
+            (s.device.0 as u64, s.device.1 as u64)
+        };
+        write(format!(
+            ",{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{pid},\
+             \"tid\":{tid},\"args\":{{\"mb\":{},\"version\":{}}}}}",
+            s.kind.name(),
+            s.start_us,
+            s.end_us - s.start_us,
+            s.mb,
+            s.version
+        ))?;
+    }
+    write("]}".into())?;
+    if let Err(e) = out.flush() {
+        bail!("obs: flushing span trace {path}: {e}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_recorder_records_nothing() {
+        let mut r = Recorder::default();
+        assert!(!r.is_on());
+        r.record((0, 0), SpanKind::Fwd, 1, 0, 10, 0);
+        r.gauge_staleness(3);
+        r.note_latency(100);
+        assert!(r.spans().is_empty());
+        let s = r.snapshot(1000);
+        assert_eq!(s.busy_us, 0);
+        assert!(s.devices.is_empty());
+        assert_eq!(s.bubble_frac, 0.0, "no devices -> no bubble claim");
+    }
+
+    #[test]
+    fn accounting_folds_incrementally_and_canonically() {
+        let mut r = Recorder::on();
+        // record out of device order: the snapshot must still iterate
+        // devices canonically
+        r.record((1, 0), SpanKind::Fwd, 0, 0, 10, 0);
+        r.record((0, 0), SpanKind::Fwd, 0, 0, 20, 0);
+        r.record((0, 0), SpanKind::Bwd, 0, 20, 50, 0);
+        r.record((0, 1), SpanKind::Update, 2, 60, 60, 1);
+        r.record(ENGINE_DEVICE, SpanKind::Drain, 0, 70, 90, 0);
+        r.record(ENGINE_DEVICE, SpanKind::Replan, 0, 90, 95, 0);
+        r.gauge_staleness(2);
+        r.gauge_staleness(1);
+        let s = r.snapshot(100);
+        assert_eq!(
+            s.devices.iter().map(|d| (d.worker, d.stage)).collect::<Vec<_>>(),
+            vec![(0, 0), (0, 1), (1, 0)]
+        );
+        assert_eq!(s.busy_us, 50 + 0 + 10, "engine stalls are not device busy time");
+        assert_eq!(s.devices[0].busy_us, 50);
+        assert_eq!(s.devices[0].spans, 2);
+        assert_eq!(s.drain_us, 20);
+        assert_eq!(s.replan_us, 5);
+        assert_eq!((s.drains, s.replans), (1, 1));
+        assert_eq!((s.staleness_last, s.staleness_max), (1, 2));
+        let expect = 1.0 - 60.0 / 300.0;
+        assert!((s.bubble_frac - expect).abs() < 1e-12, "{}", s.bubble_frac);
+        // spans() lists engine-scope spans last (usize::MAX sorts high)
+        let spans = r.spans();
+        assert_eq!(spans.len(), 6);
+        assert_eq!(spans.last().unwrap().kind, SpanKind::Replan);
+    }
+
+    #[test]
+    fn ring_bounds_spans_but_keeps_totals_exact() {
+        let mut r = Recorder::on();
+        let n = (SPAN_CAP + 100) as u64;
+        for i in 0..n {
+            r.record((0, 0), SpanKind::Fwd, i, i * 10, i * 10 + 5, 0);
+        }
+        assert_eq!(r.spans().len(), SPAN_CAP);
+        assert_eq!(r.evicted(), 100);
+        // oldest evicted, newest kept
+        assert_eq!(r.spans().last().unwrap().mb, n - 1);
+        assert_eq!(r.spans()[0].mb, 100);
+        // busy accounting covers evicted spans too
+        assert_eq!(r.snapshot(n * 10).busy_us, n * 5);
+    }
+
+    #[test]
+    fn latency_window_slides_and_percentiles_are_safe() {
+        let mut r = Recorder::on();
+        assert_eq!(r.snapshot(10).p50_us, 0, "empty window must not panic");
+        r.note_latency(42);
+        let s = r.snapshot(10);
+        assert_eq!((s.window_n, s.p50_us, s.p99_us), (1, 42, 42));
+        for i in 0..(WINDOW_CAP as u64 + 50) {
+            r.note_latency(i);
+        }
+        let s = r.snapshot(10);
+        assert_eq!(s.window_n, WINDOW_CAP);
+        // the 42 and the first 50 samples have slid out
+        assert!(s.p50_us >= 50);
+    }
+
+    #[test]
+    fn snapshot_json_line_parses_and_carries_fields() {
+        let mut r = Recorder::on();
+        r.record((0, 0), SpanKind::Fwd, 7, 0, 10, 3);
+        let mut s = r.snapshot(20);
+        s.oacc = 62.5;
+        s.ledger_bytes = 1024;
+        s.arrivals = 9;
+        let j = crate::trace::json::parse(&s.to_json_line()).expect("valid json");
+        assert_eq!(j.get("t_us").and_then(|v| v.as_f64()), Some(20.0));
+        assert_eq!(j.get("oacc").and_then(|v| v.as_f64()), Some(62.5));
+        assert_eq!(j.get("ledger_bytes").and_then(|v| v.as_f64()), Some(1024.0));
+        let devs = j.get("devices").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].get("busy_us").and_then(|v| v.as_f64()), Some(10.0));
+        assert!(j.get("lat_window").is_some());
+    }
+
+    #[test]
+    fn snapshot_writer_streams_json_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("ferret_obs_stream_test.jsonl");
+        let path = path.to_str().unwrap();
+        let mut w = SnapshotWriter::create(path, 8).unwrap();
+        let mut r = Recorder::on();
+        r.record((0, 0), SpanKind::Fwd, 0, 0, 10, 0);
+        w.write(&r.snapshot(10)).unwrap();
+        w.write(&r.snapshot(20)).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 snapshots");
+        let hdr = crate::trace::json::parse(lines[0]).unwrap();
+        assert_eq!(hdr.get("schema").and_then(|v| v.as_str()), Some(SNAPSHOT_SCHEMA));
+        assert_eq!(hdr.get("interval_arrivals").and_then(|v| v.as_f64()), Some(8.0));
+        for l in &lines[1..] {
+            crate::trace::json::parse(l).expect("snapshot line is valid json");
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_one_event_per_span() {
+        let mut r = Recorder::on();
+        r.record((0, 0), SpanKind::Fwd, 1, 5, 15, 0);
+        r.record((1, 2), SpanKind::Bwd, 1, 20, 50, 4);
+        r.record(ENGINE_DEVICE, SpanKind::Drain, 0, 60, 80, 0);
+        let dir = std::env::temp_dir();
+        let path = dir.join("ferret_obs_chrome_test.json");
+        let path = path.to_str().unwrap();
+        write_chrome_trace(path, &r.spans()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let j = crate::trace::json::parse(&text).expect("chrome trace is one json doc");
+        let evs = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // metadata record + 3 spans
+        assert_eq!(evs.len(), 4);
+        let fwd = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|v| v.as_str()) == Some("Fwd"))
+            .unwrap();
+        assert_eq!(fwd.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(fwd.get("ts").and_then(|v| v.as_f64()), Some(5.0));
+        assert_eq!(fwd.get("dur").and_then(|v| v.as_f64()), Some(10.0));
+        assert_eq!(fwd.get("pid").and_then(|v| v.as_f64()), Some(0.0));
+        let drain = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|v| v.as_str()) == Some("Drain"))
+            .unwrap();
+        assert_eq!(drain.get("pid").and_then(|v| v.as_f64()), Some(99.0));
+        let _ = std::fs::remove_file(path);
+    }
+}

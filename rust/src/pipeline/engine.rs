@@ -38,6 +38,7 @@ use crate::compensate::{make, CompContext, CompKind, CompParams, Compensator};
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::RunMetrics;
 use crate::model::{GradBuf, LiveParams, SharedParams, StashSet};
+use crate::obs::{Recorder, SpanKind};
 use crate::ocl::{OclCtx, OclPlugin, PluginCell};
 use crate::pipeline::executor::{
     recycle_grad, recycle_params, AugmentSpec, DeviceTask, Executor, LossSpec, StageCell,
@@ -195,6 +196,15 @@ pub struct AsyncEngine<'a> {
     /// `augment` hook runs on the owning device thread instead of the
     /// scheduler's admit path
     augment_cell: Option<PluginCell>,
+    /// opt-in span recorder (see [`crate::obs`]); survives plan
+    /// transitions so one run yields one contiguous timeline. Disabled
+    /// (`Recorder::Off`) every call below is a no-op enum match.
+    pub(crate) obs: Recorder,
+    /// always-on device busy-time accumulator in clock ticks (lockstep:
+    /// the replayed analytic service costs — deterministic and
+    /// executor-independent; freerun: measured flight service times). The
+    /// session folds it into [`crate::metrics::RunMetrics::busy_us`].
+    pub(crate) busy_ticks: u64,
 }
 
 /// Accumulated measured forward/backward service times of one stage
@@ -292,6 +302,8 @@ impl<'a> AsyncEngine<'a> {
             ws: Workspace::serial(),
             loss_offload: false,
             augment_cell: None,
+            obs: Recorder::default(),
+            busy_ticks: 0,
         }
     }
 
@@ -457,7 +469,10 @@ impl<'a> AsyncEngine<'a> {
                     // re-plan's profile refresh is exact (and deterministic)
                     self.meas[s].tb_sum += self.sched.stages[s].tb;
                     self.meas[s].tb_n += 1;
-                    self.sched.dispatch(w, s, t + dur.max(1), job, true);
+                    let end = t + dur.max(1);
+                    self.busy_ticks += end - t;
+                    self.obs.record((w, s), SpanKind::Bwd, self.sched.jobs[job].seq, t, end, ver);
+                    self.sched.dispatch(w, s, end, job, true);
                     return;
                 }
                 WorkSel::Fwd(job) => {
@@ -471,6 +486,15 @@ impl<'a> AsyncEngine<'a> {
                     let end = t + self.sched.stages[s].tf.max(1);
                     self.meas[s].tf_sum += self.sched.stages[s].tf;
                     self.meas[s].tf_n += 1;
+                    self.busy_ticks += end - t;
+                    self.obs.record(
+                        (w, s),
+                        SpanKind::Fwd,
+                        self.sched.jobs[job].seq,
+                        t,
+                        end,
+                        self.sched.jobs[job].fwd_version[s],
+                    );
                     self.sched.dispatch(w, s, end, job, false);
                     return;
                 }
@@ -529,6 +553,8 @@ impl<'a> AsyncEngine<'a> {
         }
         self.sched.version[s] += 1;
         let new_ver = self.sched.version[s];
+        self.obs.gauge_staleness(tau);
+        self.obs.record((w, s), SpanKind::Update, count, t, t, new_ver);
         for evicted in self.stash.push_stage(&layers, new_ver, &self.params) {
             recycle_params(&self.ws, evicted);
         }
@@ -766,7 +792,9 @@ impl<'a> AsyncEngine<'a> {
                 let bx = self.pooled_copy(&self.sched.jobs[job].batch_x);
                 io.metrics
                     .record_prediction(t, crate::backend::accuracy(io.ctx.classes, &logits, &y));
-                io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                let lat = t.saturating_sub(self.sched.jobs[job].arrival);
+                io.metrics.record_latency(lat);
+                self.obs.note_latency(lat);
                 let (gl, loss) = io.plugin.loss_grad(&logits, &y, &bx, &io.ctx);
                 io.metrics.record_loss(t, loss);
                 self.ws.pool.put(logits);
@@ -1062,6 +1090,8 @@ impl<'a> AsyncEngine<'a> {
     ) {
         self.flights -= 1;
         let (flight, dispatched) = self.sched.complete_flight(w, s, t);
+        // measured service time of this flight, whatever its kind
+        self.busy_ticks += t.saturating_sub(dispatched);
         let p = self.sched.num_stages();
         match flight {
             Flight::Fwd { job } => {
@@ -1069,6 +1099,18 @@ impl<'a> AsyncEngine<'a> {
                 self.meas[s].tf_sum += t.saturating_sub(dispatched);
                 self.meas[s].tf_n += 1;
                 let result = out.into_stage();
+                if self.obs.is_on() {
+                    // carve the measured augment prefix out of the forward
+                    // span (stage-0 offloaded augmentation runs first on
+                    // the device thread; `aug_us` is 0 everywhere else)
+                    let seq = self.sched.jobs[job].seq;
+                    let ver = self.sched.jobs[job].fwd_version[s];
+                    let aug_end = dispatched.saturating_add(result.aug_us).min(t);
+                    if result.aug_us > 0 {
+                        self.obs.record((w, s), SpanKind::Augment, seq, dispatched, aug_end, ver);
+                    }
+                    self.obs.record((w, s), SpanKind::Fwd, seq, aug_end, t, ver);
+                }
                 if let Some(aug) = result.augmented {
                     // adopt the device-augmented batch as the job's
                     // identity: rows/labels (replay mixing may have
@@ -1092,7 +1134,9 @@ impl<'a> AsyncEngine<'a> {
                     // scheduler-side CE path would produce)
                     let logits = result.out;
                     io.metrics.record_prediction(t, acc);
-                    io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                    let lat = t.saturating_sub(self.sched.jobs[job].arrival);
+                    io.metrics.record_latency(lat);
+                    self.obs.note_latency(lat);
                     io.metrics.record_loss(t, loss);
                     self.ws.pool.put(logits);
                     self.sched.jobs[job].grad = Some(gl);
@@ -1104,7 +1148,9 @@ impl<'a> AsyncEngine<'a> {
                     let bx = self.pooled_copy(&self.sched.jobs[job].batch_x);
                     io.metrics
                         .record_prediction(t, crate::backend::accuracy(io.ctx.classes, &logits, &y));
-                    io.metrics.record_latency(t.saturating_sub(self.sched.jobs[job].arrival));
+                    let lat = t.saturating_sub(self.sched.jobs[job].arrival);
+                    io.metrics.record_latency(lat);
+                    self.obs.note_latency(lat);
                     let (gl, loss) = io.plugin.loss_grad(&logits, &y, &bx, &io.ctx);
                     io.metrics.record_loss(t, loss);
                     self.ws.pool.put(logits);
@@ -1117,6 +1163,14 @@ impl<'a> AsyncEngine<'a> {
                 self.meas[s].tb_sum += t.saturating_sub(dispatched);
                 self.meas[s].tb_n += 1;
                 let result = out.into_stage();
+                self.obs.record(
+                    (w, s),
+                    SpanKind::Bwd,
+                    self.sched.jobs[job].seq,
+                    dispatched,
+                    t,
+                    self.sched.jobs[job].fwd_version[s],
+                );
                 let grads = result.grads.expect("bwd grads");
                 let gx = result.out;
                 self.accumulate(w, s, job, grads);
@@ -1135,6 +1189,15 @@ impl<'a> AsyncEngine<'a> {
             Flight::Update { arrivals } => {
                 let outcome = out.into_update();
                 io.metrics.record_staleness(outcome.staleness);
+                self.obs.gauge_staleness(outcome.staleness);
+                self.obs.record(
+                    (w, s),
+                    SpanKind::Update,
+                    arrivals.len() as u64,
+                    dispatched,
+                    t,
+                    outcome.new_version,
+                );
                 let frac = self.sched.stages[s].params as f64 / self.total_params as f64;
                 for a in arrivals {
                     io.metrics.record_update(t.saturating_sub(a), self.decay_c, frac);

@@ -172,6 +172,11 @@ pub struct StageOutput {
     pub loss: Option<(Vec<f32>, f32, f64)>,
     /// present iff the task carried an [`AugmentSpec`]
     pub augmented: Option<AugmentedBatch>,
+    /// wall microseconds the offloaded augment hook took on the device
+    /// thread (0 when no [`AugmentSpec`] rode along — lockstep never sets
+    /// one, so replayed timelines stay deterministic). The engine's span
+    /// recorder carves this prefix out of the forward span.
+    pub aug_us: u64,
 }
 
 /// Live state of one pipeline stage, shared between the scheduler thread
@@ -406,7 +411,9 @@ pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> S
     match task.gout {
         None => {
             let mut h = task.x;
+            let mut aug_us = 0u64;
             let augmented = task.augment.map(|spec| {
+                let aug_t0 = std::time::Instant::now();
                 // offloaded augment hook: lock the shared plugin, run it
                 // on the raw rows, and keep pooled copies of the result
                 // for the scheduler to adopt (batch identity + stage-0
@@ -425,6 +432,7 @@ pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> S
                 x.copy_from_slice(&h);
                 let mut x_input = ws.pool.take(h.len());
                 x_input.copy_from_slice(&h);
+                aug_us = aug_t0.elapsed().as_micros() as u64;
                 AugmentedBatch { x, x_input, y: batch.y }
             });
             // forward the stage's layer chain
@@ -440,7 +448,7 @@ pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> S
                 let acc = crate::backend::accuracy(spec.classes, &h, labels);
                 (gl, l, acc)
             });
-            StageOutput { out: h, grads: None, loss, augmented }
+            StageOutput { out: h, grads: None, loss, augmented, aug_us }
         }
         Some(gout) => {
             // recompute inner activations from the stage input (T1-style;
@@ -479,6 +487,7 @@ pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> S
                 grads: Some(grads.into_iter().map(Option::unwrap).collect()),
                 loss: None,
                 augmented: None,
+                aug_us: 0,
             }
         }
     }

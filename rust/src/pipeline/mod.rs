@@ -7,7 +7,8 @@
 //! ticks; data arrives every `t^d` ticks (one microbatch per arrival, the
 //! paper's `D^t`).
 //!
-//! The subsystem is split into five layers:
+//! The subsystem is split into five layers, plus a cross-cutting
+//! observability layer:
 //!
 //!   - [`sched`]    — the reusable scheduling core: event queue, 1F1B
 //!     backward-preemption priority, microbatch→worker routing, per-stage
@@ -43,6 +44,20 @@
 //!     `metrics()`, imperative `set_budget`, `finish`. Input comes from
 //!     any [`crate::stream::Stream`] (via `run_stream`) or from hand-fed
 //!     batches; `run_async`/`run_async_with` remain as thin shims.
+//!   - [`crate::obs`] — the observability layer over all of the above.
+//!     Both engines' dispatch/completion paths emit per-device
+//!     Fwd/Bwd/Update/Augment spans (and the transition protocol emits
+//!     Drain/Replan spans) into an opt-in [`crate::obs::Recorder`]
+//!     stamped from the run's [`Clock`] — deterministic virtual ticks in
+//!     lockstep, real microseconds in freerun. Derived accounting
+//!     (per-device utilization, bubble fraction, stall attribution, a
+//!     live staleness gauge, windowed latency percentiles) is exposed
+//!     live via [`Session::obs_snapshot`], streamed as JSON lines
+//!     (`--metrics-out`), or exported as a Perfetto/Chrome trace
+//!     (`--span-trace`). Always-on (recorder-independent) busy/device
+//!     time totals land in [`RunMetrics::busy_us`] /
+//!     [`RunMetrics::device_us`], so `ferret replay --gate` can catch
+//!     utilization regressions.
 //!
 //! Under a dynamic [`crate::budget::BudgetSchedule`], the async engine is
 //! **phase-structured**: each phase runs one plan; a schedule step (or a

@@ -342,7 +342,11 @@ impl SchedCore {
     /// Freerun dispatch at wall time `t`: the device is busy until its
     /// real completion arrives (no virtual `Done` event); remember what
     /// flew — and when — so the completion can be paired FIFO and the
-    /// service time measured.
+    /// service time measured. The `(flight, t)` stamp returned later by
+    /// [`SchedCore::complete_flight`] doubles as the span interval for
+    /// the observability recorder ([`crate::obs`]) and as the busy-time
+    /// increment behind utilization accounting — it is the single source
+    /// of truth for "device (w, s) worked from `t` to completion".
     pub fn dispatch_flight(&mut self, w: usize, s: usize, flight: Flight, t: u64) {
         self.slots[w][s].busy_until = u64::MAX;
         self.slots[w][s].flight.push_back((flight, t));

@@ -64,6 +64,7 @@ use crate::budget::{BudgetSchedule, BudgetState};
 use crate::compensate::CompKind;
 use crate::config::{LayerShape, ModelSpec};
 use crate::metrics::{eval_tacc, RunMetrics};
+use crate::obs::SpanKind as ObsSpanKind;
 use crate::ocl::{OclCtx, OclPlugin, PluginCell, Vanilla};
 use crate::pipeline::engine::{AsyncCfg, AsyncEngine, EngineIo};
 use crate::pipeline::executor::{Executor, ExecutorKind, SimExecutor, ThreadedExecutor};
@@ -158,6 +159,14 @@ pub struct SessionBuilder<'a> {
     trace_path: Option<String>,
     /// pre-built trace sink; takes precedence over `trace_path`
     trace_writer: Option<TraceWriter>,
+    /// enable the span recorder without any export
+    /// ([`SessionBuilder::record_spans`])
+    record_spans: bool,
+    /// Chrome trace-event export destination ([`SessionBuilder::span_trace`])
+    span_trace: Option<String>,
+    /// snapshot-stream destination + cadence in arrivals
+    /// ([`SessionBuilder::metrics_out`])
+    metrics_out: Option<(String, u64)>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -252,6 +261,36 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Enable the span recorder (see [`crate::obs`]) without exporting
+    /// anything: per-device span timelines and the derived pipeline
+    /// accounting become observable live via [`Session::obs_snapshot`].
+    /// Implied by [`SessionBuilder::span_trace`] and
+    /// [`SessionBuilder::metrics_out`]. Default off — a disabled recorder
+    /// is a single no-op enum match on the hot path.
+    pub fn record_spans(mut self) -> Self {
+        self.record_spans = true;
+        self
+    }
+
+    /// Export the recorded spans as Chrome trace-event JSON at `path`
+    /// when the session finishes — open it in `ui.perfetto.dev` (see
+    /// [`crate::obs::write_chrome_trace`]). Implies span recording.
+    pub fn span_trace(mut self, path: &str) -> Self {
+        self.span_trace = Some(path.to_string());
+        self
+    }
+
+    /// Stream one [`crate::obs::Snapshot`] JSON line to `path` every
+    /// `interval` stream arrivals, plus a final record at finish. The
+    /// cadence counts arrivals, not wall time, so a lockstep stream
+    /// replays an identical snapshot sequence. Implies span recording;
+    /// `interval == 0` reads as 1. The file is created at build time with
+    /// a schema header (see the [`crate::obs`] module docs).
+    pub fn metrics_out(mut self, path: &str, interval: u64) -> Self {
+        self.metrics_out = Some((path.to_string(), interval.max(1)));
+        self
+    }
+
     /// Validate and assemble the session. Returns a typed error (never
     /// panics) when the configuration cannot run: zero batch rows, a
     /// partition that does not cover the model, worker knob vectors of the
@@ -272,6 +311,9 @@ impl<'a> SessionBuilder<'a> {
             measured_reps,
             trace_path,
             trace_writer,
+            record_spans,
+            span_trace,
+            metrics_out,
         } = self;
         let mut plugin = plugin;
         if batch == 0 {
@@ -396,6 +438,19 @@ impl<'a> SessionBuilder<'a> {
         let ws = Workspace::new(BufferPool::new(), kthreads);
         engine.set_workspace(ws.clone());
 
+        // span recording: any observability consumer turns it on; without
+        // one the engine keeps the no-op recorder (pinned overhead-free by
+        // the perf-compare gate)
+        if record_spans || span_trace.is_some() || metrics_out.is_some() {
+            engine.obs = crate::obs::Recorder::on();
+        }
+        let (snap_writer, snap_interval) = match &metrics_out {
+            Some((path, interval)) => {
+                (Some(crate::obs::SnapshotWriter::create(path, *interval)?), *interval)
+            }
+            None => (None, 1),
+        };
+
         // trace header: written at build time so even an aborted run leaves
         // a parseable (if truncated) artifact. Records the *resolved* td
         // and kernel-thread count, and the plan the engine will actually
@@ -487,6 +542,11 @@ impl<'a> SessionBuilder<'a> {
             drain_from: None,
             test,
             tracer,
+            span_trace,
+            snap_writer,
+            snap_interval,
+            snap_pending: 0,
+            device_mark: 0,
         })
     }
 }
@@ -537,6 +597,18 @@ pub struct Session<'a> {
     test: Option<TestSet>,
     /// trace artifact sink; None when the session is not being recorded
     tracer: Option<TraceWriter>,
+    /// Chrome trace-event export destination, written at finish
+    span_trace: Option<String>,
+    /// observability snapshot streamer (`--metrics-out`)
+    snap_writer: Option<crate::obs::SnapshotWriter>,
+    /// snapshot cadence in stream arrivals (>= 1)
+    snap_interval: u64,
+    /// arrivals since the last streamed snapshot
+    snap_pending: u64,
+    /// clock stamp up to which device-time has been integrated into
+    /// [`RunMetrics::device_us`] (advanced at each re-plan — the device
+    /// set can change there — and closed out at finish)
+    device_mark: u64,
 }
 
 /// Assemble the per-step [`EngineIo`] bundle from the session's disjoint
@@ -578,6 +650,9 @@ impl<'a> Session<'a> {
             measured_reps: 0,
             trace_path: None,
             trace_writer: None,
+            record_spans: false,
+            span_trace: None,
+            metrics_out: None,
         }
     }
 
@@ -662,6 +737,58 @@ impl<'a> Session<'a> {
         self.ws.pool.stats()
     }
 
+    /// Live observability snapshot at the clock's current reading:
+    /// per-device busy time and utilization, bubble fraction, drain /
+    /// re-plan stall attribution, the staleness gauge, and latency
+    /// percentiles over a sliding window — all from the span recorder
+    /// (zeros unless the builder enabled recording via
+    /// [`SessionBuilder::record_spans`] / [`SessionBuilder::span_trace`] /
+    /// [`SessionBuilder::metrics_out`]) — plus metrics-side counters
+    /// (online accuracy so far, measured ledger bytes, buffer-pool stats,
+    /// arrival/train/drop counts) that are live either way.
+    pub fn obs_snapshot(&self) -> crate::obs::Snapshot {
+        let now = match self.mode {
+            Mode::Lockstep => self.vclock.now(),
+            Mode::Freerun => self.wclock.as_ref().map_or(0, |c| c.now()),
+        };
+        self.snapshot_at(now)
+    }
+
+    /// Recorder-side snapshot at `now`, completed with the metrics-side
+    /// fields only the session can see.
+    fn snapshot_at(&self, now: u64) -> crate::obs::Snapshot {
+        let mut s = self.engine.obs.snapshot(now);
+        s.oacc = self.metrics.oacc.value();
+        s.ledger_bytes = self.engine.ledger_snapshot().total() as u64;
+        let pool = self.ws.pool.stats();
+        s.pool_takes = pool.takes;
+        s.pool_misses = pool.misses;
+        s.pool_puts = pool.puts;
+        s.arrivals = self.metrics.arrivals();
+        s.trained = self.metrics.trained;
+        s.dropped = self.metrics.dropped;
+        s
+    }
+
+    /// Count one arrival against the snapshot-stream cadence and append a
+    /// record if due. A failing telemetry sink must not abort training,
+    /// so write errors are swallowed here (creation errors still surface
+    /// at build time).
+    fn tick_snapshot_stream(&mut self, now: u64) {
+        if self.snap_writer.is_none() {
+            return;
+        }
+        self.snap_pending += 1;
+        if self.snap_pending < self.snap_interval {
+            return;
+        }
+        self.snap_pending = 0;
+        let snap = self.snapshot_at(now);
+        if let Some(w) = self.snap_writer.as_mut() {
+            let _ = w.write(&snap);
+        }
+    }
+
     /// Imperatively change the memory budget: arms the drain → re-plan →
     /// transition protocol exactly as a `--budget-schedule` step would
     /// (in-flight microbatches finish under the old plan, learned weights
@@ -712,6 +839,21 @@ impl<'a> Session<'a> {
         self.metrics.ledger.observe(self.engine.ledger_snapshot());
         debug_assert_eq!(self.engine.sched.inflight, 0, "every admitted job retired");
 
+        // close the observability accounting at the final clock reading:
+        // flush the engine's always-on busy counter and integrate the last
+        // phase's device-time (both are live whether or not the span
+        // recorder is on, so replays reproduce them too)
+        let t_end = match self.mode {
+            Mode::Lockstep => self.vclock.now(),
+            Mode::Freerun => self.wclock.as_ref().map_or(0, |c| c.now()),
+        };
+        self.metrics.integrate_device_time(
+            self.engine.devices().len(),
+            t_end.saturating_sub(self.device_mark),
+        );
+        self.device_mark = t_end;
+        self.metrics.busy_us = self.engine.busy_ticks;
+
         // analytic memory (Eq. 4) + plugin + compensator state
         self.metrics.mem_bytes =
             mem_footprint(&self.engine.cfg.partition, &self.prof, &self.engine.cfg.pipe)
@@ -737,7 +879,22 @@ impl<'a> Session<'a> {
                 p95: self.metrics.latency_percentile(95.0),
                 p99: self.metrics.latency_percentile(99.0),
                 oacc_curve: self.metrics.oacc.curve.clone(),
+                busy_us: self.metrics.busy_us,
+                device_us: self.metrics.device_us,
             });
+        }
+        // final observability exports: one closing snapshot on the metrics
+        // stream, and the Perfetto/Chrome span trace
+        if self.snap_writer.is_some() {
+            let snap = self.snapshot_at(t_end);
+            if let Some(w) = self.snap_writer.as_mut() {
+                let _ = w.write(&snap);
+            }
+        }
+        if let Some(path) = self.span_trace.take() {
+            if let Err(e) = crate::obs::write_chrome_trace(&path, &self.engine.obs.spans()) {
+                eprintln!("ferret: span trace export failed: {e}");
+            }
         }
         // moving the metrics out drops the executor, which joins every
         // device thread — nothing survives the session
@@ -840,6 +997,7 @@ impl<'a> Session<'a> {
         let seq = self.arrived;
         self.arrived += 1;
         self.arrive_scheduled = false;
+        self.tick_snapshot_stream(t);
         // advance the budget cursor even mid-drain so the pending re-plan
         // sees the newest budget in force
         let stepped = self.budget.step_due(seq, 0);
@@ -916,6 +1074,16 @@ impl<'a> Session<'a> {
     /// silently diverge between them. `t0` is when the drain began; `now`
     /// stamps the transition.
     fn replan(&mut self, t0: u64, now: u64) {
+        // stall attribution: the drain span covers held admissions; the
+        // re-plan ordinal ties both spans to this transition
+        let ordinal = self.metrics.replans;
+        self.engine.obs.record(crate::obs::ENGINE_DEVICE, ObsSpanKind::Drain, ordinal, t0, now, 0);
+        // close out the old plan's device-time integral before the device
+        // set changes (utilization is defined phase-by-phase against the
+        // devices that were actually live)
+        self.metrics
+            .integrate_device_time(self.engine.devices().len(), now.saturating_sub(self.device_mark));
+        self.device_mark = now;
         let refreshed = self.engine.refreshed_profile(&self.prof);
         let out = plan(&refreshed, self.td, self.budget.current(), self.decay);
         if let Some(tr) = self.tracer.as_mut() {
@@ -939,6 +1107,13 @@ impl<'a> Session<'a> {
             });
         }
         self.engine.transition(&out, &refreshed, &mut *self.executor);
+        // the re-plan span: zero-width in lockstep (the transition is
+        // atomic in virtual time), measured microseconds in freerun
+        let end = match self.mode {
+            Mode::Lockstep => now,
+            Mode::Freerun => self.wclock.as_ref().map_or(now, |c| c.now()),
+        };
+        self.engine.obs.record(crate::obs::ENGINE_DEVICE, ObsSpanKind::Replan, ordinal, now, end, 0);
         self.metrics.record_replan(now, now.saturating_sub(t0), out.mem_bytes);
         self.metrics.exec_threads = self.metrics.exec_threads.max(self.executor.threads());
         self.drain_from = None;
@@ -971,6 +1146,7 @@ impl<'a> Session<'a> {
             // advance the budget cursor even mid-drain so the pending
             // re-plan sees the newest budget in force
             let now = self.wall_now();
+            self.tick_snapshot_stream(now);
             let stepped = self.budget.step_due(seq, now);
             let held = self.drain_from.is_some() || stepped;
             if let Some(tr) = self.tracer.as_mut() {

@@ -25,11 +25,22 @@ pub struct GateThresholds {
     pub replans: u64,
     /// max allowed plan churn (number of differing plan ids)
     pub plan_churn: u64,
+    /// max allowed |mean-utilization delta| (fraction of device time,
+    /// 0..1, from the finish record's busy/device-time accounting)
+    pub util: f64,
 }
 
 impl Default for GateThresholds {
     fn default() -> Self {
-        GateThresholds { oacc: 0.0, oacc_window: 0.0, tacc: 0.0, latency: 0, replans: 0, plan_churn: 0 }
+        GateThresholds {
+            oacc: 0.0,
+            oacc_window: 0.0,
+            tacc: 0.0,
+            latency: 0,
+            replans: 0,
+            plan_churn: 0,
+            util: 0.0,
+        }
     }
 }
 
@@ -66,6 +77,14 @@ pub struct ReplayDiff {
     pub dropped_delta: i64,
     /// signed measured-footprint delta in bytes (b - a)
     pub mem_delta: f64,
+    /// recorded mean utilization (busy_us / device_us; 0 when the trace
+    /// predates the observability fields)
+    pub util_a: f64,
+    /// replayed mean utilization
+    pub util_b: f64,
+    /// signed utilization delta (b - a); the bubble-fraction delta is its
+    /// negation, so one threshold gates both
+    pub util_delta: f64,
 }
 
 fn finish_or_zero(t: &Trace) -> FinishRec {
@@ -82,6 +101,8 @@ fn finish_or_zero(t: &Trace) -> FinishRec {
         p95: 0,
         p99: 0,
         oacc_curve: Vec::new(),
+        busy_us: 0,
+        device_us: 0,
     })
 }
 
@@ -103,6 +124,10 @@ impl ReplayDiff {
             .filter(|(x, y)| x.plan_id != y.plan_id)
             .count() as u64;
         plan_churn += ra.len().abs_diff(rb.len()) as u64;
+
+        let util =
+            |f: &FinishRec| if f.device_us == 0 { 0.0 } else { f.busy_us as f64 / f.device_us as f64 };
+        let (util_a, util_b) = (util(&fa), util(&fb));
 
         ReplayDiff {
             stream_ok,
@@ -127,6 +152,9 @@ impl ReplayDiff {
             trained_delta: fb.trained as i64 - fa.trained as i64,
             dropped_delta: fb.dropped as i64 - fa.dropped as i64,
             mem_delta: fb.mem_bytes - fa.mem_bytes,
+            util_a,
+            util_b,
+            util_delta: util_b - util_a,
         }
     }
 
@@ -146,6 +174,7 @@ impl ReplayDiff {
             && self.trained_delta == 0
             && self.dropped_delta == 0
             && self.mem_delta == 0.0
+            && self.util_delta == 0.0
     }
 
     /// Threshold violations, one human-readable line each; empty when the
@@ -188,6 +217,12 @@ impl ReplayDiff {
         if self.plan_churn > g.plan_churn {
             v.push(format!("plan churn {} exceeds {}", self.plan_churn, g.plan_churn));
         }
+        if self.util_delta.abs() > g.util {
+            v.push(format!(
+                "utilization delta {:+.4} exceeds {:.4} ({:.4} -> {:.4})",
+                self.util_delta, g.util, self.util_a, self.util_b
+            ));
+        }
         v
     }
 
@@ -199,7 +234,8 @@ impl ReplayDiff {
              \"oacc_delta\":{},\"oacc_window_max_delta\":{},\"tacc_delta\":{},\
              \"p50_delta\":{},\"p95_delta\":{},\"p99_delta\":{},\
              \"replans_a\":{},\"replans_b\":{},\"replan_delta\":{},\"plan_churn\":{},\
-             \"trained_delta\":{},\"dropped_delta\":{},\"mem_delta\":{},\"bit_for_bit\":{}}}",
+             \"trained_delta\":{},\"dropped_delta\":{},\"mem_delta\":{},\
+             \"util_a\":{},\"util_b\":{},\"util_delta\":{},\"bit_for_bit\":{}}}",
             self.stream_ok,
             self.batches_a,
             self.batches_b,
@@ -218,6 +254,9 @@ impl ReplayDiff {
             self.trained_delta,
             self.dropped_delta,
             fmt_f64(self.mem_delta),
+            fmt_f64(self.util_a),
+            fmt_f64(self.util_b),
+            fmt_f64(self.util_delta),
             self.is_zero(),
         )
     }
@@ -263,7 +302,26 @@ mod tests {
             latency: 100,
             replans: 1,
             plan_churn: 1,
+            util: 0.0,
         };
+        assert!(d.violations(&loose).is_empty());
+    }
+
+    #[test]
+    fn utilization_regressions_trip_the_gate() {
+        let a = tiny_trace();
+        let mut b = tiny_trace();
+        if let Some(f) = b.finish.as_mut() {
+            f.busy_us /= 2; // mean utilization 0.75 -> 0.375
+        }
+        let d = ReplayDiff::compute(&a, &b);
+        assert!((d.util_a - 0.75).abs() < 1e-12);
+        assert!((d.util_delta + 0.375).abs() < 1e-12);
+        assert!(!d.is_zero());
+        assert!(!d.violations(&GateThresholds::default()).is_empty());
+        assert!(d.to_json().contains("\"util_delta\":"));
+        // a tolerant utilization threshold absorbs it
+        let loose = GateThresholds { util: 0.5, ..Default::default() };
         assert!(d.violations(&loose).is_empty());
     }
 

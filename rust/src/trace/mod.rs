@@ -12,7 +12,7 @@
 //! | `stream` | ≤1          | the seeded [`StreamSpec`] the stream can be re-materialized from (absent for hand-fed streams) |
 //! | `batch`  | per batch   | sequence number, batch id, row count, FNV-1a content `hash`, `arrival` / `admitted` stamps, whether the batch was `held` by a drain |
 //! | `replan` | per replan  | drain window (`t0`..`t`), budget in force, the measured per-stage `tf`/`tb` means that seeded the planner, and the chosen plan: `plan_id`, partition bounds, active workers, predicted `mem_bytes` / `rate`, feasibility, winning `tc` |
-//! | `finish` | last line   | run outcome: final oacc/tacc, counts, latency percentiles, the full oacc curve |
+//! | `finish` | last line   | run outcome: final oacc/tacc, counts, latency percentiles, busy/device-time accounting (utilization), the full oacc curve |
 //!
 //! Serialization rules (so artifacts are stable and exactly re-parseable):
 //! u64 values that may exceed 2^53 are strings — seeds in decimal, content
@@ -205,6 +205,12 @@ pub struct FinishRec {
     pub p95: u64,
     pub p99: u64,
     pub oacc_curve: Vec<(u64, f64)>,
+    /// summed device busy time in clock ticks. Lockstep sums the replayed
+    /// analytic service costs, so it is deterministic and replays
+    /// bit-for-bit; `busy_us / device_us` is the run's mean utilization.
+    pub busy_us: u64,
+    /// integral of active-device count over run time (same ticks)
+    pub device_us: u64,
 }
 
 /// A batch or replan event, in recorded order (interleaving preserved so
@@ -473,6 +479,8 @@ impl FinishRec {
             .map(|(t, v)| format!("[{},{}]", t, json::fmt_f64(*v)))
             .collect();
         kv(&mut s, "oacc_curve", &format!("[{}]", pts.join(",")));
+        kv(&mut s, "busy_us", &self.busy_us.to_string());
+        kv(&mut s, "device_us", &self.device_us.to_string());
         s.push('}');
         s
     }
@@ -491,6 +499,10 @@ impl FinishRec {
             p95: u64_of(j, "p95")?,
             p99: u64_of(j, "p99")?,
             oacc_curve: curve_of(j, "oacc_curve")?,
+            // added after ferret-trace/1 shipped: parse leniently so
+            // pre-observability artifacts stay readable
+            busy_us: u64_or_zero(j, "busy_us")?,
+            device_us: u64_or_zero(j, "device_us")?,
         })
     }
 }
@@ -538,6 +550,15 @@ fn u64_of(j: &Json, k: &str) -> Result<u64> {
 
 fn usize_of(j: &Json, k: &str) -> Result<usize> {
     Ok(u64_of(j, k)? as usize)
+}
+
+/// Optional u64 defaulting to 0: fields added to a record after the
+/// schema shipped parse leniently so older artifacts stay readable.
+fn u64_or_zero(j: &Json, k: &str) -> Result<u64> {
+    if j.get(k).is_none() {
+        return Ok(0);
+    }
+    u64_of(j, k)
 }
 
 fn i64_of(j: &Json, k: &str) -> Result<i64> {
@@ -918,6 +939,8 @@ pub(crate) mod tests_support {
                 p95: 480,
                 p99: 520,
                 oacc_curve: vec![(40, 0.0), (80, 50.0), (1600, 62.5)],
+                busy_us: 2400,
+                device_us: 3200,
             }),
         }
     }
@@ -933,6 +956,19 @@ pub(crate) mod tests_support {
         assert_eq!(parsed.to_lines(), lines);
         assert_eq!(parsed.batches().len(), 2);
         assert_eq!(parsed.replans().len(), 1);
+    }
+
+    #[test]
+    fn finish_parses_without_observability_fields() {
+        // a pre-observability artifact has no busy_us/device_us on its
+        // finish line — it must still parse, with both defaulting to 0
+        let t = sample_trace();
+        let mut lines = t.to_lines();
+        let last = lines.last_mut().unwrap();
+        *last = last.replace(",\"busy_us\":2400", "").replace(",\"device_us\":3200", "");
+        let parsed = Trace::parse(&lines.join("\n")).unwrap();
+        let f = parsed.finish.unwrap();
+        assert_eq!((f.busy_us, f.device_us), (0, 0));
     }
 
     #[test]

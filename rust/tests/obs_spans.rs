@@ -1,0 +1,256 @@
+//! Span-recorder integration tests (see `ferret::obs`).
+//!
+//! The observability contract has two halves. In lockstep, spans are
+//! stamped from the virtual clock with analytic durations, so the
+//! exported trace is part of the determinism surface: bit-for-bit
+//! identical across executors and kernel-thread counts. In freerun,
+//! spans are real wall intervals, so only structure is pinned: stamps
+//! monotone, per-device lanes non-overlapping, and exactly one stage-0
+//! Fwd span per admitted (non-dropped) batch.
+
+use std::collections::HashMap;
+
+use ferret::backend::native::NativeBackend;
+use ferret::config::ModelSpec;
+use ferret::ocl::Vanilla;
+use ferret::pipeline::engine::{AsyncCfg, AsyncSchedule};
+use ferret::pipeline::executor::ExecutorKind;
+use ferret::pipeline::sched::Mode;
+use ferret::pipeline::{EngineParams, RunResult, Session};
+use ferret::planner::{Partition, Profile};
+use ferret::stream::{DriftKind, StreamSpec, SyntheticStream};
+use ferret::trace::json;
+
+fn model() -> ModelSpec {
+    ModelSpec { name: "t".into(), dims: vec![16, 32, 16, 4] }
+}
+
+fn stream(n: usize, seed: u64) -> SyntheticStream {
+    SyntheticStream::new(StreamSpec {
+        name: "obs".into(),
+        features: 16,
+        classes: 4,
+        batch: 8,
+        num_batches: n,
+        kind: DriftKind::Stationary,
+        margin: 3.0,
+        noise: 0.5,
+        seed,
+    })
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_str().unwrap().to_string()
+}
+
+/// Pipedream run with the span recorder exporting to `path`.
+fn span_run(
+    kind: ExecutorKind,
+    mode: Mode,
+    kernel_threads: usize,
+    n: usize,
+    td: u64,
+    path: &str,
+) -> RunResult {
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, td);
+    let ep = EngineParams { lr: 0.2, td, kernel_threads, ..Default::default() };
+    let mut plugin = Vanilla;
+    Session::builder(&NativeBackend, &m)
+        .config(cfg)
+        .plugin(&mut plugin)
+        .engine_params(ep)
+        .executor(kind)
+        .mode(mode)
+        .batch(8)
+        .span_trace(path)
+        .build()
+        .expect("session builds")
+        .run_stream(&mut stream(n, 17))
+        .expect("stream runs")
+}
+
+/// `"X"` events from a Chrome trace as (pid, tid, ts, dur, name).
+fn events(text: &str) -> Vec<(u64, u64, u64, u64, String)> {
+    let j = json::parse(text).expect("span trace is valid json");
+    let evs = j.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+    let num = |e: &json::Json, k: &str| e.get(k).and_then(|v| v.as_f64()).unwrap() as u64;
+    evs.iter()
+        .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+        .map(|e| {
+            let name = e.get("name").and_then(|v| v.as_str()).unwrap().to_string();
+            (num(e, "pid"), num(e, "tid"), num(e, "ts"), num(e, "dur"), name)
+        })
+        .collect()
+}
+
+#[test]
+fn lockstep_span_trace_is_identical_across_executors_and_kernel_threads() {
+    let n = 40;
+    let (pa, pb, pc) = (
+        tmp("obs_spans_sim.json"),
+        tmp("obs_spans_threaded.json"),
+        tmp("obs_spans_kt4.json"),
+    );
+    let ra = span_run(ExecutorKind::Sim, Mode::Lockstep, 1, n, 400, &pa);
+    let rb = span_run(ExecutorKind::Threaded, Mode::Lockstep, 1, n, 400, &pb);
+    let rc = span_run(ExecutorKind::Threaded, Mode::Lockstep, 4, n, 400, &pc);
+    let (a, b, c) = (
+        std::fs::read_to_string(&pa).unwrap(),
+        std::fs::read_to_string(&pb).unwrap(),
+        std::fs::read_to_string(&pc).unwrap(),
+    );
+    assert_eq!(a, b, "sim vs threaded lockstep span traces diverged");
+    assert_eq!(a, c, "kernel_threads changed the lockstep span trace");
+    // the trace is non-trivial and numerically consistent with the run
+    let evs = events(&a);
+    assert!(!evs.is_empty(), "lockstep run recorded no spans");
+    let fwd0 = evs.iter().filter(|e| e.4 == "Fwd" && e.1 == 0 && e.0 != 99).count();
+    assert_eq!(fwd0 as u64, n as u64, "lockstep admits every batch: one stage-0 Fwd each");
+    assert!(evs.iter().any(|e| e.4 == "Bwd"), "no backward spans recorded");
+    assert!(evs.iter().any(|e| e.4 == "Update"), "no update spans recorded");
+    assert_eq!(ra.metrics.oacc.value(), rb.metrics.oacc.value());
+    assert_eq!(ra.metrics.oacc.value(), rc.metrics.oacc.value());
+    for p in [pa, pb, pc] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn freerun_spans_are_monotone_nonoverlapping_and_count_admissions() {
+    let n = 60;
+    let path = tmp("obs_spans_freerun.json");
+    // slow arrivals relative to the tiny model keep the run drop-free-ish
+    let r = span_run(ExecutorKind::Threaded, Mode::Freerun, 1, n, 2000, &path);
+    let evs = events(&std::fs::read_to_string(&path).unwrap());
+    // exactly one stage-0 forward per admitted batch (drops are
+    // predict-only and never dispatched)
+    let fwd0 = evs.iter().filter(|e| e.4 == "Fwd" && e.1 == 0 && e.0 != 99).count();
+    assert_eq!(fwd0 as u64, n as u64 - r.metrics.dropped);
+    // per-device lanes: spans sorted by start must not overlap (each
+    // device runs one flight at a time); engine lane (pid 99) included
+    let mut lanes: HashMap<(u64, u64), Vec<(u64, u64)>> = HashMap::new();
+    for (pid, tid, ts, dur, _) in &evs {
+        lanes.entry((*pid, *tid)).or_default().push((*ts, *dur));
+    }
+    assert!(lanes.len() > 1, "expected more than one device lane");
+    for ((pid, tid), mut lane) in lanes {
+        lane.sort_unstable();
+        for w in lane.windows(2) {
+            let (s0, d0) = w[0];
+            let (s1, _) = w[1];
+            assert!(
+                s1 >= s0 + d0,
+                "device ({pid},{tid}): span at {s1} overlaps [{s0}, {})",
+                s0 + d0
+            );
+        }
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn metrics_out_streams_schema_header_and_deterministic_cadence() {
+    let n = 30;
+    let path = tmp("obs_spans_stream.jsonl");
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let part = Partition::per_layer(m.num_layers());
+    let cfg = AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, 400);
+    let ep = EngineParams { lr: 0.2, td: 400, ..Default::default() };
+    let mut plugin = Vanilla;
+    let r = Session::builder(&NativeBackend, &m)
+        .config(cfg)
+        .plugin(&mut plugin)
+        .engine_params(ep)
+        .executor(ExecutorKind::Sim)
+        .mode(Mode::Lockstep)
+        .batch(8)
+        .metrics_out(&path, 5)
+        .build()
+        .expect("session builds")
+        .run_stream(&mut stream(n, 23))
+        .expect("stream runs");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // header + one record per 5 arrivals + one final record at finish
+    assert_eq!(lines.len(), 1 + n / 5 + 1, "snapshot cadence is arrival-deterministic");
+    let hdr = json::parse(lines[0]).unwrap();
+    assert_eq!(hdr.get("schema").and_then(|v| v.as_str()), Some("ferret-obs/1"));
+    assert_eq!(hdr.get("interval_arrivals").and_then(|v| v.as_f64()), Some(5.0));
+    let mut prev_arrivals = 0.0;
+    for l in &lines[1..] {
+        let j = json::parse(l).expect("snapshot line is valid json");
+        let arrivals = j.get("arrivals").and_then(|v| v.as_f64()).unwrap();
+        assert!(arrivals >= prev_arrivals, "arrivals regressed in the stream");
+        prev_arrivals = arrivals;
+        assert!(j.get("busy_us").is_some() && j.get("devices").is_some());
+    }
+    assert_eq!(prev_arrivals as u64, n as u64, "final record sees the whole stream");
+    let last = json::parse(lines.last().unwrap()).unwrap();
+    let oacc = last.get("oacc").and_then(|v| v.as_f64()).unwrap();
+    assert!((oacc - r.metrics.oacc.value()).abs() < 1e-6, "final snapshot oacc matches metrics");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn obs_snapshot_is_live_midrun_and_zero_when_disabled() {
+    let n = 20;
+    let m = model();
+    let prof = Profile::analytic(&m, 8);
+    let cfg = || {
+        let part = Partition::per_layer(model().num_layers());
+        AsyncCfg::baseline(AsyncSchedule::Pipedream, part, &prof, 400)
+    };
+    let ep = EngineParams { lr: 0.2, td: 400, ..Default::default() };
+    let mut plugin = Vanilla;
+    let mut s = stream(n, 5);
+    let mut session = Session::builder(&NativeBackend, &m)
+        .config(cfg())
+        .plugin(&mut plugin)
+        .engine_params(ep)
+        .executor(ExecutorKind::Sim)
+        .mode(Mode::Lockstep)
+        .batch(8)
+        .record_spans()
+        .build()
+        .expect("session builds");
+    for _ in 0..n / 2 {
+        session.ingest(s.next_batch().unwrap()).unwrap();
+    }
+    session.drain();
+    let snap = session.obs_snapshot();
+    assert!(snap.busy_us > 0, "mid-run snapshot sees device work");
+    assert!(!snap.devices.is_empty());
+    assert!(snap.arrivals > 0 && snap.t_us > 0);
+    assert!((0.0..=1.0).contains(&snap.bubble_frac), "bubble {}", snap.bubble_frac);
+    let r = session.finish();
+    assert!(r.metrics.busy_us > 0, "always-on busy accounting populated");
+    assert!(r.metrics.device_us >= r.metrics.busy_us, "util <= 1");
+
+    // recorder off: snapshot is metrics-side only, and the always-on
+    // busy/device accounting still fills RunMetrics
+    let mut plugin2 = Vanilla;
+    let mut session = Session::builder(&NativeBackend, &m)
+        .config(cfg())
+        .plugin(&mut plugin2)
+        .engine_params(ep)
+        .executor(ExecutorKind::Sim)
+        .mode(Mode::Lockstep)
+        .batch(8)
+        .build()
+        .expect("session builds");
+    let mut s = stream(n, 5);
+    for _ in 0..n / 2 {
+        session.ingest(s.next_batch().unwrap()).unwrap();
+    }
+    session.drain();
+    let snap = session.obs_snapshot();
+    assert_eq!(snap.busy_us, 0, "disabled recorder claims no span accounting");
+    assert!(snap.devices.is_empty());
+    assert!(snap.arrivals > 0, "metrics-side counters are live either way");
+    let r = session.finish();
+    assert!(r.metrics.busy_us > 0 && r.metrics.utilization() > 0.0);
+}
