@@ -61,7 +61,7 @@ fn main() {
             .expect("hand-made batch matches the model");
         // step until the engine is blocked on the next arrival — metrics
         // are observable at any point in between
-        while session.step() == SessionStep::Progressed {}
+        while session.step().expect("session step") == SessionStep::Progressed {}
         if id % 20 == 19 {
             let m = session.metrics();
             println!(
@@ -82,7 +82,7 @@ fn main() {
         }
     }
 
-    let result = session.finish();
+    let result = session.finish().expect("session finish");
     println!("\n--- session result ---");
     println!("arrivals        : {}", result.metrics.arrivals());
     println!("online accuracy : {:.2}%", result.metrics.oacc.value());

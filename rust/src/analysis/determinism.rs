@@ -1,0 +1,108 @@
+//! Determinism rules for the replay-critical core.
+//!
+//! Everything between ingestion and the trace writer must be a pure
+//! function of (config, seed, stream): same inputs, same bytes out, or
+//! the record/replay gate and the executor-equivalence tests are
+//! meaningless. These rules ban the three classic leaks — randomized
+//! iteration order, wall-clock time, and ad-hoc threads/RNGs — from the
+//! modules that carry that contract.
+
+use super::{Finding, Sf};
+
+/// Modules under the determinism contract (top-level names).
+pub const DET_CORE: [&str; 7] =
+    ["planner", "pipeline", "trace", "obs", "metrics", "budget", "stream"];
+
+/// Files allowed to spawn threads: the executor owns all device threads.
+const DET_EXEMPT_THREAD: [&str; 1] = ["pipeline/executor.rs"];
+
+/// `needle` present in `line` with non-identifier characters (or line
+/// edges) on both sides.
+fn word_match(line: &str, needle: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(off) = line[from..].find(needle) {
+        let start = from + off;
+        let end = start + needle.len();
+        let before_ok = start == 0
+            || !line[..start].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after_ok =
+            !line[end..].chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// `rand::` with a word boundary before the `rand` (so `operand::` and
+/// `crate::util::rng` stay legal).
+fn rand_path(line: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(off) = line[from..].find("rand::") {
+        let start = from + off;
+        let before_ok = start == 0
+            || !line[..start].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok {
+            return true;
+        }
+        from = start + "rand::".len();
+    }
+    false
+}
+
+fn top_module(path: &str) -> &str {
+    match path.split_once('/') {
+        Some((top, _)) => top,
+        None => path.strip_suffix(".rs").unwrap_or(path),
+    }
+}
+
+pub fn check(path: &str, sf: &Sf) -> Vec<Finding> {
+    if !DET_CORE.contains(&top_module(path)) {
+        return Vec::new();
+    }
+    let mut finds = Vec::new();
+    for (i, line) in sf.lines.iter().enumerate() {
+        if sf.test[i] {
+            continue;
+        }
+        if word_match(line, "HashMap") || word_match(line, "HashSet") {
+            finds.push(Finding {
+                line: i + 1,
+                rule: "det-map",
+                msg: "HashMap/HashSet in the deterministic core (iteration order is \
+                      random; use BTreeMap/Vec or allow with proof of no iteration)"
+                    .to_string(),
+            });
+        }
+        if line.contains("Instant::now") || line.contains("SystemTime") {
+            finds.push(Finding {
+                line: i + 1,
+                rule: "det-time",
+                msg: "wall-clock time in the deterministic core".to_string(),
+            });
+        }
+        if line.contains("thread::spawn") && !DET_EXEMPT_THREAD.contains(&path) {
+            finds.push(Finding {
+                line: i + 1,
+                rule: "det-thread",
+                msg: "thread::spawn in the deterministic core (only the executor owns \
+                      threads)"
+                    .to_string(),
+            });
+        }
+        if word_match(line, "RandomState")
+            || word_match(line, "DefaultHasher")
+            || word_match(line, "thread_rng")
+            || rand_path(line)
+        {
+            finds.push(Finding {
+                line: i + 1,
+                rule: "det-rng",
+                msg: "randomness not routed through util::rng".to_string(),
+            });
+        }
+    }
+    finds
+}

@@ -1,0 +1,302 @@
+//! Layering rule: every `use crate::…` / `use super::…` edge between
+//! top-level modules must appear in the committed allowed-edge table.
+//!
+//! The table is the DAG from ROADMAP's module map. The `pipeline` module
+//! is additionally split into its submodules (sched ← executor ← engine
+//! ← session) so the intra-pipeline layering is enforced too; from the
+//! outside, `pipeline` is one unit. `util` is the root of the DAG and is
+//! always importable; `bin/` and the crate roots see everything.
+
+use std::collections::BTreeSet;
+
+use super::{Finding, Sf};
+
+pub const PIPELINE_SUBS: [&str; 5] = ["sched", "executor", "engine", "session", "sync"];
+
+/// The committed allowed-edge table. An import edge (from, to) not in
+/// this list is a layering violation; extending the architecture means
+/// extending this table in the same PR, which is the point — the edge
+/// becomes a reviewed artifact.
+pub const ALLOWED_EDGES: &[(&str, &str)] = &[
+    ("backend", "config"),
+    ("backend", "model"),
+    ("backend", "util"),
+    ("backend", "runtime"),
+    ("backend", "obs"),
+    ("baselines", "backend"),
+    ("baselines", "config"),
+    ("baselines", "metrics"),
+    ("baselines", "model"),
+    ("baselines", "ocl"),
+    ("baselines", "stream"),
+    ("baselines", "util"),
+    ("baselines", "compensate"),
+    ("baselines", "pipeline"),
+    ("baselines", "planner"),
+    ("budget", "util"),
+    ("budget", "planner"),
+    ("compensate", "backend"),
+    ("compensate", "config"),
+    ("compensate", "model"),
+    ("compensate", "util"),
+    ("config", "util"),
+    ("harness", "backend"),
+    ("harness", "baselines"),
+    ("harness", "budget"),
+    ("harness", "compensate"),
+    ("harness", "config"),
+    ("harness", "metrics"),
+    ("harness", "model"),
+    ("harness", "ocl"),
+    ("harness", "pipeline"),
+    ("harness", "planner"),
+    ("harness", "stream"),
+    ("harness", "util"),
+    ("harness", "obs"),
+    ("metrics", "util"),
+    ("metrics", "backend"),
+    ("metrics", "budget"),
+    ("metrics", "config"),
+    ("metrics", "model"),
+    ("metrics", "stream"),
+    ("model", "config"),
+    ("model", "util"),
+    ("obs", "util"),
+    ("obs", "metrics"),
+    ("obs", "trace"),
+    ("ocl", "backend"),
+    ("ocl", "config"),
+    ("ocl", "model"),
+    ("ocl", "stream"),
+    ("ocl", "util"),
+    ("planner", "config"),
+    ("planner", "model"),
+    ("planner", "util"),
+    ("planner", "backend"),
+    ("runtime", "config"),
+    ("runtime", "util"),
+    ("stream", "config"),
+    ("stream", "util"),
+    ("trace", "config"),
+    ("trace", "metrics"),
+    ("trace", "model"),
+    ("trace", "planner"),
+    ("trace", "stream"),
+    ("trace", "util"),
+    ("trace", "budget"),
+    ("trace", "compensate"),
+    ("trace", "ocl"),
+    ("trace", "pipeline"),
+    ("trace", "backend"),
+    ("analysis", "util"),
+    // pipeline internals: strict layering sched <- executor <- engine <- session
+    ("pipeline", "backend"),
+    ("pipeline", "budget"),
+    ("pipeline", "compensate"),
+    ("pipeline", "config"),
+    ("pipeline", "metrics"),
+    ("pipeline", "model"),
+    ("pipeline", "obs"),
+    ("pipeline", "ocl"),
+    ("pipeline", "planner"),
+    ("pipeline", "stream"),
+    ("pipeline", "util"),
+    ("pipeline", "trace"),
+    ("pipeline/sched", "pipeline"),
+    ("pipeline/executor", "pipeline"),
+    ("pipeline/executor", "pipeline/sched"),
+    ("pipeline/engine", "pipeline"),
+    ("pipeline/engine", "pipeline/sched"),
+    ("pipeline/engine", "pipeline/executor"),
+    ("pipeline/session", "pipeline"),
+    ("pipeline/session", "pipeline/sched"),
+    ("pipeline/session", "pipeline/executor"),
+    ("pipeline/session", "pipeline/engine"),
+    ("pipeline/sync", "pipeline"),
+    ("pipeline/sync", "pipeline/sched"),
+];
+
+/// Module identity of a source path relative to `src/`. `pipeline/*.rs`
+/// files get their own `pipeline/<sub>` identity so the intra-pipeline
+/// layering is visible; the crate roots and `bin/` are exempt.
+pub fn module_of(path: &str) -> String {
+    let p = path.replace('\\', "/");
+    if p == "lib.rs" {
+        return "lib".to_string();
+    }
+    if p == "main.rs" || p.starts_with("bin/") {
+        return "bin".to_string();
+    }
+    let top = match p.split_once('/') {
+        Some((top, _)) => top.to_string(),
+        None => p.strip_suffix(".rs").unwrap_or(&p).to_string(),
+    };
+    if top == "pipeline" && p != "pipeline/mod.rs" {
+        let sub = p.split('/').nth(1).unwrap_or("");
+        let sub = sub.strip_suffix(".rs").unwrap_or(sub);
+        if PIPELINE_SUBS.contains(&sub) {
+            return format!("pipeline/{sub}");
+        }
+    }
+    top
+}
+
+/// First path segment of `s`, up to the first `::` or whitespace.
+fn first_token(s: &str) -> &str {
+    let mut end = s.len();
+    if let Some(p) = s.find("::") {
+        end = end.min(p);
+    }
+    if let Some(p) = s.find(char::is_whitespace) {
+        end = end.min(p);
+    }
+    &s[..end]
+}
+
+/// Parse `a::b::{c, d}` → (root, first-segments-after-root). Only
+/// `crate` and `super` roots matter; external/std imports are free.
+fn use_roots(s: &str) -> Option<(String, Vec<String>)> {
+    let s = s.trim_end_matches(';').trim();
+    let (root, tail) = s.split_once("::")?;
+    let root = root.trim();
+    if root != "crate" && root != "super" {
+        return None;
+    }
+    let tail = tail.trim();
+    if let Some(tail) = tail.strip_prefix('{') {
+        let inner = match tail.rfind('}') {
+            Some(p) => &tail[..p],
+            None => tail,
+        };
+        let mut segs: Vec<String> = Vec::new();
+        let mut depth = 0i32;
+        let mut cur = String::new();
+        for ch in inner.chars() {
+            if ch == '{' {
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+            if ch == ',' && depth == 0 {
+                segs.push(std::mem::take(&mut cur));
+            } else {
+                cur.push(ch);
+            }
+        }
+        segs.push(cur);
+        let firsts: Vec<String> = segs
+            .iter()
+            .map(|seg| first_token(seg.trim()).to_string())
+            .filter(|f| !f.is_empty())
+            .collect();
+        return Some((root.to_string(), firsts));
+    }
+    let first = first_token(tail);
+    if first.is_empty() {
+        None
+    } else {
+        Some((root.to_string(), vec![first.to_string()]))
+    }
+}
+
+/// Modules referenced by a `use` line of stripped code.
+fn use_targets(code_line: &str, from_mod: &str) -> Vec<String> {
+    let s = code_line.trim();
+    let rest = if let Some(r) = s.strip_prefix("pub use ") {
+        r
+    } else if let Some(r) = s.strip_prefix("use ") {
+        r
+    } else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    if let Some((root, firsts)) = use_roots(rest) {
+        if root == "crate" {
+            for seg in firsts {
+                if seg == "bail" {
+                    // crate::bail is the util::error macro's export point
+                    out.push("util".to_string());
+                } else {
+                    out.push(seg);
+                }
+            }
+        } else if root == "super" && from_mod.starts_with("pipeline") {
+            for seg in firsts {
+                if PIPELINE_SUBS.contains(&seg.as_str()) {
+                    out.push(format!("pipeline/{seg}"));
+                } else {
+                    out.push("pipeline".to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Refine `crate::pipeline::<sub>` references anywhere on the line into
+/// submodule-precise targets (fully-qualified paths count as edges too).
+fn refine_pipeline_subs(line: &str, targets: &mut BTreeSet<String>) {
+    const NEEDLE: &str = "crate::pipeline::";
+    let mut from = 0usize;
+    while let Some(off) = line[from..].find(NEEDLE) {
+        let start = from + off + NEEDLE.len();
+        let word: String = line[start..]
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        from = start;
+        if !word.is_empty() && PIPELINE_SUBS.contains(&word.as_str()) {
+            targets.remove("pipeline");
+            targets.insert(format!("pipeline/{word}"));
+        }
+    }
+}
+
+pub fn check(path: &str, sf: &Sf) -> Vec<Finding> {
+    let module = module_of(path);
+    if module == "bin" || module == "lib" {
+        return Vec::new();
+    }
+    let mut finds = Vec::new();
+    for (i, line) in sf.lines.iter().enumerate() {
+        if sf.test[i] {
+            continue;
+        }
+        let mut targets: BTreeSet<String> = use_targets(line, &module).into_iter().collect();
+        refine_pipeline_subs(line, &mut targets);
+        for t in &targets {
+            let mut t = t.as_str();
+            if t == "util" || t == module {
+                continue;
+            }
+            let edge: (String, String) =
+                if t.starts_with("pipeline") && module.starts_with("pipeline") {
+                    // intra-pipeline: strict sub-layering
+                    (module.clone(), t.to_string())
+                } else if t.starts_with("pipeline/") {
+                    // outsiders see pipeline as one unit
+                    t = "pipeline";
+                    (module.clone(), "pipeline".to_string())
+                } else if module.starts_with("pipeline/") {
+                    // submodules inherit pipeline's external edges
+                    ("pipeline".to_string(), t.to_string())
+                } else {
+                    (module.clone(), t.to_string())
+                };
+            if edge.0 == edge.1 || (edge.1 == "pipeline" && edge.0.starts_with("pipeline/")) {
+                continue;
+            }
+            if !ALLOWED_EDGES.iter().any(|(a, b)| *a == edge.0 && *b == edge.1) {
+                finds.push(Finding {
+                    line: i + 1,
+                    rule: "layering",
+                    msg: format!(
+                        "module `{module}` must not depend on `{t}` \
+                         (edge not in the allowed-edge table)"
+                    ),
+                });
+            }
+        }
+    }
+    finds
+}

@@ -1,0 +1,192 @@
+//! Lock-discipline rule: every `.lock()` receiver must be registered in
+//! the committed Mutex hierarchy, and within one function body locks may
+//! only be acquired in increasing level order.
+//!
+//! The hierarchy (level 1 acquired first):
+//!   1. PluginCell        — the shared OCL plugin cell
+//!   2. StageCell         — per-stage parameter cells in the executor
+//!   3. BufferPool        — the backend shelf pool
+//!   4. runtime cache     — the executable cache
+//!   5. runtime execs     — the exec counter
+//!   6. trace mem sink    — the in-memory trace line store
+//!
+//! The scan is intra-function and lexical: it catches the ordering bugs
+//! that actually happen (two locks taken back-to-back in one function)
+//! without pretending to be a whole-program analysis. An unregistered
+//! receiver is itself a finding — new Mutexes must be placed in the
+//! hierarchy (or allowed) deliberately.
+
+use super::{Finding, Sf};
+
+/// (module-path-prefix, receiver-last-token, level, name).
+pub const LOCK_LEVELS: &[(&str, &str, u32, &str)] = &[
+    ("ocl", "0", 1, "PluginCell"),
+    ("pipeline", "plugin", 1, "PluginCell"),
+    ("pipeline/session.rs", "c", 1, "PluginCell"),
+    ("pipeline/executor.rs", "inner", 2, "StageCell"),
+    ("backend/pool.rs", "shelves", 3, "BufferPool"),
+    ("runtime", "cache", 4, "runtime executable cache"),
+    ("runtime", "execs", 5, "runtime exec counter"),
+    ("trace", "v", 6, "trace mem sink"),
+    ("trace", "lines", 6, "trace mem sink"),
+];
+
+fn classify(path: &str, recv: &str) -> Option<(u32, &'static str)> {
+    LOCK_LEVELS
+        .iter()
+        .find(|(prefix, tok, _, _)| path.starts_with(prefix) && recv == *tok)
+        .map(|&(_, _, level, name)| (level, name))
+}
+
+/// Byte offsets of every `.lock()` call (whitespace tolerated inside),
+/// as the offset of the leading `.`.
+fn lock_sites(flat: &str) -> Vec<usize> {
+    let b = flat.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == b'.' {
+            let mut j = i + 1;
+            while j < b.len() && (b[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if flat[j..].starts_with("lock") {
+                let mut k = j + 4;
+                while k < b.len() && (b[k] as char).is_whitespace() {
+                    k += 1;
+                }
+                if k < b.len() && b[k] == b'(' {
+                    let mut l = k + 1;
+                    while l < b.len() && (b[l] as char).is_whitespace() {
+                        l += 1;
+                    }
+                    if l < b.len() && b[l] == b')' {
+                        out.push(i);
+                        i = l + 1;
+                        continue;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Last identifier before the `.lock()` chain, skipping whitespace and
+/// newlines (method chains are often line-broken).
+fn receiver(flat: &str, dot: usize) -> String {
+    let b = flat.as_bytes();
+    let mut j = dot as isize - 1;
+    while j >= 0 && matches!(b[j as usize], b' ' | b'\n' | b'\t') {
+        j -= 1;
+    }
+    let end = (j + 1) as usize;
+    while j >= 0 && (b[j as usize].is_ascii_alphanumeric() || b[j as usize] == b'_') {
+        j -= 1;
+    }
+    flat[(j + 1) as usize..end].to_string()
+}
+
+/// Rough function spans (start, end) byte offsets, by brace matching
+/// from each `fn <name>` item; trait method declarations are skipped.
+fn fn_spans(flat: &str) -> Vec<(usize, usize)> {
+    let b = flat.as_bytes();
+    let mut spans = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = flat[from..].find("fn") {
+        let start = from + off;
+        from = start + 2;
+        let before_ok = start == 0 || !(b[start - 1].is_ascii_alphanumeric() || b[start - 1] == b'_');
+        if !before_ok {
+            continue;
+        }
+        // `fn` must be followed by whitespace then an identifier
+        let mut p = start + 2;
+        if p >= b.len() || !(b[p] as char).is_whitespace() {
+            continue;
+        }
+        while p < b.len() && (b[p] as char).is_whitespace() {
+            p += 1;
+        }
+        if p >= b.len() || !(b[p].is_ascii_alphanumeric() || b[p] == b'_') {
+            continue;
+        }
+        while p < b.len() && (b[p].is_ascii_alphanumeric() || b[p] == b'_') {
+            p += 1;
+        }
+        let open = flat[p..].find('{').map(|r| p + r);
+        let semi = flat[p..].find(';').map(|r| p + r);
+        let Some(j) = open else { continue };
+        if let Some(s) = semi {
+            if s < j {
+                continue;
+            }
+        }
+        let mut depth = 0i32;
+        let mut k = j;
+        while k < b.len() {
+            match b[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        spans.push((start, k));
+    }
+    spans
+}
+
+fn line_of(flat: &str, off: usize) -> usize {
+    flat.as_bytes()[..off].iter().filter(|&&b| b == b'\n').count()
+}
+
+pub fn check(path: &str, sf: &Sf) -> Vec<Finding> {
+    let flat = sf.flat;
+    let mut finds = Vec::new();
+    // (offset, 1-based line, level, name)
+    let mut acquisitions: Vec<(usize, usize, u32, &'static str)> = Vec::new();
+    for dot in lock_sites(flat) {
+        let line = line_of(flat, dot);
+        if sf.test[line] {
+            continue;
+        }
+        let recv = receiver(flat, dot);
+        match classify(path, &recv) {
+            None => finds.push(Finding {
+                line: line + 1,
+                rule: "lock-order",
+                msg: format!(
+                    "`.lock()` on unregistered receiver `{recv}`; add it to the \
+                     hierarchy table in analysis::locks or allow"
+                ),
+            }),
+            Some((level, name)) => acquisitions.push((dot, line + 1, level, name)),
+        }
+    }
+    for (start, end) in fn_spans(flat) {
+        let inside: Vec<_> =
+            acquisitions.iter().filter(|a| start <= a.0 && a.0 <= end).collect();
+        for pair in inside.windows(2) {
+            let (prev, cur) = (pair[0], pair[1]);
+            if cur.2 < prev.2 {
+                finds.push(Finding {
+                    line: cur.1,
+                    rule: "lock-order",
+                    msg: format!(
+                        "{} (level {}) acquired after {} (level {}); the registered \
+                         order is PluginCell -> StageCell -> BufferPool -> runtime cache",
+                        cur.3, cur.2, prev.3, prev.2
+                    ),
+                });
+            }
+        }
+    }
+    finds
+}

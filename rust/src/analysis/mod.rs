@@ -1,0 +1,129 @@
+//! ferret-lint: a zero-dependency invariant checker for this crate's
+//! layering, determinism, panic-freedom, and lock-discipline contracts.
+//!
+//! The crate carries several invariants that rustc cannot see:
+//!
+//! - **layering** — module dependency edges must stay inside the
+//!   committed DAG ([`layering::ALLOWED_EDGES`], mirrored in ROADMAP's
+//!   module map), including the sched ← executor ← engine ← session
+//!   sub-layering inside `pipeline`;
+//! - **det-map / det-time / det-thread / det-rng** — the replay-critical
+//!   core ([`determinism::DET_CORE`]) must not consume randomized
+//!   iteration order, wall-clock time, ad-hoc threads, or RNGs outside
+//!   `util::rng`;
+//! - **entry-panic / entry-index** — the session entry surfaces and the
+//!   trace parser must not panic on caller input;
+//! - **lock-order** — every Mutex is registered at a level in
+//!   [`locks::LOCK_LEVELS`] and acquired in increasing level order.
+//!
+//! `cargo run --release --bin ferret_lint` walks `rust/src/**`, prints
+//! findings as `file:line: rule: message`, and exits nonzero if any
+//! survive. A finding that is intentional is suppressed inline with
+//!
+//! ```text
+//! // ferret-lint: allow(rule-id) — reason the construct is sound
+//! ```
+//!
+//! on its own line (suppresses the next code line) or trailing the
+//! flagged line. The reason is mandatory: a bare allow is itself a
+//! finding (`allow-missing-reason`). See docs/static-analysis.md for the
+//! full invariant catalog.
+//!
+//! The checker is character-level, not a Rust parser: comments and
+//! string contents are blanked first ([`strip`]), `#[cfg(test)]` spans
+//! are exempt, and every rule is line-oriented. That makes it fast,
+//! dependency-free, and easy to reason about; the cost — no type or
+//! flow information — is covered by keeping the rules conservative and
+//! the allow mechanism cheap.
+
+pub mod determinism;
+pub mod layering;
+pub mod locks;
+pub mod panics;
+pub mod strip;
+
+use std::collections::BTreeSet;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, 1-based line, stable rule id, human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Preprocessed view of one source file handed to the rule passes.
+pub struct Sf<'a> {
+    /// Stripped code, split into lines (comments/strings blanked).
+    pub lines: Vec<&'a str>,
+    /// Per-line test-code flags (same length as `lines`).
+    pub test: Vec<bool>,
+    /// The stripped code as one flat string (for cross-line scans).
+    pub flat: &'a str,
+}
+
+/// Lint one file. `path` is the `src/`-relative path (forward slashes)
+/// that selects which rule families apply; `src` is the file content.
+/// Returns findings sorted by (line, rule, message), deduplicated per
+/// (line, rule), with inline allows already applied.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let stripped = strip::strip(src);
+    let sf = Sf {
+        lines: stripped.code.split('\n').collect(),
+        test: strip::test_lines(&stripped.code),
+        flat: &stripped.code,
+    };
+    let (supp, meta) = strip::allows(&stripped.comments, &sf.lines);
+    let mut finds = Vec::new();
+    finds.extend(layering::check(path, &sf));
+    finds.extend(determinism::check(path, &sf));
+    finds.extend(panics::check(path, &sf));
+    finds.extend(locks::check(path, &sf));
+    let mut out = Vec::new();
+    let mut seen: BTreeSet<(usize, &'static str)> = BTreeSet::new();
+    for f in finds {
+        let suppressed = supp.get(f.rule).is_some_and(|s| s.contains(&(f.line - 1)));
+        if suppressed || !seen.insert((f.line, f.rule)) {
+            continue;
+        }
+        out.push(f);
+    }
+    out.extend(meta);
+    out.sort_by(|a, b| (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg)));
+    out
+}
+
+/// Walk a source tree and lint every `.rs` file. Returns
+/// (src-relative path, finding) pairs in path order.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<(String, Finding)>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for full in files {
+        let rel = full
+            .strip_prefix(root)
+            .unwrap_or(&full)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&full)?;
+        for f in lint_source(&rel, &src) {
+            out.push((rel.clone(), f));
+        }
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

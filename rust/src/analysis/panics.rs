@@ -1,0 +1,130 @@
+//! Panic-freedom rules for the entry surfaces.
+//!
+//! The session API (`pipeline/{session,engine,executor}.rs`) and the
+//! trace reader (`trace/*`) are the two places untrusted input reaches
+//! this crate: hand-fed batches and on-disk trace files. A panic there
+//! is a caller-visible crash on bad input, so these surfaces must route
+//! failures through `util::error` — every `.unwrap()`/`.expect(`/
+//! `panic!` is flagged, and in the trace parser so is unchecked
+//! indexing. Provably-unreachable cases carry an allow with the proof.
+
+use super::{Finding, Sf};
+
+/// Files forming the push-based session entry surface.
+pub const ENTRY_SURFACES: [&str; 3] =
+    ["pipeline/session.rs", "pipeline/engine.rs", "pipeline/executor.rs"];
+
+fn word_boundary_before(line: &str, start: usize) -> bool {
+    start == 0
+        || !line[..start].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+fn word_boundary_after(line: &str, end: usize) -> bool {
+    !line[end..].chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Leftmost occurrence of `macro_name!` (word-bounded) followed by
+/// optional whitespace and `(`.
+fn find_macro(line: &str, name: &str) -> Option<usize> {
+    let mut from = 0usize;
+    let bang = format!("{name}!");
+    while let Some(off) = line[from..].find(&bang) {
+        let start = from + off;
+        let end = start + bang.len();
+        from = end;
+        if !word_boundary_before(line, start) {
+            continue;
+        }
+        let after = line[end..].trim_start();
+        if after.starts_with('(') {
+            return Some(start);
+        }
+    }
+    None
+}
+
+/// Leftmost `Type::unwrap` (trailing word boundary).
+fn find_fn_path(line: &str, path: &str) -> Option<usize> {
+    let mut from = 0usize;
+    while let Some(off) = line[from..].find(path) {
+        let start = from + off;
+        let end = start + path.len();
+        from = end;
+        if word_boundary_after(line, end) {
+            return Some(start);
+        }
+    }
+    None
+}
+
+/// Leftmost panicking construct on the line, with its display token.
+fn panic_match(line: &str) -> Option<(usize, String)> {
+    let mut best: Option<(usize, String)> = None;
+    let mut consider = |pos: Option<usize>, tok: &str| {
+        if let Some(p) = pos {
+            if best.as_ref().map_or(true, |(bp, _)| p < *bp) {
+                best = Some((p, tok.to_string()));
+            }
+        }
+    };
+    consider(line.find(".unwrap()"), ".unwrap()");
+    consider(line.find(".expect("), ".expect");
+    consider(find_macro(line, "panic"), "panic!");
+    consider(find_macro(line, "unreachable"), "unreachable!");
+    consider(find_macro(line, "todo"), "todo!");
+    consider(find_macro(line, "unimplemented"), "unimplemented!");
+    consider(find_fn_path(line, "Option::unwrap"), "Option::unwrap");
+    consider(find_fn_path(line, "Result::unwrap"), "Result::unwrap");
+    best
+}
+
+/// Any `x[`-style index expression: `[` directly after an identifier
+/// character, `)`, or `]`. Array literals and attribute lines don't
+/// match; slicing ranges do (they panic on bad bounds all the same).
+fn index_match(line: &str) -> bool {
+    let b = line.as_bytes();
+    for (i, &c) in b.iter().enumerate().skip(1) {
+        if c == b'['
+            && (b[i - 1].is_ascii_alphanumeric()
+                || b[i - 1] == b'_'
+                || b[i - 1] == b')'
+                || b[i - 1] == b']')
+        {
+            return true;
+        }
+    }
+    false
+}
+
+pub fn check(path: &str, sf: &Sf) -> Vec<Finding> {
+    let in_trace = path.starts_with("trace/");
+    if !in_trace && !ENTRY_SURFACES.contains(&path) {
+        return Vec::new();
+    }
+    let mut finds = Vec::new();
+    for (i, line) in sf.lines.iter().enumerate() {
+        if sf.test[i] {
+            continue;
+        }
+        if let Some((_, tok)) = panic_match(line) {
+            finds.push(Finding {
+                line: i + 1,
+                rule: "entry-panic",
+                msg: format!(
+                    "`{tok}` on a session/trace entry surface; return a typed \
+                     util::error::Error or allow with a reachability proof"
+                ),
+            });
+        }
+        if in_trace && !line.trim_start().starts_with('#') && index_match(line) {
+            finds.push(Finding {
+                line: i + 1,
+                rule: "entry-index",
+                msg: "unchecked indexing while parsing trace input; use .get() or \
+                      allow with a bounds proof"
+                    .to_string(),
+            });
+        }
+    }
+    finds
+}

@@ -1,0 +1,270 @@
+//! Source preprocessing for the lint rules: comment/string stripping,
+//! `#[cfg(test)]` span detection, and the inline allow directive.
+//!
+//! The linter never parses Rust properly — it classifies each character
+//! of a file as *code* or *comment* (string-literal contents are blanked
+//! from both) and runs line-oriented rules over the code view. That is
+//! deliberately dumb: it keeps the checker dependency-free, fast, and
+//! predictable, at the cost of requiring the rules to be conservative.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::Finding;
+
+/// A source file split into two same-shaped views: `code` has comments
+/// and string contents blanked to spaces, `comments` has everything
+/// *except* comment text blanked. Newlines survive in both, so line
+/// numbers line up with the original file.
+pub struct Stripped {
+    pub code: String,
+    pub comments: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank comments and string-literal contents out of `src`.
+///
+/// Handles line comments, nested block comments, plain strings with
+/// escapes, raw strings (`r"…"` / `r#"…"#` with any hash count), char
+/// literals, and lifetimes (left as code). Anything it misclassifies
+/// fails safe: a rule sees extra blanks, not phantom code.
+pub fn strip(src: &str) -> Stripped {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut code: Vec<char> = s.clone();
+    let mut comm: Vec<char> = s.iter().map(|&c| if c == '\n' { '\n' } else { ' ' }).collect();
+    let mut i = 0usize;
+    while i < n {
+        let c = s[i];
+        let nxt = if i + 1 < n { s[i + 1] } else { '\0' };
+        let prev = if i > 0 { s[i - 1] } else { '\0' };
+        if c == '/' && nxt == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                comm[j] = s[j];
+                code[j] = ' ';
+                j += 1;
+            }
+            i = j;
+        } else if c == '/' && nxt == '*' {
+            let mut depth = 0i32;
+            let mut j = i;
+            while j < n {
+                if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    comm[j] = s[j];
+                    code[j] = ' ';
+                    comm[j + 1] = s[j + 1];
+                    code[j + 1] = ' ';
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    comm[j] = s[j];
+                    code[j] = ' ';
+                    comm[j + 1] = s[j + 1];
+                    code[j + 1] = ' ';
+                    j += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if s[j] != '\n' {
+                        comm[j] = s[j];
+                        code[j] = ' ';
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+        } else if c == 'r' && !is_ident(prev) && i + 1 < n && (s[i + 1] == '"' || s[i + 1] == '#')
+        {
+            // raw string r"…" / r#"…"# (any hash count); blank the interior
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && s[j] == '"' {
+                j += 1;
+                let mut end = n;
+                let mut k = j;
+                while k < n {
+                    if s[k] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes && k + 1 + h < n && s[k + 1 + h] == '#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            end = k;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                for t in j..end.min(n) {
+                    if s[t] != '\n' {
+                        code[t] = ' ';
+                    }
+                }
+                i = (end + 1 + hashes).min(n);
+            } else {
+                i += 1;
+            }
+        } else if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    code[j] = ' ';
+                    if j + 1 < n && s[j + 1] != '\n' {
+                        code[j + 1] = ' ';
+                    }
+                    j += 2;
+                } else if s[j] == '"' {
+                    break;
+                } else {
+                    if s[j] != '\n' {
+                        code[j] = ' ';
+                    }
+                    j += 1;
+                }
+            }
+            i = j + 1;
+        } else if c == '\'' {
+            // char literal vs lifetime
+            if nxt == '\\' {
+                let mut j = i + 2;
+                while j < n && s[j] != '\'' {
+                    code[j] = ' ';
+                    j += 1;
+                }
+                if i + 1 < n {
+                    code[i + 1] = ' ';
+                }
+                i = j + 1;
+            } else if nxt != '\0' && i + 2 < n && s[i + 2] == '\'' {
+                code[i + 1] = ' ';
+                i += 3;
+            } else if nxt.is_alphabetic() || nxt == '_' {
+                // lifetime: skip the label, leave it as code
+                let mut j = i + 1;
+                while j < n && is_ident(s[j]) {
+                    j += 1;
+                }
+                i = j;
+            } else {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Stripped { code: code.into_iter().collect(), comments: comm.into_iter().collect() }
+}
+
+fn line_of(code: &str, byte_off: usize) -> usize {
+    code.as_bytes()[..byte_off].iter().filter(|&&b| b == b'\n').count()
+}
+
+/// Per-line flags: `true` when the line sits inside a `#[cfg(test)]` or
+/// `#[test]` item (from the attribute to the matching close brace). Test
+/// code is exempt from every rule — tests are *supposed* to unwrap.
+pub fn test_lines(code: &str) -> Vec<bool> {
+    let nlines = code.split('\n').count();
+    let mut marks = vec![false; nlines];
+    let bytes = code.as_bytes();
+    for needle in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(off) = code[from..].find(needle) {
+            let start = from + off;
+            let mend = start + needle.len();
+            from = mend;
+            let Some(jrel) = code[mend..].find('{') else { continue };
+            let j = mend + jrel;
+            let mut depth = 0i32;
+            let mut k = j;
+            while k < bytes.len() {
+                match bytes[k] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            let a = line_of(code, start);
+            let b = line_of(code, k.min(bytes.len()));
+            for m in marks.iter_mut().take((b + 1).min(nlines)).skip(a) {
+                *m = true;
+            }
+        }
+    }
+    marks
+}
+
+/// Rule-name → set of suppressed 0-based lines, parsed from the allow
+/// directives in the comment view.
+pub type Suppressions = BTreeMap<String, BTreeSet<usize>>;
+
+const DIRECTIVE: &str = "ferret-lint:";
+
+fn parse_allow(text: &str) -> Option<(Vec<String>, String)> {
+    let i = text.find(DIRECTIVE)?;
+    let rest = text[i + DIRECTIVE.len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let mut tail = rest[close + 1..].trim_start();
+    for sep in ["\u{2014}", "--", "-"] {
+        if let Some(t) = tail.strip_prefix(sep) {
+            tail = t;
+            break;
+        }
+    }
+    Some((rules, tail.trim().to_string()))
+}
+
+/// Collect allow directives. A trailing comment suppresses its own line;
+/// an own-line comment suppresses the next line that carries code
+/// (continuation comment lines are skipped). A directive without a
+/// reason is itself a finding — the reason is the review artifact.
+pub fn allows(comments: &str, code_lines: &[&str]) -> (Suppressions, Vec<Finding>) {
+    let mut supp: Suppressions = BTreeMap::new();
+    let mut meta = Vec::new();
+    for (idx, text) in comments.split('\n').enumerate() {
+        let Some((rules, reason)) = parse_allow(text) else { continue };
+        if reason.is_empty() {
+            meta.push(Finding {
+                line: idx + 1,
+                rule: "allow-missing-reason",
+                msg: "allow directive without a reason".to_string(),
+            });
+            continue;
+        }
+        let target = if idx < code_lines.len() && !code_lines[idx].trim().is_empty() {
+            idx
+        } else {
+            let mut t = idx + 1;
+            while t < code_lines.len() && code_lines[t].trim().is_empty() {
+                t += 1;
+            }
+            t
+        };
+        for r in rules {
+            let set = supp.entry(r).or_default();
+            set.insert(idx);
+            set.insert(target);
+        }
+    }
+    (supp, meta)
+}

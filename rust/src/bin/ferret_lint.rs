@@ -1,0 +1,86 @@
+//! ferret-lint CLI: walk the crate sources and enforce the layering,
+//! determinism, panic-freedom, and lock-discipline invariants.
+//!
+//!     cargo run --release --bin ferret_lint -- [SRC_DIR] [--json OUT]
+//!
+//! `SRC_DIR` defaults to `rust/src` (repo root) or `src` (crate dir),
+//! whichever exists. Prints one `file:line: rule: message` per finding
+//! and exits nonzero if any survive; `--json` additionally writes the
+//! findings as a machine-readable report for CI artifacts.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use ferret::analysis::{lint_tree, Finding};
+use ferret::trace::json::escape;
+
+fn usage() -> ! {
+    eprintln!("usage: ferret_lint [SRC_DIR] [--json OUT.json]");
+    std::process::exit(2)
+}
+
+fn json_report(findings: &[(String, Finding)]) -> String {
+    let mut out = String::from("{\n \"findings\": [");
+    for (i, (file, f)) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"file\": {}, \"line\": {}, \"rule\": {}, \"msg\": {}}}",
+            escape(file),
+            f.line,
+            escape(f.rule),
+            escape(&f.msg)
+        ));
+    }
+    out.push_str(&format!("\n ],\n \"count\": {}\n}}\n", findings.len()));
+    out
+}
+
+fn main() -> ExitCode {
+    let mut src: Option<String> = None;
+    let mut json_out: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(p),
+                None => usage(),
+            },
+            "--help" | "-h" => usage(),
+            _ if src.is_none() => src = Some(a),
+            _ => usage(),
+        }
+    }
+    let root = match src {
+        Some(p) => p,
+        None if Path::new("rust/src").is_dir() => "rust/src".to_string(),
+        None if Path::new("src").is_dir() => "src".to_string(),
+        None => {
+            eprintln!("ferret_lint: no source tree found (run from the repo or crate root)");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = match lint_tree(Path::new(&root)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("ferret_lint: failed to read {root}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for (file, f) in &findings {
+        println!("{file}:{}: {}: {}", f.line, f.rule, f.msg);
+    }
+    println!("ferret-lint: {} finding(s)", findings.len());
+    if let Some(p) = json_out {
+        if let Err(e) = std::fs::write(&p, json_report(&findings)) {
+            eprintln!("ferret_lint: failed to write {p}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

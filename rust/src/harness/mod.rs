@@ -802,7 +802,11 @@ impl Bench {
         );
         let mut xs = Vec::new();
         let mut ys = Vec::new();
-        for ((idx, name, seed), m) in &self.runs {
+        // the run cache is a HashMap: iterate in sorted key order so the
+        // row order (and the emitted table) is identical across processes
+        let mut runs: Vec<_> = self.runs.iter().collect();
+        runs.sort_by(|a, b| a.0.cmp(b.0));
+        for ((idx, name, seed), m) in runs {
             let r = m.adaptation_rate();
             if r > 0.0 {
                 let x = r.log10();

@@ -530,13 +530,13 @@ pub fn run_perf(quick: bool, kernel_threads: usize) -> PerfReport {
         for _ in 0..warm {
             let b = stream.next_batch().expect("warm batch");
             session.ingest(b).expect("ingest");
-            session.drain();
+            session.drain().expect("drain");
         }
         let before = session.pool_stats();
         for _ in 0..measure {
             let b = stream.next_batch().expect("measure batch");
             session.ingest(b).expect("ingest");
-            session.drain();
+            session.drain().expect("drain");
         }
         let delta = session.pool_stats().since(&before);
         report.steady_state.push(SteadyRecord {

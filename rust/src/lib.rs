@@ -6,6 +6,7 @@
 //! Layers 2/1 (python/compile) are AOT-lowered to `artifacts/*.hlo.txt`
 //! and executed through [`runtime::Runtime`].
 
+pub mod analysis;
 pub mod backend;
 pub mod baselines;
 pub mod budget;

@@ -49,10 +49,12 @@ use crate::pipeline::EngineParams;
 use crate::planner::costmodel::{plan_versions, PipeConfig};
 use crate::planner::{Partition, PlanOutcome, Profile};
 use crate::stream::Batch;
+use crate::util::error::{bail, Context, Result};
 
 // The one-call entry points are thin shims over the session API; re-export
 // them here so `pipeline::engine::{run_async, run_async_with}` keeps
 // resolving for existing callers and tests.
+// ferret-lint: allow(layering) — re-export shim for the frozen legacy entry points
 pub use crate::pipeline::session::{run_async, run_async_with};
 
 /// Asynchronous schedule family (Table 3's right half).
@@ -438,10 +440,10 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Try to start work on a (worker, stage) device at time `t`.
-    fn kick(&mut self, w: usize, s: usize, t: u64, executor: &mut dyn Executor) {
+    fn kick(&mut self, w: usize, s: usize, t: u64, executor: &mut dyn Executor) -> Result<()> {
         loop {
             let sel = match self.sched.select_work(w, s, t) {
-                None => return,
+                None => return Ok(()),
                 Some(sel) => sel,
             };
             match sel {
@@ -458,9 +460,14 @@ impl<'a> AsyncEngine<'a> {
                     // both buffers are dead after this dispatch: the stage-s
                     // input was already consumed by the stage-s forward, and
                     // grad is overwritten with gx at the Done event
-                    let x = self.sched.jobs[job].stage_inputs[s].take().expect("stage input");
-                    let gout = self.sched.jobs[job].grad.take().expect("upstream grad");
-                    executor.start((w, s), DeviceTask::Stage(self.bwd_task(s, ver, x, gout, rows)));
+                    let Some(x) = self.sched.jobs[job].stage_inputs[s].take() else {
+                        bail!("engine: backward on stage {s} has no stashed stage input");
+                    };
+                    let Some(gout) = self.sched.jobs[job].grad.take() else {
+                        bail!("engine: backward on stage {s} has no upstream gradient");
+                    };
+                    executor
+                        .start((w, s), DeviceTask::Stage(self.bwd_task(s, ver, x, gout, rows)))?;
                     let mut dur = self.sched.stages[s].tb;
                     if self.cfg.pipe.workers[w].recompute {
                         dur += self.sched.stages[s].tf; // T1: extra forward
@@ -473,16 +480,18 @@ impl<'a> AsyncEngine<'a> {
                     self.busy_ticks += end - t;
                     self.obs.record((w, s), SpanKind::Bwd, self.sched.jobs[job].seq, t, end, ver);
                     self.sched.dispatch(w, s, end, job, true);
-                    return;
+                    return Ok(());
                 }
                 WorkSel::Fwd(job) => {
                     let rows = self.sched.jobs[job].y.len();
                     // the stage keeps its input for the backward recompute,
                     // so the forward gets a pooled copy, not a fresh clone
-                    let x = self
-                        .pooled_copy(self.sched.jobs[job].stage_inputs[s].as_ref().expect("stage input"));
+                    let Some(src) = self.sched.jobs[job].stage_inputs[s].as_ref() else {
+                        bail!("engine: forward on stage {s} has no stage input");
+                    };
+                    let x = self.pooled_copy(src);
                     self.sched.jobs[job].fwd_version[s] = self.sched.version[s];
-                    executor.start((w, s), DeviceTask::Stage(self.fwd_task(s, x, rows)));
+                    executor.start((w, s), DeviceTask::Stage(self.fwd_task(s, x, rows)))?;
                     let end = t + self.sched.stages[s].tf.max(1);
                     self.meas[s].tf_sum += self.sched.stages[s].tf;
                     self.meas[s].tf_n += 1;
@@ -496,16 +505,18 @@ impl<'a> AsyncEngine<'a> {
                         self.sched.jobs[job].fwd_version[s],
                     );
                     self.sched.dispatch(w, s, end, job, false);
-                    return;
+                    return Ok(());
                 }
             }
         }
     }
 
     /// Apply an accumulated update on (worker, stage) at time `t`.
-    pub(crate) fn apply_update(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) {
+    pub(crate) fn apply_update(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) -> Result<()> {
         let slot = &mut self.sched.slots[w][s];
-        let mut grads = slot.acc.take().expect("accumulated grads");
+        let Some(mut grads) = slot.acc.take() else {
+            bail!("engine: update on (w{w}, s{s}) with no accumulated gradients");
+        };
         let count = slot.acc_count;
         let arrivals = std::mem::take(&mut slot.acc_arrivals);
         let from_ver = slot.acc_from_version;
@@ -569,6 +580,7 @@ impl<'a> AsyncEngine<'a> {
         if self.dynamic_budget() {
             io.metrics.ledger.record(t, self.ledger_snapshot());
         }
+        Ok(())
     }
 
     // -----------------------------------------------------------------
@@ -727,7 +739,7 @@ impl<'a> AsyncEngine<'a> {
         arrival: u64,
         now: u64,
         io: &mut EngineIo,
-    ) {
+    ) -> Result<()> {
         if self.sched.over_capacity() {
             // predict with live weights; drop from training
             predict_only(
@@ -740,7 +752,7 @@ impl<'a> AsyncEngine<'a> {
                 now,
                 io.metrics,
             );
-            return;
+            return Ok(());
         }
         let batch = io.plugin.augment(batch, &self.params.layers, &io.ctx);
         let p = self.sched.num_stages();
@@ -760,8 +772,8 @@ impl<'a> AsyncEngine<'a> {
                 grad: None,
                 done: false,
             })
-            .expect("sched::admit: over_capacity() above guarantees an active worker");
-        self.kick(w, 0, now, io.executor);
+            .context("engine: admit failed despite the over_capacity() guard above")?;
+        self.kick(w, 0, now, io.executor)
     }
 
     /// Handle one lockstep `Done` event at virtual time `t`: join the
@@ -777,14 +789,14 @@ impl<'a> AsyncEngine<'a> {
         bwd: bool,
         t: u64,
         io: &mut EngineIo,
-    ) {
+    ) -> Result<()> {
         let p = self.sched.num_stages();
-        let result = io.executor.finish((w, s)).into_stage();
+        let result = io.executor.finish((w, s))?.into_stage()?;
         if !bwd {
             if s + 1 < p {
                 self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
                 self.sched.slots[w][s + 1].fwd_q.push_back(job);
-                self.kick(w, s + 1, t, io.executor);
+                self.kick(w, s + 1, t, io.executor)?;
             } else {
                 // logits ready: prediction + loss head
                 let logits = result.out;
@@ -804,23 +816,26 @@ impl<'a> AsyncEngine<'a> {
             }
         } else {
             // deliver the backward results to the accumulator
-            let grads = result.grads.expect("bwd grads");
+            let Some(grads) = result.grads else {
+                bail!("engine: backward completion on stage {s} carried no gradients");
+            };
             let gx = result.out;
             self.accumulate(w, s, job, grads);
             if self.sched.slots[w][s].acc_count >= self.cfg.pipe.workers[w].accum[s] {
-                self.apply_update(w, s, t, io);
+                self.apply_update(w, s, t, io)?;
             }
             if s > 0 {
                 self.sched.jobs[job].grad = Some(gx);
                 self.sched.slots[w][s - 1].bwd_q.push_back(job);
-                self.kick(w, s - 1, t, io.executor);
+                self.kick(w, s - 1, t, io.executor)?;
             } else {
                 self.ws.pool.put(gx);
                 self.retire_job(job);
             }
         }
-        self.kick(w, s, t, io.executor);
+        self.kick(w, s, t, io.executor)?;
         io.metrics.observe_live_bytes(self.stash.bytes());
+        Ok(())
     }
 
     /// Mark the budget dynamic after an imperative
@@ -883,6 +898,9 @@ impl<'a> AsyncEngine<'a> {
                     layers.iter().map(|&l| self.params.layers[l].clone()).collect();
                 let cell_comps: Vec<Box<dyn Compensator>> = layers
                     .iter()
+                    // ferret-lint: allow(entry-panic) — both callers hand over
+                    // exactly one compensator per model layer; a shortfall is a
+                    // construction bug, not a runtime input
                     .map(|_| comps.next().expect("one compensator per layer"))
                     .collect();
                 StageCell::new(layers, params, self.stash_cap, cell_comps)
@@ -901,10 +919,10 @@ impl<'a> AsyncEngine<'a> {
     }
 
     /// Try to start stage work on device (w, s) at wall time `t`.
-    fn kick_free(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) {
+    fn kick_free(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) -> Result<()> {
         loop {
             let sel = match self.sched.select_work(w, s, t) {
-                None => return,
+                None => return Ok(()),
                 Some(sel) => sel,
             };
             match sel {
@@ -918,13 +936,17 @@ impl<'a> AsyncEngine<'a> {
                     }
                     let rows = self.sched.jobs[job].y.len();
                     let ver = self.sched.jobs[job].fwd_version[s];
-                    let x = self.sched.jobs[job].stage_inputs[s].take().expect("stage input");
-                    let gout = self.sched.jobs[job].grad.take().expect("upstream grad");
+                    let Some(x) = self.sched.jobs[job].stage_inputs[s].take() else {
+                        bail!("engine: backward on stage {s} has no stashed stage input");
+                    };
+                    let Some(gout) = self.sched.jobs[job].grad.take() else {
+                        bail!("engine: backward on stage {s} has no upstream gradient");
+                    };
                     let task = self.stage_task(s, self.cells[s].resolve(ver), x, rows, Some(gout));
-                    io.executor.start((w, s), DeviceTask::Stage(task));
+                    io.executor.start((w, s), DeviceTask::Stage(task))?;
                     self.sched.dispatch_flight(w, s, Flight::Bwd { job }, t);
                     self.flights += 1;
-                    return;
+                    return Ok(());
                 }
                 WorkSel::Fwd(job) => {
                     let rows = self.sched.jobs[job].y.len();
@@ -936,9 +958,10 @@ impl<'a> AsyncEngine<'a> {
                     let x = if pending {
                         std::mem::take(&mut self.sched.jobs[job].batch_x)
                     } else {
-                        self.pooled_copy(
-                            self.sched.jobs[job].stage_inputs[s].as_ref().expect("stage input"),
-                        )
+                        let Some(src) = self.sched.jobs[job].stage_inputs[s].as_ref() else {
+                            bail!("engine: forward on stage {s} has no stage input");
+                        };
+                        self.pooled_copy(src)
                     };
                     let (params, ver) = self.cells[s].snapshot();
                     self.sched.jobs[job].fwd_version[s] = ver;
@@ -946,8 +969,11 @@ impl<'a> AsyncEngine<'a> {
                     if pending {
                         // snapshot at dispatch, not admission: MIR's
                         // interference scoring sees the freshest model
+                        let Some(plugin) = self.augment_cell.clone() else {
+                            bail!("engine: augment-pending job dispatched without an augment cell");
+                        };
                         task.augment = Some(AugmentSpec {
-                            plugin: self.augment_cell.clone().expect("augment cell"),
+                            plugin,
                             params: self.free_params(),
                             shapes: self.shapes.clone(),
                             labels: self.sched.jobs[job].y.clone(),
@@ -962,15 +988,18 @@ impl<'a> AsyncEngine<'a> {
                         // the device computes dL/dlogits + loss + accuracy.
                         // With a same-task augment (p == 1) the device
                         // substitutes the augmented labels itself.
+                        let Some(last) = self.shapes.last() else {
+                            bail!("engine: model has no layers");
+                        };
                         task.loss = Some(LossSpec {
-                            classes: self.shapes.last().expect("layers").out_dim,
+                            classes: last.out_dim,
                             labels: self.sched.jobs[job].y.clone(),
                         });
                     }
-                    io.executor.start((w, s), DeviceTask::Stage(task));
+                    io.executor.start((w, s), DeviceTask::Stage(task))?;
                     self.sched.dispatch_flight(w, s, Flight::Fwd { job }, t);
                     self.flights += 1;
-                    return;
+                    return Ok(());
                 }
             }
         }
@@ -990,9 +1019,17 @@ impl<'a> AsyncEngine<'a> {
     /// what lets the update itself leave the scheduler thread; the
     /// freerun-vs-lockstep tolerance tests use the plugin-free path where
     /// the orders coincide.
-    pub(crate) fn dispatch_update_free(&mut self, w: usize, s: usize, t: u64, io: &mut EngineIo) {
+    pub(crate) fn dispatch_update_free(
+        &mut self,
+        w: usize,
+        s: usize,
+        t: u64,
+        io: &mut EngineIo,
+    ) -> Result<()> {
         let slot = &mut self.sched.slots[w][s];
-        let mut grads = slot.acc.take().expect("accumulated grads");
+        let Some(mut grads) = slot.acc.take() else {
+            bail!("engine: update on (w{w}, s{s}) with no accumulated gradients");
+        };
         let count = slot.acc_count;
         let arrivals = std::mem::take(&mut slot.acc_arrivals);
         let from_version = slot.acc_from_version;
@@ -1013,9 +1050,10 @@ impl<'a> AsyncEngine<'a> {
                 from_version,
                 lr: self.lr,
             }),
-        );
+        )?;
         self.sched.dispatch_flight(w, s, Flight::Update { arrivals }, t);
         self.flights += 1;
+        Ok(())
     }
 
     /// Admit one arriving batch at wall time `now` (its scheduled arrival
@@ -1030,7 +1068,7 @@ impl<'a> AsyncEngine<'a> {
         arrival: u64,
         now: u64,
         io: &mut EngineIo,
-    ) {
+    ) -> Result<()> {
         if self.sched.over_capacity() {
             // predict with live weights; drop from training
             let params = self.free_params();
@@ -1044,7 +1082,7 @@ impl<'a> AsyncEngine<'a> {
                 now,
                 io.metrics,
             );
-            return;
+            return Ok(());
         }
         let offload = self.augment_cell.is_some();
         let batch = if offload {
@@ -1074,8 +1112,8 @@ impl<'a> AsyncEngine<'a> {
                 grad: None,
                 done: false,
             })
-            .expect("sched::admit: over_capacity() above guarantees an active worker");
-        self.kick_free(w, 0, now, io);
+            .context("engine: admit failed despite the over_capacity() guard above")?;
+        self.kick_free(w, 0, now, io)
     }
 
     /// One device completion at wall time `t`, paired FIFO with its
@@ -1087,7 +1125,7 @@ impl<'a> AsyncEngine<'a> {
         out: crate::pipeline::executor::DeviceOutput,
         t: u64,
         io: &mut EngineIo,
-    ) {
+    ) -> Result<()> {
         self.flights -= 1;
         let (flight, dispatched) = self.sched.complete_flight(w, s, t);
         // measured service time of this flight, whatever its kind
@@ -1098,7 +1136,7 @@ impl<'a> AsyncEngine<'a> {
                 // measured service time (µs) seeds the next re-plan
                 self.meas[s].tf_sum += t.saturating_sub(dispatched);
                 self.meas[s].tf_n += 1;
-                let result = out.into_stage();
+                let result = out.into_stage()?;
                 if self.obs.is_on() {
                     // carve the measured augment prefix out of the forward
                     // span (stage-0 offloaded augmentation runs first on
@@ -1127,7 +1165,7 @@ impl<'a> AsyncEngine<'a> {
                 if s + 1 < p {
                     self.sched.jobs[job].stage_inputs[s + 1] = Some(result.out);
                     self.sched.slots[w][s + 1].fwd_q.push_back(job);
-                    self.kick_free(w, s + 1, t, io);
+                    self.kick_free(w, s + 1, t, io)?;
                 } else if let Some((gl, loss, acc)) = result.loss {
                     // offloaded loss head: the device already computed
                     // dL/dlogits + loss + accuracy (bitwise what the
@@ -1162,7 +1200,7 @@ impl<'a> AsyncEngine<'a> {
             Flight::Bwd { job } => {
                 self.meas[s].tb_sum += t.saturating_sub(dispatched);
                 self.meas[s].tb_n += 1;
-                let result = out.into_stage();
+                let result = out.into_stage()?;
                 self.obs.record(
                     (w, s),
                     SpanKind::Bwd,
@@ -1171,23 +1209,25 @@ impl<'a> AsyncEngine<'a> {
                     t,
                     self.sched.jobs[job].fwd_version[s],
                 );
-                let grads = result.grads.expect("bwd grads");
+                let Some(grads) = result.grads else {
+                    bail!("engine: backward completion on stage {s} carried no gradients");
+                };
                 let gx = result.out;
                 self.accumulate(w, s, job, grads);
                 if self.sched.slots[w][s].acc_count >= self.cfg.pipe.workers[w].accum[s] {
-                    self.dispatch_update_free(w, s, t, io);
+                    self.dispatch_update_free(w, s, t, io)?;
                 }
                 if s > 0 {
                     self.sched.jobs[job].grad = Some(gx);
                     self.sched.slots[w][s - 1].bwd_q.push_back(job);
-                    self.kick_free(w, s - 1, t, io);
+                    self.kick_free(w, s - 1, t, io)?;
                 } else {
                     self.ws.pool.put(gx);
                     self.retire_job(job);
                 }
             }
             Flight::Update { arrivals } => {
-                let outcome = out.into_update();
+                let outcome = out.into_update()?;
                 io.metrics.record_staleness(outcome.staleness);
                 self.obs.gauge_staleness(outcome.staleness);
                 self.obs.record(
@@ -1214,7 +1254,7 @@ impl<'a> AsyncEngine<'a> {
                 }
             }
         }
-        self.kick_free(w, s, t, io);
+        self.kick_free(w, s, t, io)
     }
 }
 

@@ -65,6 +65,9 @@
 //! `sched_setaffinity` call (see [`crate::util::affinity`]), a no-op
 //! elsewhere, and never affects numerics — only cache locality.
 
+// ferret-lint: allow(det-map) — device links are keyed by (worker, stage)
+// and only ever looked up or drained wholesale, never iterated in an
+// order-sensitive way (see `ThreadedExecutor::links`).
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -72,6 +75,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::backend::{Backend, Workspace};
+use crate::util::error::{bail, Result};
 use crate::compensate::{CompContext, Compensator};
 use crate::config::LayerShape;
 use crate::model::{GradBuf, SharedParams, VersionStash};
@@ -227,6 +231,8 @@ impl StageCell {
 
     /// Live parameter snapshot + its version (forward dispatch).
     pub fn snapshot(&self) -> (Vec<SharedParams>, u64) {
+        // ferret-lint: allow(entry-panic) — lock poisoning only re-raises a
+        // device-thread panic; no session input reaches this expect
         let inner = self.inner.lock().expect("stage cell");
         (inner.params.clone(), inner.version)
     }
@@ -234,6 +240,7 @@ impl StageCell {
     /// Parameters as of stashed `version`, falling back to the live copy
     /// (zero staleness) after eviction — backward dispatch.
     pub fn resolve(&self, version: u64) -> Vec<SharedParams> {
+        // ferret-lint: allow(entry-panic) — poisoning-only, see `snapshot`
         let inner = self.inner.lock().expect("stage cell");
         inner
             .params
@@ -244,17 +251,20 @@ impl StageCell {
     }
 
     pub fn version(&self) -> u64 {
+        // ferret-lint: allow(entry-panic) — poisoning-only, see `snapshot`
         self.inner.lock().expect("stage cell").version
     }
 
     /// Logical stash bytes (measured-memory cross-check vs Eq. 4).
     pub fn stash_bytes(&self) -> usize {
+        // ferret-lint: allow(entry-panic) — poisoning-only, see `snapshot`
         let inner = self.inner.lock().expect("stage cell");
         inner.stash.iter().map(|s| s.bytes()).sum()
     }
 
     /// Extra compensator state bytes (Alg. 1's EMA buffers).
     pub fn comp_state_bytes(&self) -> usize {
+        // ferret-lint: allow(entry-panic) — poisoning-only, see `snapshot`
         let inner = self.inner.lock().expect("stage cell");
         inner.comps.iter().map(|c| c.state_bytes()).sum()
     }
@@ -263,6 +273,7 @@ impl StageCell {
     /// memory ledger's physical accounting (`stash_bytes` stays logical,
     /// comparable with Eq. 4).
     pub fn stash_bytes_excl_live(&self) -> usize {
+        // ferret-lint: allow(entry-panic) — poisoning-only, see `snapshot`
         let inner = self.inner.lock().expect("stage cell");
         inner
             .stash
@@ -276,6 +287,7 @@ impl StageCell {
     /// transitions: the cell is fully drained, and the EMA state survives
     /// into the stage that owns these layers under the next plan).
     pub fn take_comps(&self) -> Vec<Box<dyn Compensator>> {
+        // ferret-lint: allow(entry-panic) — poisoning-only, see `snapshot`
         std::mem::take(&mut self.inner.lock().expect("stage cell").comps)
     }
 
@@ -293,6 +305,7 @@ impl StageCell {
         lr: f32,
         ws: &Workspace,
     ) -> UpdateOutcome {
+        // ferret-lint: allow(entry-panic) — poisoning-only, see `snapshot`
         let mut guard = self.inner.lock().expect("stage cell");
         let inner = &mut *guard;
         let cur = inner.version;
@@ -379,17 +392,21 @@ pub enum DeviceOutput {
 }
 
 impl DeviceOutput {
-    pub fn into_stage(self) -> StageOutput {
+    pub fn into_stage(self) -> Result<StageOutput> {
         match self {
-            DeviceOutput::Stage(s) => s,
-            DeviceOutput::Update(_) => panic!("expected stage output, got update outcome"),
+            DeviceOutput::Stage(s) => Ok(s),
+            DeviceOutput::Update(_) => {
+                bail!("executor: expected a stage output, got an update outcome")
+            }
         }
     }
 
-    pub fn into_update(self) -> UpdateOutcome {
+    pub fn into_update(self) -> Result<UpdateOutcome> {
         match self {
-            DeviceOutput::Update(u) => u,
-            DeviceOutput::Stage(_) => panic!("expected update outcome, got stage output"),
+            DeviceOutput::Update(u) => Ok(u),
+            DeviceOutput::Stage(_) => {
+                bail!("executor: expected an update outcome, got a stage output")
+            }
         }
     }
 }
@@ -413,6 +430,9 @@ pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> S
             let mut h = task.x;
             let mut aug_us = 0u64;
             let augmented = task.augment.map(|spec| {
+                // ferret-lint: allow(det-time) — freerun-only span metric;
+                // lockstep tasks never carry an AugmentSpec, so replayed
+                // timelines see aug_us == 0 deterministically
                 let aug_t0 = std::time::Instant::now();
                 // offloaded augment hook: lock the shared plugin, run it
                 // on the raw rows, and keep pooled copies of the result
@@ -483,8 +503,10 @@ pub fn run_stage_in(backend: &dyn Backend, task: StageTask, ws: &Workspace) -> S
                 ws.pool.put(x);
             }
             StageOutput {
+                // every slot was filled by the reverse walk above; flatten
+                // instead of unwrap keeps the path panic-free
                 out: g,
-                grads: Some(grads.into_iter().map(Option::unwrap).collect()),
+                grads: Some(grads.into_iter().flatten().collect()),
                 loss: None,
                 augmented: None,
                 aug_us: 0,
@@ -512,10 +534,15 @@ pub fn run_device_task_in(backend: &dyn Backend, task: DeviceTask, ws: &Workspac
 /// Where device tasks run. Per device, `finish` returns results in
 /// `start` order; `try_finish_any` / `wait_any` drain completions across
 /// all devices in completion order.
+///
+/// `start` / `finish` are fallible: dispatching to an unknown device or
+/// joining a device with nothing in flight is an engine-logic error that
+/// surfaces as a typed [`crate::util::error::Error`] on the session path
+/// instead of a panic.
 pub trait Executor {
-    fn start(&mut self, dev: (usize, usize), task: DeviceTask);
+    fn start(&mut self, dev: (usize, usize), task: DeviceTask) -> Result<()>;
     /// Blocking per-device FIFO join (the lockstep engine's `Done` path).
-    fn finish(&mut self, dev: (usize, usize)) -> DeviceOutput;
+    fn finish(&mut self, dev: (usize, usize)) -> Result<DeviceOutput>;
     /// Non-blocking: the next completed task from any device, if ready.
     fn try_finish_any(&mut self) -> Option<((usize, usize), DeviceOutput)>;
     /// Block up to `timeout` for any device to complete.
@@ -553,18 +580,19 @@ impl<'a> SimExecutor<'a> {
 }
 
 impl Executor for SimExecutor<'_> {
-    fn start(&mut self, dev: (usize, usize), task: DeviceTask) {
+    fn start(&mut self, dev: (usize, usize), task: DeviceTask) -> Result<()> {
         let out = run_device_task_in(self.backend, task, &self.ws);
         self.pending.push_back((dev, out));
+        Ok(())
     }
 
-    fn finish(&mut self, dev: (usize, usize)) -> DeviceOutput {
-        let i = self
-            .pending
-            .iter()
-            .position(|(d, _)| *d == dev)
-            .expect("no in-flight task on device");
-        self.pending.remove(i).expect("indexed entry").1
+    fn finish(&mut self, dev: (usize, usize)) -> Result<DeviceOutput> {
+        if let Some(i) = self.pending.iter().position(|(d, _)| *d == dev) {
+            if let Some((_, out)) = self.pending.remove(i) {
+                return Ok(out);
+            }
+        }
+        bail!("executor: no in-flight task on device (w{}, s{})", dev.0, dev.1)
     }
 
     fn try_finish_any(&mut self) -> Option<((usize, usize), DeviceOutput)> {
@@ -598,6 +626,7 @@ impl Executor for SimExecutor<'_> {
 pub struct ThreadedExecutor {
     backend: Arc<dyn Backend>,
     ws: Workspace,
+    // ferret-lint: allow(det-map) — keyed (worker, stage) lookups only, never iterated
     links: HashMap<(usize, usize), DeviceLink>,
     done_tx: Sender<((usize, usize), DeviceOutput)>,
     done_rx: Receiver<((usize, usize), DeviceOutput)>,
@@ -648,6 +677,7 @@ impl ThreadedExecutor {
         let mut ex = ThreadedExecutor {
             backend,
             ws,
+            // ferret-lint: allow(det-map) — keyed (worker, stage) lookups only, never iterated
             links: HashMap::new(),
             done_tx,
             done_rx,
@@ -712,20 +742,37 @@ impl Drop for ThreadedExecutor {
 }
 
 impl Executor for ThreadedExecutor {
-    fn start(&mut self, dev: (usize, usize), task: DeviceTask) {
-        self.links[&dev].task_tx.send(task).expect("device thread alive");
+    fn start(&mut self, dev: (usize, usize), task: DeviceTask) -> Result<()> {
+        let link = match self.links.get(&dev) {
+            Some(l) => l,
+            None => bail!("executor: no device thread for (w{}, s{})", dev.0, dev.1),
+        };
+        if link.task_tx.send(task).is_err() {
+            bail!(
+                "executor: device thread (w{}, s{}) exited before accepting a task",
+                dev.0,
+                dev.1
+            );
+        }
+        Ok(())
     }
 
-    fn finish(&mut self, dev: (usize, usize)) -> DeviceOutput {
+    fn finish(&mut self, dev: (usize, usize)) -> Result<DeviceOutput> {
         if let Some(i) = self.parked.iter().position(|(d, _)| *d == dev) {
-            return self.parked.remove(i).expect("indexed entry").1;
+            if let Some((_, out)) = self.parked.remove(i) {
+                return Ok(out);
+            }
         }
         loop {
-            let (d, out) = self.done_rx.recv().expect("device thread alive");
-            if d == dev {
-                return out;
+            match self.done_rx.recv() {
+                Ok((d, out)) if d == dev => return Ok(out),
+                Ok(parked) => self.parked.push_back(parked),
+                Err(_) => bail!(
+                    "executor: completion channel closed while waiting on (w{}, s{})",
+                    dev.0,
+                    dev.1
+                ),
             }
-            self.parked.push_back((d, out));
         }
     }
 
@@ -804,11 +851,11 @@ mod tests {
         let be = NativeBackend;
         for bwd in [false, true] {
             let mut sim = SimExecutor::new(&be);
-            sim.start((0, 0), stage(bwd));
-            let a = sim.finish((0, 0)).into_stage();
+            sim.start((0, 0), stage(bwd)).unwrap();
+            let a = sim.finish((0, 0)).unwrap().into_stage().unwrap();
             let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0)]);
-            th.start((0, 0), stage(bwd));
-            let b = th.finish((0, 0)).into_stage();
+            th.start((0, 0), stage(bwd)).unwrap();
+            let b = th.finish((0, 0)).unwrap().into_stage().unwrap();
             drop(th); // owned threads join here, not at a scope's end
             assert_eq!(a.out, b.out, "bwd={bwd}");
             match (a.grads, b.grads) {
@@ -835,18 +882,21 @@ mod tests {
         let fwd = run_stage(&be, task(false));
         let bwd = run_stage(&be, task(true));
         let mut sim = SimExecutor::new(&be);
-        sim.start((0, 0), stage(true)); // earlier bwd, Done still queued
-        sim.start((0, 0), stage(false)); // next fwd dispatched at same tick
-        let first = sim.finish((0, 0)).into_stage();
-        let second = sim.finish((0, 0)).into_stage();
+        sim.start((0, 0), stage(true)).unwrap(); // earlier bwd, Done still queued
+        sim.start((0, 0), stage(false)).unwrap(); // next fwd dispatched at same tick
+        let first = sim.finish((0, 0)).unwrap().into_stage().unwrap();
+        let second = sim.finish((0, 0)).unwrap().into_stage().unwrap();
         assert_eq!(first.out, bwd.out, "first finish gets the earlier task");
         assert!(first.grads.is_some());
         assert_eq!(second.out, fwd.out);
         assert!(second.grads.is_none());
         let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0)]);
-        th.start((0, 0), stage(true));
-        th.start((0, 0), stage(false));
-        let (tf, ts) = (th.finish((0, 0)).into_stage(), th.finish((0, 0)).into_stage());
+        th.start((0, 0), stage(true)).unwrap();
+        th.start((0, 0), stage(false)).unwrap();
+        let (tf, ts) = (
+            th.finish((0, 0)).unwrap().into_stage().unwrap(),
+            th.finish((0, 0)).unwrap().into_stage().unwrap(),
+        );
         assert_eq!(tf.out, bwd.out);
         assert_eq!(ts.out, fwd.out);
     }
@@ -859,9 +909,9 @@ mod tests {
         assert_eq!(th.threads(), 4);
         // all four devices in flight simultaneously before any join
         for &d in &devices {
-            th.start(d, stage(false));
+            th.start(d, stage(false)).unwrap();
         }
-        let outs = devices.map(|d| th.finish(d).into_stage());
+        let outs = devices.map(|d| th.finish(d).unwrap().into_stage().unwrap());
         let reference = run_stage(&be, task(false));
         for o in outs {
             assert_eq!(o.out, reference.out);
@@ -875,12 +925,12 @@ mod tests {
         let be = NativeBackend;
         let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0), (0, 1)]);
         assert!(th.try_finish_any().is_none(), "idle executor");
-        th.start((0, 0), stage(false));
-        th.start((0, 1), stage(false));
+        th.start((0, 0), stage(false)).unwrap();
+        th.start((0, 1), stage(false)).unwrap();
         let mut seen = Vec::new();
         while seen.len() < 2 {
             if let Some((dev, out)) = th.wait_any(Duration::from_secs(5)) {
-                assert!(out.into_stage().grads.is_none());
+                assert!(out.into_stage().unwrap().grads.is_none());
                 seen.push(dev);
             }
         }
@@ -891,8 +941,8 @@ mod tests {
         // the sim executor drains in dispatch order
         let mut sim = SimExecutor::new(&be);
         assert!(sim.try_finish_any().is_none());
-        sim.start((0, 1), stage(false));
-        sim.start((0, 0), stage(true));
+        sim.start((0, 1), stage(false)).unwrap();
+        sim.start((0, 0), stage(true)).unwrap();
         assert_eq!(sim.try_finish_any().expect("first").0, (0, 1));
         assert_eq!(sim.wait_any(Duration::ZERO).expect("second").0, (0, 0));
         assert!(sim.try_finish_any().is_none());
@@ -904,22 +954,22 @@ mod tests {
     fn reconfigure_respawns_and_retires_devices() {
         let be = NativeBackend;
         let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0), (0, 1)]);
-        th.start((0, 0), stage(false));
-        let _ = th.finish((0, 0));
+        th.start((0, 0), stage(false)).unwrap();
+        th.finish((0, 0)).unwrap();
         // drained: retire (0,1) — its thread joins inside reconfigure —
         // keep (0,0), add (1,0)
         th.reconfigure(&[(0, 0), (1, 0)]);
         assert_eq!(th.threads(), 2);
-        th.start((0, 0), stage(false));
-        th.start((1, 0), stage(true));
-        assert!(th.finish((0, 0)).into_stage().grads.is_none());
-        assert!(th.finish((1, 0)).into_stage().grads.is_some());
+        th.start((0, 0), stage(false)).unwrap();
+        th.start((1, 0), stage(true)).unwrap();
+        assert!(th.finish((0, 0)).unwrap().into_stage().unwrap().grads.is_none());
+        assert!(th.finish((1, 0)).unwrap().into_stage().unwrap().grads.is_some());
         drop(th);
         // inline executor: reconfigure is a no-op
         let mut sim = SimExecutor::new(&be);
         sim.reconfigure(&[(9, 9)]);
-        sim.start((9, 9), stage(false));
-        assert!(sim.finish((9, 9)).into_stage().grads.is_none());
+        sim.start((9, 9), stage(false)).unwrap();
+        assert!(sim.finish((9, 9)).unwrap().into_stage().unwrap().grads.is_none());
     }
 
     /// Update tasks mutate the stage cell wherever they run; the observed
@@ -944,8 +994,9 @@ mod tests {
                 from_version: 0,
                 lr: 0.5,
             }),
-        );
-        let outcome = th.finish((0, 0)).into_update();
+        )
+        .unwrap();
+        let outcome = th.finish((0, 0)).unwrap().into_update().unwrap();
         drop(th);
         assert_eq!(outcome.new_version, 1);
         assert_eq!(outcome.staleness, 0);
@@ -1059,8 +1110,8 @@ mod tests {
         t.augment = Some(augment_spec(cell.clone(), vec![0, 1]));
         t.loss = Some(LossSpec { classes: 2, labels: vec![0, 1] });
         let mut th = ThreadedExecutor::spawn(be.share(), &[(0, 0)]);
-        th.start((0, 0), DeviceTask::Stage(t));
-        let out = th.finish((0, 0)).into_stage();
+        th.start((0, 0), DeviceTask::Stage(t)).unwrap();
+        let out = th.finish((0, 0)).unwrap().into_stage().unwrap();
         drop(th);
         let ran_on = log.lock().expect("probe log").clone();
         assert_eq!(ran_on.len(), 1, "augment ran exactly once");
@@ -1092,16 +1143,16 @@ mod tests {
             Workspace::serial(),
             true,
         );
-        th.start((0, 0), stage(true));
-        th.start((0, 1), stage(true));
+        th.start((0, 0), stage(true)).unwrap();
+        th.start((0, 1), stage(true)).unwrap();
         for dev in [(0, 0), (0, 1)] {
-            let out = th.finish(dev).into_stage();
+            let out = th.finish(dev).unwrap().into_stage().unwrap();
             assert_eq!(out.out, reference.out);
         }
         // reconfigure keeps counting pin slots without panicking
         th.reconfigure(&[(0, 0), (2, 0)]);
-        th.start((2, 0), stage(false));
-        assert!(th.finish((2, 0)).into_stage().grads.is_none());
+        th.start((2, 0), stage(false)).unwrap();
+        assert!(th.finish((2, 0)).unwrap().into_stage().unwrap().grads.is_none());
     }
 
     /// An offloaded CE loss head must reproduce exactly what the

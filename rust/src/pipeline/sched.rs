@@ -104,6 +104,7 @@ pub struct WallClock {
 
 impl WallClock {
     pub fn new() -> Self {
+        // ferret-lint: allow(det-time) — freerun mode is wall-clock by definition; lockstep never builds a WallClock
         WallClock { start: Instant::now() }
     }
 

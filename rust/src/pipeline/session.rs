@@ -698,7 +698,7 @@ impl<'a> Session<'a> {
     /// in lockstep; one admit/completion/transition sweep in freerun.
     /// Never blocks; [`SessionStep::Starved`] says what a blocking caller
     /// ([`Session::drain`] / [`Session::finish`]) would wait on.
-    pub fn step(&mut self) -> SessionStep {
+    pub fn step(&mut self) -> Result<SessionStep> {
         match self.mode {
             Mode::Lockstep => self.step_lockstep(false),
             Mode::Freerun => self.step_freerun(false),
@@ -710,9 +710,12 @@ impl<'a> Session<'a> {
     /// [`SessionStep::Starved`] on missing input. In freerun mode this
     /// blocks on in-flight device work and not-yet-due arrivals; in
     /// lockstep it never blocks on time (virtual time jumps).
-    pub fn drain(&mut self) {
+    pub fn drain(&mut self) -> Result<()> {
         match self.mode {
-            Mode::Lockstep => while self.step_lockstep(false) == SessionStep::Progressed {},
+            Mode::Lockstep => {
+                while self.step_lockstep(false)? == SessionStep::Progressed {}
+                Ok(())
+            }
             Mode::Freerun => self.drain_freerun(false),
         }
     }
@@ -826,15 +829,15 @@ impl<'a> Session<'a> {
     /// test set was provided), join the device threads, and return the
     /// result. Ingested batches are all processed first — `finish` only
     /// declares that no *further* batches will arrive.
-    pub fn finish(mut self) -> RunResult {
+    pub fn finish(mut self) -> Result<RunResult> {
         match self.mode {
             Mode::Lockstep => loop {
-                match self.step_lockstep(true) {
+                match self.step_lockstep(true)? {
                     SessionStep::Progressed => {}
                     SessionStep::Starved | SessionStep::Idle => break,
                 }
             },
-            Mode::Freerun => self.drain_freerun(true),
+            Mode::Freerun => self.drain_freerun(true)?,
         }
         self.metrics.ledger.observe(self.engine.ledger_snapshot());
         debug_assert_eq!(self.engine.sched.inflight, 0, "every admitted job retired");
@@ -899,7 +902,7 @@ impl<'a> Session<'a> {
         // moving the metrics out drops the executor, which joins every
         // device thread — nothing survives the session
         let Session { metrics, .. } = self;
-        RunResult { metrics, params }
+        Ok(RunResult { metrics, params })
     }
 
     /// Ingest an entire [`Stream`] and run to completion — the bridge from
@@ -927,7 +930,7 @@ impl<'a> Session<'a> {
             Mode::Lockstep => {
                 while let Some(b) = stream.next_batch() {
                     self.ingest(b)?;
-                    self.drain();
+                    self.drain()?;
                 }
             }
             Mode::Freerun => {
@@ -938,21 +941,21 @@ impl<'a> Session<'a> {
                     // ever buffered, and completions are serviced while
                     // waiting for its wall-clock due time
                     while !self.pending.is_empty() {
-                        if self.step_freerun(false) != SessionStep::Progressed {
-                            self.wait_freerun();
+                        if self.step_freerun(false)? != SessionStep::Progressed {
+                            self.wait_freerun()?;
                         }
                     }
                 }
             }
         }
-        Ok(self.finish())
+        self.finish()
     }
 
     // -----------------------------------------------------------------
     // Lockstep stepping
     // -----------------------------------------------------------------
 
-    fn step_lockstep(&mut self, finishing: bool) -> SessionStep {
+    fn step_lockstep(&mut self, finishing: bool) -> Result<SessionStep> {
         let Some((_, head)) = self.engine.sched.events.peek() else {
             return self.lockstep_phase_end(finishing);
         };
@@ -960,22 +963,24 @@ impl<'a> Session<'a> {
             if !finishing {
                 // popping would commit a tie-break order the pull loop
                 // never sees — stall with the heap untouched
-                return SessionStep::Starved;
+                return Ok(SessionStep::Starved);
             }
             // stream over: the speculatively scheduled arrival never
             // happened (the pull loop would not have scheduled it at all)
             let _ = self.engine.sched.events.pop();
             self.arrive_scheduled = false;
-            return SessionStep::Progressed;
+            return Ok(SessionStep::Progressed);
         }
-        let (te, ev) = self.engine.sched.events.pop().expect("peeked event");
+        let Some((te, ev)) = self.engine.sched.events.pop() else {
+            bail!("session: event heap emptied between peek and pop");
+        };
         self.vclock.advance(te);
         let t = self.vclock.now();
         match ev {
-            Ev::Arrive => self.lockstep_arrive(te, t),
+            Ev::Arrive => self.lockstep_arrive(te, t)?,
             Ev::Done { worker: w, stage: s, job, bwd } => {
                 let mut pg = self.plugin.guard();
-                self.engine.on_done_lockstep(w, s, job, bwd, t, io!(self, pg));
+                self.engine.on_done_lockstep(w, s, job, bwd, t, io!(self, pg))?;
                 drop(pg);
                 if self.engine.dynamic_budget() {
                     let snap = self.engine.ledger_snapshot();
@@ -986,13 +991,15 @@ impl<'a> Session<'a> {
                 }
             }
         }
-        SessionStep::Progressed
+        Ok(SessionStep::Progressed)
     }
 
     /// Process one lockstep arrival: its event popped at stream stamp
     /// `te`, the clock now at `t` (later than `te` right after a drain).
-    fn lockstep_arrive(&mut self, te: u64, t: u64) {
-        let batch = self.pending.pop_front().expect("arrival without batch");
+    fn lockstep_arrive(&mut self, te: u64, t: u64) -> Result<()> {
+        let Some(batch) = self.pending.pop_front() else {
+            bail!("session: arrival event popped with no ingested batch queued");
+        };
         self.metrics.record_arrival();
         let seq = self.arrived;
         self.arrived += 1;
@@ -1021,7 +1028,7 @@ impl<'a> Session<'a> {
                 self.drain_from = Some(t);
             }
             self.held.push_back((batch, seq, te));
-            return;
+            return Ok(());
         }
         // schedule the next arrival *before* admitting (admission pushes
         // `Done` events; the pull loop orders its pushes the same way) —
@@ -1029,21 +1036,21 @@ impl<'a> Session<'a> {
         self.engine.sched.events.push(self.arrived * self.td, Ev::Arrive);
         self.arrive_scheduled = true;
         let mut pg = self.plugin.guard();
-        self.engine.admit_lockstep(batch, seq, te, t, io!(self, pg));
+        self.engine.admit_lockstep(batch, seq, te, t, io!(self, pg))
     }
 
     /// The phase's event heap is empty: idle, or a completed drain whose
     /// plan transition takes effect now.
-    fn lockstep_phase_end(&mut self, finishing: bool) -> SessionStep {
-        let Some(t0) = self.drain_from else { return SessionStep::Idle };
+    fn lockstep_phase_end(&mut self, finishing: bool) -> Result<SessionStep> {
+        let Some(t0) = self.drain_from else { return Ok(SessionStep::Idle) };
         if self.held.is_empty() && self.pending.is_empty() {
             if finishing {
                 // the breach/step landed after the last arrival: nothing
                 // ahead to re-plan for (the pull loop's final break)
                 self.drain_from = None;
-                return SessionStep::Idle;
+                return Ok(SessionStep::Idle);
             }
-            return SessionStep::Starved;
+            return Ok(SessionStep::Starved);
         }
         let now = self.vclock.now();
         // flush partially-filled accumulators as final updates under the
@@ -1051,12 +1058,12 @@ impl<'a> Session<'a> {
         // discarded, even when `accum > 1` left a remainder
         for (w, s) in self.engine.pending_accumulators() {
             let mut pg = self.plugin.guard();
-            self.engine.apply_update(w, s, now, io!(self, pg));
+            self.engine.apply_update(w, s, now, io!(self, pg))?;
         }
         self.replan(t0, now);
         if let Some((batch, seq, at)) = self.held.pop_front() {
             let mut pg = self.plugin.guard();
-            self.engine.admit_lockstep(batch, seq, at, now, io!(self, pg));
+            self.engine.admit_lockstep(batch, seq, at, now, io!(self, pg))?;
         }
         // lockstep can hold at most one batch per drain: holding suppresses
         // every further Arrive until the post-transition resume below
@@ -1065,7 +1072,7 @@ impl<'a> Session<'a> {
         // not wait for the transition
         self.engine.sched.events.push(self.arrived * self.td, Ev::Arrive);
         self.arrive_scheduled = true;
-        SessionStep::Progressed
+        Ok(SessionStep::Progressed)
     }
 
     /// Drain complete: re-plan at the budget in force — planner seeded by
@@ -1125,20 +1132,19 @@ impl<'a> Session<'a> {
 
     /// The freerun wall clock, started on first use.
     fn wall_now(&mut self) -> u64 {
-        if self.wclock.is_none() {
-            self.wclock = Some(WallClock::new());
-        }
-        self.wclock.as_ref().expect("wall clock").now()
+        self.wclock.get_or_insert_with(WallClock::new).now()
     }
 
     /// One non-blocking freerun sweep: admit every due arrival, collect
     /// every finished completion, meter the budget, and execute a plan
     /// transition if a drain just completed.
-    fn step_freerun(&mut self, finishing: bool) -> SessionStep {
+    fn step_freerun(&mut self, finishing: bool) -> Result<SessionStep> {
         let mut progressed = false;
         // admit every ingested arrival already due on the wall clock
         while !self.pending.is_empty() && self.wall_now() >= self.arrived * self.td_us {
-            let batch = self.pending.pop_front().expect("due arrival");
+            let Some(batch) = self.pending.pop_front() else {
+                break; // just checked non-empty; defensive
+            };
             let due = self.arrived * self.td_us;
             let seq = self.arrived;
             self.arrived += 1;
@@ -1168,7 +1174,7 @@ impl<'a> Session<'a> {
             } else {
                 let t = self.wall_now();
                 let mut pg = self.plugin.guard();
-                self.engine.on_arrive_free(batch, seq, due, t, io!(self, pg));
+                self.engine.on_arrive_free(batch, seq, due, t, io!(self, pg))?;
             }
             progressed = true;
         }
@@ -1179,7 +1185,7 @@ impl<'a> Session<'a> {
         while let Some(((w, s), out)) = self.executor.try_finish_any() {
             let t = self.wall_now();
             let mut pg = self.plugin.guard();
-            self.engine.on_done_free(w, s, out, t, io!(self, pg));
+            self.engine.on_done_free(w, s, out, t, io!(self, pg))?;
             progressed = true;
         }
         if self.engine.dynamic_budget() {
@@ -1213,37 +1219,39 @@ impl<'a> Session<'a> {
                     let t = self.wall_now();
                     for (w, s) in pending_accs {
                         let mut pg = self.plugin.guard();
-                        self.engine.dispatch_update_free(w, s, t, io!(self, pg));
+                        self.engine.dispatch_update_free(w, s, t, io!(self, pg))?;
                     }
-                    return SessionStep::Progressed;
+                    return Ok(SessionStep::Progressed);
                 }
-                let t0 = self.drain_from.take().expect("drain pending");
+                let Some(t0) = self.drain_from.take() else {
+                    bail!("session: drain stamp vanished mid-transition");
+                };
                 let now = self.wall_now();
                 self.replan(t0, now);
                 let resumed: Vec<(Batch, u64, u64)> = self.held.drain(..).collect();
                 for (batch, seq, due) in resumed {
                     let t = self.wall_now();
                     let mut pg = self.plugin.guard();
-                    self.engine.on_arrive_free(batch, seq, due, t, io!(self, pg));
+                    self.engine.on_arrive_free(batch, seq, due, t, io!(self, pg))?;
                 }
-                return SessionStep::Progressed;
+                return Ok(SessionStep::Progressed);
             }
         }
         if progressed {
-            SessionStep::Progressed
+            Ok(SessionStep::Progressed)
         } else if self.engine.flights == 0 && self.pending.is_empty() && self.held.is_empty() {
             // a pending drain with nothing ahead also parks here: it will
             // fire when the next batch is ingested (or clear at finish)
-            SessionStep::Idle
+            Ok(SessionStep::Idle)
         } else {
-            SessionStep::Starved
+            Ok(SessionStep::Starved)
         }
     }
 
     /// Block once on whatever the freerun loop is waiting for: the
     /// completion channel (waking for the next scheduled arrival) when
     /// work is in flight, or the next arrival's due time otherwise.
-    fn wait_freerun(&mut self) {
+    fn wait_freerun(&mut self) -> Result<()> {
         if self.engine.flights > 0 {
             // sleep on the completion channel, but wake for the next
             // scheduled arrival
@@ -1256,7 +1264,7 @@ impl<'a> Session<'a> {
             if let Some(((w, s), out)) = self.executor.wait_any(timeout) {
                 let t = self.wall_now();
                 let mut pg = self.plugin.guard();
-                self.engine.on_done_free(w, s, out, t, io!(self, pg));
+                self.engine.on_done_free(w, s, out, t, io!(self, pg))?;
             }
         } else if !self.pending.is_empty() {
             let due = self.arrived * self.td_us;
@@ -1265,24 +1273,26 @@ impl<'a> Session<'a> {
                 c.sleep_until(due);
             }
         }
+        Ok(())
     }
 
     /// Blocking freerun loop: sweep, then sleep on the completion channel
     /// (waking for the next scheduled arrival) until everything ingested
     /// is fully processed.
-    fn drain_freerun(&mut self, finishing: bool) {
+    fn drain_freerun(&mut self, finishing: bool) -> Result<()> {
         loop {
-            match self.step_freerun(finishing) {
+            match self.step_freerun(finishing)? {
                 SessionStep::Progressed => continue,
                 SessionStep::Idle => break,
                 SessionStep::Starved => {
                     if self.engine.flights == 0 && self.pending.is_empty() {
                         break; // defensive: nothing to wait on
                     }
-                    self.wait_freerun();
+                    self.wait_freerun()?;
                 }
             }
         }
+        Ok(())
     }
 }
 
@@ -1312,9 +1322,13 @@ pub fn run_async_with(
         .executor(kind)
         .mode(mode)
         .batch(batch)
-        .build()
-        .expect("run_async_with: invalid engine configuration");
+        // ferret-lint: allow(entry-panic) — frozen legacy shim: the config
+        // comes from this crate's own planners/baselines, which the builder
+        // validates by construction
+        .build().expect("run_async_with: invalid engine configuration");
     // a SyntheticStream always matches the model it was specced against
+    // ferret-lint: allow(entry-panic) — frozen legacy shim over the fallible
+    // Session::run_stream; synthetic streams match their own spec
     session.run_stream(stream).expect("run_async_with: stream batches match the model")
 }
 

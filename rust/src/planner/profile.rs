@@ -62,11 +62,13 @@ impl Profile {
             // warmup (compile)
             let _ = backend.dense_fwd(l, &p, &x, batch);
             let _ = backend.dense_bwd(l, &p, &x, &g, batch);
+            // ferret-lint: allow(det-time) — measured profiling is wall-clock by design; planning from it is still replayable via the recorded Profile
             let t0 = std::time::Instant::now();
             for _ in 0..reps {
                 let _ = backend.dense_fwd(l, &p, &x, batch);
             }
             let fwd_ns = t0.elapsed().as_nanos() as u64 / reps as u64;
+            // ferret-lint: allow(det-time) — measured profiling is wall-clock by design; planning from it is still replayable via the recorded Profile
             let t1 = std::time::Instant::now();
             for _ in 0..reps {
                 let _ = backend.dense_bwd(l, &p, &x, &g, batch);

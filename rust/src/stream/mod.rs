@@ -21,6 +21,24 @@ pub use generator::{Batch, DriftKind, StreamSpec, SyntheticStream, TestSet};
 pub use replay::ReplayStream;
 pub use settings::{arrival_interval_us, batch_arrival_us, paper_settings, Setting, WALL_TICK_US};
 
+use crate::util::Fnv;
+
+/// FNV-1a content hash of one microbatch: id, row count, every feature
+/// (by f32 bit pattern) and label. Stable across runs and platforms, so
+/// it doubles as the replay-time identity check for rebuilt streams.
+pub fn batch_hash(b: &Batch) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(b.id);
+    h.write_u64(b.y.len() as u64);
+    for &v in &b.x {
+        h.write_f32(v);
+    }
+    for &y in &b.y {
+        h.write_i32(y);
+    }
+    h.finish()
+}
+
 /// Abstract microbatch source for the engines.
 ///
 /// The engine layer consumes batches in arrival order and never looks at

@@ -10,7 +10,7 @@
 
 use super::generator::{Batch, StreamSpec, SyntheticStream, TestSet};
 use super::Stream;
-use crate::trace::batch_hash;
+use crate::stream::batch_hash;
 
 /// First point where the rebuilt stream diverged from the recording.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -216,11 +216,9 @@ pub fn replay_trace(recorded: &Trace, overrides: &[(String, String)]) -> Result<
                 .collect(),
         },
         comp_kind: comp,
-        comp_params: CompParams {
-            lam0: h.comp_params[0],
-            eta_lam: h.comp_params[1],
-            alpha: h.comp_params[2],
-            nu: h.comp_params[3],
+        comp_params: {
+            let [lam0, eta_lam, alpha, nu] = h.comp_params;
+            CompParams { lam0, eta_lam, alpha, nu }
         },
         plugin_cadence,
         budget,
@@ -268,6 +266,7 @@ pub fn replay_trace(recorded: &Trace, overrides: &[(String, String)]) -> Result<
         }
     }
 
+    // ferret-lint: allow(entry-panic) — poisoning-only: the mem sink is the innermost lock and no holder panics
     let text = lines.lock().expect("trace sink lock").join("\n");
     let replayed = Trace::parse(&text)?;
     let diff = ReplayDiff::compute(recorded, &replayed);

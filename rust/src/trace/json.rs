@@ -121,12 +121,14 @@ pub fn parse(text: &str) -> Result<Json> {
 }
 
 fn skip_ws(b: &[u8], pos: &mut usize) {
+    // ferret-lint: allow(entry-index) — b[*pos] is guarded by *pos < b.len() in the same condition
     while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
         *pos += 1;
     }
 }
 
 fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    // ferret-lint: allow(entry-index) — b[*pos] is guarded by *pos < b.len() in the same condition
     if *pos < b.len() && b[*pos] == c {
         *pos += 1;
         Ok(())
@@ -150,6 +152,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
 }
 
 fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    // ferret-lint: allow(entry-index) — every caller advances *pos only past matched bytes, so *pos <= b.len()
     if b[*pos..].starts_with(lit.as_bytes()) {
         *pos += lit.len();
         Ok(v)
@@ -163,12 +166,14 @@ fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
     if b.get(*pos) == Some(&b'-') {
         *pos += 1;
     }
-    while *pos < b.len()
-        && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
-    {
+    // ferret-lint: allow(entry-index) — b[*pos] is guarded by *pos < b.len() in the same condition
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
         *pos += 1;
     }
-    let s = std::str::from_utf8(&b[start..*pos]).expect("ascii number");
+    // ferret-lint: allow(entry-index) — start <= *pos <= b.len(): the scan above only advances within bounds
+    let Ok(s) = std::str::from_utf8(&b[start..*pos]) else {
+        bail!("json: non-ascii bytes inside a number at byte {start}");
+    };
     match s.parse::<f64>() {
         Ok(n) => Ok(Json::Num(n)),
         Err(_) => bail!("json: bad number '{s}' at byte {start}"),
@@ -199,6 +204,7 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                         if *pos + 4 > b.len() {
                             bail!("json: truncated \\u escape");
                         }
+                        // ferret-lint: allow(entry-index) — guarded by the *pos + 4 > b.len() bail just above
                         let hex = std::str::from_utf8(&b[*pos..*pos + 4])
                             .ok()
                             .and_then(|h| u32::from_str_radix(h, 16).ok())
@@ -224,6 +230,7 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                 if *pos > b.len() {
                     bail!("json: truncated utf-8 in string");
                 }
+                // ferret-lint: allow(entry-index) — guarded by the *pos > b.len() bail just above
                 match std::str::from_utf8(&b[start..*pos]) {
                     Ok(s) => out.push_str(s),
                     Err(_) => bail!("json: invalid utf-8 in string"),

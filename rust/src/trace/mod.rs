@@ -75,9 +75,8 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::bail;
-use crate::stream::{Batch, DriftKind, StreamSpec};
+use crate::stream::{DriftKind, StreamSpec};
 use crate::util::error::Result;
-use crate::util::Fnv;
 
 pub use diff::{GateThresholds, ReplayDiff};
 pub use driver::{replay_trace, ReplayOutcome};
@@ -86,21 +85,9 @@ pub use json::Json;
 /// Artifact schema tag. Bump on any incompatible record change.
 pub const SCHEMA: &str = "ferret-trace/1";
 
-/// FNV-1a content hash of one microbatch: id, row count, every feature
-/// (by f32 bit pattern) and label. Stable across runs and platforms, so
-/// it doubles as the replay-time identity check for rebuilt streams.
-pub fn batch_hash(b: &Batch) -> u64 {
-    let mut h = Fnv::new();
-    h.write_u64(b.id);
-    h.write_u64(b.y.len() as u64);
-    for &v in &b.x {
-        h.write_f32(v);
-    }
-    for &y in &b.y {
-        h.write_i32(y);
-    }
-    h.finish()
-}
+/// Batch content hash, re-exported from [`crate::stream`] (where the data
+/// lives) for the existing `trace::batch_hash` callers.
+pub use crate::stream::batch_hash;
 
 // ---------------------------------------------------------------- records
 
@@ -327,9 +314,9 @@ impl Header {
             });
         }
         let cp = f64_arr_of(j, "comp_params")?;
-        if cp.len() != 4 {
+        let &[lam0, eta_lam, alpha, nu] = cp.as_slice() else {
             bail!("trace: comp_params must have 4 entries, got {}", cp.len());
-        }
+        };
         Ok(Header {
             schema,
             model: str_of(j, "model")?,
@@ -350,7 +337,7 @@ impl Header {
             partition: usize_arr_of(j, "partition")?,
             workers,
             comp: str_of(j, "comp")?,
-            comp_params: [cp[0] as f32, cp[1] as f32, cp[2] as f32, cp[3] as f32],
+            comp_params: [lam0 as f32, eta_lam as f32, alpha as f32, nu as f32],
             plugin: str_of(j, "plugin")?,
             plugin_cadence: u64_of(j, "plugin_cadence")?,
             budget: str_of(j, "budget")?,
@@ -641,14 +628,14 @@ fn curve_of(j: &Json, k: &str) -> Result<Vec<(u64, f64)>> {
             let Some(pair) = pt.as_arr() else {
                 bail!("trace: field '{k}' entries must be [t,v] pairs");
             };
-            if pair.len() != 2 {
+            let [t_j, v_j] = pair else {
                 bail!("trace: field '{k}' entries must be [t,v] pairs");
-            }
-            let t = match pair[0].as_f64() {
+            };
+            let t = match t_j.as_f64() {
                 Some(v) => int_check(v, k)? as u64,
                 None => bail!("trace: field '{k}' has a non-numeric t"),
             };
-            let v = match json::num_of(&pair[1]) {
+            let v = match json::num_of(v_j) {
                 Some(v) => v,
                 None => bail!("trace: field '{k}' has a non-numeric value"),
             };
@@ -694,6 +681,7 @@ impl TraceWriter {
             Sink::File(w) => {
                 let _ = writeln!(w, "{l}");
             }
+            // ferret-lint: allow(entry-panic) — poisoning-only: the mem sink is the innermost lock and no holder panics
             Sink::Mem(v) => v.lock().expect("trace sink lock").push(l),
         }
     }
@@ -835,6 +823,7 @@ impl Trace {
 #[cfg(test)]
 pub(crate) mod tests_support {
     use super::*;
+    use crate::stream::Batch;
 
     /// A small hand-built trace exercising every record type, string-coded
     /// u64s past 2^53, leading-zero hex ids, and an infinite budget —

@@ -231,12 +231,12 @@ fn warm_session_stops_allocating_per_microbatch() {
     let cold = session.pool_stats();
     for _ in 0..warm {
         session.ingest(stream.next_batch().expect("batch")).expect("ingest");
-        session.drain();
+        session.drain().expect("drain");
     }
     let mid = session.pool_stats();
     for _ in 0..measure {
         session.ingest(stream.next_batch().expect("batch")).expect("ingest");
-        session.drain();
+        session.drain().expect("drain");
     }
     let end = session.pool_stats();
 

@@ -1,0 +1,178 @@
+//! ferret-lint rule fixtures: each rule family must fire on a minimal
+//! injected violation, stay quiet on the equivalent sound construct,
+//! and honor the inline allow mechanism. The final test runs the real
+//! checker over the real tree — the same gate CI enforces.
+
+use std::path::Path;
+
+use ferret::analysis::{lint_source, lint_tree};
+
+fn rules(path: &str, src: &str) -> Vec<String> {
+    lint_source(path, src).into_iter().map(|f| f.rule.to_string()).collect()
+}
+
+// ---------------------------------------------------------------- layering
+
+#[test]
+fn layering_flags_edge_outside_the_dag() {
+    let src = "use crate::harness::Bench;\n";
+    let found = lint_source("planner/ilp.rs", src);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert_eq!(found[0].rule, "layering");
+    assert_eq!(found[0].line, 1);
+    assert!(found[0].msg.contains("`planner`"), "{}", found[0].msg);
+    assert!(found[0].msg.contains("`harness`"), "{}", found[0].msg);
+}
+
+#[test]
+fn layering_accepts_committed_edges_and_util() {
+    let src = "use crate::config::AsyncCfg;\nuse crate::util::Rng;\nuse crate::bail;\n";
+    assert!(rules("planner/ilp.rs", src).is_empty());
+}
+
+#[test]
+fn layering_enforces_pipeline_sublayers() {
+    // sched is the bottom of the pipeline stack: it must not see the engine
+    let up = "use crate::pipeline::engine::Engine;\n";
+    assert_eq!(rules("pipeline/sched.rs", up), ["layering"]);
+    // and the engine may see sched + executor, in either import style
+    let down = "use super::sched::EventHeap;\nuse crate::pipeline::executor::Executor;\n";
+    assert!(rules("pipeline/engine.rs", down).is_empty());
+}
+
+#[test]
+fn layering_ignores_bin_and_test_code() {
+    let src = "use crate::harness::Bench;\n";
+    assert!(rules("bin/tool.rs", src).is_empty());
+    assert!(rules("main.rs", src).is_empty());
+    let test_only = "#[cfg(test)]\nmod tests {\n    use crate::harness::Bench;\n}\n";
+    assert!(rules("planner/ilp.rs", test_only).is_empty());
+}
+
+// ------------------------------------------------------------- determinism
+
+#[test]
+fn determinism_flags_maps_time_threads_rng_in_core() {
+    let src = "use std::collections::HashMap;\n";
+    assert_eq!(rules("planner/ilp.rs", src), ["det-map"]);
+    let src = "fn f() { let t = std::time::Instant::now(); }\n";
+    assert_eq!(rules("metrics/oacc.rs", src), ["det-time"]);
+    let src = "fn f() { std::thread::spawn(|| {}); }\n";
+    assert_eq!(rules("stream/generator.rs", src), ["det-thread"]);
+    let src = "fn f() { let s = RandomState::new(); }\n";
+    assert_eq!(rules("budget/shift.rs", src), ["det-rng"]);
+}
+
+#[test]
+fn determinism_exempts_non_core_modules_and_the_executor() {
+    let src = "use std::collections::HashMap;\nfn f() { std::thread::spawn(|| {}); }\n";
+    // harness is outside the deterministic core entirely
+    assert!(rules("harness/perf.rs", src).is_empty());
+    // the executor owns device threads (but still may not use HashMap
+    // without an allow)
+    assert_eq!(rules("pipeline/executor.rs", src), ["det-map"]);
+}
+
+#[test]
+fn determinism_ignores_names_inside_strings_and_comments() {
+    let src = "// HashMap is banned here\nfn f() -> &'static str { \"Instant::now\" }\n";
+    assert!(rules("planner/ilp.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ panic freedom
+
+#[test]
+fn panics_flag_unwrap_on_entry_surfaces_only() {
+    let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert_eq!(rules("pipeline/engine.rs", src), ["entry-panic"]);
+    assert_eq!(rules("trace/json.rs", src), ["entry-panic"]);
+    // same code elsewhere is not an entry surface
+    assert!(rules("backend/native.rs", src).is_empty());
+}
+
+#[test]
+fn panics_flag_macros_and_qualified_unwrap() {
+    let src = "fn f() { panic!(\"boom\"); }\n";
+    assert_eq!(rules("pipeline/session.rs", src), ["entry-panic"]);
+    let src = "fn f(v: Vec<Option<u32>>) -> Vec<u32> { v.into_iter().map(Option::unwrap).collect() }\n";
+    assert_eq!(rules("pipeline/session.rs", src), ["entry-panic"]);
+}
+
+#[test]
+fn panics_flag_unchecked_indexing_in_trace_only() {
+    let src = "fn f(xs: &[u8]) -> u8 { xs[0] }\n";
+    assert_eq!(rules("trace/json.rs", src), ["entry-index"]);
+    // indexing outside the parser surface is not flagged
+    assert!(rules("pipeline/engine.rs", src).is_empty());
+    // array literals and attributes don't look like indexing
+    let src = "#[derive(Clone)]\nstruct S;\nfn f() -> [u8; 2] { [1, 2] }\n";
+    assert!(rules("trace/json.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ lock ordering
+
+#[test]
+fn locks_flag_unregistered_receivers() {
+    let src = "fn f(m: &std::sync::Mutex<u32>) { let _ = m.lock(); }\n";
+    let found = lint_source("backend/pool.rs", src);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert_eq!(found[0].rule, "lock-order");
+    assert!(found[0].msg.contains("unregistered receiver `m`"), "{}", found[0].msg);
+}
+
+#[test]
+fn locks_flag_inverted_acquisition_order() {
+    // StageCell (level 2) then PluginCell (level 1) in one function:
+    // inversion against the registered hierarchy
+    let src = "fn f(&self) {\n    let a = self.inner.lock();\n    let b = self.plugin.lock();\n}\n";
+    let found = lint_source("pipeline/executor.rs", src);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert_eq!(found[0].rule, "lock-order");
+    assert_eq!(found[0].line, 3);
+    assert!(found[0].msg.contains("PluginCell"), "{}", found[0].msg);
+    // the same two locks in hierarchy order are clean
+    let src = "fn f(&self) {\n    let b = self.plugin.lock();\n    let a = self.inner.lock();\n}\n";
+    assert!(rules("pipeline/executor.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------------ allows
+
+#[test]
+fn allow_suppresses_exactly_one_finding() {
+    // two violations, one allow: only the annotated line is forgiven
+    let src = "use std::collections::HashMap;\n\
+               fn f() { let t = std::time::Instant::now(); }\n";
+    let allowed = format!(
+        "// ferret-lint: allow(det-map) \u{2014} lookup-only fixture, never iterated\n{src}"
+    );
+    assert_eq!(rules("planner/ilp.rs", src), ["det-map", "det-time"]);
+    assert_eq!(rules("planner/ilp.rs", &allowed), ["det-time"]);
+}
+
+#[test]
+fn allow_skips_continuation_comment_lines() {
+    let src = "// ferret-lint: allow(det-map) -- the justification runs long\n\
+               // and wraps onto a second comment line before the code\n\
+               use std::collections::HashMap;\n";
+    assert!(rules("planner/ilp.rs", src).is_empty());
+}
+
+#[test]
+fn allow_without_reason_is_itself_a_finding() {
+    let src = "// ferret-lint: allow(det-map)\nuse std::collections::HashMap;\n";
+    let got = rules("planner/ilp.rs", src);
+    assert_eq!(got, ["allow-missing-reason", "det-map"], "{got:?}");
+}
+
+// ------------------------------------------------------------ the real tree
+
+#[test]
+fn the_crate_sources_are_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint_tree(&src).expect("source tree readable");
+    let report: Vec<String> = findings
+        .iter()
+        .map(|(f, x)| format!("{f}:{}: {}: {}", x.line, x.rule, x.msg))
+        .collect();
+    assert!(findings.is_empty(), "ferret-lint findings:\n{}", report.join("\n"));
+}

@@ -220,13 +220,13 @@ fn obs_snapshot_is_live_midrun_and_zero_when_disabled() {
     for _ in 0..n / 2 {
         session.ingest(s.next_batch().unwrap()).unwrap();
     }
-    session.drain();
+    session.drain().expect("drain");
     let snap = session.obs_snapshot();
     assert!(snap.busy_us > 0, "mid-run snapshot sees device work");
     assert!(!snap.devices.is_empty());
     assert!(snap.arrivals > 0 && snap.t_us > 0);
     assert!((0.0..=1.0).contains(&snap.bubble_frac), "bubble {}", snap.bubble_frac);
-    let r = session.finish();
+    let r = session.finish().expect("finish");
     assert!(r.metrics.busy_us > 0, "always-on busy accounting populated");
     assert!(r.metrics.device_us >= r.metrics.busy_us, "util <= 1");
 
@@ -246,11 +246,11 @@ fn obs_snapshot_is_live_midrun_and_zero_when_disabled() {
     for _ in 0..n / 2 {
         session.ingest(s.next_batch().unwrap()).unwrap();
     }
-    session.drain();
+    session.drain().expect("drain");
     let snap = session.obs_snapshot();
     assert_eq!(snap.busy_us, 0, "disabled recorder claims no span accounting");
     assert!(snap.devices.is_empty());
     assert!(snap.arrivals > 0, "metrics-side counters are live either way");
-    let r = session.finish();
+    let r = session.finish().expect("finish");
     assert!(r.metrics.busy_us > 0 && r.metrics.utilization() > 0.0);
 }

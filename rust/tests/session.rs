@@ -114,7 +114,7 @@ fn run_session(
         Drive::StepPerBatch => {
             while let Some(b) = src.next_batch() {
                 session.ingest(b).expect("well-formed batch");
-                while session.step() == SessionStep::Progressed {}
+                while session.step().expect("session step") == SessionStep::Progressed {}
             }
         }
         Drive::IngestAll => {
@@ -123,7 +123,7 @@ fn run_session(
             }
         }
     }
-    session.finish()
+    session.finish().expect("session finish")
 }
 
 #[test]
@@ -212,9 +212,9 @@ fn session_matches_legacy_with_a_stateful_plugin() {
         .expect("valid config");
     while let Some(b) = src.next_batch() {
         session.ingest(b).expect("well-formed batch");
-        session.drain();
+        session.drain().expect("drain");
     }
-    let r = session.finish();
+    let r = session.finish().expect("session finish");
     assert_runs_identical(&legacy, &r, "ER plugin");
 }
 
@@ -251,11 +251,11 @@ fn set_budget_mid_stream_drains_and_replans() {
             assert_eq!(session.metrics().replans, 0, "transition waits for the drain");
         }
         session.ingest(src.next_batch().expect("stream batch")).expect("well-formed batch");
-        session.drain();
+        session.drain().expect("drain");
     }
     let mid_trained = session.metrics().trained;
     assert!(mid_trained > 0, "live metrics observable before finish");
-    let r = session.finish();
+    let r = session.finish().expect("session finish");
     // zero batches lost across the imperative transition
     assert_eq!(r.metrics.arrivals(), n as u64);
     assert_eq!(r.metrics.oacc.count() as u64, n as u64, "one prediction per arrival");
@@ -367,8 +367,8 @@ fn ingest_rejects_misshapen_batches() {
     session
         .ingest(Batch { id: 3, x: vec![0.1; 16 * 8], y: vec![1; 8] })
         .expect("well-formed batch");
-    session.drain();
-    let r = session.finish();
+    session.drain().expect("drain");
+    let r = session.finish().expect("session finish");
     assert_eq!(r.metrics.arrivals(), 1);
 }
 
@@ -422,7 +422,7 @@ fn freerun_session_loses_no_jobs() {
     while let Some(b) = src.next_batch() {
         session.ingest(b).expect("well-formed batch");
     }
-    let r = session.finish();
+    let r = session.finish().expect("session finish");
     assert_eq!(r.metrics.arrivals(), n);
     assert_eq!(r.metrics.oacc.count() as u64, n, "one prediction per arrival");
     assert_eq!(r.metrics.losses.len() as u64, n - r.metrics.dropped);
